@@ -1,0 +1,61 @@
+//! Quickstart: load a trained TinyMoE model through the PJRT runtime
+//! and generate completions with and without DualSparse dropping.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use anyhow::Result;
+use dualsparse::engine::{artifacts_dir, EngineOptions};
+use dualsparse::moe::DropPolicy;
+use dualsparse::Engine;
+
+fn main() -> Result<()> {
+    let artifacts = artifacts_dir();
+    let mut engine = Engine::new(
+        &artifacts,
+        "mixtral_ish",
+        DropPolicy::NoDrop,
+        EngineOptions::default(),
+    )?;
+    println!("platform: {}", engine.rt.platform());
+
+    let prompts = [
+        "cpy:abcd|",       // copy
+        "rev:hgf|",        // reverse
+        "add:3+4|",        // arithmetic (GSM8K stand-in)
+        "srt:dbca|",       // sort
+        "lm:the cat s|",   // language-model continuation
+    ];
+    println!("\n--- no drop ---");
+    for (p, o) in prompts.iter().zip(engine.generate_batch(&prompts, 10)?) {
+        println!("{p:<16} -> {o:?}");
+    }
+
+    // 1T-Drop: skip token-expert pairs with low normalized gating score.
+    engine.policy = DropPolicy::OneT(0.15);
+    engine.reset_metrics();
+    println!("\n--- 1T-Drop (T=0.15) ---");
+    for (p, o) in prompts.iter().zip(engine.generate_batch(&prompts, 10)?) {
+        println!("{p:<16} -> {o:?}");
+    }
+    println!(
+        "dropped {:.1}% of token-expert compute",
+        100.0 * engine.metrics.drop_rate()
+    );
+
+    // 2T-Drop: dual thresholds over major/minor sub-experts.
+    engine.policy = DropPolicy::two_t(0.15);
+    engine.reset_metrics();
+    println!("\n--- 2T-Drop (T²=(0.14, 0.16)) ---");
+    for (p, o) in prompts.iter().zip(engine.generate_batch(&prompts, 10)?) {
+        println!("{p:<16} -> {o:?}");
+    }
+    let d = engine.metrics.total_drop();
+    println!(
+        "full={} major-only={} dropped={} (drop rate {:.1}%)",
+        d.full,
+        d.major_only,
+        d.dropped,
+        100.0 * engine.metrics.drop_rate()
+    );
+    Ok(())
+}

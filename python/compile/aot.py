@@ -1,0 +1,304 @@
+"""AOT exporter: lower every serving artifact to HLO *text*, train and
+serialize the model family, emit golden test vectors.
+
+Run once via `make artifacts`; the Rust binary is self-contained
+afterwards (Python never runs on the request path).
+
+Interchange is HLO text, NOT serialized HloModuleProto: jax >= 0.5 emits
+protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+behind the published `xla` 0.1.6 crate) rejects (`proto.id() <= INT_MAX`);
+the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--skip-train] [--quick]
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import configs, data
+from .configs import (
+    BATCH_BUCKETS, CAPACITY_BUCKETS, FFN_WIDTHS, MODELS, PREFILL_BUCKETS,
+    PROBE_CAPACITY,
+)
+from .kernels import ref
+from .model import (
+    init_params, serve_attn_prefill, serve_attn_step, serve_ffn, serve_gate,
+    serve_lm_head,
+)
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _write(path, text):
+    with open(path, "w") as f:
+        f.write(text)
+
+
+# --------------------------------------------------------------------------
+# Artifact lowering
+# --------------------------------------------------------------------------
+
+def lower_artifacts(out_dir, cfg0):
+    """Lower every shape-bucketed serving artifact. cfg0 supplies the
+    family-shared dims (d_model, heads, max_seq, vocab)."""
+    d, nh, dh = cfg0.d_model, cfg0.n_heads, cfg0.d_head
+    t, v = cfg0.max_seq, cfg0.vocab
+    da = nh * dh
+    os.makedirs(out_dir, exist_ok=True)
+    made = []
+
+    def emit(name, fn, *specs):
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        text = to_hlo_text(jax.jit(fn).lower(*specs))
+        _write(path, text)
+        made.append(name)
+
+    attn = functools.partial(serve_attn_step, n_heads=nh, d_head=dh)
+    for b in BATCH_BUCKETS:
+        emit(
+            f"attn_step_b{b}", attn,
+            _spec((b, d)), _spec((d,)), _spec((d, da)), _spec((d, da)),
+            _spec((d, da)), _spec((da, d)), _spec((d,)),
+            _spec((b, nh, t, dh)), _spec((b, nh, t, dh)), _spec((b,), I32),
+        )
+    prefill = functools.partial(serve_attn_prefill, n_heads=nh, d_head=dh)
+    for s in PREFILL_BUCKETS:
+        emit(
+            f"attn_prefill_s{s}", prefill,
+            _spec((s, d)), _spec((d,)), _spec((d, da)), _spec((d, da)),
+            _spec((d, da)), _spec((da, d)), _spec((d,)),
+        )
+    # Gate shapes for the base family plus the complete-transformation
+    # fine-tunes (E·P for P = 2, 4 of the mixtral_ish base).
+    expert_counts = sorted(
+        {m.n_experts for m in MODELS.values()} | {16, 32}
+    )
+    for b in sorted(set(BATCH_BUCKETS) | set(PREFILL_BUCKETS)):
+        for e in expert_counts:
+            emit(f"gate_b{b}_e{e}", serve_gate, _spec((b, d)), _spec((d, e)))
+    for b in BATCH_BUCKETS:
+        emit(
+            f"lm_head_b{b}", serve_lm_head,
+            _spec((b, d)), _spec((d,)), _spec((v, d)),
+        )
+    from .kernels.probe import probe
+    for h in FFN_WIDTHS:
+        for c in CAPACITY_BUCKETS:
+            emit(
+                f"ffn_h{h}_c{c}", serve_ffn,
+                _spec((c, d)), _spec((d, h)), _spec((d, h)), _spec((h, d)),
+            )
+        emit(
+            f"probe_h{h}", probe,
+            _spec((PROBE_CAPACITY, d)), _spec((d, h)), _spec((d, h)),
+        )
+    return made
+
+
+# --------------------------------------------------------------------------
+# Weight serialization
+# --------------------------------------------------------------------------
+
+def flatten_params(params, cfg):
+    """Stable (name, array) list; order defines the .bin layout."""
+    out = [("emb", params["emb"]), ("pos", params["pos"])]
+    for li, layer in enumerate(params["layers"]):
+        keys = ["ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "w1", "w3", "w2"]
+        if cfg.n_shared:
+            keys += ["sw1", "sw3", "sw2"]
+        for k in keys:
+            out.append((f"layers.{li}.{k}", layer[k]))
+    out.append(("lnf", params["lnf"]))
+    return out
+
+
+def save_model(out_dir, name, params, cfg):
+    os.makedirs(out_dir, exist_ok=True)
+    tensors = flatten_params(params, cfg)
+    manifest = {"config": cfg.as_dict(), "tensors": {}, "format": "f32le"}
+    offset = 0
+    with open(os.path.join(out_dir, f"{name}.bin"), "wb") as f:
+        for tname, arr in tensors:
+            a = np.asarray(arr, dtype=np.float32)
+            manifest["tensors"][tname] = {
+                "offset": offset, "shape": list(a.shape),
+            }
+            f.write(a.tobytes())
+            offset += a.size
+    manifest["total_elems"] = offset
+    with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+
+
+# --------------------------------------------------------------------------
+# Golden vectors (Rust integration tests)
+# --------------------------------------------------------------------------
+
+def emit_golden(out_dir, cfg0):
+    """Small input/output pairs from the pure-jnp oracle for the Rust
+    runtime tests (artifact load + execute must match these)."""
+    os.makedirs(out_dir, exist_ok=True)
+    d, nh, dh = cfg0.d_model, cfg0.n_heads, cfg0.d_head
+    k = jax.random.PRNGKey(42)
+    ks = jax.random.split(k, 12)
+
+    def dump(name, obj):
+        flat = {kk: np.asarray(vv, np.float32).ravel().tolist() for kk, vv in obj.items()}
+        with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+            json.dump(flat, f)
+
+    # ffn_h64_c4
+    x = jax.random.normal(ks[0], (4, d)) * 0.5
+    w1 = jax.random.normal(ks[1], (d, 64)) * 0.1
+    w3 = jax.random.normal(ks[2], (d, 64)) * 0.1
+    w2 = jax.random.normal(ks[3], (64, d)) * 0.1
+    dump("ffn_h64_c4", {
+        "x": x, "w1": w1, "w3": w3, "w2": w2,
+        "y": ref.swiglu_ffn_ref(x, w1, w3, w2),
+    })
+    # gate_b2_e8
+    xg = jax.random.normal(ks[4], (2, d)) * 0.5
+    wg = jax.random.normal(ks[5], (d, 8)) * 0.2
+    dump("gate_b2_e8", {"x": xg, "wg": wg, "probs": ref.gate_ref(xg, wg)})
+    # probe_h64
+    xp = jax.random.normal(ks[6], (PROBE_CAPACITY, d)) * 0.5
+    dump("probe_h64", {
+        "x": xp, "w1": w1, "w3": w3, "imp": ref.probe_ref(xp, w1, w3),
+    })
+    # attn_step_b1 with a 3-token cache
+    da = nh * dh
+    t = cfg0.max_seq
+    xa = jax.random.normal(ks[7], (1, d)) * 0.5
+    ws = {
+        "ln1": jnp.ones((d,)),
+        "wq": jax.random.normal(ks[8], (d, da)) * 0.1,
+        "wk": jax.random.normal(ks[9], (d, da)) * 0.1,
+        "wv": jax.random.normal(ks[10], (d, da)) * 0.1,
+        "wo": jax.random.normal(ks[11], (da, d)) * 0.1,
+        "ln2": jnp.ones((d,)),
+    }
+    kc = np.zeros((1, nh, t, dh), np.float32)
+    vc = np.zeros((1, nh, t, dh), np.float32)
+    kc[:, :, :3] = np.asarray(jax.random.normal(ks[0], (1, nh, 3, dh))) * 0.3
+    vc[:, :, :3] = np.asarray(jax.random.normal(ks[1], (1, nh, 3, dh))) * 0.3
+    pos = jnp.asarray([3], I32)
+    y, ln2x, nk, nv = serve_attn_step(
+        xa, ws["ln1"], ws["wq"], ws["wk"], ws["wv"], ws["wo"], ws["ln2"],
+        jnp.asarray(kc), jnp.asarray(vc), pos, n_heads=nh, d_head=dh,
+    )
+    dump("attn_step_b1", {
+        "x": xa, **ws, "kcache": kc, "vcache": vc,
+        "pos_f": np.asarray(pos, np.float32),  # stored as f32 list; rust casts
+        "y": y, "ln2x": ln2x, "new_k": nk, "new_v": nv,
+    })
+
+
+# --------------------------------------------------------------------------
+# Main
+# --------------------------------------------------------------------------
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--skip-train", action="store_true",
+                    help="only lower artifacts + golden (random init weights "
+                         "are still written if none exist)")
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny step counts (CI smoke)")
+    args = ap.parse_args()
+    out = args.out_dir
+    models_dir = os.path.join(out, "models")
+    results_dir = os.path.join(out, "results")
+    golden_dir = os.path.join(out, "golden")
+    os.makedirs(results_dir, exist_ok=True)
+
+    cfg0 = MODELS["mixtral_ish"]
+    t0 = time.time()
+    made = lower_artifacts(out, cfg0)
+    print(f"[aot] lowered {len(made)} artifacts in {time.time() - t0:.0f}s",
+          flush=True)
+    emit_golden(golden_dir, cfg0)
+    print("[aot] golden vectors written", flush=True)
+
+    from . import train as trainer  # heavy import kept out of --help path
+
+    steps_pre = 30 if args.quick else configs.PRETRAIN_STEPS
+    for name, cfg in MODELS.items():
+        mpath = os.path.join(models_dir, f"{name}.json")
+        if os.path.exists(mpath):
+            print(f"[aot] {name}: cached", flush=True)
+            continue
+        if args.skip_train:
+            params = init_params(jax.random.PRNGKey(0), cfg)
+            save_model(models_dir, name, params, cfg)
+            print(f"[aot] {name}: random init (--skip-train)", flush=True)
+            continue
+        params, log = trainer.pretrain(cfg, steps=steps_pre)
+        save_model(models_dir, name, params, cfg)
+        with open(os.path.join(results_dir, f"pretrain_{name}.json"), "w") as f:
+            json.dump(log, f)
+        print(f"[aot] {name}: trained + saved", flush=True)
+
+    # Figure 4 / Table 1: fine-tune original vs complete-transformed.
+    fig4_path = os.path.join(results_dir, "fig4_curves.json")
+    if not args.skip_train and not os.path.exists(fig4_path):
+        import pickle  # noqa: F401 (params reload below uses manifest)
+        base_cfg = MODELS["mixtral_ish"]
+        base_params = load_model(models_dir, "mixtral_ish")
+        for P, cfg, tuned in trainer.fig4_experiment(
+            base_cfg, base_params, fig4_path
+        ):
+            save_model(models_dir, f"mixtral_ish_p{P}_ft", tuned, cfg)
+            print(f"[aot] fig4 P={P} fine-tuned + saved", flush=True)
+
+    print(f"[aot] done in {time.time() - t0:.0f}s", flush=True)
+
+
+def load_model(models_dir, name):
+    """Reload a serialized model into the params pytree."""
+    with open(os.path.join(models_dir, f"{name}.json")) as f:
+        manifest = json.load(f)
+    raw = np.fromfile(os.path.join(models_dir, f"{name}.bin"), dtype=np.float32)
+    cfgd = manifest["config"]
+    n_layers = cfgd["n_layers"]
+
+    def get(tname):
+        meta = manifest["tensors"][tname]
+        shape = meta["shape"]
+        size = int(np.prod(shape))
+        return jnp.asarray(raw[meta["offset"] : meta["offset"] + size].reshape(shape))
+
+    params = {"emb": get("emb"), "pos": get("pos"), "lnf": get("lnf"), "layers": []}
+    for li in range(n_layers):
+        keys = ["ln1", "wq", "wk", "wv", "wo", "ln2", "wg", "w1", "w3", "w2"]
+        if cfgd["n_shared"]:
+            keys += ["sw1", "sw3", "sw2"]
+        params["layers"].append({k: get(f"layers.{li}.{k}") for k in keys})
+    return params
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Model-family configuration shared by training, AOT export, and tests.
+
+Three TinyMoE variants stand in for the paper's three evaluation models
+(DESIGN.md §2): `mixtral_ish` (coarse experts, top-2), `olmoe_ish`
+(fine-grained, top-4), `deepseek_ish` (shared + routed experts).
+
+All variants share d_model / heads / layers / vocab so that the
+attention, LM-head and FFN artifacts are reusable across the family;
+only the MoE shape differs.
+"""
+
+from dataclasses import dataclass, field, asdict
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    d_model: int = 64
+    n_layers: int = 4
+    n_heads: int = 4
+    d_head: int = 16
+    vocab: int = 256
+    max_seq: int = 160
+    # MoE
+    n_experts: int = 8
+    d_ffn: int = 128
+    top_k: int = 2
+    # DeepSeek-style shared expert (0 or 1), with its own width.
+    n_shared: int = 0
+    d_ffn_shared: int = 0
+    # Gating-score normalization already applied by the model itself
+    # (DeepSeek-V3/Qwen3-style); all our variants use plain softmax+TopK
+    # so the DualSparse normalization step is required (paper §4.1).
+    normalized_gating: bool = False
+
+    @property
+    def d_attn(self):
+        return self.n_heads * self.d_head
+
+    def as_dict(self):
+        return asdict(self)
+
+
+MIXTRAL_ISH = ModelConfig(
+    name="mixtral_ish", n_experts=8, d_ffn=128, top_k=2
+)
+OLMOE_ISH = ModelConfig(
+    name="olmoe_ish", n_experts=16, d_ffn=64, top_k=4
+)
+DEEPSEEK_ISH = ModelConfig(
+    name="deepseek_ish", n_experts=14, d_ffn=64, top_k=2,
+    n_shared=1, d_ffn_shared=128,
+)
+
+MODELS = {m.name: m for m in (MIXTRAL_ISH, OLMOE_ISH, DEEPSEEK_ISH)}
+
+# Serving artifact shape buckets (DESIGN.md §6). The Rust dispatcher
+# rounds live batch / kept-token counts up to the nearest bucket.
+BATCH_BUCKETS = (1, 2, 4, 8, 16)
+PREFILL_BUCKETS = (16, 32, 64, 128)
+# ~1.4× spacing so a 25% drop in kept pairs usually lands in a smaller
+# bucket (coarser spacing would hide the paper's drop→speedup effect).
+CAPACITY_BUCKETS = (2, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128)
+# Every distinct (sub-)expert FFN width across the family:
+#   mixtral full/half = 128/64, olmoe + deepseek routed full/half = 64/32,
+#   deepseek shared = 128, mixtral P=4 fine-tune full/half = 32/16.
+FFN_WIDTHS = (128, 64, 32, 16)
+PROBE_CAPACITY = 32
+
+# Training hyper-parameters (build-time only).
+PRETRAIN_STEPS = 2000
+FINETUNE_STEPS = 400
+BATCH = 16
+SEQ = 48
+LR = 3e-3
+AUX_LOSS_COEF = 0.01

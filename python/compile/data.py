@@ -1,0 +1,201 @@
+"""Synthetic corpus + benchmark task generators.
+
+Stand-in for the paper's LM-Eval-Harness benchmarks and the Tulu-3
+fine-tuning mixture (DESIGN.md §2). Nine byte-level tasks with a
+difficulty spread; `add`/`srt`/`ind` play GSM8K's "most drop-sensitive"
+role. Every sample is one ASCII line:
+
+    {tag}:{input}|{answer}\n
+
+The *evaluation* prompts are regenerated at run time by the Rust harness
+(`rust/src/tasks/`), which mirrors these generators bit-for-bit on top of
+the shared SplitMix64 stream — golden-stream tests on both sides keep
+the two implementations locked together. Do not change a format here
+without updating rust/src/tasks/mod.rs and the golden files.
+"""
+
+from .rng import SplitMix64
+
+TASKS = ("cpy", "rev", "pat", "add", "bal", "ind", "srt", "maj", "lm")
+
+LETTERS = "abcdefgh"
+SHIFT_LETTERS = "ijklmnop"  # fine-tune distribution shift
+SORT_POOL = "abcdef"
+SHIFT_SORT_POOL = "cdefgh"
+IND_KEYS = "abcd"
+
+PHRASES = (
+    "the cat sat on the mat",
+    "a dog ran to the park",
+    "we like to read books",
+    "the sun is very warm",
+    "birds fly over the sea",
+    "she has a red ball",
+    "rain falls on the roof",
+    "the moon is out now",
+)
+SHIFT_PHRASES = (
+    "the fox hid in the log",
+    "he rows a boat at dawn",
+    "cold wind blows all day",
+    "a bee lands on the rose",
+)
+
+
+def _sample_cpy(rng, shift=False):
+    pool = SHIFT_LETTERS if shift else LETTERS
+    n = 3 + rng.below(4 if shift else 3)  # shift: longer strings
+    s = "".join(rng.choice(pool) for _ in range(n))
+    return s, s
+
+
+def _sample_rev(rng, shift=False):
+    pool = SHIFT_LETTERS if shift else LETTERS
+    n = 3 + rng.below(4 if shift else 3)
+    s = "".join(rng.choice(pool) for _ in range(n))
+    return s, s[::-1]
+
+
+def _sample_pat(rng, shift=False):
+    period = 2 + rng.below(2)  # 2 or 3
+    pool = SHIFT_LETTERS if shift else LETTERS
+    unit = "".join(rng.choice(pool) for _ in range(period))
+    reps = 6 // period + 1
+    full = (unit * (reps + 2))
+    return full[:6], full[6:9]
+
+
+def _sample_add(rng, shift=False):
+    if shift:
+        a, b = rng.below(100), rng.below(100)
+        return f"{a:02d}+{b:02d}", f"{(a + b) % 100:02d}"
+    a, b = rng.below(10), rng.below(10)
+    return f"{a}+{b}", f"{(a + b) % 10}"
+
+
+def _gen_balanced(rng, pairs):
+    """Random balanced bracket string with `pairs` pairs."""
+    s, open_ = [], 0
+    remaining_open = pairs
+    remaining_close = pairs
+    while remaining_open or remaining_close:
+        if remaining_open and (open_ == 0 or rng.below(2) == 0):
+            s.append("(")
+            open_ += 1
+            remaining_open -= 1
+        else:
+            s.append(")")
+            open_ -= 1
+            remaining_close -= 1
+    return "".join(s)
+
+
+def _sample_bal(rng, shift=False):
+    pairs = 3 if shift else 2
+    if rng.below(2) == 0:
+        return _gen_balanced(rng, pairs), "Y"
+    n = 2 * pairs
+    s = "".join("(" if rng.below(2) == 0 else ")" for _ in range(n))
+    bal, depth = True, 0
+    for ch in s:
+        depth += 1 if ch == "(" else -1
+        if depth < 0:
+            bal = False
+    bal = bal and depth == 0
+    return s, "Y" if bal else "N"
+
+
+def _sample_ind(rng, shift=False):
+    nkeys = 3
+    keys = list(IND_KEYS)
+    # Fisher-Yates with the shared stream.
+    for i in range(len(keys) - 1, 0, -1):
+        j = rng.below(i + 1)
+        keys[i], keys[j] = keys[j], keys[i]
+    keys = keys[:nkeys]
+    vals = [str(rng.below(10)) for _ in range(nkeys)]
+    q = rng.below(nkeys)
+    inp = " ".join(k + v for k, v in zip(keys, vals)) + " " + keys[q]
+    return inp, vals[q]
+
+
+def _sample_srt(rng, shift=False):
+    pool = list(SHIFT_SORT_POOL if shift else SORT_POOL)
+    for i in range(len(pool) - 1, 0, -1):
+        j = rng.below(i + 1)
+        pool[i], pool[j] = pool[j], pool[i]
+    s = "".join(pool[:4])
+    return s, "".join(sorted(s))
+
+
+def _sample_maj(rng, shift=False):
+    s = "".join(rng.choice("ab") for _ in range(5))
+    return s, "a" if s.count("a") >= 3 else "b"
+
+
+def _sample_lm(rng, shift=False):
+    phrase = rng.choice(SHIFT_PHRASES if shift else PHRASES)
+    cut = 6 + rng.below(max(1, len(phrase) - 10))
+    return phrase[:cut], phrase[cut : cut + 5]
+
+
+_SAMPLERS = {
+    "cpy": _sample_cpy,
+    "rev": _sample_rev,
+    "pat": _sample_pat,
+    "add": _sample_add,
+    "bal": _sample_bal,
+    "ind": _sample_ind,
+    "srt": _sample_srt,
+    "maj": _sample_maj,
+    "lm": _sample_lm,
+}
+
+
+def sample_line(task, rng, shift=False):
+    """One full training/eval line for `task`: 'tag:input|answer\\n'."""
+    inp, ans = _SAMPLERS[task](rng, shift)
+    return f"{task}:{inp}|{ans}\n"
+
+
+def eval_prompt(task, rng, shift=False):
+    """(prompt_bytes, answer_str): prompt includes the trailing '|'."""
+    inp, ans = _SAMPLERS[task](rng, shift)
+    return f"{task}:{inp}|", ans
+
+
+# Seed bases — shared with rust/src/tasks/mod.rs. Training, calibration
+# and evaluation use disjoint streams.
+TRAIN_SEED = 0x5EED_0001
+FINETUNE_SEED = 0x5EED_0002
+CALIB_SEED = 0x5EED_0003
+EVAL_SEED_BASE = 0x5EED_1000  # + task index
+
+
+def corpus_tokens(n_tokens, seed, shift=False, task_weights=None):
+    """Byte token stream: a mixture of task lines (used for training).
+
+    task_weights: optional list of per-task integer weights (default
+    uniform). The fine-tune mixture upweights the hard tasks.
+    """
+    rng = SplitMix64(seed)
+    weights = task_weights or [1] * len(TASKS)
+    bag = [t for t, w in zip(TASKS, weights) for _ in range(w)]
+    out = bytearray()
+    while len(out) < n_tokens:
+        out.extend(sample_line(rng.choice(bag), rng, shift).encode())
+    return bytes(out[:n_tokens])
+
+
+FINETUNE_WEIGHTS = [1, 1, 1, 3, 2, 3, 3, 1, 2]  # upweight add/ind/srt/bal/lm
+
+
+def eval_set(task, n, shift=False):
+    """Deterministic eval prompts for `task` (mirrored in Rust)."""
+    rng = SplitMix64(EVAL_SEED_BASE + TASKS.index(task))
+    return [eval_prompt(task, rng, shift) for _ in range(n)]
+
+
+def calibration_tokens(n_tokens):
+    """Calibration stream (paper uses MMLU; we use the mixed corpus)."""
+    return corpus_tokens(n_tokens, CALIB_SEED)

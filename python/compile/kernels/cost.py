@@ -1,0 +1,135 @@
+"""Analytic VMEM-footprint and MXU-utilization model for the L1 kernels.
+
+interpret=True gives CPU-numpy timings, which are *not* a TPU proxy —
+so per DESIGN.md §Perf we optimize kernel *structure* and estimate
+real-TPU behaviour analytically from the BlockSpec shapes:
+
+* VMEM footprint: every block resident during one grid step, double-
+  buffered on the streamed (weight) operands.
+* MXU utilization: fraction of each 128x128 systolic pass carrying
+  useful lanes, times the arithmetic-intensity roofline factor.
+
+These numbers feed EXPERIMENTS.md §Perf and the `cost` tests assert the
+invariants (footprint < VMEM budget, utilization within [0, 1], wider
+tiles never decrease utilization).
+"""
+
+from dataclasses import dataclass
+
+VMEM_BYTES = 16 * 1024 * 1024  # v4/v5-class core budget
+MXU_EDGE = 128
+F32 = 4
+# HBM bandwidth / peak-FLOPs ratio for a v5p-class core (bf16 ~459 TFLOPs,
+# ~2.7 TB/s) expressed as FLOPs needed per byte to be compute bound.
+ROOFLINE_FLOPS_PER_BYTE = 170.0
+
+
+@dataclass
+class KernelCost:
+    vmem_bytes: int
+    vmem_frac: float
+    flops: int
+    hbm_bytes: int
+    arithmetic_intensity: float
+    mxu_utilization: float
+    compute_bound: bool
+
+
+def _ceil_div(a, b):
+    return -(-a // b)
+
+
+def ffn_cost(c, d_model, d_ffn, token_tile=None, ffn_tile=128, double_buffer=True):
+    """Cost model for one swiglu_ffn(_tiled) invocation.
+
+    Mirrors the BlockSpecs in moe_ffn.py: the x/o blocks are resident,
+    the three weight tiles stream (2x buffered when double_buffer).
+    """
+    tt = min(token_tile or c, c)
+    ft = min(ffn_tile, d_ffn)
+    buf = 2 if double_buffer else 1
+    x_block = tt * d_model * F32
+    o_block = tt * d_model * F32
+    w_tiles = (2 * d_model * ft + ft * d_model) * F32  # w1, w3, w2
+    vmem = x_block + o_block + buf * w_tiles
+    # FLOPs: 3 GEMMs of [C, d] x [d, h] (x2 madd) + elementwise swish/mul.
+    flops = 2 * c * d_model * d_ffn * 3 + 6 * c * d_ffn
+    # HBM traffic: x once per FFN-tile column pass, weights once, out once.
+    col_passes = _ceil_div(d_ffn, ft)
+    hbm = (
+        c * d_model * F32 * (1 if tt == c else col_passes)
+        + 3 * d_model * d_ffn * F32
+        + c * d_model * F32
+    )
+    ai = flops / max(hbm, 1)
+    # MXU lane occupancy: each GEMM pass uses min(dim,128)/128 of the array
+    # in each of its two systolic dimensions.
+    occ_rows = min(tt, MXU_EDGE) / MXU_EDGE
+    occ_cols = min(ft, MXU_EDGE) / MXU_EDGE
+    occ_depth = min(d_model, MXU_EDGE) / MXU_EDGE
+    lane_occ = occ_rows * occ_cols * occ_depth
+    bandwidth_factor = min(1.0, ai / ROOFLINE_FLOPS_PER_BYTE)
+    util = lane_occ * bandwidth_factor
+    return KernelCost(
+        vmem_bytes=vmem,
+        vmem_frac=vmem / VMEM_BYTES,
+        flops=flops,
+        hbm_bytes=hbm,
+        arithmetic_intensity=ai,
+        mxu_utilization=util,
+        compute_bound=ai >= ROOFLINE_FLOPS_PER_BYTE,
+    )
+
+
+def probe_cost(c, d_model, d_ffn, ffn_tile=128):
+    """Cost model for one probe() invocation."""
+    ft = min(ffn_tile, d_ffn)
+    vmem = (c * d_model + 2 * 2 * d_model * ft + 4 * ft) * F32
+    flops = 2 * c * d_model * d_ffn * 2 + 8 * c * d_ffn
+    hbm = (c * d_model + 2 * d_model * d_ffn + 4 * d_ffn) * F32
+    ai = flops / max(hbm, 1)
+    occ = (min(c, MXU_EDGE) / MXU_EDGE) * (min(ft, MXU_EDGE) / MXU_EDGE) * (
+        min(d_model, MXU_EDGE) / MXU_EDGE
+    )
+    return KernelCost(
+        vmem_bytes=vmem,
+        vmem_frac=vmem / VMEM_BYTES,
+        flops=flops,
+        hbm_bytes=hbm,
+        arithmetic_intensity=ai,
+        mxu_utilization=occ * min(1.0, ai / ROOFLINE_FLOPS_PER_BYTE),
+        compute_bound=ai >= ROOFLINE_FLOPS_PER_BYTE,
+    )
+
+
+def report(capacities=(4, 8, 16, 32, 64, 128), widths=(128, 64, 32), d_model=64):
+    """Text table used by `make perf-l1` and EXPERIMENTS.md §Perf.
+
+    Defaults mirror the TinyMoE family's actual artifact shapes; the
+    second block evaluates the *same kernel structure* at Mixtral-8×7B
+    scale (d_model 4096, d_ffn 14336) to show the schedule reaches the
+    compute-bound regime on production shapes.
+    """
+    lines = ["-- TinyMoE artifact shapes --",
+             "C    d_ffn  VMEM(KiB)  frac     AI      MXU-util  bound"]
+    for h in widths:
+        for c in capacities:
+            k = ffn_cost(c, d_model, h, token_tile=32 if c >= 64 else None)
+            lines.append(
+                f"{c:<4} {h:<6} {k.vmem_bytes / 1024:<10.1f} {k.vmem_frac:<8.4f} "
+                f"{k.arithmetic_intensity:<7.2f} {k.mxu_utilization:<9.3f} "
+                f"{'compute' if k.compute_bound else 'memory'}"
+            )
+    lines.append("-- same kernel at Mixtral-8x7B expert scale --")
+    for c in (128, 256, 512, 1024):
+        k = ffn_cost(c, 4096, 14336, token_tile=64, ffn_tile=128)
+        lines.append(
+            f"{c:<4} {14336:<6} {k.vmem_bytes / 1024:<10.1f} {k.vmem_frac:<8.4f} "
+            f"{k.arithmetic_intensity:<7.2f} {k.mxu_utilization:<9.3f} "
+            f"{'compute' if k.compute_bound else 'memory'}"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(report())

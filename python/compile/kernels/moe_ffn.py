@@ -1,0 +1,128 @@
+"""Layer-1 Pallas kernel: the dual-sparse SwiGLU expert FFN.
+
+This is the paper's compute hot-spot (the grouped-GEMM the authors
+optimize in Triton, §4.2 "we optimize the corresponding Triton kernel").
+TPU adaptation (see DESIGN.md §Hardware-Adaptation): one Pallas program
+instance per FFN tile; the token block [C, d_model] stays resident in
+VMEM across the grid while W1/W3/W2 tiles stream HBM→VMEM; the partial
+down-projection products are accumulated into the output block.
+
+Dropping happens *outside* the kernel at tensor granularity: the Rust
+coordinator packs kept token-expert pairs into capacity buckets and
+invokes the (C, width) variant whose whole problem is smaller — so saved
+work is a smaller GEMM, never a masked one. The "major-only" neuron-level
+path is the same kernel with d_ffn halved.
+
+Lowered with interpret=True: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO that runs anywhere.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# FFN tile width (lane dimension of one grid step). 128 matches the MXU
+# systolic array edge; every artifact's d_ffn is a multiple of 64 and we
+# shrink the tile for the narrow variants.
+FFN_TILE = 128
+
+
+def _ffn_kernel(x_ref, w1_ref, w3_ref, w2_ref, o_ref):
+    """One grid step: one [d_model, FT] slice of the hidden dimension.
+
+    x_ref:  [C, d_model]   (whole token block, revisited every step)
+    w1_ref: [d_model, FT]  gate-projection tile
+    w3_ref: [d_model, FT]  up-projection tile
+    w2_ref: [FT, d_model]  down-projection tile
+    o_ref:  [C, d_model]   output accumulator (revisited every step)
+    """
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    h = x @ w1_ref[...]
+    gate = h * (1.0 / (1.0 + jnp.exp(-h)))  # Swish
+    up = x @ w3_ref[...]
+    o_ref[...] += (gate * up) @ w2_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("ffn_tile",))
+def swiglu_ffn(x, w1, w3, w2, ffn_tile=None):
+    """Pallas dual-sparse expert FFN. Shapes as in ref.swiglu_ffn_ref.
+
+    The grid runs over d_ffn tiles; d_ffn must divide evenly by the tile.
+    """
+    c, d_model = x.shape
+    d_ffn = w1.shape[1]
+    ft = ffn_tile or min(FFN_TILE, d_ffn)
+    assert d_ffn % ft == 0, f"d_ffn={d_ffn} not a multiple of tile {ft}"
+    grid = (d_ffn // ft,)
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c, d_model), lambda j: (0, 0)),
+            pl.BlockSpec((d_model, ft), lambda j: (0, j)),
+            pl.BlockSpec((d_model, ft), lambda j: (0, j)),
+            pl.BlockSpec((ft, d_model), lambda j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((c, d_model), lambda j: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, d_model), x.dtype),
+        interpret=True,
+    )(x, w1, w3, w2)
+
+
+def _ffn_kernel_tokens(x_ref, w1_ref, w3_ref, w2_ref, o_ref):
+    """Variant with a 2-D grid (token tile × FFN tile) for large C.
+
+    Token tiles are the *parallel* dimension, FFN tiles the accumulation
+    dimension; on real TPU hardware this is the double-bufferable
+    schedule (weights stream while the MXU chews the previous tile).
+    """
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    h = x @ w1_ref[...]
+    gate = h * (1.0 / (1.0 + jnp.exp(-h)))
+    up = x @ w3_ref[...]
+    o_ref[...] += (gate * up) @ w2_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("token_tile", "ffn_tile"))
+def swiglu_ffn_tiled(x, w1, w3, w2, token_tile=32, ffn_tile=None):
+    """2-D-grid version used for the large capacity buckets (C >= 64)."""
+    c, d_model = x.shape
+    d_ffn = w1.shape[1]
+    ft = ffn_tile or min(FFN_TILE, d_ffn)
+    tt = min(token_tile, c)
+    assert c % tt == 0 and d_ffn % ft == 0
+    grid = (c // tt, d_ffn // ft)
+    return pl.pallas_call(
+        _ffn_kernel_tokens,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tt, d_model), lambda i, j: (i, 0)),
+            pl.BlockSpec((d_model, ft), lambda i, j: (0, j)),
+            pl.BlockSpec((d_model, ft), lambda i, j: (0, j)),
+            pl.BlockSpec((ft, d_model), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tt, d_model), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, d_model), x.dtype),
+        interpret=True,
+    )(x, w1, w3, w2)
+
+
+def ffn_for_capacity(c):
+    """Pick the kernel variant for a capacity bucket (see DESIGN.md §6)."""
+    if c >= 64:
+        return swiglu_ffn_tiled
+    return swiglu_ffn

@@ -1,0 +1,58 @@
+"""Layer-1 Pallas kernel: neuron-importance probe.
+
+Computes the four accumulated importance statistics of §4.2 (Eqs. 14-17)
+for every FFN neuron over a calibration token block. The Rust calibration
+driver (`rust/src/calib/`) streams calibration batches through the AOT
+artifact of this kernel and sums the [4, d_ffn] partials; the resulting
+tables drive expert *reconstruction* (major/minor sub-expert split) and
+regenerate Figures 1 and 13.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+PROBE_TILE = 128
+
+
+def _probe_kernel(x_ref, w1_ref, w3_ref, o_ref):
+    """One FFN tile: accumulate the 4 importance rows for these neurons.
+
+    x_ref:  [C, d_model]
+    w1_ref: [d_model, FT]
+    w3_ref: [d_model, FT]
+    o_ref:  [4, FT]
+    """
+    x = x_ref[...]
+    h = x @ w1_ref[...]
+    gate = h * (1.0 / (1.0 + jnp.exp(-h)))
+    up = x @ w3_ref[...]
+    gu = gate * up
+    o_ref[0, :] = jnp.sum(gate, axis=0)
+    o_ref[1, :] = jnp.sum(jnp.abs(gate), axis=0)
+    o_ref[2, :] = jnp.sum(gu, axis=0)
+    o_ref[3, :] = jnp.sum(jnp.abs(gu), axis=0)
+
+
+@jax.jit
+def probe(x, w1, w3):
+    """Importance probe; shapes as in ref.probe_ref. Returns [4, d_ffn]."""
+    c, d_model = x.shape
+    d_ffn = w1.shape[1]
+    ft = min(PROBE_TILE, d_ffn)
+    assert d_ffn % ft == 0
+    grid = (d_ffn // ft,)
+    return pl.pallas_call(
+        _probe_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((c, d_model), lambda j: (0, 0)),
+            pl.BlockSpec((d_model, ft), lambda j: (0, j)),
+            pl.BlockSpec((d_model, ft), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((4, ft), lambda j: (0, j)),
+        out_shape=jax.ShapeDtypeStruct((4, d_ffn), x.dtype),
+        interpret=True,
+    )(x, w1, w3)

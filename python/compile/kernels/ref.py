@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the correctness references: pytest checks each Pallas kernel
+(interpret=True) against these functions with `assert_allclose`, and the
+Rust integration tests check the loaded HLO artifacts against golden
+vectors generated from these same functions.
+"""
+
+import jax.numpy as jnp
+
+
+def swish(x):
+    """Swish / SiLU activation: x * sigmoid(x)."""
+    return x * (1.0 / (1.0 + jnp.exp(-x)))
+
+
+def swiglu_ffn_ref(x, w1, w3, w2):
+    """SwiGLU expert FFN (Eq. 4 of the paper).
+
+    f(x) = (Swish(x @ W1) * (x @ W3)) @ W2
+
+    Args:
+      x:  [C, d_model] token block.
+      w1: [d_model, d_ffn] gate projection.
+      w3: [d_model, d_ffn] up projection.
+      w2: [d_ffn, d_model] down projection.
+
+    Returns:
+      [C, d_model] expert output.
+    """
+    gate = swish(x @ w1)
+    up = x @ w3
+    return (gate * up) @ w2
+
+
+def probe_ref(x, w1, w3):
+    """Neuron-importance accumulators (Eqs. 14-17 of the paper).
+
+    Returns [4, d_ffn]:
+      row 0: sum_t Swish(x W1)            (accumulated gate)
+      row 1: sum_t |Swish(x W1)|          (accumulated absolute gate)
+      row 2: sum_t Swish(x W1) * (x W3)   (accumulated gate-up)
+      row 3: sum_t |Swish(x W1) * (x W3)| (accumulated absolute gate-up)
+    """
+    gate = swish(x @ w1)
+    up = x @ w3
+    gu = gate * up
+    return jnp.stack(
+        [
+            jnp.sum(gate, axis=0),
+            jnp.sum(jnp.abs(gate), axis=0),
+            jnp.sum(gu, axis=0),
+            jnp.sum(jnp.abs(gu), axis=0),
+        ]
+    )
+
+
+def gate_ref(x, wg):
+    """Gating network (Eq. 1): softmax over expert logits."""
+    logits = x @ wg
+    m = jnp.max(logits, axis=-1, keepdims=True)
+    e = jnp.exp(logits - m)
+    return e / jnp.sum(e, axis=-1, keepdims=True)
+
+
+def topk_mask_ref(scores, top_k):
+    """Top-K selection mask (Eq. 2). Ties broken toward lower index.
+
+    Uses lax.top_k (not jnp.sort): sort's JVP lowers to a batched gather
+    that this image's xla_client cannot build.
+    """
+    import jax
+
+    kth = jax.lax.top_k(scores, top_k)[0][:, -1:]
+    return (scores >= kth).astype(scores.dtype)
+
+
+def moe_ref(x, wg, w1s, w3s, w2s, top_k):
+    """Dense reference of a full MoE layer (Eq. 3), no dropping.
+
+    Args:
+      x:   [T, d_model]
+      wg:  [d_model, E]
+      w1s/w3s: [E, d_model, d_ffn], w2s: [E, d_ffn, d_model]
+      top_k: number of active experts per token.
+
+    Returns [T, d_model].
+    """
+    scores = gate_ref(x, wg)  # [T, E]
+    g = scores * topk_mask_ref(scores, top_k)  # gating weights, zeros elsewhere
+    expert_outs = jnp.stack(
+        [swiglu_ffn_ref(x, w1s[e], w3s[e], w2s[e]) for e in range(w1s.shape[0])],
+        axis=1,
+    )  # [T, E, d]
+    return jnp.einsum("te,ted->td", g, expert_outs)

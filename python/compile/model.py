@@ -1,0 +1,212 @@
+"""Layer-2 JAX model: the TinyMoE transformer family.
+
+Two faces of the same parameters:
+
+* `forward_train` — a dense (all-experts, top-k-masked) differentiable
+  forward used only at build time by the trainer (`train.py`).
+* The `serve_*` functions — the per-artifact decomposition that
+  `aot.py` lowers to HLO text for the Rust engine. Weights are runtime
+  *inputs* to every artifact, so one artifact per shape bucket serves
+  every layer and every model variant of the family.
+
+The two paths share layer math exactly (RMSNorm placement, softmax-then-
+TopK gating with *original* scores as combination weights, shared-expert
+addition), which is property-tested in python/tests/test_model.py:
+decomposed serving == dense forward, token for token.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ModelConfig
+from .kernels.moe_ffn import swiglu_ffn, swiglu_ffn_tiled
+from .kernels.ref import swiglu_ffn_ref, gate_ref, topk_mask_ref
+
+EPS = 1e-6
+
+
+def rmsnorm(x, g):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + EPS) * g
+
+
+# --------------------------------------------------------------------------
+# Parameters
+# --------------------------------------------------------------------------
+
+def init_params(rng, cfg: ModelConfig):
+    """Initialize a parameter pytree (dict of arrays)."""
+    keys = jax.random.split(rng, 8 + cfg.n_layers)
+    s = 0.02
+    p = {
+        "emb": jax.random.normal(keys[0], (cfg.vocab, cfg.d_model)) * s,
+        "pos": jax.random.normal(keys[1], (cfg.max_seq, cfg.d_model)) * s,
+        "lnf": jnp.ones((cfg.d_model,)),
+        "layers": [],
+    }
+    for li in range(cfg.n_layers):
+        k = jax.random.split(keys[8 + li], 12)
+        layer = {
+            "ln1": jnp.ones((cfg.d_model,)),
+            "wq": jax.random.normal(k[0], (cfg.d_model, cfg.d_attn)) * s,
+            "wk": jax.random.normal(k[1], (cfg.d_model, cfg.d_attn)) * s,
+            "wv": jax.random.normal(k[2], (cfg.d_model, cfg.d_attn)) * s,
+            "wo": jax.random.normal(k[3], (cfg.d_attn, cfg.d_model)) * s,
+            "ln2": jnp.ones((cfg.d_model,)),
+            "wg": jax.random.normal(k[4], (cfg.d_model, cfg.n_experts)) * s,
+            "w1": jax.random.normal(k[5], (cfg.n_experts, cfg.d_model, cfg.d_ffn)) * s,
+            "w3": jax.random.normal(k[6], (cfg.n_experts, cfg.d_model, cfg.d_ffn)) * s,
+            "w2": jax.random.normal(k[7], (cfg.n_experts, cfg.d_ffn, cfg.d_model)) * s,
+        }
+        if cfg.n_shared:
+            layer["sw1"] = jax.random.normal(k[8], (cfg.d_model, cfg.d_ffn_shared)) * s
+            layer["sw3"] = jax.random.normal(k[9], (cfg.d_model, cfg.d_ffn_shared)) * s
+            layer["sw2"] = jax.random.normal(k[10], (cfg.d_ffn_shared, cfg.d_model)) * s
+        p["layers"].append(layer)
+    return p
+
+
+# --------------------------------------------------------------------------
+# Dense training forward (build-time only)
+# --------------------------------------------------------------------------
+
+def _attn_dense(x, layer, cfg: ModelConfig):
+    """Causal self-attention over a full sequence. x: [B, S, d]."""
+    b, s, _ = x.shape
+    xn = rmsnorm(x, layer["ln1"])
+    def heads(w):
+        return (xn @ w).reshape(b, s, cfg.n_heads, cfg.d_head).transpose(0, 2, 1, 3)
+    q, k, v = heads(layer["wq"]), heads(layer["wk"]), heads(layer["wv"])
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / jnp.sqrt(float(cfg.d_head))
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask[None, None], scores, -1e9)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", attn, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, s, cfg.d_attn)
+    return x + out @ layer["wo"]
+
+
+def _moe_dense(ln2x, layer, cfg: ModelConfig):
+    """All-experts masked MoE (training path). ln2x: [T, d].
+
+    Returns (moe_out [T, d], aux_loss scalar).
+    """
+    scores = jax.nn.softmax(ln2x @ layer["wg"], axis=-1)  # [T, E]
+    # Discrete selection: no gradient flows through the mask itself (and
+    # sort's VJP lowers to a batched gather this xla_client cannot build).
+    mask = jax.lax.stop_gradient(topk_mask_ref(scores, cfg.top_k))
+    g = scores * mask  # original scores as combination weights (Eq. 3)
+    # Dense compute of every expert (cheap at TinyMoE scale, jit-friendly).
+    h = jnp.einsum("td,edf->tef", ln2x, layer["w1"])
+    gate = h * jax.nn.sigmoid(h)
+    up = jnp.einsum("td,edf->tef", ln2x, layer["w3"])
+    outs = jnp.einsum("tef,efd->ted", gate * up, layer["w2"])
+    y = jnp.einsum("te,ted->td", g, outs)
+    if cfg.n_shared:
+        y = y + swiglu_ffn_ref(ln2x, layer["sw1"], layer["sw3"], layer["sw2"])
+    # Switch-style load-balancing aux loss.
+    frac = jnp.mean(mask, axis=0)
+    prob = jnp.mean(scores, axis=0)
+    aux = cfg.n_experts * jnp.sum(frac * prob)
+    return y, aux
+
+
+def forward_train(params, tokens, cfg: ModelConfig):
+    """tokens: [B, S] int32 → (logits [B, S, V], aux_loss)."""
+    b, s = tokens.shape
+    x = params["emb"][tokens] + params["pos"][:s][None]
+    aux_total = 0.0
+    for layer in params["layers"]:
+        x = _attn_dense(x, layer, cfg)
+        ln2x = rmsnorm(x, layer["ln2"])
+        flat = ln2x.reshape(b * s, cfg.d_model)
+        moe_out, aux = _moe_dense(flat, layer, cfg)
+        x = x + moe_out.reshape(b, s, cfg.d_model)
+        aux_total = aux_total + aux
+    xn = rmsnorm(x, params["lnf"])
+    logits = xn @ params["emb"].T
+    return logits, aux_total / cfg.n_layers
+
+
+def loss_fn(params, tokens, cfg: ModelConfig, aux_coef):
+    """Next-token cross-entropy + load-balance aux."""
+    logits, aux = forward_train(params, tokens, cfg)
+    tgt = tokens[:, 1:]
+    lp = jax.nn.log_softmax(logits[:, :-1], axis=-1)
+    # one-hot selection instead of take_along_axis: its VJP lowers to a
+    # batched gather this image's xla_client cannot build.
+    hot = jax.nn.one_hot(tgt, cfg.vocab, dtype=lp.dtype)
+    nll = -jnp.sum(lp * hot) / (tgt.shape[0] * tgt.shape[1])
+    return nll + aux_coef * aux, (nll, aux)
+
+
+# --------------------------------------------------------------------------
+# Serving decomposition (AOT artifacts)
+# --------------------------------------------------------------------------
+
+def serve_attn_step(x, ln1, wq, wk, wv, wo, ln2, kcache, vcache, pos,
+                    n_heads, d_head):
+    """Single-token decode step with KV cache.
+
+    x:       [B, d]  residual stream at this layer's input
+    kcache:  [B, H, T, dh], vcache likewise (positions < pos are valid)
+    pos:     [B] int32 — current position of each row (cache fill level)
+
+    Returns (y [B, d], ln2x [B, d], new_k [B, H, dh], new_v [B, H, dh]).
+    The engine (Rust) writes new_k/new_v into the host cache at `pos`.
+    """
+    b, d = x.shape
+    t = kcache.shape[2]
+    xn = rmsnorm(x, ln1)
+    q = (xn @ wq).reshape(b, n_heads, d_head)
+    new_k = (xn @ wk).reshape(b, n_heads, d_head)
+    new_v = (xn @ wv).reshape(b, n_heads, d_head)
+    scale = 1.0 / jnp.sqrt(float(d_head))
+    cache_scores = jnp.einsum("bhd,bhtd->bht", q, kcache) * scale
+    valid = jnp.arange(t)[None, :] < pos[:, None]  # [B, T]
+    cache_scores = jnp.where(valid[:, None, :], cache_scores, -1e9)
+    self_score = jnp.einsum("bhd,bhd->bh", q, new_k)[..., None] * scale  # [B,H,1]
+    scores = jnp.concatenate([cache_scores, self_score], axis=-1)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = (
+        jnp.einsum("bht,bhtd->bhd", attn[..., :t], vcache)
+        + attn[..., t:] * new_v
+    )
+    y = x + out.reshape(b, n_heads * d_head) @ wo
+    return y, rmsnorm(y, ln2), new_k, new_v
+
+
+def serve_attn_prefill(x, ln1, wq, wk, wv, wo, ln2, n_heads, d_head):
+    """Full-sequence causal prefill for one request. x: [S, d].
+
+    Returns (y [S, d], ln2x [S, d], K [S, H, dh], V [S, H, dh]).
+    """
+    s, d = x.shape
+    xn = rmsnorm(x, ln1)
+    q = (xn @ wq).reshape(s, n_heads, d_head)
+    k = (xn @ wk).reshape(s, n_heads, d_head)
+    v = (xn @ wv).reshape(s, n_heads, d_head)
+    scores = jnp.einsum("qhd,khd->hqk", q, k) / jnp.sqrt(float(d_head))
+    mask = jnp.tril(jnp.ones((s, s), dtype=bool))
+    scores = jnp.where(mask[None], scores, -1e9)
+    attn = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hqk,khd->qhd", attn, v).reshape(s, n_heads * d_head)
+    y = x + out @ wo
+    return y, rmsnorm(y, ln2), k, v
+
+
+def serve_gate(ln2x, wg):
+    """Gating scores (Eq. 1). Top-K / normalization / drop live in Rust."""
+    return gate_ref(ln2x, wg)
+
+
+def serve_ffn(x, w1, w3, w2):
+    """Expert FFN — routes through the L1 Pallas kernel."""
+    c = x.shape[0]
+    if c >= 64:
+        return swiglu_ffn_tiled(x, w1, w3, w2)
+    return swiglu_ffn(x, w1, w3, w2)
+
+
+def serve_lm_head(x, lnf, emb):
+    """Final norm + tied-embedding projection. x: [B, d] → [B, V]."""
+    return rmsnorm(x, lnf) @ emb.T

@@ -1,0 +1,32 @@
+"""SplitMix64 — deterministic RNG mirrored bit-for-bit in Rust.
+
+The synthetic benchmark suite must produce *identical* prompts in the
+build-time Python corpus generator and the run-time Rust evaluation
+harness (`rust/src/util/rng.rs`), so both sides implement this exact
+generator and the cross-language tests compare golden streams.
+"""
+
+MASK = (1 << 64) - 1
+
+
+class SplitMix64:
+    def __init__(self, seed: int):
+        self.state = seed & MASK
+
+    def next_u64(self) -> int:
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+        return (z ^ (z >> 31)) & MASK
+
+    def below(self, n: int) -> int:
+        """Uniform integer in [0, n) via 64-bit modulo (bias negligible)."""
+        return self.next_u64() % n
+
+    def choice(self, seq):
+        return seq[self.below(len(seq))]
+
+    def f64(self) -> float:
+        """Uniform in [0, 1) with 53 bits."""
+        return (self.next_u64() >> 11) * (1.0 / (1 << 53))

@@ -1,0 +1,138 @@
+"""Build-time trainer: pre-train the TinyMoE family, run the Figure-4
+fine-tuning comparison (original vs complete-transformed P=2 / P=4).
+
+Hand-rolled Adam (optax is not available offline). Everything is
+deterministic given the seeds in data.py. Loss logs land in
+artifacts/results/ so `dualsparse exp fig4` and EXPERIMENTS.md can
+consume them without re-training.
+"""
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import configs, data
+from .configs import ModelConfig
+from .model import init_params, loss_fn
+from .transform import complete_transform
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.95, 1e-8
+
+
+def _adam_init(params):
+    zeros = lambda p: jax.tree_util.tree_map(jnp.zeros_like, p)
+    return {"m": zeros(params), "v": zeros(params), "t": jnp.zeros((), jnp.int32)}
+
+
+def _adam_update(params, grads, state, lr):
+    t = state["t"] + 1
+    m = jax.tree_util.tree_map(
+        lambda m, g: ADAM_B1 * m + (1 - ADAM_B1) * g, state["m"], grads
+    )
+    v = jax.tree_util.tree_map(
+        lambda v, g: ADAM_B2 * v + (1 - ADAM_B2) * g * g, state["v"], grads
+    )
+    mhat_scale = 1.0 / (1 - ADAM_B1 ** t.astype(jnp.float32))
+    vhat_scale = 1.0 / (1 - ADAM_B2 ** t.astype(jnp.float32))
+    new_params = jax.tree_util.tree_map(
+        lambda p, m_, v_: p
+        - lr * (m_ * mhat_scale) / (jnp.sqrt(v_ * vhat_scale) + ADAM_EPS),
+        params,
+        m,
+        v,
+    )
+    return new_params, {"m": m, "v": v, "t": t}
+
+
+def _batches(token_bytes, batch, seq, n_steps, seed):
+    """Deterministic [batch, seq] windows over the corpus byte stream."""
+    arr = np.frombuffer(token_bytes, dtype=np.uint8).astype(np.int32)
+    rng = np.random.default_rng(seed)
+    n_win = len(arr) - seq - 1
+    for _ in range(n_steps):
+        starts = rng.integers(0, n_win, size=batch)
+        yield np.stack([arr[s : s + seq] for s in starts])
+
+
+def lr_schedule(base_lr, step, total_steps, warmup=50):
+    """Linear warmup then cosine decay to 10% of base."""
+    import math
+
+    if step < warmup:
+        return base_lr * (step + 1) / warmup
+    frac = (step - warmup) / max(1, total_steps - warmup)
+    return base_lr * (0.1 + 0.9 * 0.5 * (1 + math.cos(math.pi * frac)))
+
+
+def train(cfg: ModelConfig, params, steps, corpus, lr=configs.LR, seed=7,
+          log_every=10, tag=""):
+    """Run `steps` Adam steps; returns (params, loss_log)."""
+
+    @jax.jit
+    def step(params, opt, batch, lr_now):
+        (loss, (nll, aux)), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, batch, cfg, configs.AUX_LOSS_COEF
+        )
+        params, opt = _adam_update(params, grads, opt, lr_now)
+        return params, opt, loss, nll, aux
+
+    opt = _adam_init(params)
+    log = []
+    t0 = time.time()
+    for i, batch in enumerate(
+        _batches(corpus, configs.BATCH, configs.SEQ, steps, seed)
+    ):
+        lr_now = lr_schedule(lr, i, steps)
+        params, opt, loss, nll, aux = step(
+            params, opt, jnp.asarray(batch), jnp.float32(lr_now)
+        )
+        if i % log_every == 0 or i == steps - 1:
+            log.append({"step": i, "loss": float(nll), "aux": float(aux)})
+            print(
+                f"[train{tag}] step {i:4d} nll={float(nll):.4f} "
+                f"aux={float(aux):.3f} ({time.time() - t0:.0f}s)",
+                flush=True,
+            )
+    return params, log
+
+
+def pretrain(cfg: ModelConfig, steps=None):
+    """Pre-train one variant on the base task mixture."""
+    steps = steps or configs.PRETRAIN_STEPS
+    corpus = data.corpus_tokens(2_000_000, data.TRAIN_SEED)
+    params = init_params(jax.random.PRNGKey(hash(cfg.name) & 0xFFFF), cfg)
+    return train(cfg, params, steps, corpus, tag=f":{cfg.name}")
+
+
+def finetune(cfg: ModelConfig, params, steps=None, lr=None):
+    """Fine-tune on the shifted mixture (Fig. 4 / Table 1)."""
+    steps = steps or configs.FINETUNE_STEPS
+    corpus = data.corpus_tokens(
+        800_000, data.FINETUNE_SEED, shift=True,
+        task_weights=data.FINETUNE_WEIGHTS,
+    )
+    # Full LR: the gate columns of a partitioned model start identical
+    # and only diverge through the (small) per-sub-expert output
+    # differences — too low an LR freezes that symmetry breaking and
+    # hides the Fig. 4 effect.
+    return train(cfg, params, steps, corpus, lr=lr or configs.LR,
+                 seed=13, tag=f":ft:{cfg.name}")
+
+
+def fig4_experiment(base_cfg: ModelConfig, base_params, out_path):
+    """Fine-tune original vs P=2 vs P=4 complete transformations; write
+    the three loss curves (the paper's Figure 4)."""
+    curves = {}
+    for P in (1, 2, 4):
+        if P == 1:
+            cfg, params = base_cfg, base_params
+        else:
+            params, cfg = complete_transform(base_params, base_cfg, P)
+        tuned, log = finetune(cfg, params, steps=configs.FINETUNE_STEPS)
+        curves[f"P={P}"] = log
+        yield P, cfg, tuned
+    with open(out_path, "w") as f:
+        json.dump(curves, f, indent=1)

@@ -1,0 +1,164 @@
+"""Expert partition (complete / partial transformation) + reconstruction.
+
+Weight-space implementations of §3 of the paper:
+
+* `complete_transform` (Fig. 3b / Eqs. 7-11): repeat the gating columns
+  P times, split every expert's FFN neurons into P contiguous groups,
+  scale W2 by P, and bump top_k → top_k·P. The result is a *standard*
+  MoE model with E·P finer experts whose output equals the original
+  (property-tested to f.p. tolerance).
+* `partial_transform` (Fig. 3c / Eqs. 12-13): split the neurons the same
+  way but keep the gating network and W2 untouched; the *router* repeats
+  scores and remaps indices at run time (Rust owns that logic —
+  `rust/src/moe/partition.rs`; the reference router here exists for
+  cross-checking).
+* `reconstruct` (§4.2b): per expert, sort neurons by a calibration
+  importance table so the **major** sub-expert (p = 0) holds the top
+  half. A pure permutation of the FFN inner dimension — a mathematical
+  no-op when all sub-experts run.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig
+from dataclasses import replace
+
+
+def _split_expert(w1, w3, w2, P, scale_w2):
+    """[E,d,h]/[E,h,d] → [E*P,d,h/P]/[E*P,h/P,d], contiguous neuron groups."""
+    e, d, h = w1.shape
+    assert h % P == 0, f"d_ffn={h} not divisible by P={P}"
+    hp = h // P
+    w1p = w1.reshape(e, d, P, hp).transpose(0, 2, 1, 3).reshape(e * P, d, hp)
+    w3p = w3.reshape(e, d, P, hp).transpose(0, 2, 1, 3).reshape(e * P, d, hp)
+    w2p = w2.reshape(e, P, hp, d).reshape(e * P, hp, d)
+    if scale_w2:
+        w2p = w2p * float(P)
+    return w1p, w3p, w2p
+
+
+def complete_transform(params, cfg: ModelConfig, P: int):
+    """Complete transformation. Returns (new_params, new_cfg)."""
+    new_layers = []
+    for layer in params["layers"]:
+        nl = dict(layer)
+        nl["wg"] = jnp.repeat(layer["wg"], P, axis=1)  # [d, E*P]
+        nl["w1"], nl["w3"], nl["w2"] = _split_expert(
+            layer["w1"], layer["w3"], layer["w2"], P, scale_w2=True
+        )
+        new_layers.append(nl)
+    new_params = dict(params)
+    new_params["layers"] = new_layers
+    new_cfg = replace(
+        cfg,
+        name=f"{cfg.name}_p{P}",
+        n_experts=cfg.n_experts * P,
+        d_ffn=cfg.d_ffn // P,
+        top_k=cfg.top_k * P,
+    )
+    return new_params, new_cfg
+
+
+def partial_transform_weights(params, cfg: ModelConfig, P: int):
+    """Neuron split only (no gating change, no W2 scaling).
+
+    The gating network stays [d, E]; the router repeats scores / remaps
+    indices per Eq. 12 at run time.
+    """
+    new_layers = []
+    for layer in params["layers"]:
+        nl = dict(layer)
+        nl["w1"], nl["w3"], nl["w2"] = _split_expert(
+            layer["w1"], layer["w3"], layer["w2"], P, scale_w2=False
+        )
+        new_layers.append(nl)
+    new_params = dict(params)
+    new_params["layers"] = new_layers
+    return new_params
+
+
+def remap_indices(indices, P):
+    """Eq. 12: original Top-K indices → K·P sub-expert indices.
+
+    indices: [K] original expert ids. Sub-expert p of original expert i
+    has id i·P + p (contiguous placement).
+    """
+    return [i * P + p for p in range(P) for i in indices]
+
+
+def reconstruct_permutation(importance_eh):
+    """Per-expert neuron permutation from an importance table [E, h].
+
+    Returns perm [E, h] such that perm[e, :h//2] are the indices of the
+    *most* important neurons (major sub-expert) in descending order.
+    Ties break toward the lower index (stable sort on -importance).
+    """
+    imp = np.asarray(importance_eh)
+    order = np.argsort(-imp, axis=1, kind="stable")
+    return order
+
+
+def reconstruct(params, importance_leh):
+    """Apply reconstruction permutations; returns (params', perms).
+
+    importance_leh: [n_layers][E, h] importance tables (any of Eqs. 14-17).
+    The permutation reorders W1/W3 columns and W2 rows per expert —
+    output-invariant; partition into (major, minor) is then the contiguous
+    P=2 split of `partial_transform_weights`.
+    """
+    new_layers, perms = [], []
+    for layer, imp in zip(params["layers"], importance_leh):
+        order = reconstruct_permutation(imp)  # [E, h]
+        w1 = np.asarray(layer["w1"]).copy()
+        w3 = np.asarray(layer["w3"]).copy()
+        w2 = np.asarray(layer["w2"]).copy()
+        for e in range(w1.shape[0]):
+            w1[e] = w1[e][:, order[e]]
+            w3[e] = w3[e][:, order[e]]
+            w2[e] = w2[e][order[e], :]
+        nl = dict(layer)
+        nl["w1"], nl["w3"], nl["w2"] = jnp.asarray(w1), jnp.asarray(w3), jnp.asarray(w2)
+        new_layers.append(nl)
+        perms.append(order)
+    new_params = dict(params)
+    new_params["layers"] = new_layers
+    return new_params, perms
+
+
+def profile_importance(params, cfg: ModelConfig, tokens, metric="abs_gate"):
+    """Build-time importance profiling (reference path; the runtime path
+    streams the probe artifact from Rust — `rust/src/calib/`).
+
+    tokens: [B, S] calibration batch. Returns [L, E, h] numpy table.
+    """
+    from .model import rmsnorm, _attn_dense  # local import to avoid cycle
+    import jax
+
+    b, s = tokens.shape
+    x = params["emb"][tokens] + params["pos"][:s][None]
+    tables = []
+    for layer in params["layers"]:
+        x = _attn_dense(x, layer, cfg)
+        ln2x = rmsnorm(x, layer["ln2"])
+        flat = ln2x.reshape(b * s, cfg.d_model)
+        h = jnp.einsum("td,edf->tef", flat, layer["w1"])
+        gate = h * jax.nn.sigmoid(h)
+        up = jnp.einsum("td,edf->tef", flat, layer["w3"])
+        gu = gate * up
+        if metric == "gate":
+            imp = jnp.sum(gate, axis=0)
+        elif metric == "abs_gate":
+            imp = jnp.sum(jnp.abs(gate), axis=0)
+        elif metric == "gate_up":
+            imp = jnp.sum(gu, axis=0)
+        elif metric == "abs_gate_up":
+            imp = jnp.sum(jnp.abs(gu), axis=0)
+        else:
+            raise ValueError(f"unknown metric {metric}")
+        tables.append(np.asarray(imp))
+        # continue the forward with the true MoE output
+        from .model import _moe_dense
+        moe_out, _ = _moe_dense(flat, layer, cfg)
+        x = x + moe_out.reshape(b, s, cfg.d_model)
+    return np.stack(tables)

@@ -1,0 +1,135 @@
+"""L1 Pallas kernels vs the pure-jnp oracle.
+
+Hypothesis sweeps shapes/magnitudes; fixed cases pin the artifact
+shapes used by the Rust engine. This is the core correctness signal of
+the compile path: the same kernels lower into every ffn_/probe_ HLO
+artifact.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import moe_ffn, probe, ref
+from compile.kernels.cost import ffn_cost, probe_cost, VMEM_BYTES
+
+D_MODEL = 64
+
+
+def rand(key, shape, scale=0.2):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+@pytest.mark.parametrize("c", [4, 8, 16, 32, 64, 128])
+@pytest.mark.parametrize("h", [32, 64, 128])
+def test_ffn_matches_ref_artifact_shapes(c, h):
+    """Every (capacity, width) bucket the AOT exporter emits."""
+    x = rand(0, (c, D_MODEL), 0.5)
+    w1, w3, w2 = rand(1, (D_MODEL, h)), rand(2, (D_MODEL, h)), rand(3, (h, D_MODEL))
+    got = moe_ffn.swiglu_ffn_tiled(x, w1, w3, w2) if c >= 64 else \
+        moe_ffn.swiglu_ffn(x, w1, w3, w2)
+    want = ref.swiglu_ffn_ref(x, w1, w3, w2)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    c=st.sampled_from([1, 2, 3, 4, 5, 8, 16]),
+    h=st.sampled_from([16, 32, 64, 128, 256]),
+    scale=st.floats(0.01, 2.0),
+    seed=st.integers(0, 2**16),
+)
+def test_ffn_matches_ref_hypothesis(c, h, scale, seed):
+    """Shape/magnitude sweep (1-D grid variant handles any C)."""
+    x = rand(seed, (c, D_MODEL), scale)
+    w1 = rand(seed + 1, (D_MODEL, h), scale)
+    w3 = rand(seed + 2, (D_MODEL, h), scale)
+    w2 = rand(seed + 3, (h, D_MODEL), scale)
+    got = moe_ffn.swiglu_ffn(x, w1, w3, w2)
+    want = ref.swiglu_ffn_ref(x, w1, w3, w2)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    tt=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_ffn_tiled_token_tiles(tt, seed):
+    x = rand(seed, (64, D_MODEL), 0.4)
+    w1, w3 = rand(seed + 1, (D_MODEL, 128)), rand(seed + 2, (D_MODEL, 128))
+    w2 = rand(seed + 3, (128, D_MODEL))
+    got = moe_ffn.swiglu_ffn_tiled(x, w1, w3, w2, token_tile=tt)
+    want = ref.swiglu_ffn_ref(x, w1, w3, w2)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_ffn_zero_input_gives_zero():
+    x = jnp.zeros((4, D_MODEL))
+    w1, w3, w2 = rand(1, (D_MODEL, 64)), rand(2, (D_MODEL, 64)), rand(3, (64, D_MODEL))
+    got = moe_ffn.swiglu_ffn(x, w1, w3, w2)
+    np.testing.assert_allclose(got, jnp.zeros((4, D_MODEL)), atol=1e-7)
+
+
+@pytest.mark.parametrize("h", [32, 64, 128])
+def test_probe_matches_ref(h):
+    x = rand(7, (32, D_MODEL), 0.5)
+    w1, w3 = rand(8, (D_MODEL, h)), rand(9, (D_MODEL, h))
+    got = probe.probe(x, w1, w3)
+    want = ref.probe_ref(x, w1, w3)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**16), scale=st.floats(0.05, 1.5))
+def test_probe_hypothesis(seed, scale):
+    x = rand(seed, (32, D_MODEL), scale)
+    w1, w3 = rand(seed + 1, (D_MODEL, 64), scale), rand(seed + 2, (D_MODEL, 64), scale)
+    got = probe.probe(x, w1, w3)
+    want = ref.probe_ref(x, w1, w3)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_probe_abs_rows_dominate():
+    """|accumulated| rows are pointwise >= plain rows in magnitude."""
+    x = rand(3, (32, D_MODEL), 0.7)
+    w1, w3 = rand(4, (D_MODEL, 64)), rand(5, (D_MODEL, 64))
+    p = np.asarray(probe.probe(x, w1, w3))
+    assert (p[1] >= np.abs(p[0]) - 1e-4).all()
+    assert (p[3] >= np.abs(p[2]) - 1e-4).all()
+
+
+def test_probe_padding_rows_are_neutral():
+    """Zero token rows contribute exactly nothing (calibration pads)."""
+    x = rand(11, (16, D_MODEL), 0.5)
+    xp = jnp.concatenate([x, jnp.zeros((16, D_MODEL))])
+    w1, w3 = rand(12, (D_MODEL, 64)), rand(13, (D_MODEL, 64))
+    a = probe.probe(xp, w1, w3)
+    b = ref.probe_ref(x, w1, w3)
+    np.testing.assert_allclose(a, b, rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Analytic cost model invariants (L1 perf deliverable)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("c", [4, 8, 16, 32, 64, 128])
+@pytest.mark.parametrize("h", [32, 64, 128])
+def test_vmem_within_budget(c, h):
+    k = ffn_cost(c, D_MODEL, h, token_tile=32 if c >= 64 else None)
+    assert k.vmem_bytes < VMEM_BYTES
+    assert 0.0 <= k.mxu_utilization <= 1.0
+
+
+def test_bigger_capacity_increases_intensity():
+    a = ffn_cost(4, D_MODEL, 128)
+    b = ffn_cost(128, D_MODEL, 128, token_tile=128)
+    assert b.arithmetic_intensity > a.arithmetic_intensity
+
+
+def test_probe_cost_sane():
+    k = probe_cost(32, D_MODEL, 128)
+    assert k.vmem_bytes < VMEM_BYTES
+    assert k.flops > 0

@@ -1,0 +1,80 @@
+"""Cross-language parity pins: the Python generators and the Rust
+mirrors (rust/src/util/rng.rs, rust/src/tasks/mod.rs) must produce
+identical streams. The same golden values are asserted in
+rust/tests/parity.rs — change one side and these tell you."""
+
+from compile import data
+from compile.rng import SplitMix64
+
+GOLDEN_RNG_SEED0 = [
+    0xE220A8397B1DCDAF,
+    0x6E789E6AA1B965F4,
+    0x06C45D188009454F,
+    0xF88BB8A8724C81EC,
+]
+
+GOLDEN_EVAL = {
+    "cpy": [("cpy:afdg|", "afdg"), ("cpy:edaf|", "edaf"), ("cpy:aabc|", "aabc")],
+    "add": [("add:6+8|", "4"), ("add:0+0|", "0"), ("add:4+7|", "1")],
+    "ind": [("ind:a6 d6 b7 a|", "6"), ("ind:b0 c9 d1 c|", "9"),
+            ("ind:b7 d4 c2 d|", "4")],
+    "lm": [("lm:the mo|", "on is"), ("lm:a dog |", "ran t"),
+           ("lm:birds fly over t|", "he se")],
+    "bal": [("bal:()()|", "Y"), ("bal:))((|", "N"), ("bal:(())|", "Y")],
+    "srt": [("srt:aecb|", "abce"), ("srt:fdbc|", "bcdf"), ("srt:ecdf|", "cdef")],
+}
+
+
+def test_rng_stream():
+    r = SplitMix64(0)
+    assert [r.next_u64() for _ in range(4)] == GOLDEN_RNG_SEED0
+
+
+def test_rng_below_bounded():
+    r = SplitMix64(123)
+    assert all(r.below(7) < 7 for _ in range(1000))
+
+
+def test_eval_sets_match_golden():
+    for task, expected in GOLDEN_EVAL.items():
+        assert data.eval_set(task, 3) == expected, task
+
+
+def test_eval_set_deterministic():
+    assert data.eval_set("rev", 5) == data.eval_set("rev", 5)
+
+
+def test_corpus_structure():
+    c = data.corpus_tokens(2000, data.TRAIN_SEED)
+    text = c.decode()
+    line = text.splitlines()[0]
+    assert ":" in line and "|" in line
+
+
+def test_corpus_deterministic():
+    a = data.corpus_tokens(500, data.TRAIN_SEED)
+    b = data.corpus_tokens(500, data.TRAIN_SEED)
+    assert a == b
+
+
+def test_answers_correct_add():
+    for p, ans in data.eval_set("add", 50):
+        body = p[len("add:"):-1]
+        a, b = body.split("+")
+        assert ans == str((int(a) + int(b)) % 10)
+
+
+def test_answers_correct_rev():
+    for p, ans in data.eval_set("rev", 50):
+        body = p[len("rev:"):-1]
+        assert ans == body[::-1]
+
+
+def test_answers_correct_maj():
+    for p, ans in data.eval_set("maj", 50):
+        body = p[len("maj:"):-1]
+        assert ans == ("a" if body.count("a") >= 3 else "b")
+
+
+def test_shifted_distribution_differs():
+    assert data.eval_set("cpy", 5, shift=True) != data.eval_set("cpy", 5)

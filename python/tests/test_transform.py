@@ -1,0 +1,137 @@
+"""Expert partition + reconstruction properties (paper §3, §4.2).
+
+The central mathematical claims, tested to f.p. tolerance:
+  * complete transformation preserves the MoE layer output (Eq. 11);
+  * partial transformation preserves it with repeated scores (Eq. 13);
+  * reconstruction permutation is output-invariant when both halves run.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import configs, model, transform
+from compile.kernels import ref
+
+CFG = configs.ModelConfig(name="t", n_experts=4, d_ffn=32, top_k=2)
+
+
+def make_layer(seed, cfg=CFG):
+    k = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return {
+        "wg": jax.random.normal(k[0], (cfg.d_model, cfg.n_experts)) * 0.3,
+        "w1": jax.random.normal(k[1], (cfg.n_experts, cfg.d_model, cfg.d_ffn)) * 0.2,
+        "w3": jax.random.normal(k[2], (cfg.n_experts, cfg.d_model, cfg.d_ffn)) * 0.2,
+        "w2": jax.random.normal(k[3], (cfg.n_experts, cfg.d_ffn, cfg.d_model)) * 0.2,
+    }
+
+
+def moe_out(layer, x, n_experts, top_k):
+    return ref.moe_ref(x, layer["wg"], layer["w1"], layer["w3"], layer["w2"], top_k)
+
+
+def params_of(layer):
+    return {"layers": [layer]}
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), p=st.sampled_from([2, 4]))
+def test_complete_transform_preserves_output(seed, p):
+    """Eq. 11: the transformed model (E·P experts, top-K·P, W2 scaled)
+    produces the same layer output."""
+    layer = make_layer(seed)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 99), (6, CFG.d_model)) * 0.5
+    y0 = moe_out(layer, x, CFG.n_experts, CFG.top_k)
+    newp, newc = transform.complete_transform(params_of(layer), CFG, p)
+    nl = newp["layers"][0]
+    y1 = ref.moe_ref(x, nl["wg"], nl["w1"], nl["w3"], nl["w2"], newc.top_k)
+    np.testing.assert_allclose(y0, y1, rtol=2e-4, atol=2e-4)
+
+
+def test_complete_transform_shapes():
+    newp, newc = transform.complete_transform(params_of(make_layer(0)), CFG, 2)
+    nl = newp["layers"][0]
+    assert nl["wg"].shape == (CFG.d_model, 8)
+    assert nl["w1"].shape == (8, CFG.d_model, 16)
+    assert nl["w2"].shape == (8, 16, CFG.d_model)
+    assert newc.top_k == 4 and newc.n_experts == 8 and newc.d_ffn == 16
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16), p=st.sampled_from([2, 4]))
+def test_partial_transform_preserves_expert_output(seed, p):
+    """Eq. 10/13: sub-expert outputs sum to the original expert output
+    (no W2 scaling, repeated original score)."""
+    layer = make_layer(seed)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 7), (5, CFG.d_model)) * 0.5
+    newp = transform.partial_transform_weights(params_of(layer), CFG, p)
+    nl = newp["layers"][0]
+    for e in range(CFG.n_experts):
+        y0 = ref.swiglu_ffn_ref(x, layer["w1"][e], layer["w3"][e], layer["w2"][e])
+        parts = [
+            ref.swiglu_ffn_ref(x, nl["w1"][e * p + i], nl["w3"][e * p + i],
+                               nl["w2"][e * p + i])
+            for i in range(p)
+        ]
+        np.testing.assert_allclose(y0, sum(parts), rtol=2e-4, atol=2e-4)
+
+
+def test_remap_indices_eq12():
+    assert transform.remap_indices([3, 1], 2) == [6, 2, 7, 3]
+    assert transform.remap_indices([0], 3) == [0, 1, 2]
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_reconstruction_is_output_invariant(seed):
+    """§4.2b: permuting FFN neurons never changes the expert output."""
+    layer = make_layer(seed)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 3), (4, CFG.d_model)) * 0.5
+    imp = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(seed + 5), (CFG.n_experts, CFG.d_ffn))
+    )
+    newp, perms = transform.reconstruct(params_of(layer), [imp])
+    nl = newp["layers"][0]
+    for e in range(CFG.n_experts):
+        y0 = ref.swiglu_ffn_ref(x, layer["w1"][e], layer["w3"][e], layer["w2"][e])
+        y1 = ref.swiglu_ffn_ref(x, nl["w1"][e], nl["w3"][e], nl["w2"][e])
+        np.testing.assert_allclose(y0, y1, rtol=1e-4, atol=1e-4)
+
+
+def test_reconstruction_puts_important_first():
+    imp = np.array([[1.0, 5.0, 3.0, 2.0]])
+    order = transform.reconstruct_permutation(imp)
+    assert list(order[0]) == [1, 2, 3, 0]
+
+
+def test_reconstruction_major_half_has_top_importance():
+    layer = make_layer(1)
+    imp = np.asarray(
+        jax.random.normal(jax.random.PRNGKey(11), (CFG.n_experts, CFG.d_ffn))
+    )
+    _, perms = transform.reconstruct(params_of(layer), [imp])
+    order = perms[0]  # layer 0: [E, h]
+    h = CFG.d_ffn
+    for e in range(CFG.n_experts):
+        major = imp[e][order[e][: h // 2]]
+        minor = imp[e][order[e][h // 2:]]
+        assert major.min() >= minor.max() - 1e-7
+
+
+@pytest.mark.parametrize("metric", ["gate", "abs_gate", "gate_up", "abs_gate_up"])
+def test_profile_importance_shapes(metric):
+    cfg = configs.ModelConfig(name="p", n_experts=4, d_ffn=32, top_k=2, n_layers=2)
+    params = model.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jnp.zeros((2, 12), jnp.int32)
+    tables = transform.profile_importance(params, cfg, toks, metric)
+    assert tables.shape == (2, 4, 32)
+
+
+def test_profile_abs_metrics_nonnegative():
+    cfg = configs.ModelConfig(name="p", n_experts=4, d_ffn=32, top_k=2, n_layers=1)
+    params = model.init_params(jax.random.PRNGKey(1), cfg)
+    toks = jnp.arange(24, dtype=jnp.int32).reshape(2, 12) % 255
+    t_abs = transform.profile_importance(params, cfg, toks, "abs_gate")
+    assert (t_abs >= 0).all()

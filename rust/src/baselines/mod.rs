@@ -1,0 +1,143 @@
+//! Prior-work baselines for Table 3: EES, EEP (Lu et al. 2024) and a
+//! Wanda-style 2:4 static weight pruning row.
+//!
+//! * **EES** (Efficient Expert Skipping): skip the non-top expert when
+//!   its score < β × top-1 score, with β = the median score ratio over
+//!   calibration samples.
+//! * **EEP** (Efficient Expert Pruning): permanently remove the least-
+//!   activated experts (per layer) and renormalize routing over the
+//!   kept set. r = experts kept.
+//! * **Wanda 2:4**: magnitude-based 2-of-4 structured weight sparsity on
+//!   the expert FFN matrices (accuracy-impact row only — dense kernels
+//!   gain nothing from it, which is exactly the paper's point about
+//!   fine-grained sparsity needing special hardware).
+
+use anyhow::Result;
+
+use crate::engine::Engine;
+use crate::model::{Tensor, Weights};
+use crate::tasks::calibration_tokens;
+use crate::util::stats::percentile;
+
+/// Calibrate EES's β: median over calibration tokens of (2nd score /
+/// top score) at every MoE layer (paper §5.4).
+pub fn calibrate_ees_beta(engine: &mut Engine, n_tokens: usize) -> Result<f32> {
+    let k = engine.cfg.top_k;
+    assert!(k >= 2, "EES needs top-k >= 2");
+    engine.opts.collect_stats = true;
+    engine.reset_metrics();
+    let stream = calibration_tokens(n_tokens);
+    for chunk in stream.chunks(32) {
+        if chunk.len() < 2 {
+            break;
+        }
+        engine.kv.n_active = 0;
+        let slot = engine.kv.alloc();
+        engine.prefill(slot, chunk)?;
+    }
+    // raw_scores is laid out per token: k descending entries.
+    let raw = &engine.metrics.raw_scores;
+    let ratios: Vec<f64> = raw
+        .chunks_exact(k)
+        .map(|c| (c[1] / c[0].max(1e-9)) as f64)
+        .collect();
+    engine.opts.collect_stats = false;
+    Ok(percentile(&ratios, 50.0) as f32)
+}
+
+/// Calibrate EEP's kept set: per layer, keep the `r` most-selected
+/// experts on calibration traffic.
+pub fn calibrate_eep_kept(engine: &mut Engine, n_tokens: usize, r: usize) -> Result<Vec<Vec<usize>>> {
+    engine.opts.collect_stats = true;
+    engine.reset_metrics();
+    let stream = calibration_tokens(n_tokens);
+    for chunk in stream.chunks(32) {
+        if chunk.len() < 2 {
+            break;
+        }
+        engine.kv.n_active = 0;
+        let slot = engine.kv.alloc();
+        engine.prefill(slot, chunk)?;
+    }
+    let kept = engine
+        .metrics
+        .expert_counts
+        .iter()
+        .map(|counts| {
+            let mut idx: Vec<usize> = (0..counts.len()).collect();
+            idx.sort_by(|&a, &b| counts[b].cmp(&counts[a]).then(a.cmp(&b)));
+            let mut k: Vec<usize> = idx.into_iter().take(r).collect();
+            k.sort();
+            k
+        })
+        .collect();
+    engine.opts.collect_stats = false;
+    Ok(kept)
+}
+
+/// Fraction of expert-weight memory EEP saves (Table 3 "Memory").
+pub fn eep_memory_saving(n_experts: usize, r: usize) -> f64 {
+    1.0 - r as f64 / n_experts as f64
+}
+
+/// Apply Wanda-style 2:4 structured pruning in place: in every group of
+/// 4 consecutive weights along the input dimension, zero the 2 smallest
+/// by |magnitude|.
+pub fn apply_wanda_2_4(w: &mut Weights) -> Result<()> {
+    let n_layers = w.config.n_layers;
+    for li in 0..n_layers {
+        for key in ["w1", "w3", "w2"] {
+            let name = format!("layers.{li}.{key}");
+            let t = w.tensors.get_mut(&name).expect("expert tensor");
+            prune_2_4_rows(t);
+        }
+    }
+    Ok(())
+}
+
+/// 2:4 pruning along the innermost dimension of an arbitrary-rank tensor.
+fn prune_2_4_rows(t: &mut Tensor) {
+    let cols = *t.shape.last().unwrap();
+    for row in t.data.chunks_mut(cols) {
+        for g in row.chunks_mut(4) {
+            if g.len() < 4 {
+                continue;
+            }
+            let mut idx = [0usize, 1, 2, 3];
+            idx.sort_by(|&a, &b| {
+                g[a].abs().partial_cmp(&g[b].abs()).unwrap()
+            });
+            g[idx[0]] = 0.0;
+            g[idx[1]] = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prune_2_4_keeps_two_largest() {
+        let mut t = Tensor::new(vec![1, 4], vec![0.1, -5.0, 3.0, 0.2]);
+        prune_2_4_rows(&mut t);
+        assert_eq!(t.data, vec![0.0, -5.0, 3.0, 0.0]);
+    }
+
+    #[test]
+    fn prune_2_4_zero_fraction_is_half() {
+        let mut t = Tensor::new(
+            vec![2, 8],
+            (1..=16).map(|x| x as f32).collect(),
+        );
+        prune_2_4_rows(&mut t);
+        let zeros = t.data.iter().filter(|&&x| x == 0.0).count();
+        assert_eq!(zeros, 8);
+    }
+
+    #[test]
+    fn eep_memory() {
+        assert!((eep_memory_saving(8, 6) - 0.25).abs() < 1e-12);
+        assert!((eep_memory_saving(8, 4) - 0.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,170 @@
+//! Calibration: neuron-importance profiling via the L1 probe artifact
+//! (paper §4.2b, Eqs. 14-17), plus the Fig. 1 / Fig. 13 data products.
+//!
+//! Streams a deterministic calibration corpus through the engine; at
+//! every MoE layer the tokens routed to each expert are packed through
+//! `probe_h{width}` which returns the four accumulated importance rows
+//! per neuron. Tables are saved to `artifacts/results/` and consumed by
+//! expert *reconstruction* at engine load.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::engine::Engine;
+use crate::tasks::calibration_tokens;
+use crate::util::json::{Json, self};
+
+pub const METRICS: [&str; 4] = ["gate", "abs_gate", "gate_up", "abs_gate_up"];
+
+/// [layer][expert][metric 0..4][neuron] accumulated importance.
+#[derive(Debug, Clone)]
+pub struct ProbeTables {
+    pub t: Vec<Vec<[Vec<f32>; 4]>>,
+    pub width: usize,
+}
+
+impl ProbeTables {
+    pub fn new(n_layers: usize, n_experts: usize, width: usize) -> Self {
+        ProbeTables {
+            t: (0..n_layers)
+                .map(|_| {
+                    (0..n_experts)
+                        .map(|_| std::array::from_fn(|_| vec![0.0; width]))
+                        .collect()
+                })
+                .collect(),
+            width,
+        }
+    }
+
+    /// Importance tables for one metric: [layer][expert][neuron].
+    pub fn importance(&self, metric: &str) -> Vec<Vec<Vec<f32>>> {
+        let mi = METRICS
+            .iter()
+            .position(|&m| m == metric)
+            .unwrap_or(1 /* abs_gate */);
+        self.t
+            .iter()
+            .map(|layer| layer.iter().map(|e| e[mi].clone()).collect())
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let layers: Vec<Json> = self
+            .t
+            .iter()
+            .map(|layer| {
+                Json::Arr(
+                    layer
+                        .iter()
+                        .map(|e| {
+                            Json::Arr(
+                                e.iter()
+                                    .map(|m| {
+                                        Json::Arr(
+                                            m.iter().map(|&x| Json::Num(x as f64)).collect(),
+                                        )
+                                    })
+                                    .collect(),
+                            )
+                        })
+                        .collect(),
+                )
+            })
+            .collect();
+        json::obj(vec![
+            ("width", Json::Num(self.width as f64)),
+            ("tables", Json::Arr(layers)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let width = j.get("width")?.as_usize()?;
+        let mut t = Vec::new();
+        for layer in j.get("tables")?.as_arr()? {
+            let mut experts = Vec::new();
+            for e in layer.as_arr()? {
+                let ms = e.as_arr()?;
+                let arr: [Vec<f32>; 4] = std::array::from_fn(|i| {
+                    ms[i].as_f32_vec().unwrap_or_default()
+                });
+                experts.push(arr);
+            }
+            t.push(experts);
+        }
+        Ok(ProbeTables { t, width })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        std::fs::create_dir_all(path.parent().context("no parent")?)?;
+        std::fs::write(path, self.to_json().to_string())?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?} — run `dualsparse calibrate` first"))?;
+        Self::from_json(&Json::parse(&text)?)
+    }
+}
+
+/// Stream `n_tokens` of the calibration corpus through the engine with
+/// probing enabled; returns the accumulated tables.
+pub fn run_calibration(engine: &mut Engine, n_tokens: usize) -> Result<ProbeTables> {
+    let window = 32usize; // prefill bucket used for calibration windows
+    let stream = calibration_tokens(n_tokens);
+    engine.probe = Some(ProbeTables::new(
+        engine.cfg.n_layers,
+        engine.cfg.n_experts,
+        engine.cfg.d_ffn,
+    ));
+    for chunk in stream.chunks(window) {
+        if chunk.len() < 2 {
+            break;
+        }
+        engine.kv.n_active = 0;
+        let slot = engine.kv.alloc();
+        engine.prefill(slot, chunk)?;
+    }
+    Ok(engine.probe.take().expect("probe tables"))
+}
+
+/// Default path for a model's calibration tables.
+pub fn tables_path(artifacts_dir: &Path, model: &str) -> std::path::PathBuf {
+    artifacts_dir
+        .join("results")
+        .join(format!("importance_{model}.json"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_json_roundtrip() {
+        let mut t = ProbeTables::new(2, 3, 4);
+        t.t[1][2][0][3] = 1.5;
+        t.t[0][0][3][0] = -2.0;
+        let j = t.to_json();
+        let r = ProbeTables::from_json(&j).unwrap();
+        assert_eq!(r.width, 4);
+        assert_eq!(r.t[1][2][0][3], 1.5);
+        assert_eq!(r.t[0][0][3][0], -2.0);
+    }
+
+    #[test]
+    fn importance_defaults_to_abs_gate() {
+        let mut t = ProbeTables::new(1, 1, 2);
+        t.t[0][0][1] = vec![3.0, 1.0];
+        let imp = t.importance("nonsense-metric");
+        assert_eq!(imp[0][0], vec![3.0, 1.0]);
+    }
+
+    #[test]
+    fn metric_selection() {
+        let mut t = ProbeTables::new(1, 1, 2);
+        t.t[0][0][2] = vec![7.0, 8.0];
+        assert_eq!(t.importance("gate_up")[0][0], vec![7.0, 8.0]);
+    }
+}

@@ -1,0 +1,209 @@
+//! KV-cache manager: fixed-slot paged storage for continuous batching.
+//!
+//! Layout: one tensor per layer, `[B_MAX, H, T, dh]`, plus a free-slot
+//! list. Decode batches always occupy a contiguous slot prefix
+//! (`compact` moves the tail slot into a hole when a request retires),
+//! so the batch cache fed to `attn_step_b{B}` is simply the first
+//! `B` rows — no per-step gather.
+
+use crate::model::Tensor;
+
+pub struct KvCache {
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub max_seq: usize,
+    pub d_head: usize,
+    pub max_slots: usize,
+    /// Per-layer K / V tensors, shape [B_MAX, H, T, dh].
+    pub k: Vec<Tensor>,
+    pub v: Vec<Tensor>,
+    /// Tokens cached per slot (== next write position).
+    pub pos: Vec<usize>,
+    /// Slots currently in use (always a prefix 0..n_active).
+    pub n_active: usize,
+}
+
+impl KvCache {
+    pub fn new(n_layers: usize, n_heads: usize, max_seq: usize, d_head: usize,
+               max_slots: usize) -> Self {
+        let shape = vec![max_slots, n_heads, max_seq, d_head];
+        KvCache {
+            n_layers,
+            n_heads,
+            max_seq,
+            d_head,
+            max_slots,
+            k: (0..n_layers).map(|_| Tensor::zeros(shape.clone())).collect(),
+            v: (0..n_layers).map(|_| Tensor::zeros(shape.clone())).collect(),
+            pos: vec![0; max_slots],
+            n_active: 0,
+        }
+    }
+
+    /// Claim the next slot; returns its index. Panics if full (the
+    /// batcher checks `has_free` first).
+    pub fn alloc(&mut self) -> usize {
+        assert!(self.n_active < self.max_slots, "KV cache full");
+        let slot = self.n_active;
+        self.n_active += 1;
+        self.pos[slot] = 0;
+        self.zero_slot(slot);
+        slot
+    }
+
+    pub fn has_free(&self) -> bool {
+        self.n_active < self.max_slots
+    }
+
+    fn slot_stride(&self) -> usize {
+        self.n_heads * self.max_seq * self.d_head
+    }
+
+    fn zero_slot(&mut self, slot: usize) {
+        let stride = self.slot_stride();
+        for li in 0..self.n_layers {
+            self.k[li].data[slot * stride..(slot + 1) * stride].fill(0.0);
+            self.v[li].data[slot * stride..(slot + 1) * stride].fill(0.0);
+        }
+    }
+
+    /// Retire `slot`, moving the last active slot into the hole so active
+    /// slots stay a contiguous prefix. Returns Some(moved_from) when a
+    /// slot was relocated (the batcher must remap its request).
+    pub fn free(&mut self, slot: usize) -> Option<usize> {
+        assert!(slot < self.n_active);
+        let last = self.n_active - 1;
+        self.n_active -= 1;
+        if slot == last {
+            return None;
+        }
+        let stride = self.slot_stride();
+        for li in 0..self.n_layers {
+            let (a, b) = (slot * stride, last * stride);
+            // copy within one buffer: split_at_mut around the later range
+            let data = &mut self.k[li].data;
+            data.copy_within(b..b + stride, a);
+            let data = &mut self.v[li].data;
+            data.copy_within(b..b + stride, a);
+        }
+        self.pos[slot] = self.pos[last];
+        self.pos[last] = 0;
+        Some(last)
+    }
+
+    /// Write one new (k, v) head-vector set for `slot` at its current
+    /// position and advance it. `new_k`/`new_v`: `[H, dh]` row-major.
+    pub fn append(&mut self, layer: usize, slot: usize, new_k: &[f32], new_v: &[f32]) {
+        let t = self.pos[slot];
+        assert!(t < self.max_seq, "sequence overflow in slot {slot}");
+        let (h, dh, tt) = (self.n_heads, self.d_head, self.max_seq);
+        for hi in 0..h {
+            let dst = ((slot * h + hi) * tt + t) * dh;
+            let src = hi * dh;
+            self.k[layer].data[dst..dst + dh].copy_from_slice(&new_k[src..src + dh]);
+            self.v[layer].data[dst..dst + dh].copy_from_slice(&new_v[src..src + dh]);
+        }
+        if layer == self.n_layers - 1 {
+            self.pos[slot] = t + 1;
+        }
+    }
+
+    /// Bulk-write prefill K/V for `slot`: `ks`/`vs` are `[S, H, dh]`.
+    pub fn write_prefill(&mut self, layer: usize, slot: usize, s_len: usize,
+                         ks: &[f32], vs: &[f32]) {
+        let (h, dh, tt) = (self.n_heads, self.d_head, self.max_seq);
+        for t in 0..s_len {
+            for hi in 0..h {
+                let dst = ((slot * h + hi) * tt + t) * dh;
+                let src = (t * h + hi) * dh;
+                self.k[layer].data[dst..dst + dh].copy_from_slice(&ks[src..src + dh]);
+                self.v[layer].data[dst..dst + dh].copy_from_slice(&vs[src..src + dh]);
+            }
+        }
+        if layer == self.n_layers - 1 {
+            self.pos[slot] = s_len;
+        }
+    }
+
+    /// The first `b` slots of layer `li` as a `[b, H, T, dh]` tensor
+    /// (copy; fed to the attn_step artifact).
+    pub fn batch_view(&self, layer: usize, b: usize) -> (Tensor, Tensor) {
+        let stride = self.slot_stride();
+        let shape = vec![b, self.n_heads, self.max_seq, self.d_head];
+        (
+            Tensor::new(shape.clone(), self.k[layer].data[..b * stride].to_vec()),
+            Tensor::new(shape, self.v[layer].data[..b * stride].to_vec()),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache() -> KvCache {
+        KvCache::new(2, 2, 8, 4, 3)
+    }
+
+    #[test]
+    fn alloc_free_compacts() {
+        let mut c = cache();
+        let a = c.alloc();
+        let b = c.alloc();
+        let d = c.alloc();
+        assert_eq!((a, b, d), (0, 1, 2));
+        assert!(!c.has_free());
+        // free middle: slot 2 moves into 1
+        assert_eq!(c.free(1), Some(2));
+        assert_eq!(c.n_active, 2);
+        // free last: no move
+        assert_eq!(c.free(1), None);
+    }
+
+    #[test]
+    fn append_advances_on_last_layer_only() {
+        let mut c = cache();
+        let s = c.alloc();
+        let k = vec![1.0; 8];
+        let v = vec![2.0; 8];
+        c.append(0, s, &k, &v);
+        assert_eq!(c.pos[s], 0); // not the last layer yet
+        c.append(1, s, &k, &v);
+        assert_eq!(c.pos[s], 1);
+    }
+
+    #[test]
+    fn append_lands_in_layout() {
+        let mut c = cache();
+        let s = c.alloc();
+        let k: Vec<f32> = (0..8).map(|x| x as f32).collect();
+        c.append(0, s, &k, &k);
+        c.append(1, s, &k, &k);
+        // head 1, t=0, dh=4 → offset ((0*2+1)*8+0)*4 = 32
+        assert_eq!(c.k[0].data[32..36], [4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn prefill_sets_pos() {
+        let mut c = cache();
+        let s = c.alloc();
+        let ks = vec![0.5; 3 * 2 * 4];
+        for li in 0..2 {
+            c.write_prefill(li, s, 3, &ks, &ks);
+        }
+        assert_eq!(c.pos[s], 3);
+        let (bk, _) = c.batch_view(0, 1);
+        assert_eq!(bk.shape, vec![1, 2, 8, 4]);
+        assert_eq!(bk.data[0], 0.5);
+    }
+
+    #[test]
+    fn free_moves_pos_too() {
+        let mut c = cache();
+        c.alloc();
+        c.alloc();
+        c.pos[1] = 5;
+        c.free(0);
+        assert_eq!(c.pos[0], 5);
+    }
+}

@@ -1,0 +1,790 @@
+//! The DualSparse-MoE serving engine: layer loop, capacity-bucket MoE
+//! dispatch, KV cache, greedy generation.
+//!
+//! All heavy math executes through AOT PJRT artifacts (Layer 1/2);
+//! this module owns routing, drop decisions, packing, the KV cache and
+//! batching — the coordination the paper contributes.
+
+pub mod batcher;
+pub mod kv;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Result};
+
+use crate::model::{ModelConfig, Tensor, Weights};
+use crate::moe::{
+    plan_dispatch, route_token, DropPolicy, DropStats, PartitionedExpert,
+    SubExpert, TokenRouting,
+};
+use crate::runtime::{Arg, Runtime};
+use crate::util::round_up_bucket;
+
+pub const BATCH_BUCKETS: [usize; 5] = [1, 2, 4, 8, 16];
+pub const PREFILL_BUCKETS: [usize; 4] = [16, 32, 64, 128];
+/// ~1.4× spacing so a ~25% drop in kept pairs usually lands in a smaller
+/// bucket — the mechanism that turns drop rate into real speedup (Fig. 10).
+pub const CAPACITY_BUCKETS: [usize; 12] =
+    [2, 4, 6, 8, 12, 16, 24, 32, 48, 64, 96, 128];
+pub const MAX_SLOTS: usize = 16;
+pub const EOS: u8 = b'\n';
+
+/// How the router selects experts (baselines reuse the same engine).
+#[derive(Debug, Clone)]
+pub enum RouterMode {
+    /// Paper's router: Top-K + normalization + drop policy.
+    Standard,
+    /// Efficient Expert Skipping (Lu et al.): skip the 2nd..Kth expert
+    /// when its score < β × top-1 score.
+    Ees { beta: f32 },
+    /// Efficient Expert Pruning: only `kept[layer]` experts exist;
+    /// scores are renormalized over the kept set.
+    Eep { kept: Vec<Vec<usize>> },
+    /// EEP + EES stacked (Table 3's combined rows).
+    EepEes { kept: Vec<Vec<usize>>, beta: f32 },
+}
+
+/// Expert-parallel simulation attached to the engine (fig10/fig11).
+#[derive(Debug, Clone)]
+pub struct EpOptions {
+    pub n_devices: usize,
+    /// Load-aware thresholding (§4.3) on/off.
+    pub load_aware: bool,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct EngineOptions {
+    /// Use the 2-sub-expert reconstruction split (requires importance
+    /// tables from `calib`); false ⇒ contiguous partition halves.
+    pub reconstructed: bool,
+    /// Importance tables [layer][expert][neuron] (from calibration).
+    pub importance: Option<Vec<Vec<Vec<f32>>>>,
+    /// Collect gating-score distributions + per-layer drop stats.
+    pub collect_stats: bool,
+    pub ep: Option<EpOptions>,
+}
+
+/// Aggregated engine metrics (fig6/fig10/fig11/fig12 inputs).
+#[derive(Debug, Default, Clone)]
+pub struct EngineMetrics {
+    pub per_layer_drop: Vec<DropStats>,
+    pub shared_pairs: u64,
+    pub raw_scores: Vec<f32>,
+    pub norm_scores: Vec<f32>,
+    pub expert_counts: Vec<Vec<u64>>,
+    pub decode_steps: u64,
+    pub prefill_tokens: u64,
+    pub generated_tokens: u64,
+    /// Per-EP-device accumulated FFN busy time (seconds).
+    pub device_time: Vec<f64>,
+    /// Per-EP-device routed token-expert pairs before dropping.
+    pub device_load: Vec<u64>,
+}
+
+impl EngineMetrics {
+    pub fn total_drop(&self) -> DropStats {
+        let mut s = DropStats::default();
+        for d in &self.per_layer_drop {
+            s.merge(d);
+        }
+        s
+    }
+
+    /// Paper's drop-rate definition; includes shared-expert compute in
+    /// the denominator for shared-expert models (§5.3.1).
+    pub fn drop_rate(&self) -> f64 {
+        let t = self.total_drop();
+        let denom = t.total() as f64 + self.shared_pairs as f64;
+        if denom == 0.0 {
+            return 0.0;
+        }
+        (t.dropped as f64 + 0.5 * t.major_only as f64) / denom
+    }
+
+    /// Simulated EP MoE makespan: max per-device busy time.
+    pub fn makespan(&self) -> f64 {
+        self.device_time.iter().cloned().fold(0.0, f64::max)
+    }
+}
+
+/// Device-resident buffers for one weight-bearing executable argument
+/// set (uploaded once at load; the hot path never re-copies weights).
+struct VariantBufs {
+    w1: xla::PjRtBuffer,
+    w3: xla::PjRtBuffer,
+    w2: xla::PjRtBuffer,
+    width: usize,
+}
+
+struct LayerBufs {
+    ln1: xla::PjRtBuffer,
+    wq: xla::PjRtBuffer,
+    wk: xla::PjRtBuffer,
+    wv: xla::PjRtBuffer,
+    wo: xla::PjRtBuffer,
+    ln2: xla::PjRtBuffer,
+    wg: xla::PjRtBuffer,
+}
+
+struct ExpertBufs {
+    full: VariantBufs,
+    major: VariantBufs,
+    minor: VariantBufs,
+}
+
+pub struct Engine {
+    pub rt: Runtime,
+    pub cfg: ModelConfig,
+    weights: Weights,
+    /// [layer][original expert] partitioned weights.
+    experts: Vec<Vec<PartitionedExpert>>,
+    /// [layer] shared expert (DeepSeek-style), full width.
+    shared: Vec<Option<SubExpert>>,
+    /// Persistent device buffers mirroring the above.
+    lbufs: Vec<LayerBufs>,
+    ebufs: Vec<Vec<ExpertBufs>>,
+    sbufs: Vec<Option<VariantBufs>>,
+    lnf_buf: xla::PjRtBuffer,
+    emb_buf: xla::PjRtBuffer,
+    pub kv: kv::KvCache,
+    pub policy: DropPolicy,
+    pub router_mode: RouterMode,
+    pub opts: EngineOptions,
+    pub metrics: EngineMetrics,
+    /// expert → EP device placement (round-robin), when EP is on.
+    placement: Vec<usize>,
+    /// When set, every routed (token, expert) pair is also run through
+    /// the probe artifact and accumulated (calibration mode, §4.2b).
+    pub probe: Option<crate::calib::ProbeTables>,
+    /// Serve through the partial-transformation split: every kept FULL
+    /// pair executes as two sub-expert calls (major + minor) with the
+    /// repeated original score — the runtime face of Eq. 13. Used by the
+    /// Table 1 consistency row and the S-ETP-style deployments.
+    pub force_split: bool,
+}
+
+impl Engine {
+    pub fn new(
+        artifacts_dir: &Path,
+        model_name: &str,
+        policy: DropPolicy,
+        opts: EngineOptions,
+    ) -> Result<Self> {
+        let weights = Weights::load(&artifacts_dir.join("models"), model_name)?;
+        Self::from_weights(artifacts_dir, weights, policy, opts)
+    }
+
+    /// Build an engine around already-loaded (possibly surgically
+    /// modified — see `baselines::apply_wanda_2_4`) weights.
+    pub fn from_weights(
+        artifacts_dir: &Path,
+        weights: Weights,
+        policy: DropPolicy,
+        opts: EngineOptions,
+    ) -> Result<Self> {
+        let rt = Runtime::new(artifacts_dir)?;
+        let cfg = weights.config.clone();
+        let mut experts = Vec::with_capacity(cfg.n_layers);
+        for li in 0..cfg.n_layers {
+            let imp = match (&opts.importance, opts.reconstructed) {
+                (Some(tables), true) => Some(tables[li].as_slice()),
+                (None, true) => bail!(
+                    "reconstructed=true requires importance tables — run \
+                     `dualsparse calibrate {}` first",
+                    cfg.name
+                ),
+                _ => None,
+            };
+            experts.push(crate::moe::build_layer(&weights, li, imp)?);
+        }
+        let shared = (0..cfg.n_layers)
+            .map(|li| -> Result<Option<SubExpert>> {
+                if cfg.n_shared == 0 {
+                    return Ok(None);
+                }
+                Ok(Some(SubExpert {
+                    w1: weights.layer(li, "sw1")?.clone(),
+                    w3: weights.layer(li, "sw3")?.clone(),
+                    w2: weights.layer(li, "sw2")?.clone(),
+                    width: cfg.d_ffn_shared,
+                }))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        // Upload every weight tensor to a persistent device buffer.
+        let up = |t: &Tensor| rt.upload(t);
+        let up3 = |se: &SubExpert| -> Result<VariantBufs> {
+            Ok(VariantBufs {
+                w1: rt.upload(&se.w1)?,
+                w3: rt.upload(&se.w3)?,
+                w2: rt.upload(&se.w2)?,
+                width: se.width,
+            })
+        };
+        let mut lbufs = Vec::with_capacity(cfg.n_layers);
+        let mut ebufs = Vec::with_capacity(cfg.n_layers);
+        let mut sbufs = Vec::with_capacity(cfg.n_layers);
+        for li in 0..cfg.n_layers {
+            lbufs.push(LayerBufs {
+                ln1: up(weights.layer(li, "ln1")?)?,
+                wq: up(weights.layer(li, "wq")?)?,
+                wk: up(weights.layer(li, "wk")?)?,
+                wv: up(weights.layer(li, "wv")?)?,
+                wo: up(weights.layer(li, "wo")?)?,
+                ln2: up(weights.layer(li, "ln2")?)?,
+                wg: up(weights.layer(li, "wg")?)?,
+            });
+            ebufs.push(
+                experts[li]
+                    .iter()
+                    .map(|pe| -> Result<ExpertBufs> {
+                        Ok(ExpertBufs {
+                            full: up3(&pe.full)?,
+                            major: up3(&pe.major)?,
+                            minor: up3(&pe.minor)?,
+                        })
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            );
+            sbufs.push(match &shared[li] {
+                Some(se) => Some(up3(se)?),
+                None => None,
+            });
+        }
+        let lnf_buf = up(weights.get("lnf")?)?;
+        let emb_buf = up(weights.get("emb")?)?;
+        let kv = kv::KvCache::new(cfg.n_layers, cfg.n_heads, cfg.max_seq,
+                                  cfg.d_head, MAX_SLOTS);
+        let n_dev = opts.ep.as_ref().map(|e| e.n_devices).unwrap_or(0);
+        let placement = (0..cfg.n_experts)
+            .map(|e| if n_dev > 0 { e % n_dev } else { 0 })
+            .collect();
+        let mut metrics = EngineMetrics::default();
+        metrics.per_layer_drop = vec![DropStats::default(); cfg.n_layers];
+        metrics.expert_counts = vec![vec![0; cfg.n_experts]; cfg.n_layers];
+        metrics.device_time = vec![0.0; n_dev.max(1)];
+        metrics.device_load = vec![0; n_dev.max(1)];
+        Ok(Engine {
+            rt,
+            cfg,
+            weights,
+            experts,
+            shared,
+            lbufs,
+            ebufs,
+            sbufs,
+            lnf_buf,
+            emb_buf,
+            kv,
+            policy,
+            router_mode: RouterMode::Standard,
+            opts,
+            metrics,
+            placement,
+            probe: None,
+            force_split: false,
+        })
+    }
+
+    pub fn reset_metrics(&mut self) {
+        let n_dev = self.metrics.device_time.len();
+        self.metrics = EngineMetrics::default();
+        self.metrics.per_layer_drop = vec![DropStats::default(); self.cfg.n_layers];
+        self.metrics.expert_counts =
+            vec![vec![0; self.cfg.n_experts]; self.cfg.n_layers];
+        self.metrics.device_time = vec![0.0; n_dev];
+        self.metrics.device_load = vec![0; n_dev];
+        self.rt.reset_counters();
+    }
+
+    // ------------------------------------------------------------------
+    // Embedding
+    // ------------------------------------------------------------------
+
+    /// x = emb[token] + pos_emb[position], one row per (token, pos).
+    fn embed(&self, tokens: &[u8], positions: &[usize]) -> Tensor {
+        let d = self.cfg.d_model;
+        let emb = self.weights.get("emb").unwrap();
+        let pos = self.weights.get("pos").unwrap();
+        let mut data = vec![0.0f32; tokens.len() * d];
+        for (i, (&t, &p)) in tokens.iter().zip(positions).enumerate() {
+            let er = emb.row(t as usize);
+            let pr = pos.row(p);
+            for j in 0..d {
+                data[i * d + j] = er[j] + pr[j];
+            }
+        }
+        Tensor::new(vec![tokens.len(), d], data)
+    }
+
+    // ------------------------------------------------------------------
+    // Routing
+    // ------------------------------------------------------------------
+
+    /// Route one token's gate-score row according to the router mode.
+    fn route(&self, scores: &[f32], li: usize) -> TokenRouting {
+        match &self.router_mode {
+            RouterMode::Standard => route_token(
+                scores, self.cfg.top_k, self.cfg.normalized_gating,
+            ),
+            RouterMode::Ees { beta } => {
+                let mut r = route_token(
+                    scores, self.cfg.top_k, self.cfg.normalized_gating,
+                );
+                let top = r.experts[0].1;
+                r.experts = r
+                    .experts
+                    .iter()
+                    .enumerate()
+                    .filter(|&(i, &(_, s, _))| i == 0 || s >= beta * top)
+                    .map(|(_, &e)| e)
+                    .collect();
+                r
+            }
+            RouterMode::Eep { kept } => self.route_eep(scores, &kept[li], None),
+            RouterMode::EepEes { kept, beta } => {
+                self.route_eep(scores, &kept[li], Some(*beta))
+            }
+        }
+    }
+
+    /// EEP routing: renormalize over the kept set, Top-K, and optionally
+    /// stack EES's β-ratio skipping on top.
+    fn route_eep(&self, scores: &[f32], kept: &[usize], ees_beta: Option<f32>) -> TokenRouting {
+        let sum: f32 = kept.iter().map(|&e| scores[e]).sum();
+        let mut kept_scores: Vec<(usize, f32)> = kept
+            .iter()
+            .map(|&e| (e, if sum > 0.0 { scores[e] / sum } else { 0.0 }))
+            .collect();
+        kept_scores.sort_by(|a, b| {
+            b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
+        });
+        let k = self.cfg.top_k.min(kept_scores.len());
+        let mut sel: Vec<(usize, f32)> = kept_scores[..k].to_vec();
+        if let Some(beta) = ees_beta {
+            let top = sel[0].1;
+            sel = sel
+                .into_iter()
+                .enumerate()
+                .filter(|&(i, (_, s))| i == 0 || s >= beta * top)
+                .map(|(_, e)| e)
+                .collect();
+        }
+        let ssum: f32 = sel.iter().map(|(_, s)| s).sum();
+        TokenRouting {
+            experts: sel
+                .iter()
+                .map(|&(e, s)| (e, s, if ssum > 0.0 { s / ssum } else { 0.0 }))
+                .collect(),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // MoE layer
+    // ------------------------------------------------------------------
+
+    /// Run the MoE block for `n_rows` valid rows of `ln2x` ([R, d], rows
+    /// ≥ n_rows are padding). Returns the MoE output [R, d] (padding
+    /// rows zero).
+    fn moe_layer(&mut self, li: usize, ln2x: &Tensor, n_rows: usize) -> Result<Tensor> {
+        let d = self.cfg.d_model;
+        let e_count = self.cfg.n_experts;
+        // 1. gate scores via artifact (bucketed on the row count)
+        let rb = round_up_bucket(
+            ln2x.shape[0],
+            if ln2x.shape[0] > 16 { &PREFILL_BUCKETS } else { &BATCH_BUCKETS },
+        );
+        debug_assert_eq!(ln2x.shape[0], rb, "caller pads to a bucket");
+        let gate_out = self.rt.exec(
+            &format!("gate_b{}_e{}", ln2x.shape[0], e_count),
+            &[Arg::F32(ln2x), Arg::Buf(&self.lbufs[li].wg)],
+        )?;
+        let probs = &gate_out[0]; // [R, E]
+
+        // 2. route real rows
+        let routings: Vec<TokenRouting> = (0..n_rows)
+            .map(|r| self.route(probs.row(r), li))
+            .collect();
+        if self.opts.collect_stats {
+            for r in &routings {
+                for &(e, s, n) in &r.experts {
+                    self.metrics.expert_counts[li][e] += 1;
+                    self.metrics.raw_scores.push(s);
+                    self.metrics.norm_scores.push(n);
+                }
+            }
+        }
+
+        // 3. drop decisions (load-aware per-device scaling under EP §4.3)
+        let plan = if let Some(ep) = self.opts.ep.clone() {
+            let mut load = vec![0u64; ep.n_devices];
+            for r in &routings {
+                for &(e, _, _) in &r.experts {
+                    load[self.placement[e]] += 1;
+                }
+            }
+            for (d0, &l) in load.iter().enumerate() {
+                self.metrics.device_load[d0] += l;
+            }
+            let total: u64 = load.iter().sum();
+            let ideal = total as f32 / ep.n_devices as f32;
+            let policies: Vec<DropPolicy> = load
+                .iter()
+                .map(|&l| {
+                    if !ep.load_aware || ideal == 0.0 {
+                        self.policy
+                    } else {
+                        self.policy.scaled(l as f32 / ideal)
+                    }
+                })
+                .collect();
+            let placement = &self.placement;
+            let f = |_row: usize, e: usize| policies[placement[e]];
+            plan_dispatch(&routings, e_count, self.policy, Some(&f))
+        } else {
+            plan_dispatch(&routings, e_count, self.policy, None)
+        };
+        self.metrics.per_layer_drop[li].merge(&plan.stats);
+
+        // 3b. calibration probing: accumulate the four importance rows
+        // for every routed pair (original, un-permuted expert weights).
+        if self.probe.is_some() {
+            let mut probe = self.probe.take();
+            if let Some(tables) = &mut probe {
+                for e in 0..e_count {
+                    if plan.full[e].is_empty() {
+                        continue;
+                    }
+                    let w1 = self.weights.layer(li, "w1")?.index0(e);
+                    let w3 = self.weights.layer(li, "w3")?.index0(e);
+                    for chunk in plan.full[e].chunks(32) {
+                        let mut x = vec![0.0f32; 32 * d];
+                        for (i, &(r, _)) in chunk.iter().enumerate() {
+                            x[i * d..(i + 1) * d]
+                                .copy_from_slice(&ln2x.data[r * d..(r + 1) * d]);
+                        }
+                        let xt = Tensor::new(vec![32, d], x);
+                        let imp = self.rt.exec(
+                            &format!("probe_h{}", self.cfg.d_ffn),
+                            &[Arg::F32(&xt), Arg::F32(&w1), Arg::F32(&w3)],
+                        )?;
+                        let it = &imp[0]; // [4, width]
+                        let w = tables.width;
+                        for m in 0..4 {
+                            let dst = &mut tables.t[li][e][m];
+                            for j in 0..w {
+                                dst[j] += it.data[m * w + j];
+                            }
+                        }
+                    }
+                }
+            }
+            self.probe = probe;
+        }
+
+        // 4. execute kept work through capacity-bucketed FFN artifacts
+        let mut out = Tensor::zeros(vec![ln2x.shape[0], d]);
+        let ep_on = self.opts.ep.is_some();
+        // Sub-expert-granular execution (paper §4.2's grouped-GEMM): when
+        // anything runs at reduced width (2T bands, or force_split), the
+        // MAJOR sub-expert serves full-band ∪ major-only rows in ONE
+        // packed call and the MINOR sub-expert serves the full band —
+        // at most two calls per expert, maximally packed.
+        for e in 0..e_count {
+            let full_rows = &plan.full[e];
+            let major_rows = &plan.major_only[e];
+            if full_rows.is_empty() && major_rows.is_empty() {
+                continue;
+            }
+            let split = self.force_split || !major_rows.is_empty();
+            let mut dt = 0.0;
+            if split {
+                if major_rows.is_empty() {
+                    dt += self.run_sub_expert(
+                        ln2x, full_rows, &self.ebufs[li][e].major, &mut out,
+                    )?;
+                } else {
+                    let mut both = full_rows.clone();
+                    both.extend_from_slice(major_rows);
+                    dt += self.run_sub_expert(
+                        ln2x, &both, &self.ebufs[li][e].major, &mut out,
+                    )?;
+                }
+                if !full_rows.is_empty() {
+                    dt += self.run_sub_expert(
+                        ln2x, full_rows, &self.ebufs[li][e].minor, &mut out,
+                    )?;
+                }
+            } else {
+                dt += self.run_sub_expert(
+                    ln2x, full_rows, &self.ebufs[li][e].full, &mut out,
+                )?;
+            }
+            if ep_on {
+                self.metrics.device_time[self.placement[e]] += dt;
+            }
+        }
+
+        // 5. shared expert (always-on, DeepSeek-style)
+        if self.shared[li].is_some() {
+            self.metrics.shared_pairs += n_rows as u64;
+        }
+        if let Some(sb) = &self.sbufs[li] {
+            let rows: Vec<(usize, f32)> = (0..n_rows).map(|r| (r, 1.0)).collect();
+            self.run_sub_expert(ln2x, &rows, sb, &mut out)?;
+        }
+        Ok(out)
+    }
+
+    /// Pack `rows` of ln2x into a capacity bucket, run the FFN artifact,
+    /// scatter-add score-weighted outputs. Returns the call wall time
+    /// (seconds) for per-device attribution under EP.
+    fn run_sub_expert(
+        &self,
+        ln2x: &Tensor,
+        rows: &[(usize, f32)],
+        se: &VariantBufs,
+        out: &mut Tensor,
+    ) -> Result<f64> {
+        let t0 = std::time::Instant::now();
+        let d = self.cfg.d_model;
+        let c = round_up_bucket(rows.len(), &CAPACITY_BUCKETS);
+        let mut x = vec![0.0f32; c * d];
+        for (i, &(r, _)) in rows.iter().enumerate() {
+            x[i * d..(i + 1) * d].copy_from_slice(
+                &ln2x.data[r * d..(r + 1) * d],
+            );
+        }
+        let xt = Tensor::new(vec![c, d], x);
+        let y = self.rt.exec(
+            &format!("ffn_h{}_c{}", se.width, c),
+            &[Arg::F32(&xt), Arg::Buf(&se.w1), Arg::Buf(&se.w3), Arg::Buf(&se.w2)],
+        )?;
+        let yt = &y[0];
+        for (i, &(r, w)) in rows.iter().enumerate() {
+            let src = &yt.data[i * d..(i + 1) * d];
+            let dst = &mut out.data[r * d..(r + 1) * d];
+            for j in 0..d {
+                dst[j] += w * src[j];
+            }
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    }
+
+    // ------------------------------------------------------------------
+    // Prefill / decode
+    // ------------------------------------------------------------------
+
+    /// Prefill one request into `slot`; returns the first generated token.
+    pub fn prefill(&mut self, slot: usize, prompt: &[u8]) -> Result<u8> {
+        let d = self.cfg.d_model;
+        let s_len = prompt.len();
+        if s_len > *PREFILL_BUCKETS.last().unwrap() {
+            bail!("prompt too long: {s_len}");
+        }
+        let sb = round_up_bucket(s_len, &PREFILL_BUCKETS);
+        let mut toks = prompt.to_vec();
+        toks.resize(sb, 0);
+        let positions: Vec<usize> = (0..sb).collect();
+        let mut x = self.embed(&toks, &positions);
+        for li in 0..self.cfg.n_layers {
+            let lb = &self.lbufs[li];
+            let outs = self.rt.exec(
+                &format!("attn_prefill_s{sb}"),
+                &[
+                    Arg::F32(&x),
+                    Arg::Buf(&lb.ln1),
+                    Arg::Buf(&lb.wq),
+                    Arg::Buf(&lb.wk),
+                    Arg::Buf(&lb.wv),
+                    Arg::Buf(&lb.wo),
+                    Arg::Buf(&lb.ln2),
+                ],
+            )?;
+            let (y, ln2x, ks, vs) = (&outs[0], &outs[1], &outs[2], &outs[3]);
+            self.kv.write_prefill(li, slot, s_len, &ks.data, &vs.data);
+            let moe = self.moe_layer(li, ln2x, s_len)?;
+            x = Tensor::new(
+                y.shape.clone(),
+                y.data.iter().zip(&moe.data).map(|(a, b)| a + b).collect(),
+            );
+        }
+        self.metrics.prefill_tokens += s_len as u64;
+        // logits for the last real position only
+        let last = Tensor::new(
+            vec![1, d],
+            x.data[(s_len - 1) * d..s_len * d].to_vec(),
+        );
+        let logits = self.rt.exec(
+            "lm_head_b1",
+            &[
+                Arg::F32(&last),
+                Arg::Buf(&self.lnf_buf),
+                Arg::Buf(&self.emb_buf),
+            ],
+        )?;
+        Ok(argmax_u8(logits[0].row(0)))
+    }
+
+    /// One decode step for the active slots `0..tokens.len()` (slot i
+    /// consumes tokens[i]); returns the next token per slot.
+    pub fn decode_step(&mut self, tokens: &[u8]) -> Result<Vec<u8>> {
+        let b = tokens.len();
+        let _d = self.cfg.d_model;
+        let bb = round_up_bucket(b, &BATCH_BUCKETS);
+        let mut toks = tokens.to_vec();
+        toks.resize(bb, 0);
+        let mut positions: Vec<usize> = (0..bb)
+            .map(|i| if i < b { self.kv.pos[i] } else { 0 })
+            .collect();
+        // padding rows attend to nothing (pos 0 over a zero cache)
+        for p in positions.iter_mut().skip(b) {
+            *p = 0;
+        }
+        let mut x = self.embed(&toks, &positions);
+        let pos_i32: Vec<i32> = positions.iter().map(|&p| p as i32).collect();
+        for li in 0..self.cfg.n_layers {
+            let (kc, vc) = self.kv_batch_padded(li, b, bb);
+            let lb = &self.lbufs[li];
+            let outs = self.rt.exec(
+                &format!("attn_step_b{bb}"),
+                &[
+                    Arg::F32(&x),
+                    Arg::Buf(&lb.ln1),
+                    Arg::Buf(&lb.wq),
+                    Arg::Buf(&lb.wk),
+                    Arg::Buf(&lb.wv),
+                    Arg::Buf(&lb.wo),
+                    Arg::Buf(&lb.ln2),
+                    Arg::F32(&kc),
+                    Arg::F32(&vc),
+                    Arg::I32(&pos_i32),
+                ],
+            )?;
+            let (y, ln2x, nk, nv) = (&outs[0], &outs[1], &outs[2], &outs[3]);
+            let hd = self.cfg.n_heads * self.cfg.d_head;
+            for slot in 0..b {
+                self.kv.append(
+                    li, slot,
+                    &nk.data[slot * hd..(slot + 1) * hd],
+                    &nv.data[slot * hd..(slot + 1) * hd],
+                );
+            }
+            let moe = self.moe_layer(li, ln2x, b)?;
+            x = Tensor::new(
+                y.shape.clone(),
+                y.data.iter().zip(&moe.data).map(|(a, b)| a + b).collect(),
+            );
+        }
+        self.metrics.decode_steps += 1;
+        self.metrics.generated_tokens += b as u64;
+        let logits = self.rt.exec(
+            &format!("lm_head_b{bb}"),
+            &[
+                Arg::F32(&x),
+                Arg::Buf(&self.lnf_buf),
+                Arg::Buf(&self.emb_buf),
+            ],
+        )?;
+        Ok((0..b).map(|i| argmax_u8(logits[0].row(i))).collect())
+    }
+
+    /// Batch KV view padded to the batch bucket with zero rows.
+    fn kv_batch_padded(&self, li: usize, b: usize, bb: usize) -> (Tensor, Tensor) {
+        let (mut k, mut v) = self.kv.batch_view(li, b);
+        if bb > b {
+            let stride = self.cfg.n_heads * self.cfg.max_seq * self.cfg.d_head;
+            k.data.resize(bb * stride, 0.0);
+            v.data.resize(bb * stride, 0.0);
+            k.shape[0] = bb;
+            v.shape[0] = bb;
+        }
+        (k, v)
+    }
+
+    // ------------------------------------------------------------------
+    // Generation + evaluation
+    // ------------------------------------------------------------------
+
+    /// Greedy-generate completions for a batch of prompts (lockstep
+    /// decode; finished rows keep decoding but their output is frozen —
+    /// simple and deterministic for eval).
+    pub fn generate_batch(&mut self, prompts: &[&str], max_new: usize) -> Result<Vec<String>> {
+        assert!(prompts.len() <= MAX_SLOTS);
+        self.kv.n_active = 0;
+        let mut next: Vec<u8> = Vec::new();
+        for p in prompts {
+            let slot = self.kv.alloc();
+            next.push(self.prefill(slot, p.as_bytes())?);
+        }
+        let mut outs: Vec<Vec<u8>> = next.iter().map(|&t| vec![t]).collect();
+        let mut done: Vec<bool> = next.iter().map(|&t| t == EOS).collect();
+        for _ in 1..max_new {
+            if done.iter().all(|&d| d) {
+                break;
+            }
+            let step = self.decode_step(&next)?;
+            for i in 0..prompts.len() {
+                if !done[i] {
+                    outs[i].push(step[i]);
+                    if step[i] == EOS {
+                        done[i] = true;
+                    }
+                }
+                next[i] = step[i];
+            }
+        }
+        Ok(outs
+            .into_iter()
+            .map(|o| {
+                let end = o.iter().position(|&c| c == EOS).unwrap_or(o.len());
+                o[..end].iter().map(|&b| b as char).collect()
+            })
+            .collect())
+    }
+
+    /// Per-artifact exec statistics snapshot (name → (count, secs)).
+    pub fn exec_stats(&self) -> HashMap<String, (u64, f64)> {
+        self.rt.exec_count.borrow().clone()
+    }
+
+    /// Seconds spent in the MoE module (gate + expert FFNs).
+    pub fn moe_time(&self) -> f64 {
+        self.rt.time_with_prefix("ffn_") + self.rt.time_with_prefix("gate_")
+    }
+
+    /// Seconds of end-to-end artifact compute.
+    pub fn total_artifact_time(&self) -> f64 {
+        self.rt.time_with_prefix("")
+    }
+}
+
+fn argmax_u8(row: &[f32]) -> u8 {
+    let mut best = 0usize;
+    let mut bv = f32::NEG_INFINITY;
+    for (i, &x) in row.iter().enumerate() {
+        if x > bv {
+            bv = x;
+            best = i;
+        }
+    }
+    best as u8
+}
+
+/// Standard artifact base dir resolution (env override for tests).
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("DUALSPARSE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_picks_first_max() {
+        assert_eq!(argmax_u8(&[0.0, 3.0, 3.0, 1.0]), 1);
+        assert_eq!(argmax_u8(&[-5.0, -2.0]), 1);
+    }
+}

@@ -1,0 +1,250 @@
+//! Accuracy experiments: Fig. 7, Table 1, Table 2, Table 3.
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::{
+    acc_json, eval_with_rate, eval_with_rate_shift, find_threshold, mk_engine,
+    mk_engine_reconstructed, save_result,
+};
+use crate::baselines;
+use crate::engine::{Engine, EngineOptions, RouterMode};
+use crate::moe::DropPolicy;
+use crate::server::{run_once, workload};
+use crate::tasks::eval::{avg_accuracy, format_row};
+use crate::util::json::{num, obj, s, Json};
+
+/// Fig. 7 — 1T-Drop threshold sweep on the OLMoE stand-in: accuracy per
+/// task + computation drop rate.
+pub fn fig7(artifacts: &Path) -> Result<()> {
+    let model = "olmoe_ish";
+    let thresholds = [0.0f32, 0.02, 0.05, 0.08, 0.12, 0.16, 0.20, 0.25, 0.30];
+    println!("Fig.7 — 1T-Drop threshold sweep ({model})");
+    let mut records = Vec::new();
+    let mut engine = mk_engine(artifacts, model, DropPolicy::NoDrop)?;
+    for &t in &thresholds {
+        engine.policy = if t == 0.0 {
+            DropPolicy::NoDrop
+        } else {
+            DropPolicy::OneT(t)
+        };
+        let (res, rate) = eval_with_rate(&mut engine)?;
+        println!(
+            "T={t:.2} drop={:>5.1}%  {}",
+            100.0 * rate,
+            format_row(&format!("1T@{t:.2}"), &res)
+        );
+        records.push(acc_json(&format!("T={t:.2}"), rate, &res));
+    }
+    save_result(artifacts, "fig7", Json::Arr(records))?;
+    println!("(paper: small thresholds can improve accuracy; large ones degrade,\n\
+              with the math-reasoning task most sensitive)");
+    Ok(())
+}
+
+/// Table 1 — expert partition consistency + fine-tuned model quality.
+pub fn table1(artifacts: &Path) -> Result<()> {
+    println!("Table 1 — expert partition (complete transformation) on mixtral_ish");
+    let mut records = Vec::new();
+
+    // Pre-trained model, original routing.
+    let mut e0 = mk_engine(artifacts, "mixtral_ish", DropPolicy::NoDrop)?;
+    let (r0, _) = eval_with_rate(&mut e0)?;
+    println!("{}", format_row("pretrained 2/8", &r0));
+    records.push(acc_json("pretrained 2/8", 0.0, &r0));
+
+    // Same weights served through the partial-transformation split
+    // (every expert executed as major+minor sub-experts with repeated
+    // scores) — Eq. 13 says accuracy must match the row above.
+    let mut e_split = mk_engine(artifacts, "mixtral_ish", DropPolicy::NoDrop)?;
+    e_split.force_split = true;
+    let (r1, _) = eval_with_rate(&mut e_split)?;
+    println!("{}", format_row("partitioned 4/16 (P=2)", &r1));
+    records.push(acc_json("partitioned 4/16 (P=2)", 0.0, &r1));
+    let diff = (avg_accuracy(&r0) - avg_accuracy(&r1)).abs();
+    println!("  consistency |Δavg| = {diff:.2} (paper: ~0, fp noise only)");
+
+    // Fine-tuned originals vs fine-tuned partitioned models (Fig. 4 runs).
+    for (name, label) in [
+        ("mixtral_ish_p1_ft", "fine-tuned 2/8"),
+        ("mixtral_ish_p2_ft", "fine-tuned 4/16 (P=2)"),
+        ("mixtral_ish_p4_ft", "fine-tuned 8/32 (P=4)"),
+    ] {
+        let mut e = mk_engine(artifacts, name, DropPolicy::NoDrop)?;
+        // fine-tuned models are benchmarked on their fine-tuning
+        // (shifted) distribution — see eval_with_rate_shift docs.
+        let (r, _) = eval_with_rate_shift(&mut e, true)?;
+        println!("{}", format_row(label, &r));
+        records.push(acc_json(label, 0.0, &r));
+    }
+
+    // 1T-Drop on the fine-tuned partitioned models (paper's last block).
+    for (name, label, target) in [
+        ("mixtral_ish_p1_ft", "ft 2/8 + 1T", 0.20),
+        ("mixtral_ish_p2_ft", "ft 4/16 + 1T", 0.21),
+        ("mixtral_ish_p4_ft", "ft 8/32 + 1T", 0.24),
+    ] {
+        let t = find_threshold(artifacts, name, target)?;
+        let mut e = mk_engine(artifacts, name, DropPolicy::OneT(t))?;
+        let (r, rate) = eval_with_rate_shift(&mut e, true)?;
+        println!(
+            "{}  (T¹={t:.3}, drop={:.1}%)",
+            format_row(label, &r),
+            100.0 * rate
+        );
+        records.push(acc_json(label, rate, &r));
+    }
+    save_result(artifacts, "table1", Json::Arr(records))?;
+    Ok(())
+}
+
+/// Table 2 — drop-method comparison on the three models.
+pub fn table2(artifacts: &Path) -> Result<()> {
+    println!("Table 2 — No-drop / 1T / 2T(partition) / 2T(reconstruct)");
+    let mut records = Vec::new();
+    // The paper's Mixtral rows use the fine-tuned 8/32 (P=4) variant —
+    // finer tensor-level granularity is what makes ~24% dropping cheap.
+    for (model, target, metric) in [
+        ("mixtral_ish_p4_ft", 0.24, "abs_gate"),
+        ("olmoe_ish", 0.22, "abs_gate"),
+        ("deepseek_ish", 0.27, "abs_gate_up"),
+    ] {
+        println!("--- {model} ---");
+        // fine-tuned models evaluate on their fine-tuning distribution
+        let shift = model.ends_with("_ft");
+        let t1 = find_threshold(artifacts, model, target)?;
+
+        let mut e = mk_engine(artifacts, model, DropPolicy::NoDrop)?;
+        let (r, rate) = eval_with_rate_shift(&mut e, shift)?;
+        let base_avg = avg_accuracy(&r);
+        println!("{}", format_row("No Drop", &r));
+        records.push(acc_json(&format!("{model}/no_drop"), rate, &r));
+
+        e.policy = DropPolicy::OneT(t1);
+        let (r, rate) = eval_with_rate_shift(&mut e, shift)?;
+        println!("{} (T¹={t1:.3}, drop={:.1}%)", format_row("1T-Drop", &r), 100.0 * rate);
+        records.push(acc_json(&format!("{model}/1t"), rate, &r));
+
+        // 2T with contiguous partition halves (no reconstruction).
+        e.policy = DropPolicy::two_t(t1);
+        let (r, rate) = eval_with_rate_shift(&mut e, shift)?;
+        println!("{} (drop={:.1}%)", format_row("2T (partition)", &r), 100.0 * rate);
+        records.push(acc_json(&format!("{model}/2t_partition"), rate, &r));
+
+        // 2T with importance reconstruction.
+        let mut er = mk_engine_reconstructed(
+            artifacts, model, DropPolicy::two_t(t1), metric,
+        )?;
+        let (r, rate) = eval_with_rate_shift(&mut er, shift)?;
+        let rec_avg = avg_accuracy(&r);
+        println!("{} (drop={:.1}%)", format_row("2T (reconstruct)", &r), 100.0 * rate);
+        records.push(acc_json(&format!("{model}/2t_reconstruct"), rate, &r));
+        println!(
+            "  Δavg vs no-drop: {:+.2} (paper: −0.08…−0.28 at ~25% drop)",
+            rec_avg - base_avg
+        );
+    }
+    save_result(artifacts, "table2", Json::Arr(records))?;
+    Ok(())
+}
+
+/// Table 3 — comparison with EES / EEP / Wanda on the Mixtral stand-in.
+pub fn table3(artifacts: &Path) -> Result<()> {
+    let model = "mixtral_ish";
+    println!("Table 3 — vs prior work ({model}; 'add' task = GSM8K stand-in)");
+    let reqs = workload(60, 12, 42);
+    let mut records = Vec::new();
+
+    // helper: evaluate accuracy on the math task + measure speedup.
+    let run_row = |label: &str,
+                       engine: &mut Engine,
+                       memory_saving: f64,
+                       records: &mut Vec<Json>|
+     -> Result<(f64, f64, f64)> {
+        let (res, _) = eval_with_rate(engine)?;
+        let math = res.iter().find(|r| r.task == "add").unwrap().accuracy;
+        let avg = avg_accuracy(&res);
+        let rep = run_once(engine, &reqs, engine.policy, label)?;
+        records.push(obj(vec![
+            ("label", s(label)),
+            ("memory_saving", num(memory_saving)),
+            ("math_acc", num(math)),
+            ("avg_acc", num(avg)),
+            ("moe_secs", num(rep.stats.moe_secs)),
+            ("e2e_secs", num(rep.stats.artifact_secs)),
+        ]));
+        Ok((math, avg, rep.stats.moe_secs))
+    };
+
+    let t1 = find_threshold(artifacts, model, 0.24)?;
+
+    let mut base = mk_engine(artifacts, model, DropPolicy::NoDrop)?;
+    let (math0, avg0, moe0) = run_row("No Drop (baseline)", &mut base, 0.0, &mut records)?;
+
+    let mut rows = Vec::new();
+    // 2T partition + reconstruct
+    let mut e = mk_engine(artifacts, model, DropPolicy::two_t(t1))?;
+    let (m, a, t) = run_row("2T-Drop (partition)", &mut e, 0.0, &mut records)?;
+    rows.push(("2T-Drop (partition)", 0.0, m, a, t));
+    let mut e = mk_engine_reconstructed(artifacts, model, DropPolicy::two_t(t1), "abs_gate")?;
+    let (m, a, t) = run_row("2T-Drop (reconstruct)", &mut e, 0.0, &mut records)?;
+    rows.push(("2T-Drop (reconstruct)", 0.0, m, a, t));
+
+    // EES
+    let mut e = mk_engine(artifacts, model, DropPolicy::NoDrop)?;
+    let beta = baselines::calibrate_ees_beta(&mut e, 1024)?;
+    e.router_mode = RouterMode::Ees { beta };
+    let (m, a, t) = run_row("EES", &mut e, 0.0, &mut records)?;
+    rows.push(("EES", 0.0, m, a, t));
+
+    // EEP r=6 and r=4, each alone and + EES
+    for r_kept in [6usize, 4] {
+        let mut e = mk_engine(artifacts, model, DropPolicy::NoDrop)?;
+        let kept = baselines::calibrate_eep_kept(&mut e, 1024, r_kept)?;
+        let mem = baselines::eep_memory_saving(e.cfg.n_experts, r_kept);
+        e.router_mode = RouterMode::Eep { kept: kept.clone() };
+        let label = format!("EEP (r={r_kept})");
+        let (m, a, t) = run_row(&label, &mut e, mem, &mut records)?;
+        rows.push((Box::leak(label.into_boxed_str()), mem, m, a, t));
+
+        let mut e2 = mk_engine(artifacts, model, DropPolicy::NoDrop)?;
+        e2.router_mode = RouterMode::Eep { kept };
+        let beta2 = baselines::calibrate_ees_beta(&mut e2, 1024)?;
+        e2.router_mode = match &e2.router_mode {
+            RouterMode::Eep { kept } => RouterMode::EepEes {
+                kept: kept.clone(),
+                beta: beta2,
+            },
+            _ => unreachable!(),
+        };
+        let label = format!("EEP (r={r_kept}) + EES");
+        let (m, a, t) = run_row(&label, &mut e2, mem, &mut records)?;
+        rows.push((Box::leak(label.into_boxed_str()), mem, m, a, t));
+    }
+
+    // Wanda 2:4 (accuracy impact only — dense kernels gain nothing).
+    let mut w = crate::model::Weights::load(&artifacts.join("models"), model)?;
+    baselines::apply_wanda_2_4(&mut w)?;
+    let mut e = Engine::from_weights(
+        artifacts, w, DropPolicy::NoDrop, EngineOptions::default(),
+    )?;
+    let (m, a, t) = run_row("Wanda 2:4", &mut e, 0.0, &mut records)?;
+    rows.push(("Wanda 2:4", 0.5, m, a, t));
+
+    println!(
+        "\n{:<24} {:>7} {:>9} {:>12} {:>10}",
+        "method", "mem", "speedup", "math Δacc", "avg Δacc"
+    );
+    for (label, mem, math, avg, moe_t) in rows {
+        println!(
+            "{label:<24} {:>6.0}% {:>8.2}x {:>+11.1}% {:>+9.1}%",
+            100.0 * mem,
+            moe0 / moe_t.max(1e-12),
+            math - math0,
+            avg - avg0,
+        );
+    }
+    save_result(artifacts, "table3", Json::Arr(records))?;
+    Ok(())
+}

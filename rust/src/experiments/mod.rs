@@ -1,0 +1,206 @@
+//! Experiment drivers: one per paper table/figure (DESIGN.md §5).
+//!
+//! Every driver prints the paper-style rows/series to stdout and writes
+//! a JSON record under `artifacts/results/` for EXPERIMENTS.md.
+
+pub mod accuracy;
+pub mod comm;
+pub mod profiling;
+pub mod speed;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::calib::{self, ProbeTables};
+use crate::engine::{Engine, EngineOptions, EpOptions};
+use crate::moe::DropPolicy;
+use crate::tasks::eval::{evaluate, TaskResult};
+use crate::util::json::Json;
+
+/// Run one experiment by id ("fig1" … "table3", or "all").
+pub fn run(id: &str, artifacts: &Path) -> Result<()> {
+    let all = [
+        "fig1", "fig4", "fig6", "fig7", "fig9", "fig10", "fig11", "fig12",
+        "fig13", "table1", "table2", "table3",
+    ];
+    if id == "all" {
+        for e in all {
+            println!("\n================ {e} ================");
+            run(e, artifacts)?;
+        }
+        return Ok(());
+    }
+    match id {
+        "fig1" => profiling::fig1(artifacts),
+        "fig4" => profiling::fig4(artifacts),
+        "fig6" => profiling::fig6(artifacts),
+        "fig7" => accuracy::fig7(artifacts),
+        "fig9" => comm::fig9(artifacts),
+        "fig10" => speed::fig10(artifacts),
+        "fig11" => speed::fig11(artifacts),
+        "fig12" => profiling::fig12(artifacts),
+        "fig13" => profiling::fig13(artifacts),
+        "table1" => accuracy::table1(artifacts),
+        "table2" => accuracy::table2(artifacts),
+        "table3" => accuracy::table3(artifacts),
+        _ => bail!("unknown experiment {id}; one of {all:?} or 'all'"),
+    }
+}
+
+/// Number of eval prompts per task (kept small: single-core testbed).
+pub fn n_eval() -> usize {
+    std::env::var("DUALSPARSE_EVAL_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(24)
+}
+
+/// Calibration token budget.
+pub fn n_calib() -> usize {
+    std::env::var("DUALSPARSE_CALIB_N")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2048)
+}
+
+/// Build an engine for `model` with default options.
+pub fn mk_engine(artifacts: &Path, model: &str, policy: DropPolicy) -> Result<Engine> {
+    Engine::new(artifacts, model, policy, EngineOptions::default())
+}
+
+/// Build an engine with reconstruction (loads or creates importance
+/// tables via calibration).
+pub fn mk_engine_reconstructed(
+    artifacts: &Path,
+    model: &str,
+    policy: DropPolicy,
+    metric: &str,
+) -> Result<Engine> {
+    let tables = ensure_importance(artifacts, model)?;
+    let opts = EngineOptions {
+        reconstructed: true,
+        importance: Some(tables.importance(metric)),
+        ..Default::default()
+    };
+    Engine::new(artifacts, model, policy, opts)
+}
+
+/// Build an EP-simulated engine (fig10/fig11).
+pub fn mk_engine_ep(
+    artifacts: &Path,
+    model: &str,
+    policy: DropPolicy,
+    n_devices: usize,
+    load_aware: bool,
+    reconstructed: bool,
+) -> Result<Engine> {
+    let importance = if reconstructed {
+        Some(ensure_importance(artifacts, model)?.importance("abs_gate"))
+    } else {
+        None
+    };
+    let opts = EngineOptions {
+        reconstructed,
+        importance,
+        collect_stats: false,
+        ep: Some(EpOptions { n_devices, load_aware }),
+    };
+    Engine::new(artifacts, model, policy, opts)
+}
+
+/// Load cached importance tables or run calibration now.
+pub fn ensure_importance(artifacts: &Path, model: &str) -> Result<ProbeTables> {
+    let path = calib::tables_path(artifacts, model);
+    if path.exists() {
+        return ProbeTables::load(&path);
+    }
+    println!("[calib] profiling {model} on {} tokens …", n_calib());
+    let mut engine = mk_engine(artifacts, model, DropPolicy::NoDrop)?;
+    let tables = calib::run_calibration(&mut engine, n_calib())?;
+    tables.save(&path)?;
+    Ok(tables)
+}
+
+/// Binary-search a 1T threshold that hits `target` drop rate on a probe
+/// workload (mirrors the paper's per-model threshold tuning).
+pub fn find_threshold(
+    artifacts: &Path,
+    model: &str,
+    target: f64,
+) -> Result<f32> {
+    let mut engine = mk_engine(artifacts, model, DropPolicy::NoDrop)?;
+    let probe = crate::tasks::calibration_tokens(512);
+    let (mut lo, mut hi) = (0.0f32, 0.6f32);
+    let mut best = 0.1;
+    for _ in 0..10 {
+        let mid = 0.5 * (lo + hi);
+        engine.policy = DropPolicy::OneT(mid);
+        engine.reset_metrics();
+        for chunk in probe.chunks(32) {
+            if chunk.len() < 2 {
+                break;
+            }
+            engine.kv.n_active = 0;
+            let slot = engine.kv.alloc();
+            engine.prefill(slot, chunk)?;
+        }
+        let rate = engine.metrics.drop_rate();
+        best = mid;
+        if rate < target {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+    }
+    Ok(best)
+}
+
+/// Save an experiment record to `artifacts/results/{name}.json`.
+pub fn save_result(artifacts: &Path, name: &str, j: Json) -> Result<PathBuf> {
+    let dir = artifacts.join("results");
+    std::fs::create_dir_all(&dir)?;
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, j.to_string()).with_context(|| format!("writing {path:?}"))?;
+    Ok(path)
+}
+
+/// Json of a full accuracy row.
+pub fn acc_json(label: &str, drop_rate: f64, results: &[TaskResult]) -> Json {
+    use crate::util::json::{num, obj, s};
+    let mut pairs = vec![
+        ("label", s(label)),
+        ("drop_rate", num(drop_rate)),
+        (
+            "avg",
+            num(crate::tasks::eval::avg_accuracy(results)),
+        ),
+    ];
+    let tasks = Json::Obj(
+        results
+            .iter()
+            .map(|r| (r.task.clone(), Json::Num(r.accuracy)))
+            .collect(),
+    );
+    pairs.push(("tasks", tasks));
+    obj(pairs)
+}
+
+/// Run the full eval suite and return (results, measured drop rate).
+pub fn eval_with_rate(engine: &mut Engine) -> Result<(Vec<TaskResult>, f64)> {
+    eval_with_rate_shift(engine, false)
+}
+
+/// Like [`eval_with_rate`] but on the *shifted* task distribution —
+/// the right benchmark for models fine-tuned on the shifted mixture
+/// (evaluating them on the pre-training distribution would measure
+/// catastrophic forgetting, not fine-tuned quality; the paper's
+/// fine-tune + LM-Eval setup has no such mismatch).
+pub fn eval_with_rate_shift(
+    engine: &mut Engine,
+    shift: bool,
+) -> Result<(Vec<TaskResult>, f64)> {
+    engine.reset_metrics();
+    let res = evaluate(engine, n_eval(), shift)?;
+    Ok((res, engine.metrics.drop_rate()))
+}

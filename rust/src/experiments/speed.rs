@@ -1,0 +1,144 @@
+//! Efficiency experiments: Fig. 10 (drop-rate → real speedup across
+//! deployments) and Fig. 11 (load-aware thresholding under EP=8).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use super::{
+    ensure_importance, eval_with_rate, find_threshold, mk_engine,
+    mk_engine_ep, save_result,
+};
+use crate::engine::batcher::serve;
+use crate::moe::DropPolicy;
+use crate::server::{compare, format_report, run_once, workload};
+use crate::tasks::eval::avg_accuracy;
+use crate::util::json::{num, obj, s, Json};
+
+fn n_requests() -> usize {
+    std::env::var("DUALSPARSE_REQS")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(120)
+}
+
+/// Fig. 10 — actual speedups of 1T/2T-Drop at the Table-2 drop rates,
+/// across the three models / deployment styles.
+pub fn fig10(artifacts: &Path) -> Result<()> {
+    println!("Fig.10 — MoE-module / end-to-end speedup from computation dropping");
+    let reqs = workload(n_requests(), 12, 7);
+    let mut records = Vec::new();
+    for (model, target) in [
+        ("mixtral_ish", 0.24),
+        ("olmoe_ish", 0.22),
+        ("deepseek_ish", 0.27),
+    ] {
+        let t1 = find_threshold(artifacts, model, target)?;
+        let mut engine = mk_engine(artifacts, model, DropPolicy::NoDrop)?;
+        let baseline = run_once(&mut engine, &reqs, DropPolicy::NoDrop, "no-drop")?;
+        let mut runs = vec![
+            run_once(&mut engine, &reqs, DropPolicy::OneT(t1), "1T-Drop")?,
+            run_once(&mut engine, &reqs, DropPolicy::two_t(t1), "2T-Drop")?,
+        ];
+        compare(&baseline, &mut runs);
+        println!("--- {model} (T¹={t1:.3}) ---");
+        println!("{}", format_report(&baseline));
+        for r in &runs {
+            println!("{}", format_report(r));
+            records.push(obj(vec![
+                ("model", s(model)),
+                ("method", s(&r.label)),
+                ("drop_rate", num(r.stats.drop_rate)),
+                ("moe_speedup", num(r.moe_speedup)),
+                ("e2e_speedup", num(r.e2e_speedup)),
+                ("tokens_per_sec", num(r.stats.tokens_per_sec)),
+            ]));
+        }
+    }
+    save_result(artifacts, "fig10", Json::Arr(records))?;
+    println!(
+        "(paper: 22-27% drop → 1.17-1.23× MoE-module and 1.07-1.12× e2e;\n\
+         tensor-level drops convert to real speedup because the saved work\n\
+         is whole capacity-bucket GEMMs)"
+    );
+    Ok(())
+}
+
+/// Fig. 11 — speedup vs accuracy for 1T / 2T / 2T+load-aware under EP=8
+/// on the DeepSeek stand-in. Speedup = MoE makespan ratio (max
+/// per-device busy time), the quantity EP inference is blocked on.
+pub fn fig11(artifacts: &Path) -> Result<()> {
+    let model = "deepseek_ish";
+    let n_dev = 8;
+    println!("Fig.11 — EP={n_dev} load-aware thresholding ({model})");
+    ensure_importance(artifacts, model)?;
+    let reqs = workload(n_requests().min(80), 10, 11);
+    // deepseek_ish routes top-2 (normalized scores cluster near 0.5), so
+    // paper-scale drop rates need higher thresholds than the paper's
+    // top-6 DeepSeek-V2-Lite.
+    let thresholds = [0.20f32, 0.35, 0.50];
+
+    // e2e model under EP: the non-MoE artifact work is replicated per
+    // device, the MoE part is blocked on the slowest device (makespan).
+    let e2e_time = |e: &crate::engine::Engine| {
+        let ffn_total: f64 = e.metrics.device_time.iter().sum();
+        (e.total_artifact_time() - ffn_total).max(0.0) + e.metrics.makespan()
+    };
+
+    // Baseline: no drop, EP makespan.
+    let mut base = mk_engine_ep(artifacts, model, DropPolicy::NoDrop, n_dev, false, false)?;
+    serve(&mut base, &reqs)?; // warm compile
+    base.reset_metrics();
+    serve(&mut base, &reqs)?;
+    let base_makespan = base.metrics.makespan();
+    let base_e2e = e2e_time(&base);
+    let (bres, _) = eval_with_rate(&mut base)?;
+    let base_acc = avg_accuracy(&bres);
+    let base_math = bres.iter().find(|r| r.task == "add").unwrap().accuracy;
+    println!(
+        "baseline: makespan={:.3}s acc={:.2} math={:.1}",
+        base_makespan, base_acc, base_math
+    );
+
+    let mut records = Vec::new();
+    for &t in &thresholds {
+        for (label, policy, load_aware, recon) in [
+            ("1T", DropPolicy::OneT(t), false, false),
+            ("2T", DropPolicy::two_t(t), false, true),
+            ("2T+load-aware", DropPolicy::two_t(t), true, true),
+        ] {
+            let mut e = mk_engine_ep(artifacts, model, policy, n_dev, load_aware, recon)?;
+            serve(&mut e, &reqs)?; // warm compile
+            e.reset_metrics();
+            serve(&mut e, &reqs)?;
+            let makespan = e.metrics.makespan();
+            let moe_speedup = base_makespan / makespan.max(1e-12);
+            let e2e_speedup = base_e2e / e2e_time(&e).max(1e-12);
+            let (res, rate) = eval_with_rate(&mut e)?;
+            let acc = avg_accuracy(&res);
+            let math = res.iter().find(|r| r.task == "add").unwrap().accuracy;
+            println!(
+                "T={t:.2} {label:<14} drop={:>5.1}% moe×{moe_speedup:<5.2} \
+                 e2e×{e2e_speedup:<5.2} avg={acc:.2} ({:+.2}) math={math:.1}",
+                100.0 * rate,
+                acc - base_acc,
+            );
+            records.push(obj(vec![
+                ("threshold", num(t as f64)),
+                ("method", s(label)),
+                ("drop_rate", num(rate)),
+                ("moe_speedup", num(moe_speedup)),
+                ("e2e_speedup", num(e2e_speedup)),
+                ("avg_acc", num(acc)),
+                ("math_acc", num(math)),
+            ]));
+        }
+    }
+    save_result(artifacts, "fig11", Json::Arr(records))?;
+    println!(
+        "(paper: 2T beats 1T on accuracy at equal speedup, and load-aware\n\
+         thresholding recovers further accuracy — 1.41× MoE speedup at\n\
+         −0.5% avg accuracy)"
+    );
+    Ok(())
+}

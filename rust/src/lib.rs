@@ -1,0 +1,37 @@
+//! # DualSparse-MoE
+//!
+//! A Rust + JAX + Pallas reproduction of **"DualSparse-MoE: Coordinating
+//! Tensor/Neuron-Level Sparsity with Expert Partition and
+//! Reconstruction"** (Cai et al., 2025).
+//!
+//! Three layers (see DESIGN.md):
+//!
+//! * **L1** — Pallas SwiGLU expert-FFN + probe kernels
+//!   (`python/compile/kernels/`), AOT-lowered to HLO text.
+//! * **L2** — the TinyMoE model family, expert partition
+//!   (complete/partial transformation) and reconstruction in JAX
+//!   (`python/compile/`), build-time only.
+//! * **L3** — this crate: the PJRT runtime, the DualSparse router
+//!   (Top-K + normalization + 1T/2T drop + load-aware thresholding),
+//!   the serving engine with KV cache and continuous batching, the
+//!   expert-parallel simulation, the ETP/S-ETP communication simulator,
+//!   the EES/EEP/Wanda baselines, and the per-figure/table experiment
+//!   drivers.
+//!
+//! Python never runs on the request path: after `make artifacts` the
+//! `dualsparse` binary is self-contained.
+
+pub mod baselines;
+pub mod calib;
+pub mod commsim;
+pub mod engine;
+pub mod experiments;
+pub mod model;
+pub mod moe;
+pub mod runtime;
+pub mod server;
+pub mod tasks;
+pub mod util;
+
+pub use engine::{Engine, EngineOptions};
+pub use moe::{DropPolicy, DropStats};

@@ -1,0 +1,164 @@
+//! `dualsparse` — CLI for the DualSparse-MoE serving stack.
+//!
+//! Subcommands:
+//!   serve <model> [--policy none|1t:<T>|2t:<T>] [--reqs N] [--max-new N]
+//!   eval <model> [--policy …] [--reconstruct] [--n N]
+//!   calibrate <model> [--tokens N]
+//!   exp <fig1|fig4|fig6|fig7|fig9|fig10|fig11|fig12|fig13|table1|table2|table3|all>
+//!   info
+//!
+//! Artifacts are resolved from ./artifacts (override: DUALSPARSE_ARTIFACTS).
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use dualsparse::engine::{artifacts_dir, EngineOptions};
+use dualsparse::moe::DropPolicy;
+use dualsparse::tasks::eval::{evaluate, format_row};
+use dualsparse::{calib, experiments, server, Engine};
+
+fn parse_policy(spec: &str) -> Result<DropPolicy> {
+    if spec == "none" {
+        return Ok(DropPolicy::NoDrop);
+    }
+    if let Some(t) = spec.strip_prefix("1t:") {
+        return Ok(DropPolicy::OneT(t.parse().context("bad 1t threshold")?));
+    }
+    if let Some(t) = spec.strip_prefix("2t:") {
+        return Ok(DropPolicy::two_t(t.parse().context("bad 2t threshold")?));
+    }
+    bail!("unknown policy {spec:?}; use none | 1t:<T> | 2t:<T>")
+}
+
+/// Tiny flag parser: positional args + --key value pairs.
+struct Args {
+    pos: Vec<String>,
+    flags: std::collections::HashMap<String, String>,
+}
+
+impl Args {
+    fn parse() -> Args {
+        let mut pos = Vec::new();
+        let mut flags = std::collections::HashMap::new();
+        let mut it = std::env::args().skip(1).peekable();
+        while let Some(a) = it.next() {
+            if let Some(k) = a.strip_prefix("--") {
+                let v = if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    it.next().unwrap()
+                } else {
+                    "true".to_string()
+                };
+                flags.insert(k.to_string(), v);
+            } else {
+                pos.push(a);
+            }
+        }
+        Args { pos, flags }
+    }
+
+    fn flag(&self, k: &str) -> Option<&str> {
+        self.flags.get(k).map(|s| s.as_str())
+    }
+
+    fn flag_usize(&self, k: &str, default: usize) -> usize {
+        self.flag(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse();
+    let artifacts: PathBuf = args
+        .flag("artifacts")
+        .map(PathBuf::from)
+        .unwrap_or_else(artifacts_dir);
+    let cmd = args.pos.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "serve" => {
+            let model = args.pos.get(1).context("serve <model>")?;
+            let policy = parse_policy(args.flag("policy").unwrap_or("none"))?;
+            let n = args.flag_usize("reqs", 100);
+            let max_new = args.flag_usize("max-new", 12);
+            let mut engine =
+                Engine::new(&artifacts, model, policy, EngineOptions::default())?;
+            println!(
+                "serving {model} on {} ({} requests, policy {policy:?})",
+                engine.rt.platform(),
+                n
+            );
+            let reqs = server::workload(n, max_new, 7);
+            let report = server::run_once(&mut engine, &reqs, policy, "serve")?;
+            println!("{}", server::format_report(&report));
+            println!(
+                "wall={:.2}s prefill={} gen={} moe={:.2}s artifacts={:.2}s",
+                report.stats.wall_secs,
+                report.stats.prefill_tokens,
+                report.stats.generated_tokens,
+                report.stats.moe_secs,
+                report.stats.artifact_secs,
+            );
+        }
+        "eval" => {
+            let model = args.pos.get(1).context("eval <model>")?;
+            let policy = parse_policy(args.flag("policy").unwrap_or("none"))?;
+            let n = args.flag_usize("n", 24);
+            let mut engine = if args.flag("reconstruct").is_some() {
+                let tables = calib::ProbeTables::load(&calib::tables_path(&artifacts, model))?;
+                Engine::new(
+                    &artifacts,
+                    model,
+                    policy,
+                    EngineOptions {
+                        reconstructed: true,
+                        importance: Some(tables.importance(
+                            args.flag("metric").unwrap_or("abs_gate"),
+                        )),
+                        ..Default::default()
+                    },
+                )?
+            } else {
+                Engine::new(&artifacts, model, policy, EngineOptions::default())?
+            };
+            let res = evaluate(&mut engine, n, false)?;
+            println!("{}", format_row(model, &res));
+            println!("drop rate: {:.1}%", 100.0 * engine.metrics.drop_rate());
+        }
+        "calibrate" => {
+            let model = args.pos.get(1).context("calibrate <model>")?;
+            let tokens = args.flag_usize("tokens", 2048);
+            let mut engine =
+                Engine::new(&artifacts, model, DropPolicy::NoDrop, EngineOptions::default())?;
+            let tables = calib::run_calibration(&mut engine, tokens)?;
+            let path = calib::tables_path(&artifacts, model);
+            tables.save(&path)?;
+            println!("calibrated {model} on {tokens} tokens → {path:?}");
+        }
+        "exp" => {
+            let id = args.pos.get(1).context("exp <id|all>")?;
+            experiments::run(id, &artifacts)?;
+        }
+        "info" => {
+            let rt = dualsparse::runtime::Runtime::new(&artifacts)?;
+            println!("platform: {}", rt.platform());
+            let models = std::fs::read_dir(artifacts.join("models"))?
+                .filter_map(|e| e.ok())
+                .filter(|e| e.path().extension().map(|x| x == "json").unwrap_or(false))
+                .map(|e| e.path().file_stem().unwrap().to_string_lossy().into_owned())
+                .collect::<Vec<_>>();
+            println!("models: {models:?}");
+            let n_artifacts = std::fs::read_dir(&artifacts)?
+                .filter_map(|e| e.ok())
+                .filter(|e| e.path().to_string_lossy().ends_with(".hlo.txt"))
+                .count();
+            println!("artifacts: {n_artifacts} HLO modules");
+        }
+        _ => {
+            println!(
+                "dualsparse — DualSparse-MoE inference system\n\
+                 usage: dualsparse <serve|eval|calibrate|exp|info> …\n\
+                 see `rust/src/main.rs` header or README.md"
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,148 @@
+//! Model host: configuration, serialized-weight loading, tokenizer.
+//!
+//! Weights are produced once at build time by `python -m compile.aot`
+//! (flat little-endian f32 `.bin` + JSON manifest); this module loads
+//! them into host memory for the Rust engine. The tokenizer is
+//! byte-level (vocab 256) so it needs no vocabulary file.
+
+pub mod weights;
+
+pub use weights::{Tensor, Weights};
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+/// Mirror of `python/compile/configs.py::ModelConfig`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub name: String,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_head: usize,
+    pub vocab: usize,
+    pub max_seq: usize,
+    pub n_experts: usize,
+    pub d_ffn: usize,
+    pub top_k: usize,
+    pub n_shared: usize,
+    pub d_ffn_shared: usize,
+    pub normalized_gating: bool,
+}
+
+impl ModelConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            name: j.get("name")?.as_str()?.to_string(),
+            d_model: j.get("d_model")?.as_usize()?,
+            n_layers: j.get("n_layers")?.as_usize()?,
+            n_heads: j.get("n_heads")?.as_usize()?,
+            d_head: j.get("d_head")?.as_usize()?,
+            vocab: j.get("vocab")?.as_usize()?,
+            max_seq: j.get("max_seq")?.as_usize()?,
+            n_experts: j.get("n_experts")?.as_usize()?,
+            d_ffn: j.get("d_ffn")?.as_usize()?,
+            top_k: j.get("top_k")?.as_usize()?,
+            n_shared: j.get("n_shared")?.as_usize()?,
+            d_ffn_shared: j.get("d_ffn_shared")?.as_usize()?,
+            normalized_gating: j.get("normalized_gating")?.as_bool()?,
+        })
+    }
+
+    pub fn d_attn(&self) -> usize {
+        self.n_heads * self.d_head
+    }
+
+    /// FLOPs of one expert FFN application per token (madd = 2 FLOPs).
+    pub fn ffn_flops_per_token(&self, width: usize) -> u64 {
+        (2 * 3 * self.d_model * width) as u64
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.d_attn() != self.d_model {
+            bail!("d_attn {} != d_model {}", self.d_attn(), self.d_model);
+        }
+        if self.top_k > self.n_experts {
+            bail!("top_k {} > n_experts {}", self.top_k, self.n_experts);
+        }
+        if self.d_ffn % 2 != 0 {
+            bail!("d_ffn must be even for major/minor reconstruction");
+        }
+        Ok(())
+    }
+}
+
+/// Byte-level tokenizer (identity mapping, vocab = 256).
+pub struct ByteTokenizer;
+
+impl ByteTokenizer {
+    pub fn encode(text: &str) -> Vec<u8> {
+        text.as_bytes().to_vec()
+    }
+
+    pub fn decode(tokens: &[u8]) -> String {
+        tokens.iter().map(|&b| b as char).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> ModelConfig {
+        ModelConfig {
+            name: "t".into(),
+            d_model: 64,
+            n_layers: 4,
+            n_heads: 4,
+            d_head: 16,
+            vocab: 256,
+            max_seq: 160,
+            n_experts: 8,
+            d_ffn: 128,
+            top_k: 2,
+            n_shared: 0,
+            d_ffn_shared: 0,
+            normalized_gating: false,
+        }
+    }
+
+    #[test]
+    fn config_validates() {
+        cfg().validate().unwrap();
+        let mut bad = cfg();
+        bad.top_k = 99;
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn config_parses_manifest_json() {
+        let text = r#"{"name":"m","d_model":64,"n_layers":4,"n_heads":4,
+            "d_head":16,"vocab":256,"max_seq":160,"n_experts":8,"d_ffn":128,
+            "top_k":2,"n_shared":0,"d_ffn_shared":0,"normalized_gating":false}"#;
+        let j = Json::parse(text).unwrap();
+        let c = ModelConfig::from_json(&j).unwrap();
+        assert_eq!(c, cfg().clone_with_name("m"));
+    }
+
+    impl ModelConfig {
+        fn clone_with_name(&self, n: &str) -> Self {
+            let mut c = self.clone();
+            c.name = n.into();
+            c
+        }
+    }
+
+    #[test]
+    fn tokenizer_roundtrip() {
+        let s = "add:3+4|7\n";
+        assert_eq!(ByteTokenizer::decode(&ByteTokenizer::encode(s)), s);
+    }
+
+    #[test]
+    fn ffn_flops() {
+        let c = cfg();
+        assert_eq!(c.ffn_flops_per_token(128), 2 * 3 * 64 * 128);
+    }
+}

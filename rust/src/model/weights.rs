@@ -1,0 +1,193 @@
+//! Serialized-weight loading: flat little-endian f32 `.bin` + manifest.
+//!
+//! Layout is defined by `python/compile/aot.py::flatten_params`; tensor
+//! names are `emb`, `pos`, `lnf`, and `layers.{i}.{ln1,wq,wk,wv,wo,ln2,
+//! wg,w1,w3,w2[,sw1,sw3,sw2]}`.
+
+use std::collections::BTreeMap;
+use std::fs;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use super::ModelConfig;
+use crate::util::json::Json;
+
+/// A host-resident f32 tensor (row-major).
+#[derive(Debug, Clone)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor { shape, data }
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor { shape, data: vec![0.0; n] }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let cols = self.shape[1];
+        &self.data[i * cols..(i + 1) * cols]
+    }
+
+    /// Sub-tensor `t[i]` of the leading dimension (any rank ≥ 1).
+    pub fn index0(&self, i: usize) -> Tensor {
+        let inner: usize = self.shape[1..].iter().product();
+        Tensor {
+            shape: self.shape[1..].to_vec(),
+            data: self.data[i * inner..(i + 1) * inner].to_vec(),
+        }
+    }
+
+    /// Column-slice of a 2-D tensor: keep columns [c0, c1).
+    pub fn col_slice(&self, c0: usize, c1: usize) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let (rows, cols) = (self.shape[0], self.shape[1]);
+        let mut data = Vec::with_capacity(rows * (c1 - c0));
+        for r in 0..rows {
+            data.extend_from_slice(&self.data[r * cols + c0..r * cols + c1]);
+        }
+        Tensor::new(vec![rows, c1 - c0], data)
+    }
+
+    /// Row-slice of a 2-D tensor: keep rows [r0, r1).
+    pub fn row_slice(&self, r0: usize, r1: usize) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let cols = self.shape[1];
+        Tensor::new(
+            vec![r1 - r0, cols],
+            self.data[r0 * cols..r1 * cols].to_vec(),
+        )
+    }
+
+    /// Gather columns of a 2-D tensor by index (reconstruction permute).
+    pub fn gather_cols(&self, idx: &[usize]) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let (rows, cols) = (self.shape[0], self.shape[1]);
+        let mut data = Vec::with_capacity(rows * idx.len());
+        for r in 0..rows {
+            let row = &self.data[r * cols..(r + 1) * cols];
+            data.extend(idx.iter().map(|&j| row[j]));
+        }
+        Tensor::new(vec![rows, idx.len()], data)
+    }
+
+    /// Gather rows of a 2-D tensor by index.
+    pub fn gather_rows(&self, idx: &[usize]) -> Tensor {
+        assert_eq!(self.shape.len(), 2);
+        let cols = self.shape[1];
+        let mut data = Vec::with_capacity(idx.len() * cols);
+        for &i in idx {
+            data.extend_from_slice(&self.data[i * cols..(i + 1) * cols]);
+        }
+        Tensor::new(vec![idx.len(), cols], data)
+    }
+
+    pub fn scale(&self, k: f32) -> Tensor {
+        Tensor {
+            shape: self.shape.clone(),
+            data: self.data.iter().map(|x| x * k).collect(),
+        }
+    }
+}
+
+/// A loaded model: config + named tensors.
+pub struct Weights {
+    pub config: ModelConfig,
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Weights {
+    pub fn load(models_dir: &Path, name: &str) -> Result<Self> {
+        let manifest_path = models_dir.join(format!("{name}.json"));
+        let bin_path = models_dir.join(format!("{name}.bin"));
+        let manifest = Json::parse(
+            &fs::read_to_string(&manifest_path)
+                .with_context(|| format!("reading {manifest_path:?}"))?,
+        )?;
+        let config = ModelConfig::from_json(manifest.get("config")?)?;
+        config.validate()?;
+        let raw = fs::read(&bin_path).with_context(|| format!("reading {bin_path:?}"))?;
+        if raw.len() % 4 != 0 {
+            bail!("{bin_path:?} is not a whole number of f32s");
+        }
+        let floats: Vec<f32> = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect();
+        let mut tensors = BTreeMap::new();
+        for (tname, meta) in manifest.get("tensors")?.as_obj()? {
+            let offset = meta.get("offset")?.as_usize()?;
+            let shape = meta.get("shape")?.as_usize_vec()?;
+            let numel: usize = shape.iter().product();
+            if offset + numel > floats.len() {
+                bail!("tensor {tname} out of range");
+            }
+            tensors.insert(
+                tname.clone(),
+                Tensor::new(shape, floats[offset..offset + numel].to_vec()),
+            );
+        }
+        Ok(Weights { config, tensors })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .with_context(|| format!("missing tensor {name}"))
+    }
+
+    pub fn layer(&self, li: usize, key: &str) -> Result<&Tensor> {
+        self.get(&format!("layers.{li}.{key}"))
+    }
+
+    /// Expert sub-tensor: `layers.{li}.{key}[e]` for key in {w1, w3, w2}.
+    pub fn expert(&self, li: usize, key: &str, e: usize) -> Result<Tensor> {
+        Ok(self.layer(li, key)?.index0(e))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tensor_slicing() {
+        // 2x4 matrix 0..8
+        let t = Tensor::new(vec![2, 4], (0..8).map(|x| x as f32).collect());
+        assert_eq!(t.row(1), &[4.0, 5.0, 6.0, 7.0]);
+        assert_eq!(t.col_slice(1, 3).data, vec![1.0, 2.0, 5.0, 6.0]);
+        assert_eq!(t.row_slice(1, 2).data, vec![4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    fn tensor_gather() {
+        let t = Tensor::new(vec![2, 3], vec![0., 1., 2., 3., 4., 5.]);
+        assert_eq!(t.gather_cols(&[2, 0]).data, vec![2., 0., 5., 3.]);
+        assert_eq!(t.gather_rows(&[1, 0]).data, vec![3., 4., 5., 0., 1., 2.]);
+    }
+
+    #[test]
+    fn index0_splits_leading_dim() {
+        let t = Tensor::new(vec![2, 2, 2], (0..8).map(|x| x as f32).collect());
+        assert_eq!(t.index0(1).data, vec![4., 5., 6., 7.]);
+        assert_eq!(t.index0(1).shape, vec![2, 2]);
+    }
+
+    #[test]
+    fn scale_scales() {
+        let t = Tensor::new(vec![2], vec![1.0, -2.0]);
+        assert_eq!(t.scale(2.0).data, vec![2.0, -4.0]);
+    }
+}

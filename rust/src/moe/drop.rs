@@ -1,0 +1,180 @@
+//! Token-expert computation dropping (paper §4.1-§4.2).
+//!
+//! * `OneT` (1T-Drop): drop the pair when the normalized gating score is
+//!   below T¹.
+//! * `TwoT` (2T-Drop): dual thresholds over the reconstructed
+//!   major/minor sub-experts — score ≥ T²_minor runs both halves,
+//!   T²_major ≤ score < T²_minor runs only the major half, and
+//!   score < T²_major drops the pair entirely. The paper's default pair
+//!   is (T¹ − 0.01, T¹ + 0.01), constructed by [`DropPolicy::two_t`].
+
+/// Per-(token, expert) drop decision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Decision {
+    /// Compute the full expert (both sub-experts).
+    Full,
+    /// Compute only the major (high-importance) half of the neurons.
+    MajorOnly,
+    /// Skip this token-expert computation entirely.
+    Drop,
+}
+
+/// The drop policy applied by the router.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum DropPolicy {
+    NoDrop,
+    /// 1T-Drop with threshold T¹ on the normalized gating score.
+    OneT(f32),
+    /// 2T-Drop with thresholds (T²_major, T²_minor), T²_major ≤ T²_minor.
+    TwoT { major: f32, minor: f32 },
+}
+
+impl DropPolicy {
+    /// The paper's default dual-threshold construction:
+    /// T²_major = T¹ − δ, T²_minor = T¹ + δ with δ = 0.01 (§4.2c).
+    pub fn two_t(t1: f32) -> DropPolicy {
+        DropPolicy::TwoT { major: (t1 - 0.01).max(0.0), minor: t1 + 0.01 }
+    }
+
+    /// Decide for one token-expert pair given its normalized score.
+    pub fn decide(&self, norm_score: f32) -> Decision {
+        match *self {
+            DropPolicy::NoDrop => Decision::Full,
+            DropPolicy::OneT(t) => {
+                if norm_score < t {
+                    Decision::Drop
+                } else {
+                    Decision::Full
+                }
+            }
+            DropPolicy::TwoT { major, minor } => {
+                if norm_score >= minor {
+                    Decision::Full
+                } else if norm_score >= major {
+                    Decision::MajorOnly
+                } else {
+                    Decision::Drop
+                }
+            }
+        }
+    }
+
+    /// Scale the threshold(s) for load-aware thresholding (§4.3): a
+    /// device whose load ratio is below 1 applies a proportionally lower
+    /// threshold; ratios ≥ 1 keep the full (maximum) threshold.
+    pub fn scaled(&self, ratio: f32) -> DropPolicy {
+        let k = ratio.clamp(0.0, 1.0);
+        match *self {
+            DropPolicy::NoDrop => DropPolicy::NoDrop,
+            DropPolicy::OneT(t) => DropPolicy::OneT(t * k),
+            DropPolicy::TwoT { major, minor } => {
+                DropPolicy::TwoT { major: major * k, minor: minor * k }
+            }
+        }
+    }
+
+    /// Fraction of FLOPs of a full expert that the decision costs
+    /// (major/minor halves are equal width ⇒ MajorOnly = 0.5).
+    pub fn cost_fraction(d: Decision) -> f32 {
+        match d {
+            Decision::Full => 1.0,
+            Decision::MajorOnly => 0.5,
+            Decision::Drop => 0.0,
+        }
+    }
+}
+
+/// Drop-rate accounting: kept/total token-expert *computation* fraction,
+/// matching the paper's definition (MajorOnly counts as half a drop).
+#[derive(Debug, Default, Clone)]
+pub struct DropStats {
+    pub full: u64,
+    pub major_only: u64,
+    pub dropped: u64,
+}
+
+impl DropStats {
+    pub fn record(&mut self, d: Decision) {
+        match d {
+            Decision::Full => self.full += 1,
+            Decision::MajorOnly => self.major_only += 1,
+            Decision::Drop => self.dropped += 1,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.full + self.major_only + self.dropped
+    }
+
+    /// Fraction of token-expert compute dropped (Table 2 "Drop Rate").
+    pub fn drop_rate(&self) -> f64 {
+        let t = self.total();
+        if t == 0 {
+            return 0.0;
+        }
+        (self.dropped as f64 + 0.5 * self.major_only as f64) / t as f64
+    }
+
+    pub fn merge(&mut self, other: &DropStats) {
+        self.full += other.full;
+        self.major_only += other.major_only;
+        self.dropped += other.dropped;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn no_drop_always_full() {
+        assert_eq!(DropPolicy::NoDrop.decide(0.0), Decision::Full);
+    }
+
+    #[test]
+    fn one_t_thresholds() {
+        let p = DropPolicy::OneT(0.1);
+        assert_eq!(p.decide(0.05), Decision::Drop);
+        assert_eq!(p.decide(0.1), Decision::Full);
+        assert_eq!(p.decide(0.5), Decision::Full);
+    }
+
+    #[test]
+    fn two_t_bands() {
+        let p = DropPolicy::two_t(0.10); // (0.09, 0.11)
+        assert_eq!(p.decide(0.05), Decision::Drop);
+        assert_eq!(p.decide(0.10), Decision::MajorOnly);
+        assert_eq!(p.decide(0.12), Decision::Full);
+    }
+
+    #[test]
+    fn two_t_equal_thresholds_degenerates_to_one_t() {
+        let p = DropPolicy::TwoT { major: 0.1, minor: 0.1 };
+        let q = DropPolicy::OneT(0.1);
+        for s in [0.0, 0.05, 0.0999, 0.1, 0.3] {
+            let pd = p.decide(s);
+            let qd = q.decide(s);
+            // TwoT with equal thresholds never yields MajorOnly.
+            assert_ne!(pd, Decision::MajorOnly);
+            assert_eq!(pd == Decision::Drop, qd == Decision::Drop);
+        }
+    }
+
+    #[test]
+    fn load_aware_scaling() {
+        let p = DropPolicy::OneT(0.2);
+        assert_eq!(p.scaled(1.5), DropPolicy::OneT(0.2)); // clamped at max
+        assert_eq!(p.scaled(0.5), DropPolicy::OneT(0.1));
+        assert_eq!(p.scaled(0.0), DropPolicy::OneT(0.0));
+    }
+
+    #[test]
+    fn drop_rate_counts_major_as_half() {
+        let mut s = DropStats::default();
+        s.record(Decision::Full);
+        s.record(Decision::MajorOnly);
+        s.record(Decision::Drop);
+        s.record(Decision::Drop);
+        assert!((s.drop_rate() - (2.0 + 0.5) / 4.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,102 @@
+//! Gating: Top-K selection over softmax scores + activated-set
+//! normalization (paper §2.1.1 Eqs. 1-3 and §4.1).
+//!
+//! The gate *scores* come from the AOT `gate_b{B}_e{E}` artifact
+//! (softmax over all experts); everything downstream — Top-K, the
+//! normalization used by the drop thresholds, the drop decisions — is
+//! coordinator logic and lives here in Rust.
+
+/// One token's routing decision before drop policies are applied.
+#[derive(Debug, Clone)]
+pub struct TokenRouting {
+    /// (expert index, original gating score, normalized gating score),
+    /// sorted by descending score. The *original* score is the
+    /// combination weight (Eq. 3); the *normalized* score feeds the
+    /// drop thresholds (§4.1).
+    pub experts: Vec<(usize, f32, f32)>,
+}
+
+/// Top-K indices + scores, descending, ties toward the lower index.
+pub fn top_k(scores: &[f32], k: usize) -> Vec<(usize, f32)> {
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| {
+        scores[b]
+            .partial_cmp(&scores[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx.truncate(k);
+    idx.into_iter().map(|i| (i, scores[i])).collect()
+}
+
+/// Route one token: Top-K + normalization over the activated set.
+///
+/// `already_normalized` models architectures (DeepSeek-V3 / Qwen3-style)
+/// whose gate normalizes activated scores itself — then the normalized
+/// score *is* the original score (paper §4.1 note).
+pub fn route_token(scores: &[f32], k: usize, already_normalized: bool) -> TokenRouting {
+    let sel = top_k(scores, k);
+    let sum: f32 = sel.iter().map(|(_, s)| *s).sum();
+    let experts = sel
+        .into_iter()
+        .map(|(e, s)| {
+            let norm = if already_normalized {
+                s
+            } else if sum > 0.0 {
+                s / sum
+            } else {
+                1.0 / k as f32
+            };
+            (e, s, norm)
+        })
+        .collect();
+    TokenRouting { experts }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn topk_orders_descending() {
+        let s = [0.1, 0.5, 0.2, 0.2];
+        let t = top_k(&s, 3);
+        assert_eq!(t[0], (1, 0.5));
+        assert_eq!(t[1].0, 2); // tie 0.2/0.2 → lower index first
+        assert_eq!(t[2].0, 3);
+    }
+
+    #[test]
+    fn normalization_sums_to_one() {
+        let s = [0.05, 0.6, 0.15, 0.2];
+        let r = route_token(&s, 2, false);
+        let total: f32 = r.experts.iter().map(|(_, _, n)| n).sum();
+        assert!((total - 1.0).abs() < 1e-6);
+        // original scores preserved as combination weights
+        assert_eq!(r.experts[0].1, 0.6);
+    }
+
+    #[test]
+    fn already_normalized_passthrough() {
+        let s = [0.1, 0.6, 0.3];
+        let r = route_token(&s, 2, true);
+        assert_eq!(r.experts[0].2, 0.6);
+        assert_eq!(r.experts[1].2, 0.3);
+    }
+
+    #[test]
+    fn top1_is_argmax() {
+        let s = [0.2, 0.1, 0.7];
+        let r = route_token(&s, 1, false);
+        assert_eq!(r.experts.len(), 1);
+        assert_eq!(r.experts[0].0, 2);
+        assert_eq!(r.experts[0].2, 1.0);
+    }
+
+    #[test]
+    fn zero_scores_fall_back_uniform() {
+        let s = [0.0, 0.0, 0.0, 0.0];
+        let r = route_token(&s, 2, false);
+        assert!((r.experts[0].2 - 0.5).abs() < 1e-6);
+    }
+}

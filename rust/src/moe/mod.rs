@@ -1,0 +1,121 @@
+//! MoE coordination: gating, drop policies, partition/reconstruction.
+//!
+//! This is the paper's system contribution at Layer 3: the router owns
+//! Top-K selection, score normalization, the 1T/2T drop decisions, and
+//! the sub-expert dispatch plan; the FFN compute itself runs through the
+//! AOT Pallas artifacts (Layer 1).
+
+pub mod drop;
+pub mod gating;
+pub mod partition;
+
+pub use drop::{Decision, DropPolicy, DropStats};
+pub use gating::{route_token, top_k, TokenRouting};
+pub use partition::{
+    build_layer, complete_transform_expert, complete_transform_gate,
+    importance_order, remap_indices, PartitionedExpert, SubExpert,
+};
+
+/// A packed dispatch plan for one MoE layer invocation: which tokens run
+/// on which (sub-)expert, with which combination weight.
+#[derive(Debug, Default)]
+pub struct DispatchPlan {
+    /// Per original expert: (token row, weight) pairs that run FULL.
+    pub full: Vec<Vec<(usize, f32)>>,
+    /// Per original expert: (token row, weight) pairs that run MAJOR only.
+    pub major_only: Vec<Vec<(usize, f32)>>,
+    /// Drop accounting for this invocation.
+    pub stats: DropStats,
+}
+
+impl DispatchPlan {
+    pub fn new(n_experts: usize) -> Self {
+        DispatchPlan {
+            full: vec![Vec::new(); n_experts],
+            major_only: vec![Vec::new(); n_experts],
+            stats: DropStats::default(),
+        }
+    }
+
+    /// Total kept token-expert pair count (full + major-only).
+    pub fn kept_pairs(&self) -> usize {
+        self.full.iter().map(Vec::len).sum::<usize>()
+            + self.major_only.iter().map(Vec::len).sum::<usize>()
+    }
+}
+
+/// Build the dispatch plan for a batch of routed tokens under `policy`.
+///
+/// `per_token_policy` optionally overrides the policy per token (the
+/// load-aware EP path assigns each token its owning device's scaled
+/// policy); otherwise `policy` applies uniformly.
+pub fn plan_dispatch(
+    routings: &[TokenRouting],
+    n_experts: usize,
+    policy: DropPolicy,
+    per_pair_policy: Option<&dyn Fn(usize, usize) -> DropPolicy>,
+) -> DispatchPlan {
+    let mut plan = DispatchPlan::new(n_experts);
+    for (row, r) in routings.iter().enumerate() {
+        for &(e, score, norm) in &r.experts {
+            let pol = match per_pair_policy {
+                Some(f) => f(row, e),
+                None => policy,
+            };
+            let d = pol.decide(norm);
+            plan.stats.record(d);
+            match d {
+                Decision::Full => plan.full[e].push((row, score)),
+                Decision::MajorOnly => plan.major_only[e].push((row, score)),
+                Decision::Drop => {}
+            }
+        }
+    }
+    plan
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn routing(pairs: &[(usize, f32, f32)]) -> TokenRouting {
+        TokenRouting { experts: pairs.to_vec() }
+    }
+
+    #[test]
+    fn plan_no_drop_routes_everything() {
+        let r = vec![
+            routing(&[(0, 0.6, 0.75), (1, 0.2, 0.25)]),
+            routing(&[(1, 0.5, 0.5), (2, 0.5, 0.5)]),
+        ];
+        let plan = plan_dispatch(&r, 4, DropPolicy::NoDrop, None);
+        assert_eq!(plan.kept_pairs(), 4);
+        assert_eq!(plan.full[1], vec![(0, 0.2), (1, 0.5)]);
+        assert_eq!(plan.stats.drop_rate(), 0.0);
+    }
+
+    #[test]
+    fn plan_two_t_splits_bands() {
+        let r = vec![routing(&[(0, 0.9, 0.9), (1, 0.1, 0.10)])];
+        let plan = plan_dispatch(&r, 2, DropPolicy::two_t(0.10), None);
+        assert_eq!(plan.full[0].len(), 1);
+        assert_eq!(plan.major_only[1].len(), 1);
+        assert!((plan.stats.drop_rate() - 0.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn per_pair_policy_overrides() {
+        let r = vec![routing(&[(0, 0.5, 0.5), (1, 0.5, 0.5)])];
+        // expert 0 on a loaded device (drop), expert 1 on idle (keep)
+        let f = |_row: usize, e: usize| {
+            if e == 0 {
+                DropPolicy::OneT(0.9)
+            } else {
+                DropPolicy::OneT(0.0)
+            }
+        };
+        let plan = plan_dispatch(&r, 2, DropPolicy::NoDrop, Some(&f));
+        assert!(plan.full[0].is_empty());
+        assert_eq!(plan.full[1].len(), 1);
+    }
+}

@@ -1,0 +1,181 @@
+//! Expert partition and reconstruction (paper §3 + §4.2a/b), applied at
+//! model-load time in the coordinator.
+//!
+//! * **Partial transformation** (Fig. 3c, Eq. 12): each original expert e
+//!   is split into P contiguous sub-experts with ids e·P … e·P+P−1; the
+//!   gating network is untouched; scores repeat at the router, no W2
+//!   scaling. This is what the DualSparse serving path uses.
+//! * **Complete transformation** (Fig. 3b, Eq. 11): gate columns repeat,
+//!   W2 scales by P. The Python side performs it for fine-tuning
+//!   (Fig. 4 / Table 1); the Rust mirror here exists so property tests
+//!   can check consistency on the serving side too.
+//! * **Reconstruction** (§4.2b): permute each expert's neurons by a
+//!   calibration importance table so the *major* sub-expert holds the
+//!   top half. A permutation of the FFN inner dim — output-invariant
+//!   when both halves run.
+
+use crate::model::{Tensor, Weights};
+use anyhow::Result;
+
+/// One sub-expert's weights (width = d_ffn / P).
+#[derive(Debug, Clone)]
+pub struct SubExpert {
+    pub w1: Tensor,
+    pub w3: Tensor,
+    pub w2: Tensor,
+    pub width: usize,
+}
+
+impl SubExpert {
+    fn from_cols(w1: &Tensor, w3: &Tensor, w2: &Tensor, cols: &[usize]) -> SubExpert {
+        SubExpert {
+            w1: w1.gather_cols(cols),
+            w3: w3.gather_cols(cols),
+            w2: w2.gather_rows(cols),
+            width: cols.len(),
+        }
+    }
+}
+
+/// An original expert prepared for dual-sparse serving: the full-width
+/// weights plus the (major, minor) P=2 split.
+#[derive(Debug, Clone)]
+pub struct PartitionedExpert {
+    pub full: SubExpert,
+    pub major: SubExpert,
+    pub minor: SubExpert,
+}
+
+/// Eq. 12: Top-K expert indices → K·P sub-expert indices, each original
+/// expert placed contiguously, relative order preserved per repeat.
+pub fn remap_indices(indices: &[usize], p: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(indices.len() * p);
+    for rep in 0..p {
+        for &i in indices {
+            out.push(i * p + rep);
+        }
+    }
+    out
+}
+
+/// Descending-importance permutation; ties break toward the lower index.
+pub fn importance_order(importance: &[f32]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..importance.len()).collect();
+    idx.sort_by(|&a, &b| {
+        importance[b]
+            .partial_cmp(&importance[a])
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    idx
+}
+
+/// Build the serving-side partitioned experts for one layer.
+///
+/// `importance`: per-expert `[d_ffn]` tables (§4.2b). When `Some`, the
+/// split is by importance (reconstruction); when `None`, it is the
+/// contiguous halves of the partial transformation (2T "partition" row
+/// of Table 2).
+pub fn build_layer(
+    weights: &Weights,
+    layer: usize,
+    importance: Option<&[Vec<f32>]>,
+) -> Result<Vec<PartitionedExpert>> {
+    let e = weights.config.n_experts;
+    let h = weights.config.d_ffn;
+    let mut out = Vec::with_capacity(e);
+    for ei in 0..e {
+        let w1 = weights.expert(layer, "w1", ei)?;
+        let w3 = weights.expert(layer, "w3", ei)?;
+        let w2 = weights.expert(layer, "w2", ei)?;
+        let order: Vec<usize> = match importance {
+            Some(tables) => importance_order(&tables[ei]),
+            None => (0..h).collect(),
+        };
+        let full_cols: Vec<usize> = (0..h).collect();
+        let major_cols = &order[..h / 2];
+        let minor_cols = &order[h / 2..];
+        out.push(PartitionedExpert {
+            full: SubExpert::from_cols(&w1, &w3, &w2, &full_cols),
+            major: SubExpert::from_cols(&w1, &w3, &w2, major_cols),
+            minor: SubExpert::from_cols(&w1, &w3, &w2, minor_cols),
+        });
+    }
+    Ok(out)
+}
+
+/// Complete transformation of a gate matrix (Fig. 3b step 1): repeat
+/// each expert column P times. Returns [d_model, E·P].
+pub fn complete_transform_gate(wg: &Tensor, p: usize) -> Tensor {
+    let (d, e) = (wg.shape[0], wg.shape[1]);
+    let mut data = Vec::with_capacity(d * e * p);
+    for r in 0..d {
+        let row = wg.row(r);
+        for c in 0..e {
+            for _ in 0..p {
+                data.push(row[c]);
+            }
+        }
+    }
+    Tensor::new(vec![d, e * p], data)
+}
+
+/// Complete transformation of one expert (Fig. 3b steps 2-3): contiguous
+/// neuron split + W2 scaled by P. Returns P sub-experts.
+pub fn complete_transform_expert(
+    w1: &Tensor,
+    w3: &Tensor,
+    w2: &Tensor,
+    p: usize,
+) -> Vec<SubExpert> {
+    let h = w1.shape[1];
+    let hp = h / p;
+    (0..p)
+        .map(|pi| {
+            let cols: Vec<usize> = (pi * hp..(pi + 1) * hp).collect();
+            let mut se = SubExpert::from_cols(w1, w3, w2, &cols);
+            se.w2 = se.w2.scale(p as f32);
+            se
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn remap_matches_eq12() {
+        // I = [i1, i2], P = 2 → [2 i1, 2 i2, 2 i1 + 1, 2 i2 + 1]
+        assert_eq!(remap_indices(&[3, 1], 2), vec![6, 2, 7, 3]);
+        // P = 3, single expert
+        assert_eq!(remap_indices(&[2], 3), vec![6, 7, 8]);
+    }
+
+    #[test]
+    fn importance_order_descending_stable() {
+        let imp = [0.1, 0.9, 0.9, 0.2];
+        assert_eq!(importance_order(&imp), vec![1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn gate_repeat_matches_eq7() {
+        let wg = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let r = complete_transform_gate(&wg, 2);
+        assert_eq!(r.shape, vec![2, 4]);
+        assert_eq!(r.data, vec![1., 1., 2., 2., 3., 3., 4., 4.]);
+    }
+
+    #[test]
+    fn complete_expert_scales_w2() {
+        let w1 = Tensor::new(vec![2, 4], (0..8).map(|x| x as f32).collect());
+        let w3 = w1.clone();
+        let w2 = Tensor::new(vec![4, 2], (0..8).map(|x| x as f32).collect());
+        let subs = complete_transform_expert(&w1, &w3, &w2, 2);
+        assert_eq!(subs.len(), 2);
+        assert_eq!(subs[0].w1.shape, vec![2, 2]);
+        // W2 rows 0..2 scaled by 2
+        assert_eq!(subs[0].w2.data, vec![0., 2., 4., 6.]);
+        assert_eq!(subs[1].w2.data, vec![8., 10., 12., 14.]);
+    }
+}

@@ -1,0 +1,114 @@
+//! Serving front-end: workload generation + benchmark runs over the
+//! continuous batcher (the paper's §5.3.2 efficiency methodology:
+//! "2,000 random prompts, input 500 / output 100", scaled to this
+//! testbed per DESIGN.md §2).
+
+use anyhow::Result;
+
+use crate::engine::batcher::{serve, Request, ServeStats};
+use crate::engine::Engine;
+use crate::moe::DropPolicy;
+use crate::util::rng::SplitMix64;
+
+/// A serving workload: prompts drawn from the benchmark task mixture
+/// with a deterministic shuffle (stand-in for "2000 random prompts").
+pub fn workload(n_requests: usize, max_new: usize, seed: u64) -> Vec<Request> {
+    let mut reqs = crate::engine::batcher::task_workload(n_requests, max_new);
+    let mut rng = SplitMix64::new(seed);
+    // Fisher-Yates shuffle for arrival order.
+    for i in (1..reqs.len()).rev() {
+        let j = rng.below(i + 1);
+        reqs.swap(i, j);
+    }
+    for (i, r) in reqs.iter_mut().enumerate() {
+        r.id = i;
+    }
+    reqs
+}
+
+/// One measured serving run under a drop policy.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub label: String,
+    pub stats: ServeStats,
+    /// MoE-module speedup vs a baseline run (filled by `compare`).
+    pub moe_speedup: f64,
+    pub e2e_speedup: f64,
+}
+
+/// Compile + touch every artifact the workload will need so that timed
+/// runs don't pay lazy-compilation costs (PJRT compiles on first use).
+pub fn warmup(engine: &mut Engine) -> Result<()> {
+    let reqs = task_workload_small();
+    let saved = engine.policy;
+    // 2T touches the half-width artifacts as well.
+    engine.policy = DropPolicy::TwoT { major: 0.05, minor: 0.5 };
+    serve(engine, &reqs)?;
+    engine.policy = saved;
+    Ok(())
+}
+
+fn task_workload_small() -> Vec<Request> {
+    crate::engine::batcher::task_workload(18, 6)
+}
+
+/// Run the workload under `policy`; the engine's drop policy is
+/// restored afterwards. Warms up lazily-compiled artifacts first.
+pub fn run_once(engine: &mut Engine, reqs: &[Request], policy: DropPolicy,
+                label: &str) -> Result<RunReport> {
+    warmup(engine)?;
+    let saved = engine.policy;
+    engine.policy = policy;
+    let (_, stats) = serve(engine, reqs)?;
+    engine.policy = saved;
+    Ok(RunReport {
+        label: label.to_string(),
+        stats,
+        moe_speedup: 1.0,
+        e2e_speedup: 1.0,
+    })
+}
+
+/// Fill speedups of `runs` relative to `baseline` (Fig. 10/11 columns).
+pub fn compare(baseline: &RunReport, runs: &mut [RunReport]) {
+    for r in runs.iter_mut() {
+        r.moe_speedup = baseline.stats.moe_secs / r.stats.moe_secs.max(1e-12);
+        r.e2e_speedup =
+            baseline.stats.artifact_secs / r.stats.artifact_secs.max(1e-12);
+    }
+}
+
+/// Paper-style row: label, drop rate, MoE speedup, e2e speedup, tput.
+pub fn format_report(r: &RunReport) -> String {
+    format!(
+        "{:<22} drop={:>5.1}%  moe×{:<5.2} e2e×{:<5.2} {:>7.1} tok/s  p50={:.0}ms",
+        r.label,
+        100.0 * r.stats.drop_rate,
+        r.moe_speedup,
+        r.e2e_speedup,
+        r.stats.tokens_per_sec,
+        r.stats.p50_latency * 1e3,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_is_deterministic_and_shuffled() {
+        let a = workload(20, 8, 1);
+        let b = workload(20, 8, 1);
+        assert_eq!(
+            a.iter().map(|r| r.prompt.clone()).collect::<Vec<_>>(),
+            b.iter().map(|r| r.prompt.clone()).collect::<Vec<_>>()
+        );
+        let c = workload(20, 8, 2);
+        assert_ne!(
+            a.iter().map(|r| r.prompt.clone()).collect::<Vec<_>>(),
+            c.iter().map(|r| r.prompt.clone()).collect::<Vec<_>>()
+        );
+        // ids are re-sequenced after shuffling
+        assert!(a.iter().enumerate().all(|(i, r)| r.id == i));
+    }
+}

@@ -1,0 +1,81 @@
+//! Accuracy evaluation harness over the synthetic benchmark suite —
+//! the stand-in for LM-Eval-Harness in Tables 1-3 and Figs. 7/11.
+
+use anyhow::Result;
+
+use super::{eval_set, TASKS};
+use crate::engine::{Engine, MAX_SLOTS};
+
+#[derive(Debug, Clone)]
+pub struct TaskResult {
+    pub task: String,
+    pub n: usize,
+    pub correct: usize,
+    pub accuracy: f64,
+}
+
+/// Evaluate every task with `n_per_task` prompts; exact-match accuracy.
+pub fn evaluate(engine: &mut Engine, n_per_task: usize, shift: bool) -> Result<Vec<TaskResult>> {
+    let mut out = Vec::with_capacity(TASKS.len());
+    for task in TASKS {
+        let set = eval_set(task, n_per_task, shift);
+        let mut correct = 0usize;
+        for chunk in set.chunks(MAX_SLOTS) {
+            let prompts: Vec<&str> = chunk.iter().map(|(p, _)| p.as_str()).collect();
+            let max_new = chunk.iter().map(|(_, a)| a.len()).max().unwrap_or(4) + 2;
+            let gens = engine.generate_batch(&prompts, max_new)?;
+            for (g, (_, ans)) in gens.iter().zip(chunk) {
+                if g == ans {
+                    correct += 1;
+                }
+            }
+        }
+        out.push(TaskResult {
+            task: task.to_string(),
+            n: n_per_task,
+            correct,
+            accuracy: 100.0 * correct as f64 / n_per_task.max(1) as f64,
+        });
+    }
+    Ok(out)
+}
+
+/// Unweighted average accuracy (the paper's AVG column).
+pub fn avg_accuracy(results: &[TaskResult]) -> f64 {
+    if results.is_empty() {
+        return 0.0;
+    }
+    results.iter().map(|r| r.accuracy).sum::<f64>() / results.len() as f64
+}
+
+/// Paper-style one-line accuracy row.
+pub fn format_row(label: &str, results: &[TaskResult]) -> String {
+    let cells: Vec<String> = results
+        .iter()
+        .map(|r| format!("{:>5.1}", r.accuracy))
+        .collect();
+    format!(
+        "{label:<28} {}  avg={:.2}",
+        cells.join(" "),
+        avg_accuracy(results)
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn avg_of_empty_is_zero() {
+        assert_eq!(avg_accuracy(&[]), 0.0);
+    }
+
+    #[test]
+    fn avg_is_unweighted() {
+        let r = vec![
+            TaskResult { task: "a".into(), n: 10, correct: 10, accuracy: 100.0 },
+            TaskResult { task: "b".into(), n: 10, correct: 0, accuracy: 0.0 },
+        ];
+        assert_eq!(avg_accuracy(&r), 50.0);
+    }
+}

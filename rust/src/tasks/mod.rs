@@ -1,0 +1,317 @@
+//! Synthetic benchmark tasks — bit-for-bit mirror of
+//! `python/compile/data.py` (same SplitMix64 streams ⇒ identical
+//! prompts/answers on both sides; pinned by parity tests).
+//!
+//! These stand in for the paper's LM-Eval-Harness suite (DESIGN.md §2):
+//! nine byte-level tasks with a difficulty spread; `add`/`ind`/`srt`
+//! play GSM8K's drop-sensitive role.
+
+pub mod eval;
+
+use crate::util::rng::SplitMix64;
+
+pub const TASKS: [&str; 9] = [
+    "cpy", "rev", "pat", "add", "bal", "ind", "srt", "maj", "lm",
+];
+
+pub const TRAIN_SEED: u64 = 0x5EED_0001;
+pub const FINETUNE_SEED: u64 = 0x5EED_0002;
+pub const CALIB_SEED: u64 = 0x5EED_0003;
+pub const EVAL_SEED_BASE: u64 = 0x5EED_1000;
+
+const LETTERS: &str = "abcdefgh";
+const SHIFT_LETTERS: &str = "ijklmnop";
+const SORT_POOL: &str = "abcdef";
+const SHIFT_SORT_POOL: &str = "cdefgh";
+const IND_KEYS: &str = "abcd";
+
+const PHRASES: [&str; 8] = [
+    "the cat sat on the mat",
+    "a dog ran to the park",
+    "we like to read books",
+    "the sun is very warm",
+    "birds fly over the sea",
+    "she has a red ball",
+    "rain falls on the roof",
+    "the moon is out now",
+];
+const SHIFT_PHRASES: [&str; 4] = [
+    "the fox hid in the log",
+    "he rows a boat at dawn",
+    "cold wind blows all day",
+    "a bee lands on the rose",
+];
+
+fn sample_cpy(rng: &mut SplitMix64, shift: bool) -> (String, String) {
+    let pool = if shift { SHIFT_LETTERS } else { LETTERS };
+    let n = 3 + rng.below(if shift { 4 } else { 3 });
+    let s: String = (0..n).map(|_| rng.choice_byte(pool)).collect();
+    (s.clone(), s)
+}
+
+fn sample_rev(rng: &mut SplitMix64, shift: bool) -> (String, String) {
+    let pool = if shift { SHIFT_LETTERS } else { LETTERS };
+    let n = 3 + rng.below(if shift { 4 } else { 3 });
+    let s: String = (0..n).map(|_| rng.choice_byte(pool)).collect();
+    let r: String = s.chars().rev().collect();
+    (s, r)
+}
+
+fn sample_pat(rng: &mut SplitMix64, shift: bool) -> (String, String) {
+    let period = 2 + rng.below(2);
+    let pool = if shift { SHIFT_LETTERS } else { LETTERS };
+    let unit: String = (0..period).map(|_| rng.choice_byte(pool)).collect();
+    let reps = 6 / period + 1;
+    let full = unit.repeat(reps + 2);
+    (full[..6].to_string(), full[6..9].to_string())
+}
+
+fn sample_add(rng: &mut SplitMix64, shift: bool) -> (String, String) {
+    if shift {
+        let a = rng.below(100);
+        let b = rng.below(100);
+        (format!("{a:02}+{b:02}"), format!("{:02}", (a + b) % 100))
+    } else {
+        let a = rng.below(10);
+        let b = rng.below(10);
+        (format!("{a}+{b}"), format!("{}", (a + b) % 10))
+    }
+}
+
+fn gen_balanced(rng: &mut SplitMix64, pairs: usize) -> String {
+    let mut s = String::new();
+    let mut open = 0i32;
+    let mut remaining_open = pairs;
+    let mut remaining_close = pairs;
+    while remaining_open > 0 || remaining_close > 0 {
+        if remaining_open > 0 && (open == 0 || rng.below(2) == 0) {
+            s.push('(');
+            open += 1;
+            remaining_open -= 1;
+        } else {
+            s.push(')');
+            open -= 1;
+            remaining_close -= 1;
+        }
+    }
+    s
+}
+
+fn sample_bal(rng: &mut SplitMix64, shift: bool) -> (String, String) {
+    let pairs = if shift { 3 } else { 2 };
+    if rng.below(2) == 0 {
+        return (gen_balanced(rng, pairs), "Y".into());
+    }
+    let n = 2 * pairs;
+    let s: String = (0..n)
+        .map(|_| if rng.below(2) == 0 { '(' } else { ')' })
+        .collect();
+    let mut bal = true;
+    let mut depth = 0i32;
+    for ch in s.chars() {
+        depth += if ch == '(' { 1 } else { -1 };
+        if depth < 0 {
+            bal = false;
+        }
+    }
+    bal = bal && depth == 0;
+    (s, if bal { "Y" } else { "N" }.into())
+}
+
+fn sample_ind(rng: &mut SplitMix64, _shift: bool) -> (String, String) {
+    let nkeys = 3;
+    let mut keys: Vec<char> = IND_KEYS.chars().collect();
+    // Fisher-Yates, identical call order to the Python side.
+    for i in (1..keys.len()).rev() {
+        let j = rng.below(i + 1);
+        keys.swap(i, j);
+    }
+    keys.truncate(nkeys);
+    let vals: Vec<String> = (0..nkeys).map(|_| rng.below(10).to_string()).collect();
+    let q = rng.below(nkeys);
+    let inp = keys
+        .iter()
+        .zip(&vals)
+        .map(|(k, v)| format!("{k}{v}"))
+        .collect::<Vec<_>>()
+        .join(" ")
+        + " "
+        + &keys[q].to_string();
+    (inp, vals[q].clone())
+}
+
+fn sample_srt(rng: &mut SplitMix64, shift: bool) -> (String, String) {
+    let mut pool: Vec<char> = if shift { SHIFT_SORT_POOL } else { SORT_POOL }
+        .chars()
+        .collect();
+    for i in (1..pool.len()).rev() {
+        let j = rng.below(i + 1);
+        pool.swap(i, j);
+    }
+    let s: String = pool[..4].iter().collect();
+    let mut sorted: Vec<char> = s.chars().collect();
+    sorted.sort();
+    (s, sorted.into_iter().collect())
+}
+
+fn sample_maj(rng: &mut SplitMix64, _shift: bool) -> (String, String) {
+    let s: String = (0..5).map(|_| rng.choice_byte("ab")).collect();
+    let na = s.chars().filter(|&c| c == 'a').count();
+    (s, if na >= 3 { "a" } else { "b" }.into())
+}
+
+fn sample_lm(rng: &mut SplitMix64, shift: bool) -> (String, String) {
+    let phrase = if shift {
+        *rng.choice(&SHIFT_PHRASES)
+    } else {
+        *rng.choice(&PHRASES)
+    };
+    let cut = 6 + rng.below(phrase.len().saturating_sub(10).max(1));
+    let end = std::cmp::min(cut + 5, phrase.len());
+    (phrase[..cut].to_string(), phrase[cut..end].to_string())
+}
+
+/// Sample (input, answer) for a task.
+pub fn sample(task: &str, rng: &mut SplitMix64, shift: bool) -> (String, String) {
+    match task {
+        "cpy" => sample_cpy(rng, shift),
+        "rev" => sample_rev(rng, shift),
+        "pat" => sample_pat(rng, shift),
+        "add" => sample_add(rng, shift),
+        "bal" => sample_bal(rng, shift),
+        "ind" => sample_ind(rng, shift),
+        "srt" => sample_srt(rng, shift),
+        "maj" => sample_maj(rng, shift),
+        "lm" => sample_lm(rng, shift),
+        _ => panic!("unknown task {task}"),
+    }
+}
+
+/// One full corpus line: `tag:input|answer\n`.
+pub fn sample_line(task: &str, rng: &mut SplitMix64, shift: bool) -> String {
+    let (inp, ans) = sample(task, rng, shift);
+    format!("{task}:{inp}|{ans}\n")
+}
+
+/// Deterministic eval set: (prompt-with-`|`, expected answer).
+pub fn eval_set(task: &str, n: usize, shift: bool) -> Vec<(String, String)> {
+    let ti = TASKS.iter().position(|&t| t == task).expect("unknown task") as u64;
+    let mut rng = SplitMix64::new(EVAL_SEED_BASE + ti);
+    (0..n)
+        .map(|_| {
+            let (inp, ans) = sample(task, &mut rng, shift);
+            (format!("{task}:{inp}|"), ans)
+        })
+        .collect()
+}
+
+/// Calibration byte stream (mirror of `data.calibration_tokens`).
+pub fn calibration_tokens(n_tokens: usize) -> Vec<u8> {
+    corpus_tokens(n_tokens, CALIB_SEED, false, None)
+}
+
+/// Mixed corpus byte stream (mirror of `data.corpus_tokens`).
+pub fn corpus_tokens(
+    n_tokens: usize,
+    seed: u64,
+    shift: bool,
+    task_weights: Option<&[usize]>,
+) -> Vec<u8> {
+    let mut rng = SplitMix64::new(seed);
+    let default_w = [1usize; 9];
+    let weights = task_weights.unwrap_or(&default_w);
+    let bag: Vec<&str> = TASKS
+        .iter()
+        .zip(weights)
+        .flat_map(|(&t, &w)| std::iter::repeat(t).take(w))
+        .collect();
+    let mut out = Vec::with_capacity(n_tokens + 64);
+    while out.len() < n_tokens {
+        let t = *rng.choice(&bag);
+        out.extend_from_slice(sample_line(t, &mut rng, shift).as_bytes());
+    }
+    out.truncate(n_tokens);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_sets_are_deterministic() {
+        let a = eval_set("add", 5, false);
+        let b = eval_set("add", 5, false);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn answers_are_correct_add() {
+        for (p, ans) in eval_set("add", 50, false) {
+            let body = p.strip_prefix("add:").unwrap().strip_suffix('|').unwrap();
+            let (a, b) = body.split_once('+').unwrap();
+            let expect = (a.parse::<usize>().unwrap() + b.parse::<usize>().unwrap()) % 10;
+            assert_eq!(ans, expect.to_string());
+        }
+    }
+
+    #[test]
+    fn answers_are_correct_srt() {
+        for (p, ans) in eval_set("srt", 50, false) {
+            let body = p.strip_prefix("srt:").unwrap().strip_suffix('|').unwrap();
+            let mut cs: Vec<char> = body.chars().collect();
+            cs.sort();
+            assert_eq!(ans, cs.into_iter().collect::<String>());
+        }
+    }
+
+    #[test]
+    fn balanced_generator_is_balanced() {
+        let mut rng = SplitMix64::new(99);
+        for _ in 0..100 {
+            let s = gen_balanced(&mut rng, 3);
+            let mut depth = 0i32;
+            for c in s.chars() {
+                depth += if c == '(' { 1 } else { -1 };
+                assert!(depth >= 0);
+            }
+            assert_eq!(depth, 0);
+        }
+    }
+
+    #[test]
+    fn corpus_is_line_structured() {
+        let c = corpus_tokens(2000, TRAIN_SEED, false, None);
+        let text = String::from_utf8(c).unwrap();
+        let first = text.lines().next().unwrap();
+        assert!(first.contains(':') && first.contains('|'));
+    }
+
+    #[test]
+    fn ind_answers_match_pairs() {
+        for (p, ans) in eval_set("ind", 30, false) {
+            let body = p.strip_prefix("ind:").unwrap().strip_suffix('|').unwrap();
+            let parts: Vec<&str> = body.split(' ').collect();
+            let query = parts[3].chars().next().unwrap();
+            let found = parts[..3]
+                .iter()
+                .find(|kv| kv.starts_with(query))
+                .unwrap();
+            assert_eq!(ans, found[1..].to_string());
+        }
+    }
+
+    #[test]
+    fn shift_changes_distribution() {
+        let a = eval_set("cpy", 10, false);
+        let b = eval_set("cpy", 10, true);
+        assert_ne!(a, b);
+        // shifted copy uses the i..p alphabet
+        assert!(b.iter().all(|(p, _)| p
+            .strip_prefix("cpy:")
+            .unwrap()
+            .chars()
+            .take_while(|&c| c != '|')
+            .all(|c| ('i'..='p').contains(&c))));
+    }
+}

@@ -1,0 +1,158 @@
+//! Pure-Rust reference math over host tensors.
+//!
+//! Not on the serving hot path (that goes through PJRT artifacts) — this
+//! exists for property tests (partition/reconstruction invariants),
+//! baseline weight surgery (Wanda 2:4), and cross-checking artifact
+//! outputs without a Python round trip.
+
+use crate::model::Tensor;
+
+/// C = A[m,k] @ B[k,n] (naive; test-scale sizes only).
+pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape.len(), 2);
+    assert_eq!(b.shape.len(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (k2, n) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul shape mismatch");
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            let av = a.data[i * k + p];
+            if av == 0.0 {
+                continue;
+            }
+            let brow = &b.data[p * n..(p + 1) * n];
+            let orow = &mut out[i * n..(i + 1) * n];
+            for j in 0..n {
+                orow[j] += av * brow[j];
+            }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+pub fn swish(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// SwiGLU FFN (paper Eq. 4) over host tensors.
+pub fn swiglu_ffn(x: &Tensor, w1: &Tensor, w3: &Tensor, w2: &Tensor) -> Tensor {
+    let gate = matmul(x, w1);
+    let up = matmul(x, w3);
+    let h: Vec<f32> = gate
+        .data
+        .iter()
+        .zip(&up.data)
+        .map(|(&g, &u)| swish(g) * u)
+        .collect();
+    matmul(&Tensor::new(gate.shape.clone(), h), w2)
+}
+
+/// Row-wise softmax of a 2-D tensor.
+pub fn softmax_rows(x: &Tensor) -> Tensor {
+    let (m, n) = (x.shape[0], x.shape[1]);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let row = &x.data[i * n..(i + 1) * n];
+        let mx = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut sum = 0.0;
+        for j in 0..n {
+            let e = (row[j] - mx).exp();
+            out[i * n + j] = e;
+            sum += e;
+        }
+        for j in 0..n {
+            out[i * n + j] /= sum;
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// RMSNorm with gain g (matches `python/compile/model.py::rmsnorm`).
+pub fn rmsnorm_rows(x: &Tensor, g: &[f32]) -> Tensor {
+    let (m, n) = (x.shape[0], x.shape[1]);
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let row = &x.data[i * n..(i + 1) * n];
+        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / n as f32;
+        let scale = 1.0 / (ms + 1e-6).sqrt();
+        for j in 0..n {
+            out[i * n + j] = row[j] * scale * g[j];
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// Elementwise a + b.
+pub fn add(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape, b.shape);
+    Tensor::new(
+        a.shape.clone(),
+        a.data.iter().zip(&b.data).map(|(x, y)| x + y).collect(),
+    )
+}
+
+/// a + k * b (scaled accumulate, used for gating-weighted expert sums).
+pub fn add_scaled(a: &mut Tensor, b: &Tensor, k: f32) {
+    assert_eq!(a.shape, b.shape);
+    for (x, y) in a.data.iter_mut().zip(&b.data) {
+        *x += k * y;
+    }
+}
+
+/// Max absolute difference between two tensors.
+pub fn max_abs_diff(a: &Tensor, b: &Tensor) -> f32 {
+    assert_eq!(a.shape, b.shape);
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0, f32::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_small() {
+        let a = Tensor::new(vec![2, 2], vec![1., 2., 3., 4.]);
+        let b = Tensor::new(vec![2, 2], vec![1., 0., 0., 1.]);
+        assert_eq!(matmul(&a, &b).data, a.data);
+        let c = matmul(&a, &a);
+        assert_eq!(c.data, vec![7., 10., 15., 22.]);
+    }
+
+    #[test]
+    fn softmax_rows_sum_to_one() {
+        let x = Tensor::new(vec![2, 3], vec![1., 2., 3., -1., 0., 1.]);
+        let s = softmax_rows(&x);
+        for i in 0..2 {
+            let sum: f32 = s.data[i * 3..(i + 1) * 3].iter().sum();
+            assert!((sum - 1.0).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn swish_values() {
+        assert!((swish(0.0) - 0.0).abs() < 1e-9);
+        assert!((swish(10.0) - 10.0 / (1.0 + (-10.0f32).exp())).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rmsnorm_unit_gain() {
+        let x = Tensor::new(vec![1, 2], vec![3.0, 4.0]);
+        let y = rmsnorm_rows(&x, &[1.0, 1.0]);
+        // rms = sqrt((9+16)/2) = sqrt(12.5)
+        let rms = (12.5f32 + 1e-6).sqrt();
+        assert!((y.data[0] - 3.0 / rms).abs() < 1e-5);
+    }
+
+    #[test]
+    fn add_scaled_accumulates() {
+        let mut a = Tensor::new(vec![2], vec![1.0, 1.0]);
+        let b = Tensor::new(vec![2], vec![2.0, 4.0]);
+        add_scaled(&mut a, &b, 0.5);
+        assert_eq!(a.data, vec![2.0, 3.0]);
+    }
+}

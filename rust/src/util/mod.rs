@@ -1,0 +1,50 @@
+//! Shared utilities: deterministic RNG, JSON, stats, timing.
+
+pub mod json;
+pub mod linalg;
+pub mod rng;
+pub mod stats;
+
+use std::time::Instant;
+
+/// Wall-clock stopwatch returning seconds.
+pub struct Timer(Instant);
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer(Instant::now())
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.0.elapsed().as_secs_f64()
+    }
+
+    pub fn millis(&self) -> f64 {
+        self.secs() * 1e3
+    }
+}
+
+/// Round `n` up to the nearest bucket; falls back to the largest bucket.
+/// Central to the capacity-bucket dispatch (DESIGN.md §6).
+pub fn round_up_bucket(n: usize, buckets: &[usize]) -> usize {
+    for &b in buckets {
+        if n <= b {
+            return b;
+        }
+    }
+    *buckets.last().expect("empty bucket list")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_rounding() {
+        let b = [4, 8, 16];
+        assert_eq!(round_up_bucket(1, &b), 4);
+        assert_eq!(round_up_bucket(4, &b), 4);
+        assert_eq!(round_up_bucket(5, &b), 8);
+        assert_eq!(round_up_bucket(99, &b), 16);
+    }
+}

@@ -1,0 +1,113 @@
+//! Small statistics helpers shared by metrics, benches and experiments.
+
+/// Mean of a slice (0.0 for empty).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile via linear interpolation on a sorted copy. p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Histogram with fixed-width bins over [lo, hi); counts outliers in the
+/// edge bins. Used for the Fig. 6 gating-score distributions.
+pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
+    let mut h = vec![0usize; bins];
+    let w = (hi - lo) / bins as f64;
+    for &x in xs {
+        let mut b = ((x - lo) / w) as isize;
+        b = b.clamp(0, bins as isize - 1);
+        h[b as usize] += 1;
+    }
+    h
+}
+
+/// Online mean/max accumulator for per-device load tracking.
+#[derive(Debug, Default, Clone)]
+pub struct Acc {
+    pub n: u64,
+    pub sum: f64,
+    pub max: f64,
+}
+
+impl Acc {
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        self.sum += x;
+        if x > self.max {
+            self.max = x;
+        }
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_stddev() {
+        let xs = [2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0];
+        assert!((mean(&xs) - 5.0).abs() < 1e-12);
+        assert!((stddev(&xs) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 100.0), 4.0);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_clamps_outliers() {
+        let h = histogram(&[-1.0, 0.05, 0.15, 2.0], 0.0, 1.0, 10);
+        assert_eq!(h[0], 2); // -1.0 clamped + 0.05
+        assert_eq!(h[1], 1);
+        assert_eq!(h[9], 1); // 2.0 clamped
+    }
+
+    #[test]
+    fn acc_tracks_max() {
+        let mut a = Acc::default();
+        for x in [1.0, 5.0, 3.0] {
+            a.push(x);
+        }
+        assert_eq!(a.max, 5.0);
+        assert!((a.mean() - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,159 @@
+//! Artifact-level golden tests: load each AOT HLO artifact through the
+//! PJRT runtime and compare against input/output pairs generated from
+//! the pure-jnp oracle at build time (artifacts/golden/*.json).
+//!
+//! Requires `make artifacts`.
+
+use std::path::PathBuf;
+
+use dualsparse::model::Tensor;
+use dualsparse::runtime::{Arg, Runtime};
+use dualsparse::util::json::Json;
+
+fn artifacts() -> PathBuf {
+    std::env::var("DUALSPARSE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+fn golden(name: &str) -> Json {
+    let path = artifacts().join("golden").join(format!("{name}.json"));
+    let text = std::fs::read_to_string(&path)
+        .unwrap_or_else(|_| panic!("{path:?} missing — run `make artifacts`"));
+    Json::parse(&text).unwrap()
+}
+
+fn tensor(j: &Json, key: &str, shape: Vec<usize>) -> Tensor {
+    Tensor::new(shape, j.get(key).unwrap().as_f32_vec().unwrap())
+}
+
+fn assert_close(got: &Tensor, want: &[f32], tol: f32, what: &str) {
+    assert_eq!(got.data.len(), want.len(), "{what}: length");
+    let mut worst = 0.0f32;
+    for (g, w) in got.data.iter().zip(want) {
+        worst = worst.max((g - w).abs());
+    }
+    assert!(worst < tol, "{what}: max |Δ| = {worst} > {tol}");
+}
+
+#[test]
+fn ffn_artifact_matches_oracle() {
+    let rt = Runtime::new(&artifacts()).unwrap();
+    let g = golden("ffn_h64_c4");
+    let x = tensor(&g, "x", vec![4, 64]);
+    let w1 = tensor(&g, "w1", vec![64, 64]);
+    let w3 = tensor(&g, "w3", vec![64, 64]);
+    let w2 = tensor(&g, "w2", vec![64, 64]);
+    let out = rt
+        .exec("ffn_h64_c4", &[Arg::F32(&x), Arg::F32(&w1), Arg::F32(&w3), Arg::F32(&w2)])
+        .unwrap();
+    let want = g.get("y").unwrap().as_f32_vec().unwrap();
+    assert_close(&out[0], &want, 1e-4, "ffn_h64_c4");
+}
+
+#[test]
+fn ffn_artifact_matches_rust_reference() {
+    // Pallas artifact vs the in-crate naive implementation: ties the
+    // three layers together without Python in the loop.
+    let rt = Runtime::new(&artifacts()).unwrap();
+    let g = golden("ffn_h64_c4");
+    let x = tensor(&g, "x", vec![4, 64]);
+    let w1 = tensor(&g, "w1", vec![64, 64]);
+    let w3 = tensor(&g, "w3", vec![64, 64]);
+    let w2 = tensor(&g, "w2", vec![64, 64]);
+    let out = rt
+        .exec("ffn_h64_c4", &[Arg::F32(&x), Arg::F32(&w1), Arg::F32(&w3), Arg::F32(&w2)])
+        .unwrap();
+    let rust_ref = dualsparse::util::linalg::swiglu_ffn(&x, &w1, &w3, &w2);
+    assert_close(&out[0], &rust_ref.data, 1e-4, "ffn vs rust ref");
+}
+
+#[test]
+fn gate_artifact_matches_oracle() {
+    let rt = Runtime::new(&artifacts()).unwrap();
+    let g = golden("gate_b2_e8");
+    let x = tensor(&g, "x", vec![2, 64]);
+    let wg = tensor(&g, "wg", vec![64, 8]);
+    let out = rt.exec("gate_b2_e8", &[Arg::F32(&x), Arg::F32(&wg)]).unwrap();
+    let want = g.get("probs").unwrap().as_f32_vec().unwrap();
+    assert_close(&out[0], &want, 1e-5, "gate_b2_e8");
+    // rows are probability distributions
+    for r in 0..2 {
+        let s: f32 = out[0].row(r).iter().sum();
+        assert!((s - 1.0).abs() < 1e-5);
+    }
+}
+
+#[test]
+fn probe_artifact_matches_oracle() {
+    let rt = Runtime::new(&artifacts()).unwrap();
+    let g = golden("probe_h64");
+    let x = tensor(&g, "x", vec![32, 64]);
+    let w1 = tensor(&g, "w1", vec![64, 64]);
+    let w3 = tensor(&g, "w3", vec![64, 64]);
+    let out = rt
+        .exec("probe_h64", &[Arg::F32(&x), Arg::F32(&w1), Arg::F32(&w3)])
+        .unwrap();
+    let want = g.get("imp").unwrap().as_f32_vec().unwrap();
+    assert_close(&out[0], &want, 2e-3, "probe_h64");
+}
+
+#[test]
+fn attn_step_artifact_matches_oracle() {
+    let rt = Runtime::new(&artifacts()).unwrap();
+    let g = golden("attn_step_b1");
+    let d = 64;
+    let x = tensor(&g, "x", vec![1, d]);
+    let ln1 = tensor(&g, "ln1", vec![d]);
+    let wq = tensor(&g, "wq", vec![d, d]);
+    let wk = tensor(&g, "wk", vec![d, d]);
+    let wv = tensor(&g, "wv", vec![d, d]);
+    let wo = tensor(&g, "wo", vec![d, d]);
+    let ln2 = tensor(&g, "ln2", vec![d]);
+    let kc = tensor(&g, "kcache", vec![1, 4, 160, 16]);
+    let vc = tensor(&g, "vcache", vec![1, 4, 160, 16]);
+    let pos_f = g.get("pos_f").unwrap().as_f32_vec().unwrap();
+    let pos: Vec<i32> = pos_f.iter().map(|&x| x as i32).collect();
+    let out = rt
+        .exec(
+            "attn_step_b1",
+            &[
+                Arg::F32(&x), Arg::F32(&ln1), Arg::F32(&wq), Arg::F32(&wk),
+                Arg::F32(&wv), Arg::F32(&wo), Arg::F32(&ln2), Arg::F32(&kc),
+                Arg::F32(&vc), Arg::I32(&pos),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 4);
+    assert_close(&out[0], &g.get("y").unwrap().as_f32_vec().unwrap(), 1e-4, "y");
+    assert_close(&out[1], &g.get("ln2x").unwrap().as_f32_vec().unwrap(), 1e-4, "ln2x");
+    assert_close(&out[2], &g.get("new_k").unwrap().as_f32_vec().unwrap(), 1e-4, "new_k");
+    assert_close(&out[3], &g.get("new_v").unwrap().as_f32_vec().unwrap(), 1e-4, "new_v");
+}
+
+#[test]
+fn capacity_buckets_are_consistent() {
+    // The same rows fed through different capacity buckets (padded with
+    // zeros) must produce the same outputs for the real rows.
+    let rt = Runtime::new(&artifacts()).unwrap();
+    let g = golden("ffn_h64_c4");
+    let x4 = tensor(&g, "x", vec![4, 64]);
+    let w1 = tensor(&g, "w1", vec![64, 64]);
+    let w3 = tensor(&g, "w3", vec![64, 64]);
+    let w2 = tensor(&g, "w2", vec![64, 64]);
+    let mut x8 = x4.data.clone();
+    x8.resize(8 * 64, 0.0);
+    let x8 = Tensor::new(vec![8, 64], x8);
+    let y4 = rt
+        .exec("ffn_h64_c4", &[Arg::F32(&x4), Arg::F32(&w1), Arg::F32(&w3), Arg::F32(&w2)])
+        .unwrap();
+    let y8 = rt
+        .exec("ffn_h64_c8", &[Arg::F32(&x8), Arg::F32(&w1), Arg::F32(&w3), Arg::F32(&w2)])
+        .unwrap();
+    assert_close(
+        &Tensor::new(vec![4, 64], y8[0].data[..4 * 64].to_vec()),
+        &y4[0].data,
+        1e-5,
+        "bucket consistency",
+    );
+}

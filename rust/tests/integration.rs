@@ -1,0 +1,180 @@
+//! End-to-end engine tests over the real artifacts + trained models.
+//! Requires `make artifacts`.
+
+use std::path::PathBuf;
+
+use dualsparse::engine::{Engine, EngineOptions, EpOptions};
+use dualsparse::moe::DropPolicy;
+use dualsparse::tasks::eval::evaluate;
+
+fn artifacts() -> PathBuf {
+    std::env::var("DUALSPARSE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+fn engine(model: &str, policy: DropPolicy) -> Engine {
+    Engine::new(&artifacts(), model, policy, EngineOptions::default())
+        .expect("run `make artifacts` first")
+}
+
+#[test]
+fn generation_is_deterministic() {
+    let mut e = engine("mixtral_ish", DropPolicy::NoDrop);
+    let prompts = ["cpy:abc|", "add:3+4|"];
+    let a = e.generate_batch(&prompts, 8).unwrap();
+    let b = e.generate_batch(&prompts, 8).unwrap();
+    assert_eq!(a, b);
+    assert!(a.iter().all(|s| s.len() <= 8));
+}
+
+#[test]
+fn batched_equals_single_generation() {
+    // Continuous batching must not change results: each prompt generated
+    // alone equals the same prompt generated in a batch.
+    let mut e = engine("mixtral_ish", DropPolicy::NoDrop);
+    let prompts = ["cpy:abc|", "rev:fgh|", "maj:aabab|", "srt:dcba|"];
+    let batched = e.generate_batch(&prompts, 8).unwrap();
+    for (i, p) in prompts.iter().enumerate() {
+        let single = e.generate_batch(&[p], 8).unwrap();
+        assert_eq!(single[0], batched[i], "prompt {p}");
+    }
+}
+
+#[test]
+fn partial_transform_split_preserves_outputs() {
+    // Eq. 13 at the engine level: serving every expert as two
+    // sub-experts with the repeated score reproduces the generation.
+    let prompts = ["cpy:abcd|", "add:5+2|", "bal:()()|", "ind:a3 b4 c5 b|"];
+    let mut normal = engine("mixtral_ish", DropPolicy::NoDrop);
+    let base = normal.generate_batch(&prompts, 8).unwrap();
+    let mut split = engine("mixtral_ish", DropPolicy::NoDrop);
+    split.force_split = true;
+    let got = split.generate_batch(&prompts, 8).unwrap();
+    assert_eq!(base, got, "partial transformation must be output-preserving");
+}
+
+#[test]
+fn drop_rate_increases_with_threshold() {
+    let mut e = engine("olmoe_ish", DropPolicy::NoDrop);
+    let mut last = -1.0;
+    for t in [0.0f32, 0.1, 0.25] {
+        e.policy = if t == 0.0 { DropPolicy::NoDrop } else { DropPolicy::OneT(t) };
+        e.reset_metrics();
+        evaluate(&mut e, 4, false).unwrap();
+        let rate = e.metrics.drop_rate();
+        assert!(rate >= last, "rate {rate} < {last} at T={t}");
+        last = rate;
+    }
+    assert!(last > 0.05, "top-4 routing at T=0.25 must drop something");
+}
+
+#[test]
+fn two_t_bands_execute_major_only() {
+    let mut e = engine("mixtral_ish", DropPolicy::two_t(0.30));
+    e.reset_metrics();
+    evaluate(&mut e, 3, false).unwrap();
+    let total = e.metrics.total_drop();
+    assert!(total.major_only > 0, "2T should route some pairs major-only");
+    // MoE ran half-width artifacts
+    let stats = e.exec_stats();
+    assert!(
+        stats.keys().any(|k| k.starts_with("ffn_h64_")),
+        "half-width (major) FFN artifacts must have executed: {:?}",
+        stats.keys().collect::<Vec<_>>()
+    );
+}
+
+#[test]
+fn shared_expert_counted_in_drop_rate() {
+    let mut e = engine("deepseek_ish", DropPolicy::OneT(0.9));
+    e.reset_metrics();
+    evaluate(&mut e, 2, false).unwrap();
+    // Nearly all routed pairs dropped, but the shared expert keeps the
+    // denominator > 0 ⇒ drop rate strictly below 1.
+    let rate = e.metrics.drop_rate();
+    assert!(rate > 0.3 && rate < 0.95, "deepseek drop rate {rate}");
+    assert!(e.metrics.shared_pairs > 0);
+}
+
+#[test]
+fn ep_device_accounting() {
+    let opts = EngineOptions {
+        ep: Some(EpOptions { n_devices: 4, load_aware: false }),
+        ..Default::default()
+    };
+    let mut e = Engine::new(&artifacts(), "olmoe_ish", DropPolicy::NoDrop, opts)
+        .unwrap();
+    e.generate_batch(&["cpy:abc|", "rev:def|"], 6).unwrap();
+    let m = &e.metrics;
+    assert_eq!(m.device_time.len(), 4);
+    assert!(m.device_time.iter().all(|&t| t > 0.0), "{:?}", m.device_time);
+    assert!(m.device_load.iter().sum::<u64>() > 0);
+    assert!(m.makespan() >= m.device_time.iter().sum::<f64>() / 4.0);
+}
+
+#[test]
+fn load_aware_keeps_more_compute_at_same_max_threshold() {
+    let reqs: Vec<&str> = vec!["cpy:abcd|", "add:3+3|", "srt:cbad|", "maj:abbba|"];
+    let mk = |aware: bool| {
+        let opts = EngineOptions {
+            ep: Some(EpOptions { n_devices: 4, load_aware: aware }),
+            ..Default::default()
+        };
+        Engine::new(&artifacts(), "olmoe_ish", DropPolicy::OneT(0.2), opts).unwrap()
+    };
+    let mut uni = mk(false);
+    uni.generate_batch(&reqs, 6).unwrap();
+    let mut aware = mk(true);
+    aware.generate_batch(&reqs, 6).unwrap();
+    let kept = |e: &Engine| {
+        let t = e.metrics.total_drop();
+        t.full + t.major_only
+    };
+    assert!(
+        kept(&aware) >= kept(&uni),
+        "load-aware must keep at least as many pairs ({} vs {})",
+        kept(&aware),
+        kept(&uni)
+    );
+}
+
+#[test]
+fn calibration_produces_nonzero_tables() {
+    let mut e = engine("mixtral_ish", DropPolicy::NoDrop);
+    let tables = dualsparse::calib::run_calibration(&mut e, 256).unwrap();
+    assert_eq!(tables.t.len(), e.cfg.n_layers);
+    let total: f32 = tables.t[0]
+        .iter()
+        .flat_map(|e| e[1].iter())
+        .sum();
+    assert!(total > 0.0, "abs-gate accumulations must be positive");
+    // abs rows dominate signed rows
+    for layer in &tables.t {
+        for exp in layer {
+            for (s, a) in exp[0].iter().zip(&exp[1]) {
+                assert!(*a >= s.abs() - 1e-3);
+            }
+        }
+    }
+}
+
+#[test]
+fn reconstruction_no_drop_is_output_preserving() {
+    // Permuting neurons (reconstruction) + NoDrop must not change
+    // generations: permutation invariance end-to-end through PJRT.
+    let mut base = engine("mixtral_ish", DropPolicy::NoDrop);
+    let prompts = ["cpy:hgf|", "add:1+9|", "lm:the mo|"];
+    let want = base.generate_batch(&prompts, 8).unwrap();
+    let tables = dualsparse::calib::run_calibration(&mut base, 128).unwrap();
+    let opts = EngineOptions {
+        reconstructed: true,
+        importance: Some(tables.importance("abs_gate")),
+        ..Default::default()
+    };
+    let mut recon = Engine::new(&artifacts(), "mixtral_ish", DropPolicy::NoDrop, opts)
+        .unwrap();
+    recon.force_split = true; // run major+minor separately, still exact
+    let got = recon.generate_batch(&prompts, 8).unwrap();
+    assert_eq!(want, got);
+}

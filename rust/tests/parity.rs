@@ -1,0 +1,71 @@
+//! Cross-language parity: the Rust task/RNG mirrors must match the
+//! Python generators bit-for-bit. The same golden values are asserted
+//! in python/tests/test_parity.py.
+
+use dualsparse::tasks::{self, eval_set};
+use dualsparse::util::rng::SplitMix64;
+
+#[test]
+fn rng_stream_matches_python() {
+    let mut r = SplitMix64::new(0);
+    let got: Vec<u64> = (0..4).map(|_| r.next_u64()).collect();
+    assert_eq!(
+        got,
+        vec![
+            0xE220_A839_7B1D_CDAF,
+            0x6E78_9E6A_A1B9_65F4,
+            0x06C4_5D18_8009_454F,
+            0xF88B_B8A8_724C_81EC,
+        ]
+    );
+}
+
+#[test]
+fn eval_sets_match_python_golden() {
+    let cases: &[(&str, &[(&str, &str)])] = &[
+        ("cpy", &[("cpy:afdg|", "afdg"), ("cpy:edaf|", "edaf"), ("cpy:aabc|", "aabc")]),
+        ("add", &[("add:6+8|", "4"), ("add:0+0|", "0"), ("add:4+7|", "1")]),
+        ("ind", &[("ind:a6 d6 b7 a|", "6"), ("ind:b0 c9 d1 c|", "9"),
+                  ("ind:b7 d4 c2 d|", "4")]),
+        ("lm", &[("lm:the mo|", "on is"), ("lm:a dog |", "ran t"),
+                 ("lm:birds fly over t|", "he se")]),
+        ("bal", &[("bal:()()|", "Y"), ("bal:))((|", "N"), ("bal:(())|", "Y")]),
+        ("srt", &[("srt:aecb|", "abce"), ("srt:fdbc|", "bcdf"), ("srt:ecdf|", "cdef")]),
+    ];
+    for (task, expected) in cases {
+        let got = eval_set(task, 3, false);
+        let want: Vec<(String, String)> = expected
+            .iter()
+            .map(|(p, a)| (p.to_string(), a.to_string()))
+            .collect();
+        assert_eq!(got, want, "task {task} diverged from the Python generator");
+    }
+}
+
+#[test]
+fn corpus_prefix_is_stable() {
+    // Calibration stream must be stable across releases (importance
+    // tables and EES/EEP calibrations depend on it).
+    let c = tasks::calibration_tokens(64);
+    let text = String::from_utf8(c).unwrap();
+    let first = text.lines().next().unwrap();
+    assert!(first.len() >= 7 && first.contains('|'), "got {first:?}");
+}
+
+#[test]
+fn every_task_generates_nonempty_answers() {
+    for task in tasks::TASKS {
+        for (p, a) in eval_set(task, 20, false) {
+            assert!(p.ends_with('|'), "{task}: prompt {p:?}");
+            assert!(!a.is_empty(), "{task}: empty answer for {p:?}");
+            assert!(a.len() <= 8, "{task}: answer too long {a:?}");
+        }
+    }
+}
+
+#[test]
+fn shifted_sets_differ() {
+    for task in ["cpy", "add", "bal", "lm"] {
+        assert_ne!(eval_set(task, 8, false), eval_set(task, 8, true), "{task}");
+    }
+}

@@ -1,0 +1,253 @@
+//! Property-based tests (seeded SplitMix64 fuzzing — proptest is not in
+//! the offline vendor set) over the coordinator invariants: routing,
+//! drop policies, dispatch planning, load-aware thresholding, capacity
+//! bucketing, KV-cache compaction, and the comm model.
+
+use dualsparse::commsim::{etp_time, setp_time, Topology};
+use dualsparse::engine::kv::KvCache;
+use dualsparse::moe::{
+    plan_dispatch, remap_indices, route_token, DropPolicy, TokenRouting,
+};
+use dualsparse::util::rng::SplitMix64;
+use dualsparse::util::round_up_bucket;
+
+fn random_scores(rng: &mut SplitMix64, n: usize) -> Vec<f32> {
+    // random logits → softmax
+    let logits: Vec<f64> = (0..n).map(|_| rng.f64() * 6.0 - 3.0).collect();
+    let m = logits.iter().cloned().fold(f64::MIN, f64::max);
+    let exps: Vec<f64> = logits.iter().map(|l| (l - m).exp()).collect();
+    let s: f64 = exps.iter().sum();
+    exps.iter().map(|e| (e / s) as f32).collect()
+}
+
+#[test]
+fn routing_invariants_fuzz() {
+    let mut rng = SplitMix64::new(0xA11CE);
+    for _ in 0..500 {
+        let e = 2 + rng.below(30);
+        let k = 1 + rng.below(e.min(8));
+        let scores = random_scores(&mut rng, e);
+        let r = route_token(&scores, k, false);
+        assert_eq!(r.experts.len(), k);
+        // descending original scores, normalized sums to 1
+        for w in r.experts.windows(2) {
+            assert!(w[0].1 >= w[1].1);
+        }
+        let norm_sum: f32 = r.experts.iter().map(|(_, _, n)| n).sum();
+        assert!((norm_sum - 1.0).abs() < 1e-4);
+        // normalized >= original (sum of selected <= 1)
+        for &(_, s, n) in &r.experts {
+            assert!(n >= s - 1e-6);
+        }
+        // distinct expert indices
+        let mut idx: Vec<usize> = r.experts.iter().map(|(e, _, _)| *e).collect();
+        idx.sort();
+        idx.dedup();
+        assert_eq!(idx.len(), k);
+    }
+}
+
+#[test]
+fn drop_rate_monotone_in_threshold_fuzz() {
+    let mut rng = SplitMix64::new(0xB0B);
+    for _ in 0..100 {
+        let routings: Vec<TokenRouting> = (0..20)
+            .map(|_| route_token(&random_scores(&mut rng, 8), 2, false))
+            .collect();
+        let mut last_rate = -1.0;
+        for t in [0.0f32, 0.1, 0.2, 0.3, 0.5, 0.8] {
+            let plan = plan_dispatch(&routings, 8, DropPolicy::OneT(t), None);
+            let rate = plan.stats.drop_rate();
+            assert!(
+                rate >= last_rate - 1e-12,
+                "drop rate must be monotone in T (t={t}, {rate} < {last_rate})"
+            );
+            last_rate = rate;
+        }
+    }
+}
+
+#[test]
+fn two_t_never_drops_more_than_matched_one_t_fuzz() {
+    // 2T with (T-δ, T+δ) keeps at least the major half wherever 1T@T
+    // would have dropped in [T-δ, T): compute fraction dropped must be
+    // within ±(half the band) of 1T.
+    let mut rng = SplitMix64::new(0xC0FFEE);
+    for _ in 0..100 {
+        let routings: Vec<TokenRouting> = (0..40)
+            .map(|_| route_token(&random_scores(&mut rng, 16), 4, false))
+            .collect();
+        let t = 0.05 + (rng.f64() as f32) * 0.3;
+        let one = plan_dispatch(&routings, 16, DropPolicy::OneT(t), None);
+        let two = plan_dispatch(&routings, 16, DropPolicy::two_t(t), None);
+        // every pair fully dropped by 2T would also be dropped by 1T
+        assert!(two.stats.dropped <= one.stats.dropped);
+        // and 2T's extra kept compute is only ever half-experts
+        assert_eq!(
+            two.stats.total(),
+            one.stats.total(),
+            "same pair universe"
+        );
+    }
+}
+
+#[test]
+fn load_aware_scaling_invariants_fuzz() {
+    // §4.3: lighter devices get proportionally lower thresholds; a
+    // device at or above ideal load keeps the maximum threshold.
+    let mut rng = SplitMix64::new(0xD00D);
+    for _ in 0..200 {
+        let t = 0.05 + (rng.f64() as f32) * 0.4;
+        let max_pol = DropPolicy::OneT(t);
+        let heavy = max_pol.scaled(1.0 + rng.f64() as f32);
+        assert_eq!(heavy, max_pol);
+        let r1 = rng.f64() as f32;
+        let r2 = (rng.f64() as f32).min(r1);
+        let (DropPolicy::OneT(t1), DropPolicy::OneT(t2)) =
+            (max_pol.scaled(r1), max_pol.scaled(r2))
+        else {
+            panic!()
+        };
+        assert!(t2 <= t1 + 1e-7, "lighter load ⇒ lower threshold");
+    }
+}
+
+#[test]
+fn load_aware_reduces_makespan_bound_fuzz() {
+    // The step-down rule never drops *less* on the heaviest device than
+    // the uniform policy, so the post-drop max load cannot exceed the
+    // uniform policy's max load.
+    let mut rng = SplitMix64::new(0xFEED);
+    for _ in 0..50 {
+        let n_dev = 4;
+        let routings: Vec<TokenRouting> = (0..64)
+            .map(|_| route_token(&random_scores(&mut rng, 8), 2, false))
+            .collect();
+        let placement: Vec<usize> = (0..8).map(|e| e % n_dev).collect();
+        let mut load = vec![0u64; n_dev];
+        for r in &routings {
+            for &(e, _, _) in &r.experts {
+                load[placement[e]] += 1;
+            }
+        }
+        let total: u64 = load.iter().sum();
+        let ideal = total as f32 / n_dev as f32;
+        let t = 0.3f32;
+        let pol = DropPolicy::OneT(t);
+        let policies: Vec<DropPolicy> =
+            load.iter().map(|&l| pol.scaled(l as f32 / ideal)).collect();
+        let f = |_row: usize, e: usize| policies[placement[e]];
+        let aware = plan_dispatch(&routings, 8, pol, Some(&f));
+        let uniform = plan_dispatch(&routings, 8, pol, None);
+        // total kept compute: aware keeps at least as much (higher acc)
+        assert!(aware.kept_pairs() >= uniform.kept_pairs());
+        // heaviest-device kept load under aware <= uniform's on that device
+        let kept_per_dev = |plan: &dualsparse::moe::DispatchPlan| {
+            let mut kept = vec![0u64; n_dev];
+            for e in 0..8 {
+                kept[placement[e]] +=
+                    (plan.full[e].len() + plan.major_only[e].len()) as u64;
+            }
+            kept
+        };
+        let ka = kept_per_dev(&aware);
+        let ku = kept_per_dev(&uniform);
+        let heaviest = (0..n_dev).max_by_key(|&d| load[d]).unwrap();
+        assert!(ka[heaviest] <= ku[heaviest] + 0);
+    }
+}
+
+#[test]
+fn remap_indices_partition_properties_fuzz() {
+    let mut rng = SplitMix64::new(0x1234);
+    for _ in 0..200 {
+        let e = 4 + rng.below(28);
+        let k = 1 + rng.below(4);
+        let p = [2, 4][rng.below(2)];
+        let mut idx: Vec<usize> = (0..e).collect();
+        for i in (1..idx.len()).rev() {
+            let j = rng.below(i + 1);
+            idx.swap(i, j);
+        }
+        idx.truncate(k);
+        let remapped = remap_indices(&idx, p);
+        assert_eq!(remapped.len(), k * p);
+        // all sub-experts of each original expert present exactly once
+        for &i in &idx {
+            for pi in 0..p {
+                assert_eq!(
+                    remapped.iter().filter(|&&x| x == i * p + pi).count(),
+                    1
+                );
+            }
+        }
+        // all within range
+        assert!(remapped.iter().all(|&x| x < e * p));
+    }
+}
+
+#[test]
+fn bucket_rounding_fuzz() {
+    let buckets = [4usize, 8, 16, 32, 64, 128];
+    let mut rng = SplitMix64::new(0x9999);
+    for _ in 0..1000 {
+        let n = 1 + rng.below(128);
+        let b = round_up_bucket(n, &buckets);
+        assert!(b >= n);
+        assert!(buckets.contains(&b));
+        // tight: the next smaller bucket (if any) is < n
+        if let Some(&smaller) = buckets.iter().rev().find(|&&x| x < b) {
+            assert!(smaller < n);
+        }
+    }
+}
+
+#[test]
+fn kv_cache_alloc_free_fuzz() {
+    let mut rng = SplitMix64::new(0x5EED);
+    for _ in 0..50 {
+        let mut kv = KvCache::new(2, 2, 16, 4, 8);
+        let mut live = 0usize;
+        for _ in 0..200 {
+            if kv.has_free() && (live == 0 || rng.below(2) == 0) {
+                let s = kv.alloc();
+                assert_eq!(s, live);
+                live += 1;
+                // write a token so pos moves
+                let k = vec![1.0f32; 8];
+                kv.append(0, s, &k, &k);
+                kv.append(1, s, &k, &k);
+            } else if live > 0 {
+                let victim = rng.below(live);
+                kv.free(victim);
+                live -= 1;
+            }
+            assert_eq!(kv.n_active, live);
+            for s in 0..live {
+                assert!(kv.pos[s] <= 16);
+            }
+        }
+    }
+}
+
+#[test]
+fn commsim_monotonicity_fuzz() {
+    let mut rng = SplitMix64::new(0x7070);
+    let topos = [Topology::h20_node(), Topology::nvl72(), Topology::cm384()];
+    for _ in 0..200 {
+        let t = &topos[rng.below(3)];
+        let tp = [2usize, 4, 8][rng.below(3)];
+        let max_ep = t.world / tp;
+        if max_ep < 2 {
+            continue;
+        }
+        let ep = 2 + rng.below(max_ep - 1); // 2 ..= max_ep
+        let s1 = 1024.0 * (1.0 + rng.f64() * 1e4);
+        let s2 = s1 * (1.0 + rng.f64() * 4.0);
+        // time monotone in bytes
+        assert!(etp_time(t, ep, tp, s2) >= etp_time(t, ep, tp, s1));
+        assert!(setp_time(t, ep, tp, s2) >= setp_time(t, ep, tp, s1));
+        // both strictly positive
+        assert!(setp_time(t, ep, tp, s1) > 0.0);
+    }
+}
