@@ -1,7 +1,9 @@
-//! Expert partition & reconstruction demonstrated numerically on real
-//! trained weights, without any Python in the loop (paper §3, §4.2b).
+//! Expert partition & reconstruction demonstrated numerically on model
+//! weights, without any Python in the loop (paper §3, §4.2b). Runs on
+//! trained weights when `make artifacts` has produced them, otherwise
+//! on the deterministic synthetic preset — hermetic either way.
 //!
-//!     make artifacts && cargo run --release --example partition_demo
+//!     cargo run --release --example partition_demo
 
 use anyhow::Result;
 use dualsparse::engine::artifacts_dir;
@@ -15,7 +17,7 @@ use dualsparse::util::rng::SplitMix64;
 
 fn main() -> Result<()> {
     let artifacts = artifacts_dir();
-    let w = Weights::load(&artifacts.join("models"), "mixtral_ish")?;
+    let w = Weights::load_or_synthetic(&artifacts.join("models"), "mixtral_ish")?;
     let cfg = &w.config;
     println!("model {}: E={} h={} top-{}", cfg.name, cfg.n_experts, cfg.d_ffn, cfg.top_k);
 

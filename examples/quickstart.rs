@@ -1,11 +1,14 @@
-//! Quickstart: load a trained TinyMoE model through the PJRT runtime
-//! and generate completions with and without DualSparse dropping.
+//! Quickstart: load a TinyMoE model through the pluggable backend and
+//! generate completions with and without DualSparse dropping. Runs
+//! hermetically on the pure-Rust `CpuRef` backend (synthetic weights);
+//! `make artifacts` upgrades it to trained weights on PJRT.
 //!
-//!     make artifacts && cargo run --release --example quickstart
+//!     cargo run --release --example quickstart
 
 use anyhow::Result;
 use dualsparse::engine::{artifacts_dir, EngineOptions};
 use dualsparse::moe::DropPolicy;
+use dualsparse::runtime::Backend as _;
 use dualsparse::Engine;
 
 fn main() -> Result<()> {

@@ -3,7 +3,10 @@
 //! through the continuous batcher under several drop policies, and
 //! report latency / throughput / MoE-module speedup.
 //!
-//!     make artifacts && cargo run --release --example serve_moe [model] [n_reqs]
+//!     cargo run --release --example serve_moe [model] [n_reqs]
+//!
+//! Hermetic on the `CpuRef` backend; `make artifacts` upgrades to
+//! trained weights on PJRT.
 
 use anyhow::Result;
 use dualsparse::engine::{artifacts_dir, EngineOptions};

@@ -1,0 +1,273 @@
+"""Generate cross-language golden fixtures for the Rust `CpuRef` backend.
+
+Pure-Python (no jax/numpy) mirror of the oracle math in
+`compile/kernels/ref.py` and the serving decomposition in
+`compile/model.py`, seeded with the shared SplitMix64 stream so the
+inputs are reproducible on both sides. The emitted JSON files live in
+`rust/tests/fixtures/` and are asserted by `rust/tests/golden.rs` —
+cross-language parity without running Python in CI.
+
+Regenerate (only needed if the oracle math changes):
+
+    python -m tools.gen_fixtures          # from python/
+"""
+
+import json
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from compile.rng import SplitMix64  # noqa: E402
+
+EPS = 1e-6
+
+
+# --------------------------------------------------------------------------
+# Minimal f64 linear algebra over flat row-major lists
+# --------------------------------------------------------------------------
+
+def randn(rng, rows, cols, scale):
+    """Box-Muller normals — the same formula as SplitMix64::gauss in Rust."""
+    out = []
+    for _ in range(rows * cols):
+        u1 = max(rng.f64(), 1e-12)
+        u2 = rng.f64()
+        out.append(math.sqrt(-2.0 * math.log(u1)) * math.cos(2.0 * math.pi * u2) * scale)
+    return out
+
+
+def matmul(a, b, m, k, n):
+    out = [0.0] * (m * n)
+    for i in range(m):
+        for p in range(k):
+            av = a[i * k + p]
+            if av == 0.0:
+                continue
+            for j in range(n):
+                out[i * n + j] += av * b[p * n + j]
+    return out
+
+
+def swish(x):
+    return x / (1.0 + math.exp(-x))
+
+
+def softmax(row):
+    mx = max(row)
+    es = [math.exp(x - mx) for x in row]
+    s = sum(es)
+    return [e / s for e in es]
+
+
+def rmsnorm(x, g, m, n):
+    out = [0.0] * (m * n)
+    for i in range(m):
+        row = x[i * n:(i + 1) * n]
+        ms = sum(v * v for v in row) / n
+        scale = 1.0 / math.sqrt(ms + EPS)
+        for j in range(n):
+            out[i * n + j] = row[j] * scale * g[j]
+    return out
+
+
+def swiglu_ffn(x, w1, w3, w2, c, d, h):
+    """f(x) = (Swish(x W1) * (x W3)) W2  — ref.swiglu_ffn_ref."""
+    gate = matmul(x, w1, c, d, h)
+    up = matmul(x, w3, c, d, h)
+    hidden = [swish(g) * u for g, u in zip(gate, up)]
+    return matmul(hidden, w2, c, h, d)
+
+
+def probe(x, w1, w3, c, d, h):
+    """ref.probe_ref: [4, h] accumulated importance rows."""
+    gate = matmul(x, w1, c, d, h)
+    up = matmul(x, w3, c, d, h)
+    out = [0.0] * (4 * h)
+    for i in range(c):
+        for j in range(h):
+            sw = swish(gate[i * h + j])
+            gu = sw * up[i * h + j]
+            out[j] += sw
+            out[h + j] += abs(sw)
+            out[2 * h + j] += gu
+            out[3 * h + j] += abs(gu)
+    return out
+
+
+def attn_prefill(x, ln1, wq, wk, wv, wo, ln2, s, d, n_heads, d_head):
+    """model.serve_attn_prefill: (y, ln2x, K [s,h,dh], V [s,h,dh])."""
+    xn = rmsnorm(x, ln1, s, d)
+    q = matmul(xn, wq, s, d, d)
+    k = matmul(xn, wk, s, d, d)
+    v = matmul(xn, wv, s, d, d)
+    scale = 1.0 / math.sqrt(d_head)
+    ctx = [0.0] * (s * d)
+    for hi in range(n_heads):
+        off = hi * d_head
+        for qi in range(s):
+            scores = []
+            for ki in range(qi + 1):
+                dot = sum(q[qi * d + off + e] * k[ki * d + off + e] for e in range(d_head))
+                scores.append(dot * scale)
+            attn = softmax(scores)
+            for ki in range(qi + 1):
+                for e in range(d_head):
+                    ctx[qi * d + off + e] += attn[ki] * v[ki * d + off + e]
+    proj = matmul(ctx, wo, s, d, d)
+    y = [a + b for a, b in zip(x, proj)]
+    return y, rmsnorm(y, ln2, s, d), k, v
+
+
+def attn_step(x, ln1, wq, wk, wv, wo, ln2, kcache, vcache, pos, b, d,
+              n_heads, t_max, d_head):
+    """model.serve_attn_step: (y, ln2x, new_k [b,h,dh], new_v [b,h,dh])."""
+    xn = rmsnorm(x, ln1, b, d)
+    q = matmul(xn, wq, b, d, d)
+    nk = matmul(xn, wk, b, d, d)
+    nv = matmul(xn, wv, b, d, d)
+    scale = 1.0 / math.sqrt(d_head)
+    ctx = [0.0] * (b * d)
+    for bi in range(b):
+        p = pos[bi]
+        for hi in range(n_heads):
+            off = hi * d_head
+            cbase = (bi * n_heads + hi) * t_max * d_head
+            scores = []
+            for ti in range(p):
+                dot = sum(q[bi * d + off + e] * kcache[cbase + ti * d_head + e]
+                          for e in range(d_head))
+                scores.append(dot * scale)
+            dot = sum(q[bi * d + off + e] * nk[bi * d + off + e] for e in range(d_head))
+            scores.append(dot * scale)
+            attn = softmax(scores)
+            for ti in range(p):
+                for e in range(d_head):
+                    ctx[bi * d + off + e] += attn[ti] * vcache[cbase + ti * d_head + e]
+            for e in range(d_head):
+                ctx[bi * d + off + e] += attn[p] * nv[bi * d + off + e]
+    proj = matmul(ctx, wo, b, d, d)
+    y = [a + b_ for a, b_ in zip(x, proj)]
+    return y, rmsnorm(y, ln2, b, d), nk, nv
+
+
+# --------------------------------------------------------------------------
+# Fixture emission
+# --------------------------------------------------------------------------
+
+def main():
+    out_dir = os.path.join(os.path.dirname(__file__), "..", "..", "rust", "tests", "fixtures")
+    os.makedirs(out_dir, exist_ok=True)
+
+    def dump(name, obj):
+        path = os.path.join(out_dir, f"{name}.json")
+        with open(path, "w") as f:
+            json.dump(obj, f)
+        print(f"wrote {path}")
+
+    # ffn_h12_c4 — SwiGLU expert FFN (Eq. 4)
+    rng = SplitMix64(0xF1C5_0001)
+    c, d, h = 4, 16, 12
+    x = randn(rng, c, d, 0.5)
+    w1 = randn(rng, d, h, 0.3)
+    w3 = randn(rng, d, h, 0.3)
+    w2 = randn(rng, h, d, 0.3)
+    dump("ffn_h12_c4", {
+        "dims": {"c": c, "d": d, "h": h},
+        "x": x, "w1": w1, "w3": w3, "w2": w2,
+        "y": swiglu_ffn(x, w1, w3, w2, c, d, h),
+    })
+
+    # gate_b3_e8 — softmax gating (Eq. 1)
+    rng = SplitMix64(0xF1C5_0002)
+    b, d, e = 3, 16, 8
+    x = randn(rng, b, d, 0.5)
+    wg = randn(rng, d, e, 0.4)
+    logits = matmul(x, wg, b, d, e)
+    probs = []
+    for i in range(b):
+        probs.extend(softmax(logits[i * e:(i + 1) * e]))
+    dump("gate_b3_e8", {
+        "dims": {"b": b, "d": d, "e": e},
+        "x": x, "wg": wg, "probs": probs,
+    })
+
+    # probe_h12 — neuron-importance accumulators (Eqs. 14-17)
+    rng = SplitMix64(0xF1C5_0003)
+    c, d, h = 5, 16, 12
+    x = randn(rng, c, d, 0.5)
+    w1 = randn(rng, d, h, 0.4)
+    w3 = randn(rng, d, h, 0.4)
+    dump("probe_h12", {
+        "dims": {"c": c, "d": d, "h": h},
+        "x": x, "w1": w1, "w3": w3, "imp": probe(x, w1, w3, c, d, h),
+    })
+
+    # lm_head_b2 — final norm + tied-embedding projection
+    rng = SplitMix64(0xF1C5_0004)
+    b, d, v = 2, 16, 20
+    x = randn(rng, b, d, 0.5)
+    lnf = [1.0] * d
+    emb = randn(rng, v, d, 0.3)
+    xn = rmsnorm(x, lnf, b, d)
+    logits = [0.0] * (b * v)
+    for i in range(b):
+        for j in range(v):
+            logits[i * v + j] = sum(xn[i * d + e] * emb[j * d + e] for e in range(d))
+    dump("lm_head_b2", {
+        "dims": {"b": b, "d": d, "v": v},
+        "x": x, "lnf": lnf, "emb": emb, "logits": logits,
+    })
+
+    # attn_prefill_s4 — causal prefill, 2 heads x 8
+    rng = SplitMix64(0xF1C5_0005)
+    s, d, nh, dh = 4, 16, 2, 8
+    x = randn(rng, s, d, 0.5)
+    ln1 = [1.0] * d
+    ln2 = [1.0] * d
+    wq = randn(rng, d, d, 0.3)
+    wk = randn(rng, d, d, 0.3)
+    wv = randn(rng, d, d, 0.3)
+    wo = randn(rng, d, d, 0.3)
+    y, ln2x, kk, vv = attn_prefill(x, ln1, wq, wk, wv, wo, ln2, s, d, nh, dh)
+    dump("attn_prefill_s4", {
+        "dims": {"s": s, "d": d, "n_heads": nh, "d_head": dh},
+        "x": x, "ln1": ln1, "wq": wq, "wk": wk, "wv": wv, "wo": wo, "ln2": ln2,
+        "y": y, "ln2x": ln2x, "k": kk, "v": vv,
+    })
+
+    # attn_step_b2 — decode step over a partially-filled cache
+    rng = SplitMix64(0xF1C5_0006)
+    b, d, nh, dh, t_max = 2, 16, 2, 8, 6
+    x = randn(rng, b, d, 0.5)
+    ln1 = [1.0] * d
+    ln2 = [1.0] * d
+    wq = randn(rng, d, d, 0.3)
+    wk = randn(rng, d, d, 0.3)
+    wv = randn(rng, d, d, 0.3)
+    wo = randn(rng, d, d, 0.3)
+    pos = [3, 0]  # row 1 has an empty cache (pure self-attention)
+    fill = pos[0]  # cache rows to populate for row 0
+    kcache = [0.0] * (b * nh * t_max * dh)
+    vcache = [0.0] * (b * nh * t_max * dh)
+    fill_k = randn(rng, 1, nh * fill * dh, 0.3)
+    fill_v = randn(rng, 1, nh * fill * dh, 0.3)
+    for hi in range(nh):
+        for ti in range(fill):
+            for e_ in range(dh):
+                src = (hi * fill + ti) * dh + e_
+                dst = (0 * nh + hi) * t_max * dh + ti * dh + e_
+                kcache[dst] = fill_k[src]
+                vcache[dst] = fill_v[src]
+    y, ln2x, nk, nv = attn_step(x, ln1, wq, wk, wv, wo, ln2, kcache, vcache,
+                                pos, b, d, nh, t_max, dh)
+    dump("attn_step_b2", {
+        "dims": {"b": b, "d": d, "n_heads": nh, "d_head": dh, "t_max": t_max},
+        "x": x, "ln1": ln1, "wq": wq, "wk": wk, "wv": wv, "wo": wo, "ln2": ln2,
+        "kcache": kcache, "vcache": vcache, "pos": pos,
+        "y": y, "ln2x": ln2x, "new_k": nk, "new_v": nv,
+    })
+
+
+if __name__ == "__main__":
+    main()

@@ -1,9 +1,12 @@
 //! The DualSparse-MoE serving engine: layer loop, capacity-bucket MoE
 //! dispatch, KV cache, greedy generation.
 //!
-//! All heavy math executes through AOT PJRT artifacts (Layer 1/2);
-//! this module owns routing, drop decisions, packing, the KV cache and
-//! batching — the coordination the paper contributes.
+//! All heavy math executes through a pluggable [`Backend`] (the AOT
+//! PJRT runtime when artifacts exist, the pure-Rust `CpuRef` reference
+//! executor otherwise); this module owns routing, drop decisions,
+//! packing, the KV cache and batching — the coordination the paper
+//! contributes. The engine is backend-agnostic: it holds weight
+//! buffers as opaque [`BufId`] handles and never names a runtime type.
 
 pub mod batcher;
 pub mod kv;
@@ -18,7 +21,7 @@ use crate::moe::{
     plan_dispatch, route_token, DropPolicy, DropStats, PartitionedExpert,
     SubExpert, TokenRouting,
 };
-use crate::runtime::{Arg, Runtime};
+use crate::runtime::{make_backend, Arg, Backend, BackendKind, BufId};
 use crate::util::round_up_bucket;
 
 pub const BATCH_BUCKETS: [usize; 5] = [1, 2, 4, 8, 16];
@@ -63,6 +66,10 @@ pub struct EngineOptions {
     /// Collect gating-score distributions + per-layer drop stats.
     pub collect_stats: bool,
     pub ep: Option<EpOptions>,
+    /// Execution backend; `Auto` prefers PJRT artifacts when available
+    /// and falls back to `CpuRef`. The `DUALSPARSE_BACKEND` env var
+    /// (auto | cpu | pjrt) overrides this at engine construction.
+    pub backend: BackendKind,
 }
 
 /// Aggregated engine metrics (fig6/fig10/fig11/fig12 inputs).
@@ -102,29 +109,36 @@ impl EngineMetrics {
         (t.dropped as f64 + 0.5 * t.major_only as f64) / denom
     }
 
-    /// Simulated EP MoE makespan: max per-device busy time.
+    /// Simulated EP MoE makespan: max per-device busy time. Returns a
+    /// clean 0.0 for empty / all-zero / non-finite device times (the
+    /// instant-run CpuRef case) so downstream speedup columns never
+    /// divide by garbage.
     pub fn makespan(&self) -> f64 {
-        self.device_time.iter().cloned().fold(0.0, f64::max)
+        self.device_time
+            .iter()
+            .cloned()
+            .filter(|t| t.is_finite())
+            .fold(0.0, f64::max)
     }
 }
 
-/// Device-resident buffers for one weight-bearing executable argument
+/// Backend-resident buffers for one weight-bearing executable argument
 /// set (uploaded once at load; the hot path never re-copies weights).
 struct VariantBufs {
-    w1: xla::PjRtBuffer,
-    w3: xla::PjRtBuffer,
-    w2: xla::PjRtBuffer,
+    w1: BufId,
+    w3: BufId,
+    w2: BufId,
     width: usize,
 }
 
 struct LayerBufs {
-    ln1: xla::PjRtBuffer,
-    wq: xla::PjRtBuffer,
-    wk: xla::PjRtBuffer,
-    wv: xla::PjRtBuffer,
-    wo: xla::PjRtBuffer,
-    ln2: xla::PjRtBuffer,
-    wg: xla::PjRtBuffer,
+    ln1: BufId,
+    wq: BufId,
+    wk: BufId,
+    wv: BufId,
+    wo: BufId,
+    ln2: BufId,
+    wg: BufId,
 }
 
 struct ExpertBufs {
@@ -134,19 +148,20 @@ struct ExpertBufs {
 }
 
 pub struct Engine {
-    pub rt: Runtime,
+    /// The pluggable execution backend (PJRT / CpuRef / future GPU).
+    pub rt: Box<dyn Backend>,
     pub cfg: ModelConfig,
     weights: Weights,
     /// [layer][original expert] partitioned weights.
     experts: Vec<Vec<PartitionedExpert>>,
     /// [layer] shared expert (DeepSeek-style), full width.
     shared: Vec<Option<SubExpert>>,
-    /// Persistent device buffers mirroring the above.
+    /// Persistent backend buffers mirroring the above.
     lbufs: Vec<LayerBufs>,
     ebufs: Vec<Vec<ExpertBufs>>,
     sbufs: Vec<Option<VariantBufs>>,
-    lnf_buf: xla::PjRtBuffer,
-    emb_buf: xla::PjRtBuffer,
+    lnf_buf: BufId,
+    emb_buf: BufId,
     pub kv: kv::KvCache,
     pub policy: DropPolicy,
     pub router_mode: RouterMode,
@@ -165,13 +180,17 @@ pub struct Engine {
 }
 
 impl Engine {
+    /// Build an engine for `model_name`. Loads serialized weights when
+    /// `make artifacts` has produced them; otherwise materializes
+    /// deterministic synthetic weights for the built-in preset of that
+    /// name, so the stack runs hermetically on the `CpuRef` backend.
     pub fn new(
         artifacts_dir: &Path,
         model_name: &str,
         policy: DropPolicy,
         opts: EngineOptions,
     ) -> Result<Self> {
-        let weights = Weights::load(&artifacts_dir.join("models"), model_name)?;
+        let weights = Weights::load_or_synthetic(&artifacts_dir.join("models"), model_name)?;
         Self::from_weights(artifacts_dir, weights, policy, opts)
     }
 
@@ -183,8 +202,9 @@ impl Engine {
         policy: DropPolicy,
         opts: EngineOptions,
     ) -> Result<Self> {
-        let rt = Runtime::new(artifacts_dir)?;
+        let rt = make_backend(opts.backend, artifacts_dir)?;
         let cfg = weights.config.clone();
+        rt.set_model(&cfg);
         let mut experts = Vec::with_capacity(cfg.n_layers);
         for li in 0..cfg.n_layers {
             let imp = match (&opts.importance, opts.reconstructed) {
@@ -397,7 +417,7 @@ impl Engine {
         debug_assert_eq!(ln2x.shape[0], rb, "caller pads to a bucket");
         let gate_out = self.rt.exec(
             &format!("gate_b{}_e{}", ln2x.shape[0], e_count),
-            &[Arg::F32(ln2x), Arg::Buf(&self.lbufs[li].wg)],
+            &[Arg::F32(ln2x), Arg::Buf(self.lbufs[li].wg)],
         )?;
         let probs = &gate_out[0]; // [R, E]
 
@@ -558,7 +578,7 @@ impl Engine {
         let xt = Tensor::new(vec![c, d], x);
         let y = self.rt.exec(
             &format!("ffn_h{}_c{}", se.width, c),
-            &[Arg::F32(&xt), Arg::Buf(&se.w1), Arg::Buf(&se.w3), Arg::Buf(&se.w2)],
+            &[Arg::F32(&xt), Arg::Buf(se.w1), Arg::Buf(se.w3), Arg::Buf(se.w2)],
         )?;
         let yt = &y[0];
         for (i, &(r, w)) in rows.iter().enumerate() {
@@ -593,12 +613,12 @@ impl Engine {
                 &format!("attn_prefill_s{sb}"),
                 &[
                     Arg::F32(&x),
-                    Arg::Buf(&lb.ln1),
-                    Arg::Buf(&lb.wq),
-                    Arg::Buf(&lb.wk),
-                    Arg::Buf(&lb.wv),
-                    Arg::Buf(&lb.wo),
-                    Arg::Buf(&lb.ln2),
+                    Arg::Buf(lb.ln1),
+                    Arg::Buf(lb.wq),
+                    Arg::Buf(lb.wk),
+                    Arg::Buf(lb.wv),
+                    Arg::Buf(lb.wo),
+                    Arg::Buf(lb.ln2),
                 ],
             )?;
             let (y, ln2x, ks, vs) = (&outs[0], &outs[1], &outs[2], &outs[3]);
@@ -619,8 +639,8 @@ impl Engine {
             "lm_head_b1",
             &[
                 Arg::F32(&last),
-                Arg::Buf(&self.lnf_buf),
-                Arg::Buf(&self.emb_buf),
+                Arg::Buf(self.lnf_buf),
+                Arg::Buf(self.emb_buf),
             ],
         )?;
         Ok(argmax_u8(logits[0].row(0)))
@@ -650,12 +670,12 @@ impl Engine {
                 &format!("attn_step_b{bb}"),
                 &[
                     Arg::F32(&x),
-                    Arg::Buf(&lb.ln1),
-                    Arg::Buf(&lb.wq),
-                    Arg::Buf(&lb.wk),
-                    Arg::Buf(&lb.wv),
-                    Arg::Buf(&lb.wo),
-                    Arg::Buf(&lb.ln2),
+                    Arg::Buf(lb.ln1),
+                    Arg::Buf(lb.wq),
+                    Arg::Buf(lb.wk),
+                    Arg::Buf(lb.wv),
+                    Arg::Buf(lb.wo),
+                    Arg::Buf(lb.ln2),
                     Arg::F32(&kc),
                     Arg::F32(&vc),
                     Arg::I32(&pos_i32),
@@ -682,8 +702,8 @@ impl Engine {
             &format!("lm_head_b{bb}"),
             &[
                 Arg::F32(&x),
-                Arg::Buf(&self.lnf_buf),
-                Arg::Buf(&self.emb_buf),
+                Arg::Buf(self.lnf_buf),
+                Arg::Buf(self.emb_buf),
             ],
         )?;
         Ok((0..b).map(|i| argmax_u8(logits[0].row(i))).collect())
@@ -745,7 +765,7 @@ impl Engine {
 
     /// Per-artifact exec statistics snapshot (name → (count, secs)).
     pub fn exec_stats(&self) -> HashMap<String, (u64, f64)> {
-        self.rt.exec_count.borrow().clone()
+        self.rt.exec_counts()
     }
 
     /// Seconds spent in the MoE module (gate + expert FFNs).

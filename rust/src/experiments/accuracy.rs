@@ -240,7 +240,7 @@ pub fn table3(artifacts: &Path) -> Result<()> {
         println!(
             "{label:<24} {:>6.0}% {:>8.2}x {:>+11.1}% {:>+9.1}%",
             100.0 * mem,
-            moe0 / moe_t.max(1e-12),
+            crate::util::stats::speedup_ratio(moe0, moe_t),
             math - math0,
             avg - avg0,
         );

@@ -14,6 +14,7 @@ use crate::moe::DropPolicy;
 use crate::server::{compare, format_report, run_once, workload};
 use crate::tasks::eval::avg_accuracy;
 use crate::util::json::{num, obj, s, Json};
+use crate::util::stats::speedup_ratio;
 
 fn n_requests() -> usize {
     std::env::var("DUALSPARSE_REQS")
@@ -112,8 +113,8 @@ pub fn fig11(artifacts: &Path) -> Result<()> {
             e.reset_metrics();
             serve(&mut e, &reqs)?;
             let makespan = e.metrics.makespan();
-            let moe_speedup = base_makespan / makespan.max(1e-12);
-            let e2e_speedup = base_e2e / e2e_time(&e).max(1e-12);
+            let moe_speedup = speedup_ratio(base_makespan, makespan);
+            let e2e_speedup = speedup_ratio(base_e2e, e2e_time(&e));
             let (res, rate) = eval_with_rate(&mut e)?;
             let acc = avg_accuracy(&res);
             let math = res.iter().find(|r| r.task == "add").unwrap().accuracy;

@@ -11,15 +11,30 @@
 //! * **L2** — the TinyMoE model family, expert partition
 //!   (complete/partial transformation) and reconstruction in JAX
 //!   (`python/compile/`), build-time only.
-//! * **L3** — this crate: the PJRT runtime, the DualSparse router
-//!   (Top-K + normalization + 1T/2T drop + load-aware thresholding),
-//!   the serving engine with KV cache and continuous batching, the
-//!   expert-parallel simulation, the ETP/S-ETP communication simulator,
-//!   the EES/EEP/Wanda baselines, and the per-figure/table experiment
-//!   drivers.
+//! * **L3** — this crate: pluggable execution backends, the DualSparse
+//!   router (Top-K + normalization + 1T/2T drop + load-aware
+//!   thresholding), the serving engine with KV cache and continuous
+//!   batching, the expert-parallel simulation, the ETP/S-ETP
+//!   communication simulator, the EES/EEP/Wanda baselines, and the
+//!   per-figure/table experiment drivers.
 //!
-//! Python never runs on the request path: after `make artifacts` the
-//! `dualsparse` binary is self-contained.
+//! ## Execution backends
+//!
+//! Heavy math runs through the [`runtime::Backend`] trait:
+//!
+//! * **`CpuRef`** (always available) — a pure-Rust reference executor,
+//!   numerically equivalent to the jnp oracles in
+//!   `python/compile/kernels/ref.py`. When no serialized model exists
+//!   the engine materializes deterministic SplitMix64 synthetic weights
+//!   ([`model::Weights::synthetic`]), so the entire stack — engine,
+//!   batcher, server, experiments, tests — runs **hermetically**:
+//!   `cargo test -q` needs no `make artifacts`, no Python, no PJRT.
+//! * **PJRT** (`pjrt` cargo feature) — loads the AOT HLO-text artifacts
+//!   for trained weights; Python still never runs on the request path.
+//!
+//! Selection: `EngineOptions::backend` (`Auto` | `CpuRef` | `Pjrt`),
+//! overridable with the `DUALSPARSE_BACKEND` env var (`auto` | `cpu` |
+//! `pjrt`). `Auto` prefers PJRT when compiled in and artifacts exist.
 
 pub mod baselines;
 pub mod calib;

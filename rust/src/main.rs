@@ -15,6 +15,7 @@ use anyhow::{bail, Context, Result};
 
 use dualsparse::engine::{artifacts_dir, EngineOptions};
 use dualsparse::moe::DropPolicy;
+use dualsparse::runtime::Backend as _;
 use dualsparse::tasks::eval::{evaluate, format_row};
 use dualsparse::{calib, experiments, server, Engine};
 
@@ -138,18 +139,32 @@ fn main() -> Result<()> {
             experiments::run(id, &artifacts)?;
         }
         "info" => {
-            let rt = dualsparse::runtime::Runtime::new(&artifacts)?;
-            println!("platform: {}", rt.platform());
-            let models = std::fs::read_dir(artifacts.join("models"))?
-                .filter_map(|e| e.ok())
-                .filter(|e| e.path().extension().map(|x| x == "json").unwrap_or(false))
-                .map(|e| e.path().file_stem().unwrap().to_string_lossy().into_owned())
-                .collect::<Vec<_>>();
-            println!("models: {models:?}");
-            let n_artifacts = std::fs::read_dir(&artifacts)?
-                .filter_map(|e| e.ok())
-                .filter(|e| e.path().to_string_lossy().ends_with(".hlo.txt"))
-                .count();
+            use dualsparse::runtime::{make_backend, BackendKind};
+            let rt = make_backend(BackendKind::Auto, &artifacts)?;
+            println!("backend: {}", rt.platform());
+            let models = match std::fs::read_dir(artifacts.join("models")) {
+                Ok(rd) => rd
+                    .filter_map(|e| e.ok())
+                    .filter(|e| e.path().extension().map(|x| x == "json").unwrap_or(false))
+                    .map(|e| e.path().file_stem().unwrap().to_string_lossy().into_owned())
+                    .collect::<Vec<_>>(),
+                Err(_) => Vec::new(),
+            };
+            if models.is_empty() {
+                println!(
+                    "models: none serialized — synthetic presets available: {:?}",
+                    dualsparse::model::ModelConfig::PRESET_NAMES
+                );
+            } else {
+                println!("models: {models:?}");
+            }
+            let n_artifacts = match std::fs::read_dir(&artifacts) {
+                Ok(rd) => rd
+                    .filter_map(|e| e.ok())
+                    .filter(|e| e.path().to_string_lossy().ends_with(".hlo.txt"))
+                    .count(),
+                Err(_) => 0,
+            };
             println!("artifacts: {n_artifacts} HLO modules");
         }
         _ => {

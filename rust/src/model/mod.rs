@@ -50,6 +50,46 @@ impl ModelConfig {
         })
     }
 
+    /// Names accepted by [`ModelConfig::preset`] (single source of
+    /// truth for error messages and `dualsparse info`).
+    pub const PRESET_NAMES: [&'static str; 3] =
+        ["mixtral_ish", "olmoe_ish", "deepseek_ish"];
+
+    /// Built-in mirror of `python/compile/configs.py::MODELS` — the
+    /// three TinyMoE variants the paper experiments stand on. Used to
+    /// materialize synthetic test weights when no serialized model
+    /// exists (the hermetic `CpuRef` path).
+    pub fn preset(name: &str) -> Option<ModelConfig> {
+        let base = ModelConfig {
+            name: name.to_string(),
+            d_model: 64,
+            n_layers: 4,
+            n_heads: 4,
+            d_head: 16,
+            vocab: 256,
+            max_seq: 160,
+            n_experts: 8,
+            d_ffn: 128,
+            top_k: 2,
+            n_shared: 0,
+            d_ffn_shared: 0,
+            normalized_gating: false,
+        };
+        match name {
+            "mixtral_ish" => Some(base),
+            "olmoe_ish" => Some(ModelConfig { n_experts: 16, d_ffn: 64, top_k: 4, ..base }),
+            "deepseek_ish" => Some(ModelConfig {
+                n_experts: 14,
+                d_ffn: 64,
+                top_k: 2,
+                n_shared: 1,
+                d_ffn_shared: 128,
+                ..base
+            }),
+            _ => None,
+        }
+    }
+
     pub fn d_attn(&self) -> usize {
         self.n_heads * self.d_head
     }
@@ -132,6 +172,20 @@ mod tests {
             c.name = n.into();
             c
         }
+    }
+
+    #[test]
+    fn presets_mirror_python_configs() {
+        let m = ModelConfig::preset("mixtral_ish").unwrap();
+        assert_eq!((m.n_experts, m.d_ffn, m.top_k, m.n_shared), (8, 128, 2, 0));
+        let o = ModelConfig::preset("olmoe_ish").unwrap();
+        assert_eq!((o.n_experts, o.d_ffn, o.top_k), (16, 64, 4));
+        let d = ModelConfig::preset("deepseek_ish").unwrap();
+        assert_eq!((d.n_experts, d.d_ffn, d.n_shared, d.d_ffn_shared), (14, 64, 1, 128));
+        for name in ModelConfig::PRESET_NAMES {
+            ModelConfig::preset(name).unwrap().validate().unwrap();
+        }
+        assert!(ModelConfig::preset("gpt5_ish").is_none());
     }
 
     #[test]

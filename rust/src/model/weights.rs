@@ -12,6 +12,7 @@ use anyhow::{bail, Context, Result};
 
 use super::ModelConfig;
 use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
 
 /// A host-resident f32 tensor (row-major).
 #[derive(Debug, Clone)]
@@ -142,6 +143,63 @@ impl Weights {
         Ok(Weights { config, tensors })
     }
 
+    /// Load the serialized model if it exists, otherwise materialize
+    /// deterministic synthetic weights for a built-in preset — the
+    /// hermetic path that lets the whole serving stack (and CI) run
+    /// with no `make artifacts` step.
+    pub fn load_or_synthetic(models_dir: &Path, name: &str) -> Result<Self> {
+        if models_dir.join(format!("{name}.json")).exists() {
+            return Self::load(models_dir, name);
+        }
+        let cfg = ModelConfig::preset(name).with_context(|| {
+            format!(
+                "no serialized model {name:?} under {models_dir:?} and no \
+                 built-in preset of that name — run `make artifacts` or use \
+                 one of {:?}",
+                ModelConfig::PRESET_NAMES
+            )
+        })?;
+        Ok(Self::synthetic(&cfg))
+    }
+
+    /// Deterministic untrained weights (SplitMix64-seeded, N(0, 0.02²)
+    /// like `python/compile/model.py::init_params`; norm gains = 1).
+    /// Same name ⇒ bit-identical weights on every machine.
+    pub fn synthetic(cfg: &ModelConfig) -> Self {
+        let mut rng = SplitMix64::new(synth_seed(&cfg.name));
+        let mut tensors = BTreeMap::new();
+        let scale = 0.02f32;
+        let mut randn = |shape: Vec<usize>| {
+            let n: usize = shape.iter().product();
+            Tensor::new(shape, (0..n).map(|_| rng.gauss() as f32 * scale).collect())
+        };
+        let d = cfg.d_model;
+        tensors.insert("emb".to_string(), randn(vec![cfg.vocab, d]));
+        tensors.insert("pos".to_string(), randn(vec![cfg.max_seq, d]));
+        for li in 0..cfg.n_layers {
+            let mut put = |key: &str, t: Tensor| {
+                tensors.insert(format!("layers.{li}.{key}"), t);
+            };
+            put("ln1", Tensor::new(vec![d], vec![1.0; d]));
+            put("wq", randn(vec![d, d]));
+            put("wk", randn(vec![d, d]));
+            put("wv", randn(vec![d, d]));
+            put("wo", randn(vec![d, d]));
+            put("ln2", Tensor::new(vec![d], vec![1.0; d]));
+            put("wg", randn(vec![d, cfg.n_experts]));
+            put("w1", randn(vec![cfg.n_experts, d, cfg.d_ffn]));
+            put("w3", randn(vec![cfg.n_experts, d, cfg.d_ffn]));
+            put("w2", randn(vec![cfg.n_experts, cfg.d_ffn, d]));
+            if cfg.n_shared > 0 {
+                put("sw1", randn(vec![d, cfg.d_ffn_shared]));
+                put("sw3", randn(vec![d, cfg.d_ffn_shared]));
+                put("sw2", randn(vec![cfg.d_ffn_shared, d]));
+            }
+        }
+        tensors.insert("lnf".to_string(), Tensor::new(vec![d], vec![1.0; d]));
+        Weights { config: cfg.clone(), tensors }
+    }
+
     pub fn get(&self, name: &str) -> Result<&Tensor> {
         self.tensors
             .get(name)
@@ -156,6 +214,16 @@ impl Weights {
     pub fn expert(&self, li: usize, key: &str, e: usize) -> Result<Tensor> {
         Ok(self.layer(li, key)?.index0(e))
     }
+}
+
+/// Stable per-model seed for synthetic weights (FNV-1a over the name).
+fn synth_seed(name: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
 }
 
 #[cfg(test)]
@@ -189,5 +257,32 @@ mod tests {
     fn scale_scales() {
         let t = Tensor::new(vec![2], vec![1.0, -2.0]);
         assert_eq!(t.scale(2.0).data, vec![2.0, -4.0]);
+    }
+
+    #[test]
+    fn synthetic_weights_complete_and_deterministic() {
+        let cfg = ModelConfig::preset("deepseek_ish").unwrap();
+        let a = Weights::synthetic(&cfg);
+        let b = Weights::synthetic(&cfg);
+        assert_eq!(a.get("emb").unwrap().shape, vec![256, 64]);
+        assert_eq!(a.layer(0, "w1").unwrap().shape, vec![14, 64, 64]);
+        assert_eq!(a.layer(3, "sw2").unwrap().shape, vec![128, 64]);
+        assert_eq!(a.get("lnf").unwrap().data, vec![1.0; 64]);
+        assert_eq!(
+            a.layer(2, "wq").unwrap().data,
+            b.layer(2, "wq").unwrap().data,
+            "same name must give bit-identical weights"
+        );
+        // distinct models diverge
+        let o = Weights::synthetic(&ModelConfig::preset("olmoe_ish").unwrap());
+        assert_ne!(a.get("emb").unwrap().data, o.get("emb").unwrap().data);
+    }
+
+    #[test]
+    fn load_or_synthetic_falls_back_to_preset() {
+        let w = Weights::load_or_synthetic(Path::new("/nonexistent/models"), "mixtral_ish")
+            .unwrap();
+        assert_eq!(w.config.n_experts, 8);
+        assert!(Weights::load_or_synthetic(Path::new("/nonexistent/models"), "nope").is_err());
     }
 }

@@ -1,0 +1,491 @@
+//! `CpuRef` — pure-Rust reference backend.
+//!
+//! Implements every serving artifact family (FFN, gating, probe,
+//! prefill/step attention, LM head) directly over host tensors with the
+//! shared kernels in `util::linalg`, numerically mirroring the jnp
+//! oracles in `python/compile/kernels/ref.py` and the serving
+//! decomposition in `python/compile/model.py`. Shapes come from the
+//! argument tensors, so one implementation serves every capacity /
+//! batch / width bucket; the artifact *name* is used for dispatch and
+//! perf accounting only.
+//!
+//! This is the hermetic path: no AOT artifacts, no Python, no PJRT —
+//! the seam the integration tests, golden-fixture tests and CI run on.
+
+use std::cell::{Cell, RefCell};
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::{ModelConfig, Tensor};
+use crate::util::linalg::{matmul, matmul_bt, rmsnorm_rows, softmax_rows, swiglu_ffn, swish};
+
+use super::{Arg, Backend, BufId, ExecCounters};
+
+/// Pure-Rust reference executor (see module docs).
+pub struct CpuRef {
+    /// Uploaded weight buffers, indexed by [`BufId`].
+    bufs: RefCell<Vec<Tensor>>,
+    /// (n_heads, d_head) — required by `attn_prefill_*`, which cannot
+    /// infer head geometry from its arguments.
+    heads: Cell<(usize, usize)>,
+    counters: ExecCounters,
+    /// Distinct artifact names ever executed. Kept separate from the
+    /// perf counters so `compiled_count` survives `reset_counters`,
+    /// matching the PJRT backend's compiled-executable cache semantics.
+    seen: RefCell<std::collections::HashSet<String>>,
+}
+
+impl CpuRef {
+    pub fn new() -> CpuRef {
+        CpuRef {
+            bufs: RefCell::new(Vec::new()),
+            heads: Cell::new((0, 0)),
+            counters: ExecCounters::default(),
+            seen: RefCell::new(std::collections::HashSet::new()),
+        }
+    }
+}
+
+impl Default for CpuRef {
+    fn default() -> Self {
+        CpuRef::new()
+    }
+}
+
+impl Backend for CpuRef {
+    fn platform(&self) -> String {
+        "cpu-ref".to_string()
+    }
+
+    fn set_model(&self, cfg: &ModelConfig) {
+        self.heads.set((cfg.n_heads, cfg.d_head));
+    }
+
+    fn upload(&self, t: &Tensor) -> Result<BufId> {
+        let mut bufs = self.bufs.borrow_mut();
+        bufs.push(t.clone());
+        Ok(BufId(bufs.len() - 1))
+    }
+
+    fn exec(&self, name: &str, args: &[Arg]) -> Result<Vec<Tensor>> {
+        let t0 = std::time::Instant::now();
+        let store = self.bufs.borrow();
+        // Resolve args up front: tensors (host or uploaded) and i32 rows.
+        let mut ts: Vec<Option<&Tensor>> = Vec::with_capacity(args.len());
+        let mut is: Vec<Option<&[i32]>> = Vec::with_capacity(args.len());
+        for a in args {
+            match a {
+                Arg::F32(x) => {
+                    ts.push(Some(*x));
+                    is.push(None);
+                }
+                Arg::Buf(id) => {
+                    let t = store
+                        .get(id.0)
+                        .with_context(|| format!("{name}: dangling buffer id {}", id.0))?;
+                    ts.push(Some(t));
+                    is.push(None);
+                }
+                Arg::I32(v) => {
+                    ts.push(None);
+                    is.push(Some(*v));
+                }
+            }
+        }
+        let out = if name.starts_with("ffn_h") {
+            vec![swiglu_ffn(
+                targ(name, &ts, 0)?,
+                targ(name, &ts, 1)?,
+                targ(name, &ts, 2)?,
+                targ(name, &ts, 3)?,
+            )]
+        } else if name.starts_with("gate_b") {
+            vec![softmax_rows(&matmul(targ(name, &ts, 0)?, targ(name, &ts, 1)?))]
+        } else if name.starts_with("probe_h") {
+            vec![op_probe(
+                targ(name, &ts, 0)?,
+                targ(name, &ts, 1)?,
+                targ(name, &ts, 2)?,
+            )]
+        } else if name.starts_with("attn_prefill_s") {
+            let (h, dh) = self.heads.get();
+            if h == 0 {
+                bail!("{name}: CpuRef needs set_model() before attention artifacts");
+            }
+            op_attn_prefill(
+                targ(name, &ts, 0)?,
+                targ(name, &ts, 1)?,
+                targ(name, &ts, 2)?,
+                targ(name, &ts, 3)?,
+                targ(name, &ts, 4)?,
+                targ(name, &ts, 5)?,
+                targ(name, &ts, 6)?,
+                h,
+                dh,
+            )?
+        } else if name.starts_with("attn_step_b") {
+            op_attn_step(
+                targ(name, &ts, 0)?,
+                targ(name, &ts, 1)?,
+                targ(name, &ts, 2)?,
+                targ(name, &ts, 3)?,
+                targ(name, &ts, 4)?,
+                targ(name, &ts, 5)?,
+                targ(name, &ts, 6)?,
+                targ(name, &ts, 7)?,
+                targ(name, &ts, 8)?,
+                iarg(name, &is, 9)?,
+            )?
+        } else if name.starts_with("lm_head_b") {
+            vec![matmul_bt(
+                &rmsnorm_rows(targ(name, &ts, 0)?, &targ(name, &ts, 1)?.data),
+                targ(name, &ts, 2)?,
+            )]
+        } else {
+            bail!("CpuRef: unknown artifact {name:?}");
+        };
+        self.counters.record(name, t0.elapsed().as_secs_f64());
+        if !self.seen.borrow().contains(name) {
+            self.seen.borrow_mut().insert(name.to_string());
+        }
+        Ok(out)
+    }
+
+    fn compiled_count(&self) -> usize {
+        self.seen.borrow().len()
+    }
+
+    fn reset_counters(&self) {
+        self.counters.reset();
+    }
+
+    fn time_with_prefix(&self, prefix: &str) -> f64 {
+        self.counters.time_with_prefix(prefix)
+    }
+
+    fn exec_counts(&self) -> HashMap<String, (u64, f64)> {
+        self.counters.snapshot()
+    }
+}
+
+/// Resolved f32 tensor argument `i` (host or uploaded buffer).
+fn targ<'a>(name: &str, ts: &[Option<&'a Tensor>], i: usize) -> Result<&'a Tensor> {
+    ts.get(i)
+        .copied()
+        .flatten()
+        .with_context(|| format!("{name}: missing f32 arg {i}"))
+}
+
+/// Resolved i32 argument `i`.
+fn iarg<'a>(name: &str, is: &[Option<&'a [i32]>], i: usize) -> Result<&'a [i32]> {
+    is.get(i)
+        .copied()
+        .flatten()
+        .with_context(|| format!("{name}: missing i32 arg {i}"))
+}
+
+/// Neuron-importance accumulators (`probe_ref`, paper Eqs. 14-17):
+/// rows = [Σ swish(xW1), Σ |swish(xW1)|, Σ g·u, Σ |g·u|], shape [4, H].
+fn op_probe(x: &Tensor, w1: &Tensor, w3: &Tensor) -> Tensor {
+    let g = matmul(x, w1);
+    let u = matmul(x, w3);
+    let (n, h) = (g.shape[0], g.shape[1]);
+    let mut out = vec![0.0f32; 4 * h];
+    for i in 0..n {
+        for j in 0..h {
+            let sw = swish(g.data[i * h + j]);
+            let gu = sw * u.data[i * h + j];
+            out[j] += sw;
+            out[h + j] += sw.abs();
+            out[2 * h + j] += gu;
+            out[3 * h + j] += gu.abs();
+        }
+    }
+    Tensor::new(vec![4, h], out)
+}
+
+/// Full-sequence causal prefill (`serve_attn_prefill`): returns
+/// (y [S,d], ln2x [S,d], K [S,H,dh], V [S,H,dh]).
+#[allow(clippy::too_many_arguments)]
+fn op_attn_prefill(
+    x: &Tensor,
+    ln1: &Tensor,
+    wq: &Tensor,
+    wk: &Tensor,
+    wv: &Tensor,
+    wo: &Tensor,
+    ln2: &Tensor,
+    n_heads: usize,
+    d_head: usize,
+) -> Result<Vec<Tensor>> {
+    let (s, d) = (x.shape[0], x.shape[1]);
+    if n_heads * d_head != d {
+        bail!("attn_prefill: {n_heads}x{d_head} heads != d_model {d}");
+    }
+    let xn = rmsnorm_rows(x, &ln1.data);
+    let q = matmul(&xn, wq);
+    let k = matmul(&xn, wk);
+    let v = matmul(&xn, wv);
+    let scale = 1.0 / (d_head as f32).sqrt();
+    let mut ctx = vec![0.0f32; s * d];
+    let mut scores = vec![0.0f32; s];
+    for hi in 0..n_heads {
+        let off = hi * d_head;
+        for qi in 0..s {
+            // causal: keys 0..=qi only (identical to -1e9 masking — the
+            // masked terms exp to exactly 0 after max subtraction).
+            for (ki, sc) in scores.iter_mut().enumerate().take(qi + 1) {
+                let mut dot = 0.0f32;
+                for e in 0..d_head {
+                    dot += q.data[qi * d + off + e] * k.data[ki * d + off + e];
+                }
+                *sc = dot * scale;
+            }
+            softmax_inplace(&mut scores[..qi + 1]);
+            for ki in 0..=qi {
+                let w = scores[ki];
+                for e in 0..d_head {
+                    ctx[qi * d + off + e] += w * v.data[ki * d + off + e];
+                }
+            }
+        }
+    }
+    let proj = matmul(&Tensor::new(vec![s, d], ctx), wo);
+    let y = Tensor::new(
+        vec![s, d],
+        x.data.iter().zip(&proj.data).map(|(a, b)| a + b).collect(),
+    );
+    let ln2x = rmsnorm_rows(&y, &ln2.data);
+    Ok(vec![
+        y,
+        ln2x,
+        Tensor::new(vec![s, n_heads, d_head], k.data),
+        Tensor::new(vec![s, n_heads, d_head], v.data),
+    ])
+}
+
+/// Single-token decode step with KV cache (`serve_attn_step`): returns
+/// (y [B,d], ln2x [B,d], new_k [B,H,dh], new_v [B,H,dh]). Head geometry
+/// is inferred from the cache shape [B,H,T,dh].
+#[allow(clippy::too_many_arguments)]
+fn op_attn_step(
+    x: &Tensor,
+    ln1: &Tensor,
+    wq: &Tensor,
+    wk: &Tensor,
+    wv: &Tensor,
+    wo: &Tensor,
+    ln2: &Tensor,
+    kcache: &Tensor,
+    vcache: &Tensor,
+    pos: &[i32],
+) -> Result<Vec<Tensor>> {
+    let (b, d) = (x.shape[0], x.shape[1]);
+    if kcache.shape.len() != 4 || kcache.shape[0] != b {
+        bail!("attn_step: bad kcache shape {:?}", kcache.shape);
+    }
+    let (n_heads, t_max, d_head) = (kcache.shape[1], kcache.shape[2], kcache.shape[3]);
+    if n_heads * d_head != d || pos.len() < b {
+        bail!("attn_step: {n_heads}x{d_head} heads vs d_model {d}, pos len {}", pos.len());
+    }
+    let xn = rmsnorm_rows(x, &ln1.data);
+    let q = matmul(&xn, wq);
+    let new_k = matmul(&xn, wk);
+    let new_v = matmul(&xn, wv);
+    let scale = 1.0 / (d_head as f32).sqrt();
+    let mut ctx = vec![0.0f32; b * d];
+    for bi in 0..b {
+        let p = (pos[bi].max(0) as usize).min(t_max);
+        let mut scores = vec![0.0f32; p + 1];
+        for hi in 0..n_heads {
+            let off = hi * d_head;
+            let cbase = (bi * n_heads + hi) * t_max * d_head;
+            for (ti, sc) in scores.iter_mut().enumerate().take(p) {
+                let mut dot = 0.0f32;
+                for e in 0..d_head {
+                    dot += q.data[bi * d + off + e] * kcache.data[cbase + ti * d_head + e];
+                }
+                *sc = dot * scale;
+            }
+            // the token attends to itself via the freshly-projected K.
+            let mut dot = 0.0f32;
+            for e in 0..d_head {
+                dot += q.data[bi * d + off + e] * new_k.data[bi * d + off + e];
+            }
+            scores[p] = dot * scale;
+            softmax_inplace(&mut scores);
+            for ti in 0..p {
+                let w = scores[ti];
+                for e in 0..d_head {
+                    ctx[bi * d + off + e] += w * vcache.data[cbase + ti * d_head + e];
+                }
+            }
+            let w = scores[p];
+            for e in 0..d_head {
+                ctx[bi * d + off + e] += w * new_v.data[bi * d + off + e];
+            }
+        }
+    }
+    let proj = matmul(&Tensor::new(vec![b, d], ctx), wo);
+    let y = Tensor::new(
+        vec![b, d],
+        x.data.iter().zip(&proj.data).map(|(a, b)| a + b).collect(),
+    );
+    let ln2x = rmsnorm_rows(&y, &ln2.data);
+    Ok(vec![
+        y,
+        ln2x,
+        Tensor::new(vec![b, n_heads, d_head], new_k.data),
+        Tensor::new(vec![b, n_heads, d_head], new_v.data),
+    ])
+}
+
+/// Numerically-stable in-place softmax over a score row.
+fn softmax_inplace(xs: &mut [f32]) {
+    let mx = xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in xs.iter_mut() {
+        *x = (*x - mx).exp();
+        sum += *x;
+    }
+    for x in xs.iter_mut() {
+        *x /= sum;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::SplitMix64;
+
+    fn randn(rng: &mut SplitMix64, shape: Vec<usize>, scale: f32) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::new(shape, (0..n).map(|_| rng.gauss() as f32 * scale).collect())
+    }
+
+    #[test]
+    fn ffn_matches_shared_kernel() {
+        let mut rng = SplitMix64::new(1);
+        let x = randn(&mut rng, vec![4, 8], 0.5);
+        let w1 = randn(&mut rng, vec![8, 6], 0.3);
+        let w3 = randn(&mut rng, vec![8, 6], 0.3);
+        let w2 = randn(&mut rng, vec![6, 8], 0.3);
+        let be = CpuRef::new();
+        let got = be
+            .exec("ffn_h6_c4", &[Arg::F32(&x), Arg::F32(&w1), Arg::F32(&w3), Arg::F32(&w2)])
+            .unwrap();
+        let want = swiglu_ffn(&x, &w1, &w3, &w2);
+        assert_eq!(got[0].data, want.data);
+    }
+
+    #[test]
+    fn uploaded_buffers_resolve() {
+        let be = CpuRef::new();
+        let mut rng = SplitMix64::new(2);
+        let x = randn(&mut rng, vec![2, 4], 0.5);
+        let wg = randn(&mut rng, vec![4, 3], 0.5);
+        let id = be.upload(&wg).unwrap();
+        let via_buf = be.exec("gate_b2_e3", &[Arg::F32(&x), Arg::Buf(id)]).unwrap();
+        let via_host = be.exec("gate_b2_e3", &[Arg::F32(&x), Arg::F32(&wg)]).unwrap();
+        assert_eq!(via_buf[0].data, via_host[0].data);
+        for r in 0..2 {
+            let s: f32 = via_buf[0].row(r).iter().sum();
+            assert!((s - 1.0).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn probe_abs_rows_dominate() {
+        let mut rng = SplitMix64::new(3);
+        let x = randn(&mut rng, vec![6, 8], 0.5);
+        let w1 = randn(&mut rng, vec![8, 5], 0.4);
+        let w3 = randn(&mut rng, vec![8, 5], 0.4);
+        let imp = op_probe(&x, &w1, &w3);
+        assert_eq!(imp.shape, vec![4, 5]);
+        for j in 0..5 {
+            assert!(imp.data[5 + j] >= imp.data[j].abs() - 1e-5);
+            assert!(imp.data[15 + j] >= imp.data[10 + j].abs() - 1e-5);
+        }
+    }
+
+    #[test]
+    fn prefill_last_row_matches_step_on_same_cache() {
+        // Decode consistency: running S tokens through prefill equals
+        // prefilling S-1 and stepping the last token over that cache.
+        let mut rng = SplitMix64::new(4);
+        let (s, d, h, dh, t_max) = (5usize, 8usize, 2usize, 4usize, 9usize);
+        let x = randn(&mut rng, vec![s, d], 0.5);
+        let ln1 = Tensor::new(vec![d], vec![1.0; d]);
+        let ln2 = Tensor::new(vec![d], vec![1.0; d]);
+        let wq = randn(&mut rng, vec![d, d], 0.3);
+        let wk = randn(&mut rng, vec![d, d], 0.3);
+        let wv = randn(&mut rng, vec![d, d], 0.3);
+        let wo = randn(&mut rng, vec![d, d], 0.3);
+        let full = op_attn_prefill(&x, &ln1, &wq, &wk, &wv, &wo, &ln2, h, dh).unwrap();
+        let part = op_attn_prefill(
+            &x.row_slice(0, s - 1),
+            &ln1,
+            &wq,
+            &wk,
+            &wv,
+            &wo,
+            &ln2,
+            h,
+            dh,
+        )
+        .unwrap();
+        // pack part's K/V ([S-1, H, dh]) into a [1, H, T, dh] cache
+        let mut kc = vec![0.0f32; h * t_max * dh];
+        let mut vc = vec![0.0f32; h * t_max * dh];
+        for ti in 0..s - 1 {
+            for hi in 0..h {
+                for e in 0..dh {
+                    kc[(hi * t_max + ti) * dh + e] = part[2].data[(ti * h + hi) * dh + e];
+                    vc[(hi * t_max + ti) * dh + e] = part[3].data[(ti * h + hi) * dh + e];
+                }
+            }
+        }
+        let last = x.row_slice(s - 1, s);
+        let step = op_attn_step(
+            &last,
+            &ln1,
+            &wq,
+            &wk,
+            &wv,
+            &wo,
+            &ln2,
+            &Tensor::new(vec![1, h, t_max, dh], kc),
+            &Tensor::new(vec![1, h, t_max, dh], vc),
+            &[(s - 1) as i32],
+        )
+        .unwrap();
+        for e in 0..d {
+            let want = full[0].data[(s - 1) * d + e];
+            let got = step[0].data[e];
+            assert!((want - got).abs() < 1e-5, "y[{e}]: {want} vs {got}");
+        }
+    }
+
+    #[test]
+    fn unknown_artifact_is_an_error() {
+        let be = CpuRef::new();
+        assert!(be.exec("mystery_kernel", &[]).is_err());
+    }
+
+    #[test]
+    fn counters_track_named_execs() {
+        let be = CpuRef::new();
+        let x = Tensor::zeros(vec![1, 2]);
+        let wg = Tensor::zeros(vec![2, 2]);
+        be.exec("gate_b1_e2", &[Arg::F32(&x), Arg::F32(&wg)]).unwrap();
+        be.exec("gate_b1_e2", &[Arg::F32(&x), Arg::F32(&wg)]).unwrap();
+        assert_eq!(be.exec_counts()["gate_b1_e2"].0, 2);
+        assert_eq!(be.compiled_count(), 1);
+        be.reset_counters();
+        assert!(be.exec_counts().is_empty());
+        // compiled_count mirrors PJRT's executable cache: it survives
+        // counter resets.
+        assert_eq!(be.compiled_count(), 1);
+    }
+}

@@ -1,170 +1,228 @@
-//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
-//! the serving hot path.
+//! Pluggable execution backends.
 //!
-//! Interchange is HLO *text* (see `python/compile/aot.py` and
-//! DESIGN.md §6). Every artifact was lowered with `return_tuple=True`,
-//! so execution always yields a tuple literal which we decompose.
+//! The engine's heavy math goes through the [`Backend`] trait: a small
+//! artifact-oriented interface (upload weights once, execute a named
+//! shape-bucketed kernel). Two implementations exist:
 //!
-//! The xla crate's handles wrap raw pointers and are `!Send`; a
-//! [`Runtime`] therefore lives on one thread. The EP runtime gives each
-//! simulated device thread its own `Runtime` — which also faithfully
-//! models per-device compiled executables under expert parallelism.
+//! * [`cpu::CpuRef`] — a pure-Rust reference executor, numerically
+//!   equivalent to the jnp oracles in `python/compile/kernels/ref.py`.
+//!   Always available; makes the whole serving stack hermetic (tests
+//!   and CI run with no artifacts and no Python).
+//! * `pjrt::PjrtRuntime` — the AOT PJRT runtime that loads HLO-text
+//!   artifacts produced by `make artifacts`. Gated behind the `pjrt`
+//!   cargo feature (needs the `xla` crate in the vendor set).
+//!
+//! Artifact names carry the dispatch contract shared by both backends
+//! (see `python/compile/aot.py::lower_artifacts`):
+//!
+//! | name                  | args                                   |
+//! |-----------------------|----------------------------------------|
+//! | `ffn_h{H}_c{C}`       | x [C,d], w1 [d,H], w3 [d,H], w2 [H,d]  |
+//! | `gate_b{B}_e{E}`      | x [B,d], wg [d,E]                      |
+//! | `probe_h{H}`          | x [C,d], w1 [d,H], w3 [d,H]            |
+//! | `attn_prefill_s{S}`   | x, ln1, wq, wk, wv, wo, ln2            |
+//! | `attn_step_b{B}`      | … + kcache, vcache, pos (i32)          |
+//! | `lm_head_b{B}`        | x [B,d], lnf [d], emb [V,d]            |
+//!
+//! Backend selection: [`BackendKind`] on `EngineOptions`, overridable
+//! with the `DUALSPARSE_BACKEND` env var (`cpu` | `pjrt`); `Auto` picks
+//! PJRT when compiled in *and* artifacts exist, `CpuRef` otherwise.
+
+pub mod cpu;
+#[cfg(feature = "pjrt")]
+pub mod pjrt;
 
 use std::cell::RefCell;
 use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::path::Path;
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, Result};
 
-use crate::model::Tensor;
+use crate::model::{ModelConfig, Tensor};
+
+pub use cpu::CpuRef;
+
+/// Opaque handle to a backend-resident buffer (uploaded weights). The
+/// hot path passes handles so weights are never re-copied per call.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BufId(pub usize);
 
 /// Host-side input for one executable argument.
 pub enum Arg<'a> {
     F32(&'a Tensor),
     I32(&'a [i32]),
-    /// A device-resident buffer uploaded once via [`Runtime::upload`] —
-    /// used for weights so the hot path never re-copies them.
-    Buf(&'a xla::PjRtBuffer),
+    /// A buffer uploaded once via [`Backend::upload`] (weights path).
+    Buf(BufId),
 }
 
-/// One compiled artifact.
-pub struct Exec {
-    pub name: String,
-    exe: xla::PjRtLoadedExecutable,
+/// Which execution backend to build.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum BackendKind {
+    /// PJRT when compiled in and artifacts exist, otherwise CpuRef.
+    #[default]
+    Auto,
+    /// Pure-Rust reference executor (hermetic; no artifacts needed).
+    CpuRef,
+    /// AOT PJRT runtime (requires the `pjrt` feature + artifacts).
+    Pjrt,
 }
 
-/// Executable registry bound to one PJRT (CPU) client.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    artifacts_dir: PathBuf,
-    cache: RefCell<HashMap<String, Rc<Exec>>>,
-    /// Cumulative executions + wall seconds per artifact (perf accounting).
-    pub exec_count: RefCell<HashMap<String, (u64, f64)>>,
+impl BackendKind {
+    /// Parse a `DUALSPARSE_BACKEND` value.
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "auto" => Ok(BackendKind::Auto),
+            "cpu" | "cpuref" | "cpu_ref" => Ok(BackendKind::CpuRef),
+            "pjrt" | "xla" => Ok(BackendKind::Pjrt),
+            _ => bail!("unknown backend {s:?}; use auto | cpu | pjrt"),
+        }
+    }
 }
 
-impl Runtime {
-    pub fn new(artifacts_dir: &Path) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            artifacts_dir: artifacts_dir.to_path_buf(),
-            cache: RefCell::new(HashMap::new()),
-            exec_count: RefCell::new(HashMap::new()),
-        })
-    }
+/// An execution backend: weight upload + named-artifact execution.
+///
+/// Object-safe on purpose — the engine holds a `Box<dyn Backend>` so
+/// the backend is a *runtime* choice (env var / options), and future
+/// GPU or multi-node runtimes slot in without touching the engine.
+pub trait Backend {
+    /// Human-readable platform tag (e.g. "cpu-ref", "Host").
+    fn platform(&self) -> String;
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
+    /// Attention kernels need head geometry that artifact names do not
+    /// carry; the engine calls this once after construction.
+    fn set_model(&self, _cfg: &ModelConfig) {}
 
-    /// Load + compile an artifact by name (cached).
-    pub fn load(&self, name: &str) -> Result<Rc<Exec>> {
-        if let Some(e) = self.cache.borrow().get(name) {
-            return Ok(e.clone());
-        }
-        let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
-        if !path.exists() {
-            bail!(
-                "artifact {name} not found at {path:?} — run `make artifacts`"
-            );
-        }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("non-utf8 path")?,
-        )
-        .with_context(|| format!("parsing {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {name}"))?;
-        let e = Rc::new(Exec { name: name.to_string(), exe });
-        self.cache.borrow_mut().insert(name.to_string(), e.clone());
-        Ok(e)
-    }
+    /// Upload a host tensor to a backend-resident buffer.
+    fn upload(&self, t: &Tensor) -> Result<BufId>;
 
-    /// Upload a host tensor to a device-resident buffer (weights path).
-    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
-        Ok(self
-            .client
-            .buffer_from_host_buffer(&t.data, &t.shape, None)?)
-    }
+    /// Execute the named artifact; returns the decomposed output tuple.
+    fn exec(&self, name: &str, args: &[Arg]) -> Result<Vec<Tensor>>;
 
-    /// Execute an artifact; host args are uploaded per call, `Arg::Buf`
-    /// args are passed as-is. Returns the decomposed output tuple.
-    pub fn exec(&self, name: &str, args: &[Arg]) -> Result<Vec<Tensor>> {
-        let exec = self.load(name)?;
-        let t0 = std::time::Instant::now();
-        // Owned buffers for the host-side args (kept alive through the
-        // execute call); `refs` mixes them with the persistent ones.
-        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
-        let mut slots: Vec<Option<usize>> = Vec::with_capacity(args.len());
-        for a in args {
-            match a {
-                Arg::F32(t) => {
-                    owned.push(
-                        self.client
-                            .buffer_from_host_buffer(&t.data, &t.shape, None)?,
-                    );
-                    slots.push(Some(owned.len() - 1));
-                }
-                Arg::I32(v) => {
-                    owned.push(self.client.buffer_from_host_buffer(
-                        v,
-                        &[v.len()],
-                        None,
-                    )?);
-                    slots.push(Some(owned.len() - 1));
-                }
-                Arg::Buf(_) => slots.push(None),
-            }
-        }
-        let refs: Vec<&xla::PjRtBuffer> = args
-            .iter()
-            .zip(&slots)
-            .map(|(a, s)| match (a, s) {
-                (Arg::Buf(b), _) => *b,
-                (_, Some(i)) => &owned[*i],
-                _ => unreachable!(),
-            })
-            .collect();
-        let result = exec.exe.execute_b::<&xla::PjRtBuffer>(&refs)?[0][0]
-            .to_literal_sync()?;
-        let parts = result.to_tuple()?;
-        let mut out = Vec::with_capacity(parts.len());
-        for lit in parts {
-            let shape = lit.array_shape()?;
-            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
-            let data = lit.to_vec::<f32>()?;
-            out.push(Tensor::new(dims, data));
-        }
-        let dt = t0.elapsed().as_secs_f64();
-        let mut counts = self.exec_count.borrow_mut();
-        let entry = counts.entry(name.to_string()).or_insert((0, 0.0));
-        entry.0 += 1;
-        entry.1 += dt;
-        // decompose_tuple returns elements in declaration order already.
-        Ok(out)
-    }
-
-    /// Number of distinct compiled artifacts held by this runtime.
-    pub fn compiled_count(&self) -> usize {
-        self.cache.borrow().len()
-    }
+    /// Number of distinct artifacts compiled/executed by this backend.
+    fn compiled_count(&self) -> usize;
 
     /// Reset the perf counters (used between bench phases).
-    pub fn reset_counters(&self) {
-        self.exec_count.borrow_mut().clear();
+    fn reset_counters(&self);
+
+    /// Total wall seconds inside execute calls whose artifact name
+    /// matches `prefix` (e.g. "ffn_" for MoE-module time).
+    fn time_with_prefix(&self, prefix: &str) -> f64;
+
+    /// Snapshot of per-artifact (execution count, wall seconds).
+    fn exec_counts(&self) -> HashMap<String, (u64, f64)>;
+}
+
+/// Cumulative executions + wall seconds per artifact, shared by all
+/// backends (perf accounting behind `EngineMetrics` / fig10-11).
+#[derive(Debug, Default)]
+pub struct ExecCounters {
+    counts: RefCell<HashMap<String, (u64, f64)>>,
+}
+
+impl ExecCounters {
+    pub fn record(&self, name: &str, secs: f64) {
+        let mut counts = self.counts.borrow_mut();
+        let entry = counts.entry(name.to_string()).or_insert((0, 0.0));
+        entry.0 += 1;
+        entry.1 += secs;
     }
 
-    /// Total wall seconds spent inside PJRT execute calls whose artifact
-    /// name matches `prefix` (e.g. "ffn_" for MoE-module time).
+    pub fn reset(&self) {
+        self.counts.borrow_mut().clear();
+    }
+
+    pub fn snapshot(&self) -> HashMap<String, (u64, f64)> {
+        self.counts.borrow().clone()
+    }
+
+    pub fn distinct(&self) -> usize {
+        self.counts.borrow().len()
+    }
+
     pub fn time_with_prefix(&self, prefix: &str) -> f64 {
-        self.exec_count
+        self.counts
             .borrow()
             .iter()
             .filter(|(k, _)| k.starts_with(prefix))
             .map(|(_, (_, t))| t)
             .sum()
+    }
+}
+
+/// Whether `dir` holds any AOT HLO-text artifacts.
+pub fn has_artifacts(dir: &Path) -> bool {
+    std::fs::read_dir(dir)
+        .map(|rd| {
+            rd.filter_map(|e| e.ok())
+                .any(|e| e.path().to_string_lossy().ends_with(".hlo.txt"))
+        })
+        .unwrap_or(false)
+}
+
+#[cfg(feature = "pjrt")]
+fn make_pjrt(artifacts_dir: &Path) -> Result<Box<dyn Backend>> {
+    Ok(Box::new(pjrt::PjrtRuntime::new(artifacts_dir)?))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn make_pjrt(_artifacts_dir: &Path) -> Result<Box<dyn Backend>> {
+    bail!(
+        "the PJRT backend is not compiled into this build — rebuild with \
+         `--features pjrt` (and the `xla` dependency), or select the \
+         CpuRef backend (DUALSPARSE_BACKEND=cpu)"
+    )
+}
+
+/// Build a backend. `DUALSPARSE_BACKEND` (auto | cpu | pjrt) overrides
+/// `kind` when set.
+pub fn make_backend(kind: BackendKind, artifacts_dir: &Path) -> Result<Box<dyn Backend>> {
+    let kind = match std::env::var("DUALSPARSE_BACKEND") {
+        Ok(v) if !v.is_empty() => BackendKind::parse(&v)?,
+        _ => kind,
+    };
+    match kind {
+        BackendKind::CpuRef => Ok(Box::new(cpu::CpuRef::new())),
+        BackendKind::Pjrt => make_pjrt(artifacts_dir),
+        BackendKind::Auto => {
+            if cfg!(feature = "pjrt") && has_artifacts(artifacts_dir) {
+                make_pjrt(artifacts_dir)
+            } else {
+                Ok(Box::new(cpu::CpuRef::new()))
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("cpu").unwrap(), BackendKind::CpuRef);
+        assert_eq!(BackendKind::parse("CPUREF").unwrap(), BackendKind::CpuRef);
+        assert_eq!(BackendKind::parse("pjrt").unwrap(), BackendKind::Pjrt);
+        assert_eq!(BackendKind::parse("auto").unwrap(), BackendKind::Auto);
+        assert!(BackendKind::parse("tpu").is_err());
+    }
+
+    #[test]
+    fn counters_accumulate_and_filter() {
+        let c = ExecCounters::default();
+        c.record("ffn_h64_c4", 0.5);
+        c.record("ffn_h64_c4", 0.25);
+        c.record("gate_b2_e8", 1.0);
+        assert_eq!(c.distinct(), 2);
+        assert_eq!(c.snapshot()["ffn_h64_c4"].0, 2);
+        assert!((c.time_with_prefix("ffn_") - 0.75).abs() < 1e-12);
+        assert!((c.time_with_prefix("") - 1.75).abs() < 1e-12);
+        c.reset();
+        assert_eq!(c.distinct(), 0);
+    }
+
+    #[test]
+    fn auto_backend_without_artifacts_is_cpu() {
+        let b = make_backend(BackendKind::Auto, Path::new("/nonexistent-dir")).unwrap();
+        assert_eq!(b.platform(), "cpu-ref");
     }
 }

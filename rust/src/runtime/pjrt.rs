@@ -1,0 +1,150 @@
+//! PJRT runtime: load AOT HLO-text artifacts, compile once, execute from
+//! the serving hot path. Compiled only with the `pjrt` cargo feature
+//! (requires the `xla` crate in the vendor set).
+//!
+//! Interchange is HLO *text* (see `python/compile/aot.py` and
+//! DESIGN.md §6). Every artifact was lowered with `return_tuple=True`,
+//! so execution always yields a tuple literal which we decompose.
+//!
+//! The xla crate's handles wrap raw pointers and are `!Send`; a
+//! [`PjrtRuntime`] therefore lives on one thread. The EP runtime gives
+//! each simulated device thread its own runtime — which also faithfully
+//! models per-device compiled executables under expert parallelism.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::model::Tensor;
+
+use super::{Arg, Backend, BufId, ExecCounters};
+
+/// One compiled artifact.
+pub struct Exec {
+    pub name: String,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// Executable registry bound to one PJRT (CPU) client.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+    artifacts_dir: PathBuf,
+    cache: RefCell<HashMap<String, Rc<Exec>>>,
+    /// Device-resident weight buffers addressed by [`BufId`].
+    bufs: RefCell<Vec<xla::PjRtBuffer>>,
+    counters: ExecCounters,
+}
+
+impl PjrtRuntime {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtRuntime {
+            client,
+            artifacts_dir: artifacts_dir.to_path_buf(),
+            cache: RefCell::new(HashMap::new()),
+            bufs: RefCell::new(Vec::new()),
+            counters: ExecCounters::default(),
+        })
+    }
+
+    /// Load + compile an artifact by name (cached).
+    pub fn load(&self, name: &str) -> Result<Rc<Exec>> {
+        if let Some(e) = self.cache.borrow().get(name) {
+            return Ok(e.clone());
+        }
+        let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            bail!("artifact {name} not found at {path:?} — run `make artifacts`");
+        }
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().context("non-utf8 path")?)
+            .with_context(|| format!("parsing {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {name}"))?;
+        let e = Rc::new(Exec { name: name.to_string(), exe });
+        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        Ok(e)
+    }
+}
+
+impl Backend for PjrtRuntime {
+    fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Upload a host tensor to a device-resident buffer (weights path).
+    fn upload(&self, t: &Tensor) -> Result<BufId> {
+        let buf = self.client.buffer_from_host_buffer(&t.data, &t.shape, None)?;
+        let mut bufs = self.bufs.borrow_mut();
+        bufs.push(buf);
+        Ok(BufId(bufs.len() - 1))
+    }
+
+    /// Execute an artifact; host args are uploaded per call, `Arg::Buf`
+    /// args are passed as-is. Returns the decomposed output tuple.
+    fn exec(&self, name: &str, args: &[Arg]) -> Result<Vec<Tensor>> {
+        let exec = self.load(name)?;
+        let t0 = std::time::Instant::now();
+        let persistent = self.bufs.borrow();
+        // Owned buffers for the host-side args (kept alive through the
+        // execute call); `refs` mixes them with the persistent ones.
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut slots: Vec<Option<usize>> = Vec::with_capacity(args.len());
+        for a in args {
+            match a {
+                Arg::F32(t) => {
+                    owned.push(self.client.buffer_from_host_buffer(&t.data, &t.shape, None)?);
+                    slots.push(Some(owned.len() - 1));
+                }
+                Arg::I32(v) => {
+                    owned.push(self.client.buffer_from_host_buffer(v, &[v.len()], None)?);
+                    slots.push(Some(owned.len() - 1));
+                }
+                Arg::Buf(_) => slots.push(None),
+            }
+        }
+        let refs: Vec<&xla::PjRtBuffer> = args
+            .iter()
+            .zip(&slots)
+            .map(|(a, s)| match (a, s) {
+                (Arg::Buf(id), _) => &persistent[id.0],
+                (_, Some(i)) => &owned[*i],
+                _ => unreachable!(),
+            })
+            .collect();
+        let result = exec.exe.execute_b::<&xla::PjRtBuffer>(&refs)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for lit in parts {
+            let shape = lit.array_shape()?;
+            let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+            let data = lit.to_vec::<f32>()?;
+            out.push(Tensor::new(dims, data));
+        }
+        self.counters.record(name, t0.elapsed().as_secs_f64());
+        // decompose_tuple returns elements in declaration order already.
+        Ok(out)
+    }
+
+    /// Number of distinct compiled artifacts held by this runtime.
+    fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+
+    fn reset_counters(&self) {
+        self.counters.reset();
+    }
+
+    fn time_with_prefix(&self, prefix: &str) -> f64 {
+        self.counters.time_with_prefix(prefix)
+    }
+
+    fn exec_counts(&self) -> HashMap<String, (u64, f64)> {
+        self.counters.snapshot()
+    }
+}

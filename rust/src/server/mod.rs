@@ -9,6 +9,7 @@ use crate::engine::batcher::{serve, Request, ServeStats};
 use crate::engine::Engine;
 use crate::moe::DropPolicy;
 use crate::util::rng::SplitMix64;
+use crate::util::stats::speedup_ratio;
 
 /// A serving workload: prompts drawn from the benchmark task mixture
 /// with a deterministic shuffle (stand-in for "2000 random prompts").
@@ -70,11 +71,13 @@ pub fn run_once(engine: &mut Engine, reqs: &[Request], policy: DropPolicy,
 }
 
 /// Fill speedups of `runs` relative to `baseline` (Fig. 10/11 columns).
+/// Ratios are guarded: when either side's phase time is too small to
+/// measure (instant `CpuRef` runs), the column reports a neutral 1.0
+/// instead of a division-by-near-zero artifact.
 pub fn compare(baseline: &RunReport, runs: &mut [RunReport]) {
     for r in runs.iter_mut() {
-        r.moe_speedup = baseline.stats.moe_secs / r.stats.moe_secs.max(1e-12);
-        r.e2e_speedup =
-            baseline.stats.artifact_secs / r.stats.artifact_secs.max(1e-12);
+        r.moe_speedup = speedup_ratio(baseline.stats.moe_secs, r.stats.moe_secs);
+        r.e2e_speedup = speedup_ratio(baseline.stats.artifact_secs, r.stats.artifact_secs);
     }
 }
 
@@ -94,6 +97,28 @@ pub fn format_report(r: &RunReport) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn compare_guards_instant_runs() {
+        let mk = |moe: f64, art: f64| RunReport {
+            label: "x".into(),
+            stats: ServeStats { moe_secs: moe, artifact_secs: art, ..Default::default() },
+            moe_speedup: 1.0,
+            e2e_speedup: 1.0,
+        };
+        // measurable times → real ratio
+        let base = mk(2.0, 4.0);
+        let mut runs = vec![mk(1.0, 2.0)];
+        compare(&base, &mut runs);
+        assert_eq!(runs[0].moe_speedup, 2.0);
+        assert_eq!(runs[0].e2e_speedup, 2.0);
+        // instant CpuRef-style run → neutral 1.0, not an inflated column
+        let base = mk(0.0, 0.0);
+        let mut runs = vec![mk(1e-12, 1e-12)];
+        compare(&base, &mut runs);
+        assert_eq!(runs[0].moe_speedup, 1.0);
+        assert_eq!(runs[0].e2e_speedup, 1.0);
+    }
 
     #[test]
     fn workload_is_deterministic_and_shuffled() {

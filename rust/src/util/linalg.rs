@@ -1,9 +1,11 @@
 //! Pure-Rust reference math over host tensors.
 //!
-//! Not on the serving hot path (that goes through PJRT artifacts) — this
-//! exists for property tests (partition/reconstruction invariants),
-//! baseline weight surgery (Wanda 2:4), and cross-checking artifact
-//! outputs without a Python round trip.
+//! These are the shared kernels behind the `CpuRef` backend
+//! (`runtime::cpu`) — the hermetic serving hot path when no AOT
+//! artifacts exist — and are also used by property tests
+//! (partition/reconstruction invariants), baseline weight surgery
+//! (Wanda 2:4), and cross-checking artifact outputs without a Python
+//! round trip.
 
 use crate::model::Tensor;
 
@@ -26,6 +28,29 @@ pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
             for j in 0..n {
                 orow[j] += av * brow[j];
             }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+/// C = A[m,k] @ B[n,k]ᵀ (B is accessed row-wise — the tied-embedding
+/// LM head projects onto `emb` rows without materializing a transpose).
+pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
+    assert_eq!(a.shape.len(), 2);
+    assert_eq!(b.shape.len(), 2);
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let (n, k2) = (b.shape[0], b.shape[1]);
+    assert_eq!(k, k2, "matmul_bt shape mismatch");
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        let arow = &a.data[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b.data[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += arow[p] * brow[p];
+            }
+            out[i * n + j] = acc;
         }
     }
     Tensor::new(vec![m, n], out)
@@ -121,6 +146,15 @@ mod tests {
         assert_eq!(matmul(&a, &b).data, a.data);
         let c = matmul(&a, &a);
         assert_eq!(c.data, vec![7., 10., 15., 22.]);
+    }
+
+    #[test]
+    fn matmul_bt_matches_explicit_transpose() {
+        let a = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let b = Tensor::new(vec![2, 3], vec![1., 0., 1., 0., 1., 0.]);
+        // bᵀ is [[1,0],[0,1],[1,0]] → a@bᵀ = [[4,2],[10,5]]
+        assert_eq!(matmul_bt(&a, &b).data, vec![4., 2., 10., 5.]);
+        assert_eq!(matmul_bt(&a, &b).shape, vec![2, 2]);
     }
 
     #[test]

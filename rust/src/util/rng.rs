@@ -42,6 +42,15 @@ impl SplitMix64 {
     pub fn f64(&mut self) -> f64 {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
+
+    /// Standard normal via Box-Muller (deterministic; used for the
+    /// synthetic test-weight materialization and fuzz fixtures — the
+    /// Python fixture generator mirrors this exact formula).
+    pub fn gauss(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-12);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
 }
 
 #[cfg(test)]
@@ -73,6 +82,17 @@ mod tests {
             let x = r.f64();
             assert!((0.0..1.0).contains(&x));
         }
+    }
+
+    #[test]
+    fn gauss_is_roughly_standard_normal() {
+        let mut r = SplitMix64::new(42);
+        let n = 4000;
+        let xs: Vec<f64> = (0..n).map(|_| r.gauss()).collect();
+        let mean: f64 = xs.iter().sum::<f64>() / n as f64;
+        let var: f64 = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.1, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.15, "var {var}");
     }
 
     #[test]

@@ -35,6 +35,23 @@ pub fn percentile(xs: &[f64], p: f64) -> f64 {
     }
 }
 
+/// Guarded speedup ratio for timing columns. Sub-microsecond phase
+/// times (instant `CpuRef` runs, or a phase that never executed) carry
+/// no signal — dividing them inflates speedup columns with noise, so
+/// both operands must be measurable or the ratio reports a neutral 1.0.
+pub fn speedup_ratio(base_secs: f64, new_secs: f64) -> f64 {
+    const MIN_MEASURABLE_SECS: f64 = 1e-6;
+    if !base_secs.is_finite()
+        || !new_secs.is_finite()
+        || base_secs < MIN_MEASURABLE_SECS
+        || new_secs < MIN_MEASURABLE_SECS
+    {
+        1.0
+    } else {
+        base_secs / new_secs
+    }
+}
+
 /// Histogram with fixed-width bins over [lo, hi); counts outliers in the
 /// edge bins. Used for the Fig. 6 gating-score distributions.
 pub fn histogram(xs: &[f64], lo: f64, hi: f64, bins: usize) -> Vec<usize> {
@@ -99,6 +116,15 @@ mod tests {
         assert_eq!(h[0], 2); // -1.0 clamped + 0.05
         assert_eq!(h[1], 1);
         assert_eq!(h[9], 1); // 2.0 clamped
+    }
+
+    #[test]
+    fn speedup_ratio_guards_instant_runs() {
+        assert_eq!(speedup_ratio(2.0, 1.0), 2.0);
+        assert_eq!(speedup_ratio(0.0, 1.0), 1.0);
+        assert_eq!(speedup_ratio(1.0, 0.0), 1.0);
+        assert_eq!(speedup_ratio(1e-9, 1e-12), 1.0); // both unmeasurable
+        assert_eq!(speedup_ratio(f64::NAN, 1.0), 1.0);
     }
 
     #[test]

@@ -1,0 +1,261 @@
+//! Backend-parity and mathematical-consistency fuzz tests (SplitMix64-
+//! seeded, hermetic on `CpuRef`).
+//!
+//! The paper's §3 claim — expert partition/reconstruction is output-
+//! preserving, and 2T dropping removes exactly the dropped terms of a
+//! linear combination — stated as executable properties:
+//!
+//! 1. full-expert output ≈ major + minor reconstructed sub-expert sum
+//!    (any importance permutation, any split point), within 1e-4;
+//! 2. a 2T-drop plan's output plus the explicitly-reconstructed dropped
+//!    terms equals the NoDrop reference (linearity identity, Eq. 3);
+//! 3. the `CpuRef` backend executes sub-experts exactly like the shared
+//!    `util::linalg` kernels it is built from.
+
+use dualsparse::model::Tensor;
+use dualsparse::moe::{
+    importance_order, plan_dispatch, route_token, DropPolicy, TokenRouting,
+};
+use dualsparse::runtime::{Arg, Backend, CpuRef};
+use dualsparse::util::linalg::{add_scaled, matmul, max_abs_diff, softmax_rows, swiglu_ffn};
+use dualsparse::util::rng::SplitMix64;
+
+fn randn(rng: &mut SplitMix64, shape: Vec<usize>, scale: f32) -> Tensor {
+    let n = shape.iter().product();
+    Tensor::new(shape, (0..n).map(|_| rng.gauss() as f32 * scale).collect())
+}
+
+/// Split (w1, w3, w2) into the (major, minor) halves given a neuron
+/// order — the serving-side reconstruction of `moe::partition`.
+fn split_expert(
+    w1: &Tensor,
+    w3: &Tensor,
+    w2: &Tensor,
+    order: &[usize],
+    cut: usize,
+) -> ((Tensor, Tensor, Tensor), (Tensor, Tensor, Tensor)) {
+    let (maj, min_) = order.split_at(cut);
+    (
+        (w1.gather_cols(maj), w3.gather_cols(maj), w2.gather_rows(maj)),
+        (w1.gather_cols(min_), w3.gather_cols(min_), w2.gather_rows(min_)),
+    )
+}
+
+#[test]
+fn full_expert_equals_major_plus_minor_fuzz() {
+    // Acceptance property: fuzzed full-expert output vs reconstructed
+    // major+minor sum within 1e-4, across random shapes, permutations
+    // and split points.
+    let mut rng = SplitMix64::new(0x9A817);
+    for case in 0..40 {
+        let d = 4 + 4 * rng.below(4); // 4..16
+        let h = 2 * (1 + rng.below(8)); // even 2..16
+        let c = 1 + rng.below(6);
+        let x = randn(&mut rng, vec![c, d], 0.5);
+        let w1 = randn(&mut rng, vec![d, h], 0.4);
+        let w3 = randn(&mut rng, vec![d, h], 0.4);
+        let w2 = randn(&mut rng, vec![h, d], 0.4);
+        // random importance table → descending permutation
+        let imp: Vec<f32> = (0..h).map(|_| rng.f64() as f32).collect();
+        let order = importance_order(&imp);
+        let cut = 1 + rng.below(h - 1); // any interior split, not only h/2
+        let ((m1, m3, m2), (n1, n3, n2)) = split_expert(&w1, &w3, &w2, &order, cut);
+        let full = swiglu_ffn(&x, &w1, &w3, &w2);
+        let major = swiglu_ffn(&x, &m1, &m3, &m2);
+        let minor = swiglu_ffn(&x, &n1, &n3, &n2);
+        let mut recon = major.clone();
+        add_scaled(&mut recon, &minor, 1.0);
+        let err = max_abs_diff(&full, &recon);
+        assert!(
+            err < 1e-4,
+            "case {case}: full vs major+minor |Δ|={err} (d={d} h={h} cut={cut})"
+        );
+    }
+}
+
+#[test]
+fn cpu_backend_matches_shared_kernels_on_sub_experts_fuzz() {
+    // The engine hot path calls the backend; property tests call
+    // util::linalg. Pin the two together on fuzzed sub-expert shapes.
+    let be = CpuRef::new();
+    let mut rng = SplitMix64::new(0xBACCE);
+    for _ in 0..20 {
+        let d = 8;
+        let h = 2 * (1 + rng.below(6));
+        let c = 1 + rng.below(5);
+        let x = randn(&mut rng, vec![c, d], 0.5);
+        let w1 = randn(&mut rng, vec![d, h], 0.4);
+        let w3 = randn(&mut rng, vec![d, h], 0.4);
+        let w2 = randn(&mut rng, vec![h, d], 0.4);
+        let out = be
+            .exec(
+                &format!("ffn_h{h}_c{c}"),
+                &[Arg::F32(&x), Arg::F32(&w1), Arg::F32(&w3), Arg::F32(&w2)],
+            )
+            .unwrap();
+        assert_eq!(out[0].data, swiglu_ffn(&x, &w1, &w3, &w2).data);
+    }
+}
+
+/// Dense NoDrop MoE reference for a routed batch: Σ score · f_e(x).
+fn moe_reference(
+    x: &Tensor,
+    routings: &[TokenRouting],
+    experts: &[(Tensor, Tensor, Tensor)],
+) -> Tensor {
+    let d = x.shape[1];
+    let mut out = Tensor::zeros(vec![x.shape[0], d]);
+    for (row, r) in routings.iter().enumerate() {
+        let xr = x.row_slice(row, row + 1);
+        for &(e, score, _) in &r.experts {
+            let (w1, w3, w2) = &experts[e];
+            let y = swiglu_ffn(&xr, w1, w3, w2);
+            for j in 0..d {
+                out.data[row * d + j] += score * y.data[j];
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn two_t_drop_output_is_bounded_by_no_drop_reference_fuzz() {
+    // Linearity identity (Eq. 3 + §4.2): y_nodrop − y_2T is *exactly*
+    // the sum of the dropped terms — score·f_e(x) for dropped pairs and
+    // score·minor_e(x) for major-only pairs. Reconstructing those terms
+    // and adding them back must close the gap to f32 round-off; in
+    // particular the 2T output error is bounded by the dropped mass.
+    let mut rng = SplitMix64::new(0x2217D);
+    for case in 0..15 {
+        let (d, h, n_exp, top_k) = (8usize, 8usize, 6usize, 2usize);
+        let n_tok = 2 + rng.below(5);
+        let x = randn(&mut rng, vec![n_tok, d], 0.5);
+        let experts: Vec<(Tensor, Tensor, Tensor)> = (0..n_exp)
+            .map(|_| {
+                (
+                    randn(&mut rng, vec![d, h], 0.4),
+                    randn(&mut rng, vec![d, h], 0.4),
+                    randn(&mut rng, vec![h, d], 0.4),
+                )
+            })
+            .collect();
+        let wg = randn(&mut rng, vec![d, n_exp], 0.6);
+        let probs = softmax_rows(&matmul(&x, &wg));
+        let routings: Vec<TokenRouting> = (0..n_tok)
+            .map(|r| route_token(probs.row(r), top_k, false))
+            .collect();
+        // reconstruction split of every expert at h/2 by random importance
+        let splits: Vec<_> = experts
+            .iter()
+            .map(|(w1, w3, w2)| {
+                let imp: Vec<f32> = (0..h).map(|_| rng.f64() as f32).collect();
+                split_expert(w1, w3, w2, &importance_order(&imp), h / 2)
+            })
+            .collect();
+
+        let t = 0.2 + (rng.f64() as f32) * 0.4;
+        let plan = plan_dispatch(&routings, n_exp, DropPolicy::two_t(t), None);
+
+        // 2T output: full pairs run the full expert, major-only pairs
+        // run the major half.
+        let mut y2t = Tensor::zeros(vec![n_tok, d]);
+        for e in 0..n_exp {
+            let (w1, w3, w2) = &experts[e];
+            for &(row, score) in &plan.full[e] {
+                let y = swiglu_ffn(&x.row_slice(row, row + 1), w1, w3, w2);
+                for j in 0..d {
+                    y2t.data[row * d + j] += score * y.data[j];
+                }
+            }
+            let ((m1, m3, m2), _) = &splits[e];
+            for &(row, score) in &plan.major_only[e] {
+                let y = swiglu_ffn(&x.row_slice(row, row + 1), m1, m3, m2);
+                for j in 0..d {
+                    y2t.data[row * d + j] += score * y.data[j];
+                }
+            }
+        }
+
+        // Explicitly reconstruct the dropped terms.
+        let mut missing = Tensor::zeros(vec![n_tok, d]);
+        for (row, r) in routings.iter().enumerate() {
+            for &(e, score, norm) in &r.experts {
+                let dec = DropPolicy::two_t(t).decide(norm);
+                let xr = x.row_slice(row, row + 1);
+                let y = match dec {
+                    dualsparse::moe::Decision::Full => continue,
+                    dualsparse::moe::Decision::MajorOnly => {
+                        let (_, (n1, n3, n2)) = &splits[e];
+                        swiglu_ffn(&xr, n1, n3, n2)
+                    }
+                    dualsparse::moe::Decision::Drop => {
+                        let (w1, w3, w2) = &experts[e];
+                        swiglu_ffn(&xr, w1, w3, w2)
+                    }
+                };
+                for j in 0..d {
+                    missing.data[row * d + j] += score * y.data[j];
+                }
+            }
+        }
+
+        let y_ref = moe_reference(&x, &routings, &experts);
+        let mut closed = y2t.clone();
+        add_scaled(&mut closed, &missing, 1.0);
+        let gap = max_abs_diff(&closed, &y_ref);
+        assert!(gap < 1e-4, "case {case}: identity gap {gap} at T={t}");
+
+        // …and therefore the raw 2T error is bounded by the dropped mass.
+        let err = max_abs_diff(&y2t, &y_ref);
+        let bound: f32 = missing.data.iter().map(|v| v.abs()).fold(0.0, f32::max);
+        assert!(
+            err <= bound + 1e-4,
+            "case {case}: 2T error {err} exceeds dropped-mass bound {bound}"
+        );
+    }
+}
+
+#[test]
+fn no_drop_plan_reproduces_reference_exactly_fuzz() {
+    // Degenerate policy check: a NoDrop dispatch plan executed through
+    // the plan structure equals the dense reference bit-for-bit (same
+    // accumulation order), so the planner adds no numeric drift.
+    let mut rng = SplitMix64::new(0x0DD0);
+    for _ in 0..10 {
+        let (d, h, n_exp, top_k) = (8usize, 6usize, 5usize, 2usize);
+        let n_tok = 2 + rng.below(4);
+        let x = randn(&mut rng, vec![n_tok, d], 0.5);
+        let experts: Vec<(Tensor, Tensor, Tensor)> = (0..n_exp)
+            .map(|_| {
+                (
+                    randn(&mut rng, vec![d, h], 0.4),
+                    randn(&mut rng, vec![d, h], 0.4),
+                    randn(&mut rng, vec![h, d], 0.4),
+                )
+            })
+            .collect();
+        let wg = randn(&mut rng, vec![d, n_exp], 0.6);
+        let probs = softmax_rows(&matmul(&x, &wg));
+        let routings: Vec<TokenRouting> = (0..n_tok)
+            .map(|r| route_token(probs.row(r), top_k, false))
+            .collect();
+        let plan = plan_dispatch(&routings, n_exp, DropPolicy::NoDrop, None);
+        assert_eq!(plan.stats.dropped, 0);
+        assert_eq!(plan.stats.major_only, 0);
+        assert_eq!(plan.kept_pairs(), n_tok * top_k);
+        let mut y = Tensor::zeros(vec![n_tok, d]);
+        for e in 0..n_exp {
+            let (w1, w3, w2) = &experts[e];
+            for &(row, score) in &plan.full[e] {
+                let out = swiglu_ffn(&x.row_slice(row, row + 1), w1, w3, w2);
+                for j in 0..d {
+                    y.data[row * d + j] += score * out.data[j];
+                }
+            }
+        }
+        let y_ref = moe_reference(&x, &routings, &experts);
+        // identical term sets per row; only the f32 accumulation order
+        // differs (expert-index vs score-descending) → round-off only.
+        assert!(max_abs_diff(&y, &y_ref) < 1e-5);
+    }
+}

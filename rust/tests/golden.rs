@@ -1,13 +1,22 @@
-//! Artifact-level golden tests: load each AOT HLO artifact through the
-//! PJRT runtime and compare against input/output pairs generated from
-//! the pure-jnp oracle at build time (artifacts/golden/*.json).
+//! Kernel-level golden tests, hermetic by construction.
 //!
-//! Requires `make artifacts`.
+//! Checked-in fixtures (`rust/tests/fixtures/*.json`, generated once by
+//! `python/tools/gen_fixtures.py` from the pure-Python mirror of the
+//! jnp oracles) pin the **`CpuRef`** numerics — cross-language parity
+//! without running Python in CI. The fixture tests construct `CpuRef`
+//! directly (not via `make_backend`): their tensors use tiny test dims
+//! that no AOT artifact was ever lowered for, and the point is to
+//! assert the reference executor against the Python oracle regardless
+//! of env overrides.
+//!
+//! The legacy artifact goldens (`artifacts/golden/*.json`) run through
+//! `make_backend(Auto)` — PJRT when compiled in, `CpuRef` otherwise —
+//! and are asserted when present instead of panicking when absent.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
-use dualsparse::model::Tensor;
-use dualsparse::runtime::{Arg, Runtime};
+use dualsparse::model::{ModelConfig, Tensor};
+use dualsparse::runtime::{make_backend, Arg, Backend, BackendKind, CpuRef};
 use dualsparse::util::json::Json;
 
 fn artifacts() -> PathBuf {
@@ -16,11 +25,23 @@ fn artifacts() -> PathBuf {
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
 }
 
-fn golden(name: &str) -> Json {
-    let path = artifacts().join("golden").join(format!("{name}.json"));
+/// Backend under test for the fixture goldens: always the reference
+/// executor (see module docs).
+fn backend() -> Box<dyn Backend> {
+    Box::new(CpuRef::new())
+}
+
+fn fixture(name: &str) -> Json {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/fixtures")
+        .join(format!("{name}.json"));
     let text = std::fs::read_to_string(&path)
-        .unwrap_or_else(|_| panic!("{path:?} missing — run `make artifacts`"));
+        .unwrap_or_else(|_| panic!("{path:?} missing — run python/tools/gen_fixtures.py"));
     Json::parse(&text).unwrap()
+}
+
+fn dim(j: &Json, key: &str) -> usize {
+    j.get("dims").unwrap().get(key).unwrap().as_usize().unwrap()
 }
 
 fn tensor(j: &Json, key: &str, shape: Vec<usize>) -> Tensor {
@@ -37,90 +58,183 @@ fn assert_close(got: &Tensor, want: &[f32], tol: f32, what: &str) {
 }
 
 #[test]
-fn ffn_artifact_matches_oracle() {
-    let rt = Runtime::new(&artifacts()).unwrap();
-    let g = golden("ffn_h64_c4");
-    let x = tensor(&g, "x", vec![4, 64]);
-    let w1 = tensor(&g, "w1", vec![64, 64]);
-    let w3 = tensor(&g, "w3", vec![64, 64]);
-    let w2 = tensor(&g, "w2", vec![64, 64]);
-    let out = rt
-        .exec("ffn_h64_c4", &[Arg::F32(&x), Arg::F32(&w1), Arg::F32(&w3), Arg::F32(&w2)])
+fn ffn_matches_python_fixture() {
+    let be = backend();
+    let g = fixture("ffn_h12_c4");
+    let (c, d, h) = (dim(&g, "c"), dim(&g, "d"), dim(&g, "h"));
+    let x = tensor(&g, "x", vec![c, d]);
+    let w1 = tensor(&g, "w1", vec![d, h]);
+    let w3 = tensor(&g, "w3", vec![d, h]);
+    let w2 = tensor(&g, "w2", vec![h, d]);
+    let out = be
+        .exec(
+            &format!("ffn_h{h}_c{c}"),
+            &[Arg::F32(&x), Arg::F32(&w1), Arg::F32(&w3), Arg::F32(&w2)],
+        )
         .unwrap();
     let want = g.get("y").unwrap().as_f32_vec().unwrap();
-    assert_close(&out[0], &want, 1e-4, "ffn_h64_c4");
+    assert_close(&out[0], &want, 1e-4, "ffn_h12_c4");
 }
 
 #[test]
-fn ffn_artifact_matches_rust_reference() {
-    // Pallas artifact vs the in-crate naive implementation: ties the
-    // three layers together without Python in the loop.
-    let rt = Runtime::new(&artifacts()).unwrap();
-    let g = golden("ffn_h64_c4");
-    let x = tensor(&g, "x", vec![4, 64]);
-    let w1 = tensor(&g, "w1", vec![64, 64]);
-    let w3 = tensor(&g, "w3", vec![64, 64]);
-    let w2 = tensor(&g, "w2", vec![64, 64]);
-    let out = rt
-        .exec("ffn_h64_c4", &[Arg::F32(&x), Arg::F32(&w1), Arg::F32(&w3), Arg::F32(&w2)])
-        .unwrap();
+fn ffn_fixture_matches_rust_reference() {
+    // Fixture vs the in-crate shared kernel: ties the checked-in Python
+    // oracle values and util::linalg together without a backend.
+    let g = fixture("ffn_h12_c4");
+    let (c, d, h) = (dim(&g, "c"), dim(&g, "d"), dim(&g, "h"));
+    let x = tensor(&g, "x", vec![c, d]);
+    let w1 = tensor(&g, "w1", vec![d, h]);
+    let w3 = tensor(&g, "w3", vec![d, h]);
+    let w2 = tensor(&g, "w2", vec![h, d]);
     let rust_ref = dualsparse::util::linalg::swiglu_ffn(&x, &w1, &w3, &w2);
-    assert_close(&out[0], &rust_ref.data, 1e-4, "ffn vs rust ref");
+    let want = g.get("y").unwrap().as_f32_vec().unwrap();
+    assert_close(&rust_ref, &want, 1e-4, "ffn vs rust ref");
 }
 
 #[test]
-fn gate_artifact_matches_oracle() {
-    let rt = Runtime::new(&artifacts()).unwrap();
-    let g = golden("gate_b2_e8");
-    let x = tensor(&g, "x", vec![2, 64]);
-    let wg = tensor(&g, "wg", vec![64, 8]);
-    let out = rt.exec("gate_b2_e8", &[Arg::F32(&x), Arg::F32(&wg)]).unwrap();
+fn gate_matches_python_fixture() {
+    let be = backend();
+    let g = fixture("gate_b3_e8");
+    let (b, d, e) = (dim(&g, "b"), dim(&g, "d"), dim(&g, "e"));
+    let x = tensor(&g, "x", vec![b, d]);
+    let wg = tensor(&g, "wg", vec![d, e]);
+    let out = be
+        .exec(&format!("gate_b{b}_e{e}"), &[Arg::F32(&x), Arg::F32(&wg)])
+        .unwrap();
     let want = g.get("probs").unwrap().as_f32_vec().unwrap();
-    assert_close(&out[0], &want, 1e-5, "gate_b2_e8");
+    assert_close(&out[0], &want, 1e-5, "gate_b3_e8");
     // rows are probability distributions
-    for r in 0..2 {
+    for r in 0..b {
         let s: f32 = out[0].row(r).iter().sum();
         assert!((s - 1.0).abs() < 1e-5);
     }
 }
 
 #[test]
-fn probe_artifact_matches_oracle() {
-    let rt = Runtime::new(&artifacts()).unwrap();
-    let g = golden("probe_h64");
-    let x = tensor(&g, "x", vec![32, 64]);
-    let w1 = tensor(&g, "w1", vec![64, 64]);
-    let w3 = tensor(&g, "w3", vec![64, 64]);
-    let out = rt
-        .exec("probe_h64", &[Arg::F32(&x), Arg::F32(&w1), Arg::F32(&w3)])
+fn probe_matches_python_fixture() {
+    let be = backend();
+    let g = fixture("probe_h12");
+    let (c, d, h) = (dim(&g, "c"), dim(&g, "d"), dim(&g, "h"));
+    let x = tensor(&g, "x", vec![c, d]);
+    let w1 = tensor(&g, "w1", vec![d, h]);
+    let w3 = tensor(&g, "w3", vec![d, h]);
+    let out = be
+        .exec(&format!("probe_h{h}"), &[Arg::F32(&x), Arg::F32(&w1), Arg::F32(&w3)])
         .unwrap();
     let want = g.get("imp").unwrap().as_f32_vec().unwrap();
-    assert_close(&out[0], &want, 2e-3, "probe_h64");
+    assert_close(&out[0], &want, 2e-3, "probe_h12");
 }
 
 #[test]
-fn attn_step_artifact_matches_oracle() {
-    let rt = Runtime::new(&artifacts()).unwrap();
-    let g = golden("attn_step_b1");
-    let d = 64;
-    let x = tensor(&g, "x", vec![1, d]);
+fn lm_head_matches_python_fixture() {
+    let be = backend();
+    let g = fixture("lm_head_b2");
+    let (b, d, v) = (dim(&g, "b"), dim(&g, "d"), dim(&g, "v"));
+    let x = tensor(&g, "x", vec![b, d]);
+    let lnf = tensor(&g, "lnf", vec![d]);
+    let emb = tensor(&g, "emb", vec![v, d]);
+    let out = be
+        .exec(
+            &format!("lm_head_b{b}"),
+            &[Arg::F32(&x), Arg::F32(&lnf), Arg::F32(&emb)],
+        )
+        .unwrap();
+    let want = g.get("logits").unwrap().as_f32_vec().unwrap();
+    assert_close(&out[0], &want, 1e-4, "lm_head_b2");
+}
+
+fn fixture_cfg(n_heads: usize, d_head: usize) -> ModelConfig {
+    ModelConfig {
+        name: "fixture".into(),
+        d_model: n_heads * d_head,
+        n_layers: 1,
+        n_heads,
+        d_head,
+        vocab: 256,
+        max_seq: 16,
+        n_experts: 2,
+        d_ffn: 4,
+        top_k: 1,
+        n_shared: 0,
+        d_ffn_shared: 0,
+        normalized_gating: false,
+    }
+}
+
+#[test]
+fn attn_prefill_matches_python_fixture() {
+    let be = backend();
+    let g = fixture("attn_prefill_s4");
+    let (s, d) = (dim(&g, "s"), dim(&g, "d"));
+    let (nh, dh) = (dim(&g, "n_heads"), dim(&g, "d_head"));
+    be.set_model(&fixture_cfg(nh, dh));
+    let x = tensor(&g, "x", vec![s, d]);
     let ln1 = tensor(&g, "ln1", vec![d]);
     let wq = tensor(&g, "wq", vec![d, d]);
     let wk = tensor(&g, "wk", vec![d, d]);
     let wv = tensor(&g, "wv", vec![d, d]);
     let wo = tensor(&g, "wo", vec![d, d]);
     let ln2 = tensor(&g, "ln2", vec![d]);
-    let kc = tensor(&g, "kcache", vec![1, 4, 160, 16]);
-    let vc = tensor(&g, "vcache", vec![1, 4, 160, 16]);
-    let pos_f = g.get("pos_f").unwrap().as_f32_vec().unwrap();
-    let pos: Vec<i32> = pos_f.iter().map(|&x| x as i32).collect();
-    let out = rt
+    let out = be
         .exec(
-            "attn_step_b1",
+            &format!("attn_prefill_s{s}"),
             &[
-                Arg::F32(&x), Arg::F32(&ln1), Arg::F32(&wq), Arg::F32(&wk),
-                Arg::F32(&wv), Arg::F32(&wo), Arg::F32(&ln2), Arg::F32(&kc),
-                Arg::F32(&vc), Arg::I32(&pos),
+                Arg::F32(&x),
+                Arg::F32(&ln1),
+                Arg::F32(&wq),
+                Arg::F32(&wk),
+                Arg::F32(&wv),
+                Arg::F32(&wo),
+                Arg::F32(&ln2),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 4);
+    assert_close(&out[0], &g.get("y").unwrap().as_f32_vec().unwrap(), 1e-4, "y");
+    assert_close(&out[1], &g.get("ln2x").unwrap().as_f32_vec().unwrap(), 1e-4, "ln2x");
+    assert_close(&out[2], &g.get("k").unwrap().as_f32_vec().unwrap(), 1e-4, "k");
+    assert_close(&out[3], &g.get("v").unwrap().as_f32_vec().unwrap(), 1e-4, "v");
+    assert_eq!(out[2].shape, vec![s, nh, dh]);
+}
+
+#[test]
+fn attn_step_matches_python_fixture() {
+    let be = backend();
+    let g = fixture("attn_step_b2");
+    let (b, d) = (dim(&g, "b"), dim(&g, "d"));
+    let (nh, dh, t) = (dim(&g, "n_heads"), dim(&g, "d_head"), dim(&g, "t_max"));
+    be.set_model(&fixture_cfg(nh, dh));
+    let x = tensor(&g, "x", vec![b, d]);
+    let ln1 = tensor(&g, "ln1", vec![d]);
+    let wq = tensor(&g, "wq", vec![d, d]);
+    let wk = tensor(&g, "wk", vec![d, d]);
+    let wv = tensor(&g, "wv", vec![d, d]);
+    let wo = tensor(&g, "wo", vec![d, d]);
+    let ln2 = tensor(&g, "ln2", vec![d]);
+    let kc = tensor(&g, "kcache", vec![b, nh, t, dh]);
+    let vc = tensor(&g, "vcache", vec![b, nh, t, dh]);
+    let pos: Vec<i32> = g
+        .get("pos")
+        .unwrap()
+        .as_f32_vec()
+        .unwrap()
+        .iter()
+        .map(|&x| x as i32)
+        .collect();
+    let out = be
+        .exec(
+            &format!("attn_step_b{b}"),
+            &[
+                Arg::F32(&x),
+                Arg::F32(&ln1),
+                Arg::F32(&wq),
+                Arg::F32(&wk),
+                Arg::F32(&wv),
+                Arg::F32(&wo),
+                Arg::F32(&ln2),
+                Arg::F32(&kc),
+                Arg::F32(&vc),
+                Arg::I32(&pos),
             ],
         )
         .unwrap();
@@ -135,25 +249,101 @@ fn attn_step_artifact_matches_oracle() {
 fn capacity_buckets_are_consistent() {
     // The same rows fed through different capacity buckets (padded with
     // zeros) must produce the same outputs for the real rows.
-    let rt = Runtime::new(&artifacts()).unwrap();
-    let g = golden("ffn_h64_c4");
-    let x4 = tensor(&g, "x", vec![4, 64]);
-    let w1 = tensor(&g, "w1", vec![64, 64]);
-    let w3 = tensor(&g, "w3", vec![64, 64]);
-    let w2 = tensor(&g, "w2", vec![64, 64]);
+    let be = backend();
+    let g = fixture("ffn_h12_c4");
+    let (c, d, h) = (dim(&g, "c"), dim(&g, "d"), dim(&g, "h"));
+    let x4 = tensor(&g, "x", vec![c, d]);
+    let w1 = tensor(&g, "w1", vec![d, h]);
+    let w3 = tensor(&g, "w3", vec![d, h]);
+    let w2 = tensor(&g, "w2", vec![h, d]);
     let mut x8 = x4.data.clone();
-    x8.resize(8 * 64, 0.0);
-    let x8 = Tensor::new(vec![8, 64], x8);
-    let y4 = rt
-        .exec("ffn_h64_c4", &[Arg::F32(&x4), Arg::F32(&w1), Arg::F32(&w3), Arg::F32(&w2)])
+    x8.resize(2 * c * d, 0.0);
+    let x8 = Tensor::new(vec![2 * c, d], x8);
+    let y4 = be
+        .exec(
+            &format!("ffn_h{h}_c{c}"),
+            &[Arg::F32(&x4), Arg::F32(&w1), Arg::F32(&w3), Arg::F32(&w2)],
+        )
         .unwrap();
-    let y8 = rt
-        .exec("ffn_h64_c8", &[Arg::F32(&x8), Arg::F32(&w1), Arg::F32(&w3), Arg::F32(&w2)])
+    let y8 = be
+        .exec(
+            &format!("ffn_h{h}_c{}", 2 * c),
+            &[Arg::F32(&x8), Arg::F32(&w1), Arg::F32(&w3), Arg::F32(&w2)],
+        )
         .unwrap();
     assert_close(
-        &Tensor::new(vec![4, 64], y8[0].data[..4 * 64].to_vec()),
+        &Tensor::new(vec![c, d], y8[0].data[..c * d].to_vec()),
         &y4[0].data,
         1e-5,
         "bucket consistency",
     );
+}
+
+// ---------------------------------------------------------------------
+// Legacy artifact goldens — asserted only when a `make artifacts` tree
+// is actually present (they used to panic when it was not).
+// ---------------------------------------------------------------------
+
+/// Backend for the legacy artifact goldens: whatever `Auto` resolves
+/// to (PJRT with artifacts + feature, `CpuRef` otherwise).
+fn auto_backend() -> Box<dyn Backend> {
+    make_backend(BackendKind::Auto, &artifacts()).expect("backend")
+}
+
+fn artifact_golden(name: &str) -> Option<Json> {
+    let path = artifacts().join("golden").join(format!("{name}.json"));
+    let text = std::fs::read_to_string(&path).ok()?;
+    Some(Json::parse(&text).unwrap())
+}
+
+#[test]
+fn artifact_ffn_golden_when_present() {
+    let Some(g) = artifact_golden("ffn_h64_c4") else {
+        eprintln!("(no artifacts tree — skipping PJRT-era golden check)");
+        return;
+    };
+    let be = auto_backend();
+    let x = tensor(&g, "x", vec![4, 64]);
+    let w1 = tensor(&g, "w1", vec![64, 64]);
+    let w3 = tensor(&g, "w3", vec![64, 64]);
+    let w2 = tensor(&g, "w2", vec![64, 64]);
+    let out = be
+        .exec(
+            "ffn_h64_c4",
+            &[Arg::F32(&x), Arg::F32(&w1), Arg::F32(&w3), Arg::F32(&w2)],
+        )
+        .unwrap();
+    let want = g.get("y").unwrap().as_f32_vec().unwrap();
+    assert_close(&out[0], &want, 1e-4, "ffn_h64_c4");
+}
+
+#[test]
+fn artifact_gate_golden_when_present() {
+    let Some(g) = artifact_golden("gate_b2_e8") else {
+        eprintln!("(no artifacts tree — skipping PJRT-era golden check)");
+        return;
+    };
+    let be = auto_backend();
+    let x = tensor(&g, "x", vec![2, 64]);
+    let wg = tensor(&g, "wg", vec![64, 8]);
+    let out = be.exec("gate_b2_e8", &[Arg::F32(&x), Arg::F32(&wg)]).unwrap();
+    let want = g.get("probs").unwrap().as_f32_vec().unwrap();
+    assert_close(&out[0], &want, 1e-5, "gate_b2_e8");
+}
+
+#[test]
+fn artifact_probe_golden_when_present() {
+    let Some(g) = artifact_golden("probe_h64") else {
+        eprintln!("(no artifacts tree — skipping PJRT-era golden check)");
+        return;
+    };
+    let be = auto_backend();
+    let x = tensor(&g, "x", vec![32, 64]);
+    let w1 = tensor(&g, "w1", vec![64, 64]);
+    let w3 = tensor(&g, "w3", vec![64, 64]);
+    let out = be
+        .exec("probe_h64", &[Arg::F32(&x), Arg::F32(&w1), Arg::F32(&w3)])
+        .unwrap();
+    let want = g.get("imp").unwrap().as_f32_vec().unwrap();
+    assert_close(&out[0], &want, 2e-3, "probe_h64");
 }
