@@ -3,6 +3,8 @@
 //!
 //!     cargo run --release --example comm_sim [ep] [tp]
 
+#![allow(clippy::needless_range_loop, clippy::manual_memcpy, clippy::type_complexity)]
+
 use dualsparse::commsim::{default_sizes, etp_time, setp_time, sweep, Topology};
 
 fn main() {

@@ -5,6 +5,8 @@
 //!
 //!     cargo run --release --example partition_demo
 
+#![allow(clippy::needless_range_loop, clippy::manual_memcpy, clippy::type_complexity)]
+
 use anyhow::Result;
 use dualsparse::engine::artifacts_dir;
 use dualsparse::model::{Tensor, Weights};

@@ -5,6 +5,8 @@
 //!
 //!     cargo run --release --example quickstart
 
+#![allow(clippy::needless_range_loop, clippy::manual_memcpy, clippy::type_complexity)]
+
 use anyhow::Result;
 use dualsparse::engine::{artifacts_dir, EngineOptions};
 use dualsparse::moe::DropPolicy;

@@ -55,7 +55,9 @@ impl KvCache {
         self.n_active < self.max_slots
     }
 
-    fn slot_stride(&self) -> usize {
+    /// Floats per slot per layer (`H · T · dh`) — the row stride of the
+    /// zero-copy per-slot views the engine feeds to `attn_step_*`.
+    pub fn slot_stride(&self) -> usize {
         self.n_heads * self.max_seq * self.d_head
     }
 
@@ -125,16 +127,6 @@ impl KvCache {
         }
     }
 
-    /// The first `b` slots of layer `li` as a `[b, H, T, dh]` tensor
-    /// (copy; fed to the attn_step artifact).
-    pub fn batch_view(&self, layer: usize, b: usize) -> (Tensor, Tensor) {
-        let stride = self.slot_stride();
-        let shape = vec![b, self.n_heads, self.max_seq, self.d_head];
-        (
-            Tensor::new(shape.clone(), self.k[layer].data[..b * stride].to_vec()),
-            Tensor::new(shape, self.v[layer].data[..b * stride].to_vec()),
-        )
-    }
 }
 
 #[cfg(test)]
@@ -192,9 +184,10 @@ mod tests {
             c.write_prefill(li, s, 3, &ks, &ks);
         }
         assert_eq!(c.pos[s], 3);
-        let (bk, _) = c.batch_view(0, 1);
-        assert_eq!(bk.shape, vec![1, 2, 8, 4]);
-        assert_eq!(bk.data[0], 0.5);
+        // slot 0's K landed at the head of the layer-0 cache, which is
+        // exactly the zero-copy slice the engine lends to attn_step
+        assert_eq!(c.k[0].data[0], 0.5);
+        assert_eq!(c.k[0].shape, vec![3, 2, 8, 4]);
     }
 
     #[test]

@@ -18,8 +18,8 @@ use anyhow::{bail, Result};
 
 use crate::model::{ModelConfig, Tensor, Weights};
 use crate::moe::{
-    plan_dispatch, route_token, DropPolicy, DropStats, PartitionedExpert,
-    SubExpert, TokenRouting,
+    plan_dispatch, route_token, DispatchPlan, DropPolicy, DropStats,
+    PartitionedExpert, SubExpert, TokenRouting,
 };
 use crate::runtime::{make_backend, Arg, Backend, BackendKind, BufId};
 use crate::util::round_up_bucket;
@@ -163,6 +163,9 @@ pub struct Engine {
     lnf_buf: BufId,
     emb_buf: BufId,
     pub kv: kv::KvCache,
+    /// One all-zero KV slot (`H · T · dh`), lent to padding rows of the
+    /// decode batch so the zero-copy slice view never clones the cache.
+    zero_slot: Vec<f32>,
     pub policy: DropPolicy,
     pub router_mode: RouterMode,
     pub opts: EngineOptions,
@@ -275,15 +278,18 @@ impl Engine {
         let emb_buf = up(weights.get("emb")?)?;
         let kv = kv::KvCache::new(cfg.n_layers, cfg.n_heads, cfg.max_seq,
                                   cfg.d_head, MAX_SLOTS);
+        let zero_slot = vec![0.0f32; kv.slot_stride()];
         let n_dev = opts.ep.as_ref().map(|e| e.n_devices).unwrap_or(0);
         let placement = (0..cfg.n_experts)
             .map(|e| if n_dev > 0 { e % n_dev } else { 0 })
             .collect();
-        let mut metrics = EngineMetrics::default();
-        metrics.per_layer_drop = vec![DropStats::default(); cfg.n_layers];
-        metrics.expert_counts = vec![vec![0; cfg.n_experts]; cfg.n_layers];
-        metrics.device_time = vec![0.0; n_dev.max(1)];
-        metrics.device_load = vec![0; n_dev.max(1)];
+        let metrics = EngineMetrics {
+            per_layer_drop: vec![DropStats::default(); cfg.n_layers],
+            expert_counts: vec![vec![0; cfg.n_experts]; cfg.n_layers],
+            device_time: vec![0.0; n_dev.max(1)],
+            device_load: vec![0; n_dev.max(1)],
+            ..Default::default()
+        };
         Ok(Engine {
             rt,
             cfg,
@@ -296,6 +302,7 @@ impl Engine {
             lnf_buf,
             emb_buf,
             kv,
+            zero_slot,
             policy,
             router_mode: RouterMode::Standard,
             opts,
@@ -308,12 +315,13 @@ impl Engine {
 
     pub fn reset_metrics(&mut self) {
         let n_dev = self.metrics.device_time.len();
-        self.metrics = EngineMetrics::default();
-        self.metrics.per_layer_drop = vec![DropStats::default(); self.cfg.n_layers];
-        self.metrics.expert_counts =
-            vec![vec![0; self.cfg.n_experts]; self.cfg.n_layers];
-        self.metrics.device_time = vec![0.0; n_dev];
-        self.metrics.device_load = vec![0; n_dev];
+        self.metrics = EngineMetrics {
+            per_layer_drop: vec![DropStats::default(); self.cfg.n_layers],
+            expert_counts: vec![vec![0; self.cfg.n_experts]; self.cfg.n_layers],
+            device_time: vec![0.0; n_dev],
+            device_load: vec![0; n_dev],
+            ..Default::default()
+        };
         self.rt.reset_counters();
     }
 
@@ -322,10 +330,10 @@ impl Engine {
     // ------------------------------------------------------------------
 
     /// x = emb[token] + pos_emb[position], one row per (token, pos).
-    fn embed(&self, tokens: &[u8], positions: &[usize]) -> Tensor {
+    fn embed(&self, tokens: &[u8], positions: &[usize]) -> Result<Tensor> {
         let d = self.cfg.d_model;
-        let emb = self.weights.get("emb").unwrap();
-        let pos = self.weights.get("pos").unwrap();
+        let emb = self.weights.get("emb")?;
+        let pos = self.weights.get("pos")?;
         let mut data = vec![0.0f32; tokens.len() * d];
         for (i, (&t, &p)) in tokens.iter().zip(positions).enumerate() {
             let er = emb.row(t as usize);
@@ -334,7 +342,7 @@ impl Engine {
                 data[i * d + j] = er[j] + pr[j];
             }
         }
-        Tensor::new(vec![tokens.len(), d], data)
+        Ok(Tensor::new(vec![tokens.len(), d], data))
     }
 
     // ------------------------------------------------------------------
@@ -502,46 +510,96 @@ impl Engine {
             self.probe = probe;
         }
 
-        // 4. execute kept work through capacity-bucketed FFN artifacts
-        let mut out = Tensor::zeros(vec![ln2x.shape[0], d]);
-        let ep_on = self.opts.ep.is_some();
+        // 4. execute kept work through capacity-bucketed FFN artifacts,
+        // one worker task per expert.
+        //
         // Sub-expert-granular execution (paper §4.2's grouped-GEMM): when
         // anything runs at reduced width (2T bands, or force_split), the
         // MAJOR sub-expert serves full-band ∪ major-only rows in ONE
         // packed call and the MINOR sub-expert serves the full band —
         // at most two calls per expert, maximally packed.
-        for e in 0..e_count {
+        //
+        // Each expert task scatters into its OWN buffer; buffers are
+        // merged serially in ascending expert order afterwards, so the
+        // result is bit-identical for every thread count (fixed
+        // reduction order). Within a task the packing scratch is reused
+        // between the major and minor calls.
+        let rb_rows = ln2x.shape[0];
+        let ep_on = self.opts.ep.is_some();
+        let work: Vec<usize> = (0..e_count)
+            .filter(|&e| !plan.full[e].is_empty() || !plan.major_only[e].is_empty())
+            .collect();
+        let force_split = self.force_split;
+        let ebufs = &self.ebufs[li];
+        let rt: &dyn Backend = self.rt.as_ref();
+        // Threaded dispatch only when the backend allows concurrent
+        // exec AND the layer is worth it: below ~1M madds the
+        // scoped-thread spawn dominates the GEMMs (single-token
+        // decode). The fallback is an in-order serial walk of the SAME
+        // per-expert-buffer structure, so the numbers are identical
+        // either way.
+        let kept_pairs: usize =
+            work.iter().map(|&e| plan.full[e].len() + plan.major_only[e].len()).sum();
+        let parallel_worthwhile = rt.supports_concurrent_exec()
+            && kept_pairs * d * self.cfg.d_ffn * 6 >= (1 << 20);
+        let expert_task = |wi: usize| -> Result<(Tensor, f64)> {
+            let e = work[wi];
             let full_rows = &plan.full[e];
             let major_rows = &plan.major_only[e];
-            if full_rows.is_empty() && major_rows.is_empty() {
-                continue;
-            }
-            let split = self.force_split || !major_rows.is_empty();
+            let mut buf = Tensor::zeros(vec![rb_rows, d]);
+            let mut scratch: Vec<f32> = Vec::new();
             let mut dt = 0.0;
+            let split = force_split || !major_rows.is_empty();
             if split {
                 if major_rows.is_empty() {
-                    dt += self.run_sub_expert(
-                        ln2x, full_rows, &self.ebufs[li][e].major, &mut out,
+                    dt += run_sub_expert(
+                        rt, d, ln2x, full_rows, &ebufs[e].major, &mut buf, &mut scratch,
                     )?;
                 } else {
                     let mut both = full_rows.clone();
                     both.extend_from_slice(major_rows);
-                    dt += self.run_sub_expert(
-                        ln2x, &both, &self.ebufs[li][e].major, &mut out,
+                    dt += run_sub_expert(
+                        rt, d, ln2x, &both, &ebufs[e].major, &mut buf, &mut scratch,
                     )?;
                 }
                 if !full_rows.is_empty() {
-                    dt += self.run_sub_expert(
-                        ln2x, full_rows, &self.ebufs[li][e].minor, &mut out,
+                    dt += run_sub_expert(
+                        rt, d, ln2x, full_rows, &ebufs[e].minor, &mut buf, &mut scratch,
                     )?;
                 }
             } else {
-                dt += self.run_sub_expert(
-                    ln2x, full_rows, &self.ebufs[li][e].full, &mut out,
+                dt += run_sub_expert(
+                    rt, d, ln2x, full_rows, &ebufs[e].full, &mut buf, &mut scratch,
                 )?;
             }
-            if ep_on {
-                self.metrics.device_time[self.placement[e]] += dt;
+            Ok((buf, dt))
+        };
+        let mut out = Tensor::zeros(vec![rb_rows, d]);
+        if parallel_worthwhile {
+            let results = crate::util::threads::parallel_map(work.len(), &expert_task);
+            for (wi, res) in results.into_iter().enumerate() {
+                let e = work[wi];
+                let (buf, dt) = res?;
+                merge_expert_rows(&plan, e, d, &buf, &mut out);
+                if ep_on {
+                    self.metrics.device_time[self.placement[e]] += dt;
+                }
+            }
+        } else {
+            // Serial: merge each expert as it finishes — one live
+            // buffer at a time. The buffer+merge structure is kept
+            // DELIBERATELY (not scatter-straight-into-out): it makes
+            // every row's reduction tree identical in both branches,
+            // so the same token produces bit-identical output whether
+            // its layer call lands above or below the parallel
+            // threshold (e.g. alone vs inside a big batch — the
+            // `batched_equals_single_generation` invariant).
+            for (wi, &e) in work.iter().enumerate() {
+                let (buf, dt) = expert_task(wi)?;
+                merge_expert_rows(&plan, e, d, &buf, &mut out);
+                if ep_on {
+                    self.metrics.device_time[self.placement[e]] += dt;
+                }
             }
         }
 
@@ -551,44 +609,10 @@ impl Engine {
         }
         if let Some(sb) = &self.sbufs[li] {
             let rows: Vec<(usize, f32)> = (0..n_rows).map(|r| (r, 1.0)).collect();
-            self.run_sub_expert(ln2x, &rows, sb, &mut out)?;
+            let mut scratch: Vec<f32> = Vec::new();
+            run_sub_expert(self.rt.as_ref(), d, ln2x, &rows, sb, &mut out, &mut scratch)?;
         }
         Ok(out)
-    }
-
-    /// Pack `rows` of ln2x into a capacity bucket, run the FFN artifact,
-    /// scatter-add score-weighted outputs. Returns the call wall time
-    /// (seconds) for per-device attribution under EP.
-    fn run_sub_expert(
-        &self,
-        ln2x: &Tensor,
-        rows: &[(usize, f32)],
-        se: &VariantBufs,
-        out: &mut Tensor,
-    ) -> Result<f64> {
-        let t0 = std::time::Instant::now();
-        let d = self.cfg.d_model;
-        let c = round_up_bucket(rows.len(), &CAPACITY_BUCKETS);
-        let mut x = vec![0.0f32; c * d];
-        for (i, &(r, _)) in rows.iter().enumerate() {
-            x[i * d..(i + 1) * d].copy_from_slice(
-                &ln2x.data[r * d..(r + 1) * d],
-            );
-        }
-        let xt = Tensor::new(vec![c, d], x);
-        let y = self.rt.exec(
-            &format!("ffn_h{}_c{}", se.width, c),
-            &[Arg::F32(&xt), Arg::Buf(se.w1), Arg::Buf(se.w3), Arg::Buf(se.w2)],
-        )?;
-        let yt = &y[0];
-        for (i, &(r, w)) in rows.iter().enumerate() {
-            let src = &yt.data[i * d..(i + 1) * d];
-            let dst = &mut out.data[r * d..(r + 1) * d];
-            for j in 0..d {
-                dst[j] += w * src[j];
-            }
-        }
-        Ok(t0.elapsed().as_secs_f64())
     }
 
     // ------------------------------------------------------------------
@@ -606,7 +630,7 @@ impl Engine {
         let mut toks = prompt.to_vec();
         toks.resize(sb, 0);
         let positions: Vec<usize> = (0..sb).collect();
-        let mut x = self.embed(&toks, &positions);
+        let mut x = self.embed(&toks, &positions)?;
         for li in 0..self.cfg.n_layers {
             let lb = &self.lbufs[li];
             let outs = self.rt.exec(
@@ -650,7 +674,6 @@ impl Engine {
     /// consumes tokens[i]); returns the next token per slot.
     pub fn decode_step(&mut self, tokens: &[u8]) -> Result<Vec<u8>> {
         let b = tokens.len();
-        let _d = self.cfg.d_model;
         let bb = round_up_bucket(b, &BATCH_BUCKETS);
         let mut toks = tokens.to_vec();
         toks.resize(bb, 0);
@@ -661,26 +684,46 @@ impl Engine {
         for p in positions.iter_mut().skip(b) {
             *p = 0;
         }
-        let mut x = self.embed(&toks, &positions);
+        let mut x = self.embed(&toks, &positions)?;
         let pos_i32: Vec<i32> = positions.iter().map(|&p| p as i32).collect();
+        let kv_shape =
+            [bb, self.cfg.n_heads, self.cfg.max_seq, self.cfg.d_head];
         for li in 0..self.cfg.n_layers {
-            let (kc, vc) = self.kv_batch_padded(li, b, bb);
-            let lb = &self.lbufs[li];
-            let outs = self.rt.exec(
-                &format!("attn_step_b{bb}"),
-                &[
-                    Arg::F32(&x),
-                    Arg::Buf(lb.ln1),
-                    Arg::Buf(lb.wq),
-                    Arg::Buf(lb.wk),
-                    Arg::Buf(lb.wv),
-                    Arg::Buf(lb.wo),
-                    Arg::Buf(lb.ln2),
-                    Arg::F32(&kc),
-                    Arg::F32(&vc),
-                    Arg::I32(&pos_i32),
-                ],
-            )?;
+            // Zero-copy KV: borrowed per-slot slices of this layer's
+            // cache (padding rows borrow the shared zero slot). The old
+            // path cloned the full [bb, H, T, dh] cache pair here on
+            // every layer of every step.
+            let outs = {
+                let stride = self.kv.slot_stride();
+                let kdata = &self.kv.k[li].data;
+                let vdata = &self.kv.v[li].data;
+                let mut kslices: Vec<&[f32]> = Vec::with_capacity(bb);
+                let mut vslices: Vec<&[f32]> = Vec::with_capacity(bb);
+                for si in 0..b {
+                    kslices.push(&kdata[si * stride..(si + 1) * stride]);
+                    vslices.push(&vdata[si * stride..(si + 1) * stride]);
+                }
+                for _ in b..bb {
+                    kslices.push(&self.zero_slot[..]);
+                    vslices.push(&self.zero_slot[..]);
+                }
+                let lb = &self.lbufs[li];
+                self.rt.exec(
+                    &format!("attn_step_b{bb}"),
+                    &[
+                        Arg::F32(&x),
+                        Arg::Buf(lb.ln1),
+                        Arg::Buf(lb.wq),
+                        Arg::Buf(lb.wk),
+                        Arg::Buf(lb.wv),
+                        Arg::Buf(lb.wo),
+                        Arg::Buf(lb.ln2),
+                        Arg::F32Slices(kslices.as_slice(), &kv_shape[..]),
+                        Arg::F32Slices(vslices.as_slice(), &kv_shape[..]),
+                        Arg::I32(&pos_i32),
+                    ],
+                )?
+            };
             let (y, ln2x, nk, nv) = (&outs[0], &outs[1], &outs[2], &outs[3]);
             let hd = self.cfg.n_heads * self.cfg.d_head;
             for slot in 0..b {
@@ -707,19 +750,6 @@ impl Engine {
             ],
         )?;
         Ok((0..b).map(|i| argmax_u8(logits[0].row(i))).collect())
-    }
-
-    /// Batch KV view padded to the batch bucket with zero rows.
-    fn kv_batch_padded(&self, li: usize, b: usize, bb: usize) -> (Tensor, Tensor) {
-        let (mut k, mut v) = self.kv.batch_view(li, b);
-        if bb > b {
-            let stride = self.cfg.n_heads * self.cfg.max_seq * self.cfg.d_head;
-            k.data.resize(bb * stride, 0.0);
-            v.data.resize(bb * stride, 0.0);
-            k.shape[0] = bb;
-            v.shape[0] = bb;
-        }
-        (k, v)
     }
 
     // ------------------------------------------------------------------
@@ -777,6 +807,65 @@ impl Engine {
     pub fn total_artifact_time(&self) -> f64 {
         self.rt.time_with_prefix("")
     }
+}
+
+/// Add expert `e`'s scatter buffer into `out`, touching only the rows
+/// the expert actually served (full ∪ major-only are disjoint row
+/// sets). Untouched rows of `buf` are exact zeros, so skipping them is
+/// value-identical to a full-buffer add — and the per-row, ascending-
+/// expert order is what makes the output independent of thread count.
+fn merge_expert_rows(plan: &DispatchPlan, e: usize, d: usize, buf: &Tensor, out: &mut Tensor) {
+    for &(r, _) in plan.full[e].iter().chain(plan.major_only[e].iter()) {
+        let src = &buf.data[r * d..(r + 1) * d];
+        let dst = &mut out.data[r * d..(r + 1) * d];
+        for j in 0..d {
+            dst[j] += src[j];
+        }
+    }
+}
+
+/// Pack `rows` of ln2x into a capacity bucket, run the FFN artifact,
+/// scatter-add score-weighted outputs into `out`. `scratch` is the
+/// packing buffer, reused across calls (major + minor of one expert
+/// share it; each worker task owns its own).
+///
+/// Returns **backend exec seconds only** — host-side packing and
+/// scatter are excluded, so EP `device_time` attributes exactly the
+/// per-device kernel busy time (not coordinator overhead).
+fn run_sub_expert(
+    rt: &dyn Backend,
+    d: usize,
+    ln2x: &Tensor,
+    rows: &[(usize, f32)],
+    se: &VariantBufs,
+    out: &mut Tensor,
+    scratch: &mut Vec<f32>,
+) -> Result<f64> {
+    let c = round_up_bucket(rows.len(), &CAPACITY_BUCKETS);
+    scratch.clear();
+    scratch.resize(c * d, 0.0);
+    for (i, &(r, _)) in rows.iter().enumerate() {
+        scratch[i * d..(i + 1) * d].copy_from_slice(&ln2x.data[r * d..(r + 1) * d]);
+    }
+    let xt = Tensor::new(vec![c, d], std::mem::take(scratch));
+    let name = format!("ffn_h{}_c{}", se.width, c);
+    let t0 = std::time::Instant::now();
+    let y = rt.exec(
+        &name,
+        &[Arg::F32(&xt), Arg::Buf(se.w1), Arg::Buf(se.w3), Arg::Buf(se.w2)],
+    )?;
+    let secs = t0.elapsed().as_secs_f64();
+    // hand the packing buffer back for the next call
+    *scratch = xt.data;
+    let yt = &y[0];
+    for (i, &(r, w)) in rows.iter().enumerate() {
+        let src = &yt.data[i * d..(i + 1) * d];
+        let dst = &mut out.data[r * d..(r + 1) * d];
+        for j in 0..d {
+            dst[j] += w * src[j];
+        }
+    }
+    Ok(secs)
 }
 
 fn argmax_u8(row: &[f32]) -> u8 {

@@ -1,0 +1,203 @@
+//! `dualsparse bench` — the measured CPU perf sweep behind
+//! `BENCH_cpu.json`.
+//!
+//! Sweeps drop policies × decode-batch sizes × worker thread counts on
+//! a synthetic preset and records *measured* serving numbers
+//! (tokens/sec, MoE-module busy seconds, wall seconds) plus the
+//! speedup of each drop policy against the no-drop run of the same
+//! (threads, batch) group. This seeds the repo's perf trajectory:
+//! every future PR can diff its `BENCH_cpu.json` against the last one.
+//!
+//! Unlike the EP *simulation* (fig10/fig11), nothing here is modeled —
+//! drop rate shrinks capacity buckets, which shrinks real GEMMs, which
+//! moves real wall-clock time.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::engine::batcher::serve;
+use crate::engine::{Engine, EngineOptions};
+use crate::moe::DropPolicy;
+use crate::server;
+use crate::util::json::{num, obj, s, Json};
+use crate::util::threads;
+
+/// CLI-facing bench options.
+pub struct BenchConfig {
+    /// Few-config smoke sweep (CI); full sweep otherwise.
+    pub quick: bool,
+    /// Output path for the JSON record.
+    pub out: PathBuf,
+    /// Synthetic preset (or serialized model) to bench.
+    pub model: String,
+}
+
+/// One measured configuration.
+pub struct BenchRow {
+    pub threads: usize,
+    pub batch: usize,
+    pub policy: String,
+    pub drop_rate: f64,
+    pub tokens_per_sec: f64,
+    pub wall_secs: f64,
+    /// Cumulative MoE (gate + FFN) busy seconds across workers.
+    pub moe_secs: f64,
+    /// tokens/sec vs the no-drop row of the same (threads, batch).
+    pub speedup_vs_no_drop: f64,
+}
+
+/// Run the sweep; rows are ordered (threads, batch, policy) with the
+/// no-drop policy first in each group.
+pub fn sweep(artifacts: &Path, model: &str, quick: bool) -> Result<Vec<BenchRow>> {
+    // Thresholds sit around 0.5 on purpose: top-2 normalized gating
+    // scores of the near-uniform synthetic gates cluster there, so this
+    // ladder yields monotonically growing drop rates (cf. the 2T band
+    // note in rust/tests/integration.rs).
+    let policies: Vec<(&str, DropPolicy)> = if quick {
+        vec![
+            ("none", DropPolicy::NoDrop),
+            ("2t:0.45", DropPolicy::two_t(0.45)),
+        ]
+    } else {
+        vec![
+            ("none", DropPolicy::NoDrop),
+            ("2t:0.44", DropPolicy::two_t(0.44)),
+            ("2t:0.48", DropPolicy::two_t(0.48)),
+            ("1t:0.52", DropPolicy::OneT(0.52)),
+        ]
+    };
+    let threads_sweep: Vec<usize> = if quick { vec![1, 2] } else { vec![1, 2, 4] };
+    let batches: Vec<usize> = if quick { vec![8] } else { vec![4, 8, 16] };
+    let (req_mult, max_new) = if quick { (1, 6) } else { (2, 10) };
+    let mut engine =
+        Engine::new(artifacts, model, DropPolicy::NoDrop, EngineOptions::default())?;
+    let mut rows = Vec::new();
+    for &t in &threads_sweep {
+        for &batch in &batches {
+            let reqs = server::workload(batch * req_mult, max_new, 7);
+            let warm = server::workload(batch.min(4), 3, 13);
+            let mut base_tps: Option<f64> = None;
+            for (label, pol) in &policies {
+                engine.policy = *pol;
+                threads::set_thread_override(Some(t));
+                // restore the process-global override even on error —
+                // a leaked Some(t) would silently re-thread everything
+                // that runs later in this process (paper_benches).
+                let measured = (|| {
+                    serve(&mut engine, &warm)?; // touch every artifact bucket
+                    serve(&mut engine, &reqs)
+                })();
+                threads::set_thread_override(None);
+                let (_, stats) = measured?;
+                let speedup = match base_tps {
+                    Some(b) if b > 0.0 && stats.tokens_per_sec > 0.0 => {
+                        stats.tokens_per_sec / b
+                    }
+                    _ => 1.0,
+                };
+                if base_tps.is_none() {
+                    base_tps = Some(stats.tokens_per_sec);
+                }
+                rows.push(BenchRow {
+                    threads: t,
+                    batch,
+                    policy: label.to_string(),
+                    drop_rate: stats.drop_rate,
+                    tokens_per_sec: stats.tokens_per_sec,
+                    wall_secs: stats.wall_secs,
+                    moe_secs: stats.moe_secs,
+                    speedup_vs_no_drop: speedup,
+                });
+            }
+        }
+    }
+    Ok(rows)
+}
+
+/// Serialize sweep rows to the `BENCH_cpu.json` schema.
+pub fn write_json(model: &str, quick: bool, rows: &[BenchRow], out: &Path) -> Result<()> {
+    let runs = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                obj(vec![
+                    ("threads", num(r.threads as f64)),
+                    ("batch", num(r.batch as f64)),
+                    ("policy", s(&r.policy)),
+                    ("drop_rate", num(r.drop_rate)),
+                    ("tokens_per_sec", num(r.tokens_per_sec)),
+                    ("wall_secs", num(r.wall_secs)),
+                    ("moe_secs", num(r.moe_secs)),
+                    ("speedup_vs_no_drop", num(r.speedup_vs_no_drop)),
+                ])
+            })
+            .collect(),
+    );
+    let ap = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    let j = obj(vec![
+        ("model", s(model)),
+        ("quick", Json::Bool(quick)),
+        ("available_parallelism", num(ap as f64)),
+        ("runs", runs),
+    ]);
+    let text = j.to_string() + "\n";
+    std::fs::write(out, text).with_context(|| format!("writing {out:?}"))?;
+    Ok(())
+}
+
+/// Full CLI entry: sweep, print a table, write the JSON record.
+pub fn run(artifacts: &Path, cfg: &BenchConfig) -> Result<()> {
+    println!(
+        "dualsparse bench — model {} ({} sweep, CpuRef measured)",
+        cfg.model,
+        if cfg.quick { "quick" } else { "full" }
+    );
+    let rows = sweep(artifacts, &cfg.model, cfg.quick)?;
+    println!(
+        "{:>7} {:>6} {:>8} {:>7} {:>11} {:>9} {:>9}",
+        "threads", "batch", "policy", "drop%", "tok/s", "moe_s", "vs-nodrop"
+    );
+    for r in &rows {
+        println!(
+            "{:>7} {:>6} {:>8} {:>6.1}% {:>11.1} {:>9.3} {:>8.2}x",
+            r.threads,
+            r.batch,
+            r.policy,
+            100.0 * r.drop_rate,
+            r.tokens_per_sec,
+            r.moe_secs,
+            r.speedup_vs_no_drop,
+        );
+    }
+    write_json(&cfg.model, cfg.quick, &rows, &cfg.out)?;
+    println!("wrote {:?}", cfg.out);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quick_sweep_writes_valid_json() {
+        let rows = sweep(Path::new("/nonexistent-artifacts"), "mixtral_ish", true)
+            .expect("hermetic sweep on synthetic weights");
+        assert_eq!(rows.len(), 2 * 1 * 2, "threads × batches × policies");
+        for r in &rows {
+            assert!(r.tokens_per_sec > 0.0, "measured, not simulated");
+            if r.policy == "none" {
+                assert!((r.speedup_vs_no_drop - 1.0).abs() < 1e-9);
+            } else {
+                assert!(r.drop_rate > 0.0, "drop ladder must actually drop");
+            }
+        }
+        let out = std::env::temp_dir().join("dualsparse_bench_selftest.json");
+        write_json("mixtral_ish", true, &rows, &out).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
+        assert_eq!(j.get("model").unwrap().as_str().unwrap(), "mixtral_ish");
+        assert_eq!(j.get("runs").unwrap().as_arr().unwrap().len(), rows.len());
+        let _ = std::fs::remove_file(&out);
+    }
+}

@@ -4,6 +4,7 @@
 //! a JSON record under `artifacts/results/` for EXPERIMENTS.md.
 
 pub mod accuracy;
+pub mod bench;
 pub mod comm;
 pub mod profiling;
 pub mod speed;

@@ -35,6 +35,23 @@
 //! Selection: `EngineOptions::backend` (`Auto` | `CpuRef` | `Pjrt`),
 //! overridable with the `DUALSPARSE_BACKEND` env var (`auto` | `cpu` |
 //! `pjrt`). `Auto` prefers PJRT when compiled in and artifacts exist.
+//!
+//! ## Threaded CPU hot path
+//!
+//! `Backend` is `Sync`; the engine runs per-expert sub-expert calls on
+//! a scoped worker pool ([`util::threads`], sized by
+//! `DUALSPARSE_THREADS`, default = available parallelism), and the
+//! blocked kernels in [`util::linalg`] tile large GEMMs and prefill
+//! attention heads across the same pool. Every parallel unit computes
+//! exactly what the serial path computes and merges in a fixed order,
+//! so generations and metrics are byte-identical for every thread
+//! count (pinned by `rust/tests/parallel.rs`). `dualsparse bench`
+//! measures the resulting tokens/sec surface into `BENCH_cpu.json`.
+
+// The numeric kernels and scatter/gather loops index several parallel
+// arrays in lockstep; clippy's iterator rewrites obscure them without
+// changing codegen.
+#![allow(clippy::needless_range_loop, clippy::manual_memcpy, clippy::too_many_arguments)]
 
 pub mod baselines;
 pub mod calib;

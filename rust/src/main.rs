@@ -4,10 +4,13 @@
 //!   serve <model> [--policy none|1t:<T>|2t:<T>] [--reqs N] [--max-new N]
 //!   eval <model> [--policy …] [--reconstruct] [--n N]
 //!   calibrate <model> [--tokens N]
+//!   bench [--quick] [--model M] [--out PATH]   (writes BENCH_cpu.json)
 //!   exp <fig1|fig4|fig6|fig7|fig9|fig10|fig11|fig12|fig13|table1|table2|table3|all>
 //!   info
 //!
 //! Artifacts are resolved from ./artifacts (override: DUALSPARSE_ARTIFACTS).
+//! Worker threads for the CPU hot path: DUALSPARSE_THREADS (default:
+//! available parallelism).
 
 use std::path::PathBuf;
 
@@ -134,6 +137,17 @@ fn main() -> Result<()> {
             tables.save(&path)?;
             println!("calibrated {model} on {tokens} tokens → {path:?}");
         }
+        "bench" => {
+            let cfg = experiments::bench::BenchConfig {
+                quick: args.flag("quick").is_some(),
+                out: args
+                    .flag("out")
+                    .map(PathBuf::from)
+                    .unwrap_or_else(|| PathBuf::from("BENCH_cpu.json")),
+                model: args.flag("model").unwrap_or("mixtral_ish").to_string(),
+            };
+            experiments::bench::run(&artifacts, &cfg)?;
+        }
         "exp" => {
             let id = args.pos.get(1).context("exp <id|all>")?;
             experiments::run(id, &artifacts)?;
@@ -170,7 +184,7 @@ fn main() -> Result<()> {
         _ => {
             println!(
                 "dualsparse — DualSparse-MoE inference system\n\
-                 usage: dualsparse <serve|eval|calibrate|exp|info> …\n\
+                 usage: dualsparse <serve|eval|calibrate|bench|exp|info> …\n\
                  see `rust/src/main.rs` header or README.md"
             );
         }

@@ -11,38 +11,55 @@
 //!
 //! This is the hermetic path: no AOT artifacts, no Python, no PJRT —
 //! the seam the integration tests, golden-fixture tests and CI run on.
+//!
+//! Concurrency: all interior state is lock- or atomic-guarded, so the
+//! engine's threaded expert dispatch can issue `exec` calls from many
+//! workers at once (the `Backend: Sync` contract). The step-attention
+//! artifact additionally accepts its KV cache as [`Arg::F32Slices`] —
+//! borrowed per-slot slices — so the decode hot path never copies the
+//! cache.
 
-use std::cell::{Cell, RefCell};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Mutex, RwLock};
 
 use anyhow::{bail, Context, Result};
 
 use crate::model::{ModelConfig, Tensor};
-use crate::util::linalg::{matmul, matmul_bt, rmsnorm_rows, softmax_rows, swiglu_ffn, swish};
+use crate::util::linalg::{
+    dot, gemv_acc, matmul, matmul_bt, rmsnorm_rows, softmax_rows, swiglu_ffn, swish,
+};
 
 use super::{Arg, Backend, BufId, ExecCounters};
 
+/// Below this `S²·d` volume prefill attention runs its heads serially —
+/// the scoped-thread spawn would dominate the arithmetic.
+const ATTN_PAR_MIN: usize = 1 << 19;
+
 /// Pure-Rust reference executor (see module docs).
 pub struct CpuRef {
-    /// Uploaded weight buffers, indexed by [`BufId`].
-    bufs: RefCell<Vec<Tensor>>,
-    /// (n_heads, d_head) — required by `attn_prefill_*`, which cannot
-    /// infer head geometry from its arguments.
-    heads: Cell<(usize, usize)>,
+    /// Uploaded weight buffers, indexed by [`BufId`]. RwLock: concurrent
+    /// `exec` calls share read access; `upload` (load time) writes.
+    bufs: RwLock<Vec<Tensor>>,
+    /// Head geometry — required by `attn_prefill_*`, which cannot infer
+    /// it from its arguments.
+    n_heads: AtomicUsize,
+    d_head: AtomicUsize,
     counters: ExecCounters,
     /// Distinct artifact names ever executed. Kept separate from the
     /// perf counters so `compiled_count` survives `reset_counters`,
     /// matching the PJRT backend's compiled-executable cache semantics.
-    seen: RefCell<std::collections::HashSet<String>>,
+    seen: Mutex<std::collections::HashSet<String>>,
 }
 
 impl CpuRef {
     pub fn new() -> CpuRef {
         CpuRef {
-            bufs: RefCell::new(Vec::new()),
-            heads: Cell::new((0, 0)),
+            bufs: RwLock::new(Vec::new()),
+            n_heads: AtomicUsize::new(0),
+            d_head: AtomicUsize::new(0),
             counters: ExecCounters::default(),
-            seen: RefCell::new(std::collections::HashSet::new()),
+            seen: Mutex::new(std::collections::HashSet::new()),
         }
     }
 }
@@ -59,101 +76,110 @@ impl Backend for CpuRef {
     }
 
     fn set_model(&self, cfg: &ModelConfig) {
-        self.heads.set((cfg.n_heads, cfg.d_head));
+        self.n_heads.store(cfg.n_heads, Ordering::Relaxed);
+        self.d_head.store(cfg.d_head, Ordering::Relaxed);
+    }
+
+    /// Pure Rust over lock-guarded state — concurrent exec is safe.
+    fn supports_concurrent_exec(&self) -> bool {
+        true
     }
 
     fn upload(&self, t: &Tensor) -> Result<BufId> {
-        let mut bufs = self.bufs.borrow_mut();
+        let mut bufs = self.bufs.write().unwrap();
         bufs.push(t.clone());
         Ok(BufId(bufs.len() - 1))
     }
 
     fn exec(&self, name: &str, args: &[Arg]) -> Result<Vec<Tensor>> {
         let t0 = std::time::Instant::now();
-        let store = self.bufs.borrow();
-        // Resolve args up front: tensors (host or uploaded) and i32 rows.
-        let mut ts: Vec<Option<&Tensor>> = Vec::with_capacity(args.len());
-        let mut is: Vec<Option<&[i32]>> = Vec::with_capacity(args.len());
-        for a in args {
-            match a {
-                Arg::F32(x) => {
-                    ts.push(Some(*x));
-                    is.push(None);
-                }
-                Arg::Buf(id) => {
-                    let t = store
-                        .get(id.0)
-                        .with_context(|| format!("{name}: dangling buffer id {}", id.0))?;
-                    ts.push(Some(t));
-                    is.push(None);
-                }
-                Arg::I32(v) => {
-                    ts.push(None);
-                    is.push(Some(*v));
-                }
-            }
-        }
+        let store = self.bufs.read().unwrap();
+        // Resolve args up front: host tensors, uploaded buffers,
+        // zero-copy slice views, i32 rows.
+        let rs: Vec<RArg> = args
+            .iter()
+            .map(|a| -> Result<RArg> {
+                Ok(match a {
+                    Arg::F32(x) => RArg::T(*x),
+                    Arg::Buf(id) => RArg::T(
+                        store
+                            .get(id.0)
+                            .with_context(|| format!("{name}: dangling buffer id {}", id.0))?,
+                    ),
+                    Arg::F32Slices(slices, shape) => RArg::S(*slices, *shape),
+                    Arg::I32(v) => RArg::I(*v),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
         let out = if name.starts_with("ffn_h") {
             vec![swiglu_ffn(
-                targ(name, &ts, 0)?,
-                targ(name, &ts, 1)?,
-                targ(name, &ts, 2)?,
-                targ(name, &ts, 3)?,
+                targ(name, &rs, 0)?,
+                targ(name, &rs, 1)?,
+                targ(name, &rs, 2)?,
+                targ(name, &rs, 3)?,
             )]
         } else if name.starts_with("gate_b") {
-            vec![softmax_rows(&matmul(targ(name, &ts, 0)?, targ(name, &ts, 1)?))]
+            vec![softmax_rows(&matmul(targ(name, &rs, 0)?, targ(name, &rs, 1)?))]
         } else if name.starts_with("probe_h") {
             vec![op_probe(
-                targ(name, &ts, 0)?,
-                targ(name, &ts, 1)?,
-                targ(name, &ts, 2)?,
+                targ(name, &rs, 0)?,
+                targ(name, &rs, 1)?,
+                targ(name, &rs, 2)?,
             )]
         } else if name.starts_with("attn_prefill_s") {
-            let (h, dh) = self.heads.get();
+            let h = self.n_heads.load(Ordering::Relaxed);
+            let dh = self.d_head.load(Ordering::Relaxed);
             if h == 0 {
                 bail!("{name}: CpuRef needs set_model() before attention artifacts");
             }
             op_attn_prefill(
-                targ(name, &ts, 0)?,
-                targ(name, &ts, 1)?,
-                targ(name, &ts, 2)?,
-                targ(name, &ts, 3)?,
-                targ(name, &ts, 4)?,
-                targ(name, &ts, 5)?,
-                targ(name, &ts, 6)?,
+                targ(name, &rs, 0)?,
+                targ(name, &rs, 1)?,
+                targ(name, &rs, 2)?,
+                targ(name, &rs, 3)?,
+                targ(name, &rs, 4)?,
+                targ(name, &rs, 5)?,
+                targ(name, &rs, 6)?,
                 h,
                 dh,
             )?
         } else if name.starts_with("attn_step_b") {
+            let kv = kv_arg(name, &rs, 7)?;
+            let vv = kv_arg(name, &rs, 8)?;
             op_attn_step(
-                targ(name, &ts, 0)?,
-                targ(name, &ts, 1)?,
-                targ(name, &ts, 2)?,
-                targ(name, &ts, 3)?,
-                targ(name, &ts, 4)?,
-                targ(name, &ts, 5)?,
-                targ(name, &ts, 6)?,
-                targ(name, &ts, 7)?,
-                targ(name, &ts, 8)?,
-                iarg(name, &is, 9)?,
+                targ(name, &rs, 0)?,
+                targ(name, &rs, 1)?,
+                targ(name, &rs, 2)?,
+                targ(name, &rs, 3)?,
+                targ(name, &rs, 4)?,
+                targ(name, &rs, 5)?,
+                targ(name, &rs, 6)?,
+                &kv,
+                &vv,
+                iarg(name, &rs, 9)?,
             )?
         } else if name.starts_with("lm_head_b") {
             vec![matmul_bt(
-                &rmsnorm_rows(targ(name, &ts, 0)?, &targ(name, &ts, 1)?.data),
-                targ(name, &ts, 2)?,
+                &rmsnorm_rows(targ(name, &rs, 0)?, &targ(name, &rs, 1)?.data),
+                targ(name, &rs, 2)?,
             )]
         } else {
             bail!("CpuRef: unknown artifact {name:?}");
         };
         self.counters.record(name, t0.elapsed().as_secs_f64());
-        if !self.seen.borrow().contains(name) {
-            self.seen.borrow_mut().insert(name.to_string());
+        {
+            // membership check first: skip the String allocation on the
+            // steady-state hot path once an artifact name is known.
+            let mut seen = self.seen.lock().unwrap();
+            if !seen.contains(name) {
+                seen.insert(name.to_string());
+            }
         }
         Ok(out)
     }
 
     fn compiled_count(&self) -> usize {
-        self.seen.borrow().len()
+        self.seen.lock().unwrap().len()
     }
 
     fn reset_counters(&self) {
@@ -169,33 +195,106 @@ impl Backend for CpuRef {
     }
 }
 
+/// A resolved executable argument.
+#[derive(Clone, Copy)]
+enum RArg<'a> {
+    T(&'a Tensor),
+    S(&'a [&'a [f32]], &'a [usize]),
+    I(&'a [i32]),
+}
+
 /// Resolved f32 tensor argument `i` (host or uploaded buffer).
-fn targ<'a>(name: &str, ts: &[Option<&'a Tensor>], i: usize) -> Result<&'a Tensor> {
-    ts.get(i)
-        .copied()
-        .flatten()
-        .with_context(|| format!("{name}: missing f32 arg {i}"))
+fn targ<'a>(name: &str, rs: &[RArg<'a>], i: usize) -> Result<&'a Tensor> {
+    match rs.get(i).copied() {
+        Some(RArg::T(t)) => Ok(t),
+        _ => bail!("{name}: missing f32 arg {i}"),
+    }
 }
 
 /// Resolved i32 argument `i`.
-fn iarg<'a>(name: &str, is: &[Option<&'a [i32]>], i: usize) -> Result<&'a [i32]> {
-    is.get(i)
-        .copied()
-        .flatten()
-        .with_context(|| format!("{name}: missing i32 arg {i}"))
+fn iarg<'a>(name: &str, rs: &[RArg<'a>], i: usize) -> Result<&'a [i32]> {
+    match rs.get(i).copied() {
+        Some(RArg::I(v)) => Ok(v),
+        _ => bail!("{name}: missing i32 arg {i}"),
+    }
+}
+
+/// Borrowed view of a `[B, H, T, dh]` KV cache: one contiguous
+/// `H·T·dh` block per batch row — either rows of one contiguous tensor
+/// or zero-copy per-slot slices ([`Arg::F32Slices`]).
+struct KvView<'a> {
+    rows: Vec<&'a [f32]>,
+    n_heads: usize,
+    t_max: usize,
+    d_head: usize,
+}
+
+/// Resolve argument `i` as a KV-cache view.
+fn kv_arg<'a>(name: &str, rs: &[RArg<'a>], i: usize) -> Result<KvView<'a>> {
+    match rs.get(i).copied() {
+        Some(RArg::T(t)) => {
+            if t.shape.len() != 4 {
+                bail!("{name}: kv arg {i} must be rank 4, got {:?}", t.shape);
+            }
+            let (b, h, tm, dh) = (t.shape[0], t.shape[1], t.shape[2], t.shape[3]);
+            let stride = h * tm * dh;
+            Ok(KvView {
+                rows: (0..b)
+                    .map(|bi| &t.data[bi * stride..(bi + 1) * stride])
+                    .collect(),
+                n_heads: h,
+                t_max: tm,
+                d_head: dh,
+            })
+        }
+        Some(RArg::S(slices, shape)) => {
+            if shape.len() != 4 || shape[0] != slices.len() {
+                bail!(
+                    "{name}: kv arg {i} slice view shape {:?} vs {} slices",
+                    shape,
+                    slices.len()
+                );
+            }
+            let stride = shape[1] * shape[2] * shape[3];
+            for (bi, s) in slices.iter().enumerate() {
+                if s.len() != stride {
+                    bail!("{name}: kv arg {i} slice {bi} has {} elems, want {stride}", s.len());
+                }
+            }
+            Ok(KvView {
+                rows: slices.to_vec(),
+                n_heads: shape[1],
+                t_max: shape[2],
+                d_head: shape[3],
+            })
+        }
+        _ => bail!("{name}: missing kv-cache arg {i}"),
+    }
 }
 
 /// Neuron-importance accumulators (`probe_ref`, paper Eqs. 14-17):
 /// rows = [Σ swish(xW1), Σ |swish(xW1)|, Σ g·u, Σ |g·u|], shape [4, H].
+/// Fused per row like `swiglu_ffn` — the `[n, H]` gate/up intermediates
+/// are never materialized.
 fn op_probe(x: &Tensor, w1: &Tensor, w3: &Tensor) -> Tensor {
-    let g = matmul(x, w1);
-    let u = matmul(x, w3);
-    let (n, h) = (g.shape[0], g.shape[1]);
+    let (n, d) = (x.shape[0], x.shape[1]);
+    let h = w1.shape[1];
+    // release-mode guard (gemv_acc only debug_asserts): a truncated
+    // weight read here would silently corrupt calibration tables.
+    assert_eq!(w1.shape[0], d, "probe w1 shape mismatch");
+    assert_eq!(w3.shape, w1.shape, "probe w3 shape mismatch");
     let mut out = vec![0.0f32; 4 * h];
+    let mut g = vec![0.0f32; h];
+    let mut u = vec![0.0f32; h];
     for i in 0..n {
+        let xrow = &x.data[i * d..(i + 1) * d];
+        g.fill(0.0);
+        u.fill(0.0);
+        gemv_acc(xrow, &w1.data, h, &mut g);
+        gemv_acc(xrow, &w3.data, h, &mut u);
         for j in 0..h {
-            let sw = swish(g.data[i * h + j]);
-            let gu = sw * u.data[i * h + j];
+            let sw = swish(g[j]);
+            let gu = sw * u[j];
             out[j] += sw;
             out[h + j] += sw.abs();
             out[2 * h + j] += gu;
@@ -206,7 +305,10 @@ fn op_probe(x: &Tensor, w1: &Tensor, w3: &Tensor) -> Tensor {
 }
 
 /// Full-sequence causal prefill (`serve_attn_prefill`): returns
-/// (y [S,d], ln2x [S,d], K [S,H,dh], V [S,H,dh]).
+/// (y [S,d], ln2x [S,d], K [S,H,dh], V [S,H,dh]). Heads are
+/// independent and run on the worker pool for long sequences; the
+/// per-head math is identical either way, so outputs do not depend on
+/// the thread count.
 #[allow(clippy::too_many_arguments)]
 fn op_attn_prefill(
     x: &Tensor,
@@ -228,27 +330,40 @@ fn op_attn_prefill(
     let k = matmul(&xn, wk);
     let v = matmul(&xn, wv);
     let scale = 1.0 / (d_head as f32).sqrt();
-    let mut ctx = vec![0.0f32; s * d];
-    let mut scores = vec![0.0f32; s];
-    for hi in 0..n_heads {
+    let per_head = |hi: usize| -> Vec<f32> {
         let off = hi * d_head;
+        let mut hctx = vec![0.0f32; s * d_head];
+        let mut scores = vec![0.0f32; s];
         for qi in 0..s {
+            let qrow = &q.data[qi * d + off..qi * d + off + d_head];
             // causal: keys 0..=qi only (identical to -1e9 masking — the
             // masked terms exp to exactly 0 after max subtraction).
             for (ki, sc) in scores.iter_mut().enumerate().take(qi + 1) {
-                let mut dot = 0.0f32;
-                for e in 0..d_head {
-                    dot += q.data[qi * d + off + e] * k.data[ki * d + off + e];
-                }
-                *sc = dot * scale;
+                *sc = dot(qrow, &k.data[ki * d + off..ki * d + off + d_head]) * scale;
             }
             softmax_inplace(&mut scores[..qi + 1]);
+            let crow = &mut hctx[qi * d_head..(qi + 1) * d_head];
             for ki in 0..=qi {
                 let w = scores[ki];
-                for e in 0..d_head {
-                    ctx[qi * d + off + e] += w * v.data[ki * d + off + e];
+                let vrow = &v.data[ki * d + off..ki * d + off + d_head];
+                for (o, &vv) in crow.iter_mut().zip(vrow) {
+                    *o += w * vv;
                 }
             }
+        }
+        hctx
+    };
+    let head_ctx: Vec<Vec<f32>> = if s * s * d >= ATTN_PAR_MIN {
+        crate::util::threads::parallel_map(n_heads, per_head)
+    } else {
+        (0..n_heads).map(per_head).collect()
+    };
+    let mut ctx = vec![0.0f32; s * d];
+    for (hi, hctx) in head_ctx.iter().enumerate() {
+        let off = hi * d_head;
+        for qi in 0..s {
+            ctx[qi * d + off..qi * d + off + d_head]
+                .copy_from_slice(&hctx[qi * d_head..(qi + 1) * d_head]);
         }
     }
     let proj = matmul(&Tensor::new(vec![s, d], ctx), wo);
@@ -267,7 +382,7 @@ fn op_attn_prefill(
 
 /// Single-token decode step with KV cache (`serve_attn_step`): returns
 /// (y [B,d], ln2x [B,d], new_k [B,H,dh], new_v [B,H,dh]). Head geometry
-/// is inferred from the cache shape [B,H,T,dh].
+/// is inferred from the cache view.
 #[allow(clippy::too_many_arguments)]
 fn op_attn_step(
     x: &Tensor,
@@ -277,15 +392,22 @@ fn op_attn_step(
     wv: &Tensor,
     wo: &Tensor,
     ln2: &Tensor,
-    kcache: &Tensor,
-    vcache: &Tensor,
+    kcache: &KvView,
+    vcache: &KvView,
     pos: &[i32],
 ) -> Result<Vec<Tensor>> {
     let (b, d) = (x.shape[0], x.shape[1]);
-    if kcache.shape.len() != 4 || kcache.shape[0] != b {
-        bail!("attn_step: bad kcache shape {:?}", kcache.shape);
+    let (n_heads, t_max, d_head) = (kcache.n_heads, kcache.t_max, kcache.d_head);
+    if kcache.rows.len() != b || vcache.rows.len() != b {
+        bail!(
+            "attn_step: cache batch {}/{} vs x batch {b}",
+            kcache.rows.len(),
+            vcache.rows.len()
+        );
     }
-    let (n_heads, t_max, d_head) = (kcache.shape[1], kcache.shape[2], kcache.shape[3]);
+    if (vcache.n_heads, vcache.t_max, vcache.d_head) != (n_heads, t_max, d_head) {
+        bail!("attn_step: K/V cache geometry mismatch");
+    }
     if n_heads * d_head != d || pos.len() < b {
         bail!("attn_step: {n_heads}x{d_head} heads vs d_model {d}, pos len {}", pos.len());
     }
@@ -297,33 +419,34 @@ fn op_attn_step(
     let mut ctx = vec![0.0f32; b * d];
     for bi in 0..b {
         let p = (pos[bi].max(0) as usize).min(t_max);
+        let krows = kcache.rows[bi];
+        let vrows = vcache.rows[bi];
         let mut scores = vec![0.0f32; p + 1];
         for hi in 0..n_heads {
             let off = hi * d_head;
-            let cbase = (bi * n_heads + hi) * t_max * d_head;
+            let hbase = hi * t_max * d_head;
+            let qrow = &q.data[bi * d + off..bi * d + off + d_head];
             for (ti, sc) in scores.iter_mut().enumerate().take(p) {
-                let mut dot = 0.0f32;
-                for e in 0..d_head {
-                    dot += q.data[bi * d + off + e] * kcache.data[cbase + ti * d_head + e];
-                }
-                *sc = dot * scale;
+                *sc = dot(qrow, &krows[hbase + ti * d_head..hbase + (ti + 1) * d_head]) * scale;
             }
             // the token attends to itself via the freshly-projected K.
-            let mut dot = 0.0f32;
-            for e in 0..d_head {
-                dot += q.data[bi * d + off + e] * new_k.data[bi * d + off + e];
-            }
-            scores[p] = dot * scale;
+            scores[p] =
+                dot(qrow, &new_k.data[bi * d + off..bi * d + off + d_head]) * scale;
             softmax_inplace(&mut scores);
+            let crow = &mut ctx[bi * d + off..bi * d + off + d_head];
             for ti in 0..p {
                 let w = scores[ti];
-                for e in 0..d_head {
-                    ctx[bi * d + off + e] += w * vcache.data[cbase + ti * d_head + e];
+                let vrow = &vrows[hbase + ti * d_head..hbase + (ti + 1) * d_head];
+                for (o, &vv) in crow.iter_mut().zip(vrow) {
+                    *o += w * vv;
                 }
             }
             let w = scores[p];
-            for e in 0..d_head {
-                ctx[bi * d + off + e] += w * new_v.data[bi * d + off + e];
+            for (o, &vv) in crow
+                .iter_mut()
+                .zip(&new_v.data[bi * d + off..bi * d + off + d_head])
+            {
+                *o += w * vv;
             }
         }
     }
@@ -447,23 +570,86 @@ mod tests {
             }
         }
         let last = x.row_slice(s - 1, s);
-        let step = op_attn_step(
-            &last,
-            &ln1,
-            &wq,
-            &wk,
-            &wv,
-            &wo,
-            &ln2,
-            &Tensor::new(vec![1, h, t_max, dh], kc),
-            &Tensor::new(vec![1, h, t_max, dh], vc),
-            &[(s - 1) as i32],
-        )
-        .unwrap();
+        let kt = Tensor::new(vec![1, h, t_max, dh], kc);
+        let vt = Tensor::new(vec![1, h, t_max, dh], vc);
+        // head geometry comes from the cache view — no set_model needed
+        let be = CpuRef::new();
+        let step = be
+            .exec(
+                "attn_step_b1",
+                &[
+                    Arg::F32(&last),
+                    Arg::F32(&ln1),
+                    Arg::F32(&wq),
+                    Arg::F32(&wk),
+                    Arg::F32(&wv),
+                    Arg::F32(&wo),
+                    Arg::F32(&ln2),
+                    Arg::F32(&kt),
+                    Arg::F32(&vt),
+                    Arg::I32(&[(s - 1) as i32]),
+                ],
+            )
+            .unwrap();
         for e in 0..d {
             let want = full[0].data[(s - 1) * d + e];
             let got = step[0].data[e];
             assert!((want - got).abs() < 1e-5, "y[{e}]: {want} vs {got}");
+        }
+    }
+
+    #[test]
+    fn attn_step_slice_view_is_bit_identical_to_contiguous() {
+        // Arg::F32Slices (zero-copy per-slot KV) must be byte-identical
+        // to feeding the same cache as one contiguous tensor.
+        let mut rng = SplitMix64::new(5);
+        let (b, d, h, dh, t_max) = (3usize, 8usize, 2usize, 4usize, 6usize);
+        let x = randn(&mut rng, vec![b, d], 0.5);
+        let ln1 = Tensor::new(vec![d], vec![1.0; d]);
+        let ln2 = Tensor::new(vec![d], vec![1.0; d]);
+        let wq = randn(&mut rng, vec![d, d], 0.3);
+        let wk = randn(&mut rng, vec![d, d], 0.3);
+        let wv = randn(&mut rng, vec![d, d], 0.3);
+        let wo = randn(&mut rng, vec![d, d], 0.3);
+        let kc = randn(&mut rng, vec![b, h, t_max, dh], 0.4);
+        let vc = randn(&mut rng, vec![b, h, t_max, dh], 0.4);
+        let pos = [2i32, 0, 4];
+        let be = CpuRef::new();
+        let args_t = [
+            Arg::F32(&x),
+            Arg::F32(&ln1),
+            Arg::F32(&wq),
+            Arg::F32(&wk),
+            Arg::F32(&wv),
+            Arg::F32(&wo),
+            Arg::F32(&ln2),
+            Arg::F32(&kc),
+            Arg::F32(&vc),
+            Arg::I32(&pos),
+        ];
+        let via_tensor = be.exec("attn_step_b3", &args_t).unwrap();
+        let stride = h * t_max * dh;
+        let kslices: Vec<&[f32]> =
+            (0..b).map(|bi| &kc.data[bi * stride..(bi + 1) * stride]).collect();
+        let vslices: Vec<&[f32]> =
+            (0..b).map(|bi| &vc.data[bi * stride..(bi + 1) * stride]).collect();
+        let shape = [b, h, t_max, dh];
+        let args_s = vec![
+            Arg::F32(&x),
+            Arg::F32(&ln1),
+            Arg::F32(&wq),
+            Arg::F32(&wk),
+            Arg::F32(&wv),
+            Arg::F32(&wo),
+            Arg::F32(&ln2),
+            Arg::F32Slices(&kslices, &shape),
+            Arg::F32Slices(&vslices, &shape),
+            Arg::I32(&pos),
+        ];
+        let via_slices = be.exec("attn_step_b3", &args_s).unwrap();
+        for (a, bt) in via_tensor.iter().zip(&via_slices) {
+            assert_eq!(a.data, bt.data);
+            assert_eq!(a.shape, bt.shape);
         }
     }
 

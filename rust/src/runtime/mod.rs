@@ -32,9 +32,9 @@ pub mod cpu;
 #[cfg(feature = "pjrt")]
 pub mod pjrt;
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::Path;
+use std::sync::Mutex;
 
 use anyhow::{bail, Result};
 
@@ -50,6 +50,14 @@ pub struct BufId(pub usize);
 /// Host-side input for one executable argument.
 pub enum Arg<'a> {
     F32(&'a Tensor),
+    /// Zero-copy view: a logical tensor whose leading dimension is
+    /// split into borrowed row blocks. `F32Slices(slices, shape)` has
+    /// `slices.len() == shape[0]`, each slice holding
+    /// `shape[1..].product()` elements. The engine feeds per-slot
+    /// KV-cache slices to `attn_step_*` this way, so the decode hot
+    /// path never clones the cache; backends without host-pointer
+    /// access materialize the view on upload.
+    F32Slices(&'a [&'a [f32]], &'a [usize]),
     I32(&'a [i32]),
     /// A buffer uploaded once via [`Backend::upload`] (weights path).
     Buf(BufId),
@@ -84,13 +92,25 @@ impl BackendKind {
 /// Object-safe on purpose — the engine holds a `Box<dyn Backend>` so
 /// the backend is a *runtime* choice (env var / options), and future
 /// GPU or multi-node runtimes slot in without touching the engine.
-pub trait Backend {
+///
+/// `Sync` is a supertrait: the engine issues concurrent `exec` calls
+/// from its scoped expert-dispatch workers, so implementations use
+/// lock/atomic interior state rather than `RefCell`/`Cell`.
+pub trait Backend: Sync {
     /// Human-readable platform tag (e.g. "cpu-ref", "Host").
     fn platform(&self) -> String;
 
     /// Attention kernels need head geometry that artifact names do not
     /// carry; the engine calls this once after construction.
     fn set_model(&self, _cfg: &ModelConfig) {}
+
+    /// Whether `exec` may be invoked from several threads at once. The
+    /// engine's threaded expert dispatch consults this and falls back
+    /// to serial execution when false — backends whose FFI handles are
+    /// not proven thread-safe must keep the default.
+    fn supports_concurrent_exec(&self) -> bool {
+        false
+    }
 
     /// Upload a host tensor to a backend-resident buffer.
     fn upload(&self, t: &Tensor) -> Result<BufId>;
@@ -114,34 +134,38 @@ pub trait Backend {
 
 /// Cumulative executions + wall seconds per artifact, shared by all
 /// backends (perf accounting behind `EngineMetrics` / fig10-11).
+/// Mutex-guarded so backends can record from concurrent `exec` calls;
+/// under threaded dispatch the per-artifact seconds are cumulative
+/// *busy* time across workers (may exceed wall time).
 #[derive(Debug, Default)]
 pub struct ExecCounters {
-    counts: RefCell<HashMap<String, (u64, f64)>>,
+    counts: Mutex<HashMap<String, (u64, f64)>>,
 }
 
 impl ExecCounters {
     pub fn record(&self, name: &str, secs: f64) {
-        let mut counts = self.counts.borrow_mut();
+        let mut counts = self.counts.lock().unwrap();
         let entry = counts.entry(name.to_string()).or_insert((0, 0.0));
         entry.0 += 1;
         entry.1 += secs;
     }
 
     pub fn reset(&self) {
-        self.counts.borrow_mut().clear();
+        self.counts.lock().unwrap().clear();
     }
 
     pub fn snapshot(&self) -> HashMap<String, (u64, f64)> {
-        self.counts.borrow().clone()
+        self.counts.lock().unwrap().clone()
     }
 
     pub fn distinct(&self) -> usize {
-        self.counts.borrow().len()
+        self.counts.lock().unwrap().len()
     }
 
     pub fn time_with_prefix(&self, prefix: &str) -> f64 {
         self.counts
-            .borrow()
+            .lock()
+            .unwrap()
             .iter()
             .filter(|(k, _)| k.starts_with(prefix))
             .map(|(_, (_, t))| t)

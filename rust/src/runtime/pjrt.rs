@@ -6,15 +6,17 @@
 //! DESIGN.md §6). Every artifact was lowered with `return_tuple=True`,
 //! so execution always yields a tuple literal which we decompose.
 //!
-//! The xla crate's handles wrap raw pointers and are `!Send`; a
-//! [`PjrtRuntime`] therefore lives on one thread. The EP runtime gives
-//! each simulated device thread its own runtime — which also faithfully
-//! models per-device compiled executables under expert parallelism.
+//! Thread-safety: the `Backend` trait requires `Sync` (the engine
+//! issues concurrent `exec` calls from its expert-dispatch workers).
+//! PJRT's C++ client API is thread-safe for buffer upload, compilation
+//! and execution; the `xla` crate's handle types are `!Sync` only
+//! because they wrap raw pointers without a marker. All interior
+//! mutability below is Mutex-guarded, and the `unsafe impl Sync`
+//! documents that we rely on PJRT's own thread-safety contract.
 
-use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-use std::rc::Rc;
+use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{bail, Context, Result};
 
@@ -32,11 +34,27 @@ pub struct Exec {
 pub struct PjrtRuntime {
     client: xla::PjRtClient,
     artifacts_dir: PathBuf,
-    cache: RefCell<HashMap<String, Rc<Exec>>>,
+    cache: Mutex<HashMap<String, Arc<Exec>>>,
     /// Device-resident weight buffers addressed by [`BufId`].
-    bufs: RefCell<Vec<xla::PjRtBuffer>>,
+    bufs: RwLock<Vec<xla::PjRtBuffer>>,
+    /// Serializes every touch of the raw-pointer xla handles (client,
+    /// executables, buffers). Held for the whole of `platform`/`upload`
+    /// /`load`/`exec` — the invariant that makes the `Sync` impl below
+    /// sound without relying on PJRT's own (undeclared-in-Rust)
+    /// thread-safety.
+    call: Mutex<()>,
     counters: ExecCounters,
 }
+
+// SAFETY: all access to the raw-pointer xla handles goes through
+// `call` (see the methods below — each acquires it before touching
+// `client`/`bufs` contents), so cross-thread `&PjrtRuntime` usage is
+// fully serialized; the remaining interior state (compile cache,
+// buffer registry, counters) is independently lock-guarded. The
+// `Backend: Sync` supertrait requires this impl; actual concurrency
+// additionally stays disabled via the `supports_concurrent_exec()`
+// default of `false`.
+unsafe impl Sync for PjrtRuntime {}
 
 impl PjrtRuntime {
     pub fn new(artifacts_dir: &Path) -> Result<Self> {
@@ -44,15 +62,23 @@ impl PjrtRuntime {
         Ok(PjrtRuntime {
             client,
             artifacts_dir: artifacts_dir.to_path_buf(),
-            cache: RefCell::new(HashMap::new()),
-            bufs: RefCell::new(Vec::new()),
+            cache: Mutex::new(HashMap::new()),
+            bufs: RwLock::new(Vec::new()),
+            call: Mutex::new(()),
             counters: ExecCounters::default(),
         })
     }
 
     /// Load + compile an artifact by name (cached).
-    pub fn load(&self, name: &str) -> Result<Rc<Exec>> {
-        if let Some(e) = self.cache.borrow().get(name) {
+    pub fn load(&self, name: &str) -> Result<Arc<Exec>> {
+        let _serial = self.call.lock().unwrap();
+        self.load_locked(name)
+    }
+
+    /// [`Self::load`] body for callers already holding `call` (a plain
+    /// Mutex is not reentrant — `exec` must not lock it twice).
+    fn load_locked(&self, name: &str) -> Result<Arc<Exec>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
             return Ok(e.clone());
         }
         let path = self.artifacts_dir.join(format!("{name}.hlo.txt"));
@@ -66,21 +92,23 @@ impl PjrtRuntime {
             .client
             .compile(&comp)
             .with_context(|| format!("compiling {name}"))?;
-        let e = Rc::new(Exec { name: name.to_string(), exe });
-        self.cache.borrow_mut().insert(name.to_string(), e.clone());
+        let e = Arc::new(Exec { name: name.to_string(), exe });
+        self.cache.lock().unwrap().insert(name.to_string(), e.clone());
         Ok(e)
     }
 }
 
 impl Backend for PjrtRuntime {
     fn platform(&self) -> String {
+        let _serial = self.call.lock().unwrap();
         self.client.platform_name()
     }
 
     /// Upload a host tensor to a device-resident buffer (weights path).
     fn upload(&self, t: &Tensor) -> Result<BufId> {
+        let _serial = self.call.lock().unwrap();
         let buf = self.client.buffer_from_host_buffer(&t.data, &t.shape, None)?;
-        let mut bufs = self.bufs.borrow_mut();
+        let mut bufs = self.bufs.write().unwrap();
         bufs.push(buf);
         Ok(BufId(bufs.len() - 1))
     }
@@ -88,9 +116,10 @@ impl Backend for PjrtRuntime {
     /// Execute an artifact; host args are uploaded per call, `Arg::Buf`
     /// args are passed as-is. Returns the decomposed output tuple.
     fn exec(&self, name: &str, args: &[Arg]) -> Result<Vec<Tensor>> {
-        let exec = self.load(name)?;
+        let _serial = self.call.lock().unwrap();
+        let exec = self.load_locked(name)?;
         let t0 = std::time::Instant::now();
-        let persistent = self.bufs.borrow();
+        let persistent = self.bufs.read().unwrap();
         // Owned buffers for the host-side args (kept alive through the
         // execute call); `refs` mixes them with the persistent ones.
         let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
@@ -99,6 +128,21 @@ impl Backend for PjrtRuntime {
             match a {
                 Arg::F32(t) => {
                     owned.push(self.client.buffer_from_host_buffer(&t.data, &t.shape, None)?);
+                    slots.push(Some(owned.len() - 1));
+                }
+                Arg::F32Slices(slices, shape) => {
+                    // PJRT uploads need contiguous host memory —
+                    // materialize the zero-copy view here.
+                    let n: usize = shape.iter().product();
+                    let mut flat: Vec<f32> = Vec::with_capacity(n);
+                    for s in slices.iter() {
+                        flat.extend_from_slice(s);
+                    }
+                    if flat.len() != n {
+                        // same contract CpuRef's kv_arg enforces
+                        bail!("{name}: slice view holds {} elems, shape needs {n}", flat.len());
+                    }
+                    owned.push(self.client.buffer_from_host_buffer(&flat, shape, None)?);
                     slots.push(Some(owned.len() - 1));
                 }
                 Arg::I32(v) => {
@@ -133,7 +177,7 @@ impl Backend for PjrtRuntime {
 
     /// Number of distinct compiled artifacts held by this runtime.
     fn compiled_count(&self) -> usize {
-        self.cache.borrow().len()
+        self.cache.lock().unwrap().len()
     }
 
     fn reset_counters(&self) {

@@ -100,6 +100,10 @@ impl Json {
             .collect::<Result<Vec<_>>>()?)
     }
 
+    // An inherent `to_string` (not Display) is deliberate: this is the
+    // only serialization entry point and a Display impl would invite
+    // formatting-machinery overhead on large tensors.
+    #[allow(clippy::inherent_to_string)]
     pub fn to_string(&self) -> String {
         let mut s = String::new();
         self.write(&mut s);

@@ -1,4 +1,4 @@
-//! Pure-Rust reference math over host tensors.
+//! Pure-Rust math kernels over host tensors — the CPU hot path.
 //!
 //! These are the shared kernels behind the `CpuRef` backend
 //! (`runtime::cpu`) — the hermetic serving hot path when no AOT
@@ -6,35 +6,138 @@
 //! (partition/reconstruction invariants), baseline weight surgery
 //! (Wanda 2:4), and cross-checking artifact outputs without a Python
 //! round trip.
+//!
+//! Layout: everything is built from two autovectorization-friendly
+//! primitives —
+//!
+//! * [`gemv_acc`]: one output row accumulated as a 4-way-unrolled
+//!   sequence of fused axpy passes over rows of B (`i/k/j` order, B
+//!   traversed row-major, no strided access);
+//! * [`dot`]: a 4-accumulator reduction over `chunks_exact(4)`.
+//!
+//! [`matmul`] tiles rows across worker threads when the product is
+//! large enough to amortize the spawn (`util::threads`); rows are
+//! independent, so results are **bit-identical for every thread count
+//! and every row-block partition**. [`swiglu_ffn`] fuses gate/up
+//! projection, the swish ⊙ up elementwise stage and the down
+//! projection per row — the `[rows, width]` intermediates are never
+//! materialized.
 
 use crate::model::Tensor;
+use crate::util::threads;
 
-/// C = A[m,k] @ B[k,n] (naive; test-scale sizes only).
+/// Below this `m·k·n` volume a GEMM runs serial — the scoped-thread
+/// spawn (~tens of µs) would dominate the kernel.
+const PAR_MIN_VOLUME: usize = 1 << 20;
+
+/// `orow[j] += Σ_p arow[p] · b[p·n + j]` — one GEMM output row, B
+/// row-major. Four A-scalars drive one fused pass over the output row
+/// (4-way k-unroll), which both quarters the `orow` traffic and gives
+/// the autovectorizer a wide independent inner loop.
+#[inline]
+pub fn gemv_acc(arow: &[f32], b: &[f32], n: usize, orow: &mut [f32]) {
+    debug_assert_eq!(arow.len() * n, b.len());
+    debug_assert_eq!(orow.len(), n);
+    let k = arow.len();
+    let mut p = 0;
+    while p + 4 <= k {
+        let a0 = arow[p];
+        let a1 = arow[p + 1];
+        let a2 = arow[p + 2];
+        let a3 = arow[p + 3];
+        let b0 = &b[p * n..(p + 1) * n];
+        let b1 = &b[(p + 1) * n..(p + 2) * n];
+        let b2 = &b[(p + 2) * n..(p + 3) * n];
+        let b3 = &b[(p + 3) * n..(p + 4) * n];
+        for ((((o, &v0), &v1), &v2), &v3) in
+            orow.iter_mut().zip(b0).zip(b1).zip(b2).zip(b3)
+        {
+            *o += a0 * v0 + a1 * v1 + a2 * v2 + a3 * v3;
+        }
+        p += 4;
+    }
+    while p < k {
+        let a0 = arow[p];
+        for (o, &v) in orow.iter_mut().zip(&b[p * n..(p + 1) * n]) {
+            *o += a0 * v;
+        }
+        p += 1;
+    }
+}
+
+/// Dot product with four independent accumulators over
+/// `chunks_exact(4)` — a fixed reduction order that autovectorizes.
+#[inline]
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    let xc = x.chunks_exact(4);
+    let yc = y.chunks_exact(4);
+    let xr = xc.remainder();
+    let yr = yc.remainder();
+    let mut acc = [0.0f32; 4];
+    for (xs, ys) in xc.zip(yc) {
+        acc[0] += xs[0] * ys[0];
+        acc[1] += xs[1] * ys[1];
+        acc[2] += xs[2] * ys[2];
+        acc[3] += xs[3] * ys[3];
+    }
+    let mut s = (acc[0] + acc[1]) + (acc[2] + acc[3]);
+    for (xv, yv) in xr.iter().zip(yr) {
+        s += xv * yv;
+    }
+    s
+}
+
+/// C = A[m,k] @ B[k,n]. Rows are computed independently (tiled across
+/// worker threads above [`PAR_MIN_VOLUME`]), so the result does not
+/// depend on the thread count.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(a.shape.len(), 2);
     assert_eq!(b.shape.len(), 2);
     let (m, k) = (a.shape[0], a.shape[1]);
     let (k2, n) = (b.shape[0], b.shape[1]);
     assert_eq!(k, k2, "matmul shape mismatch");
+    let nt = threads::num_threads();
+    if nt > 1 && m >= 2 && m * k * n >= PAR_MIN_VOLUME {
+        // Row blocks across workers; each block is the serial kernel.
+        let nb = nt.min(m);
+        let chunk = m.div_ceil(nb);
+        let blocks = threads::parallel_map(m.div_ceil(chunk), |t| {
+            let r0 = t * chunk;
+            let r1 = ((t + 1) * chunk).min(m);
+            let mut block = vec![0.0f32; (r1 - r0) * n];
+            for i in r0..r1 {
+                gemv_acc(
+                    &a.data[i * k..(i + 1) * k],
+                    &b.data,
+                    n,
+                    &mut block[(i - r0) * n..(i - r0 + 1) * n],
+                );
+            }
+            block
+        });
+        let mut out = Vec::with_capacity(m * n);
+        for blk in blocks {
+            out.extend_from_slice(&blk);
+        }
+        return Tensor::new(vec![m, n], out);
+    }
     let mut out = vec![0.0f32; m * n];
     for i in 0..m {
-        for p in 0..k {
-            let av = a.data[i * k + p];
-            if av == 0.0 {
-                continue;
-            }
-            let brow = &b.data[p * n..(p + 1) * n];
-            let orow = &mut out[i * n..(i + 1) * n];
-            for j in 0..n {
-                orow[j] += av * brow[j];
-            }
-        }
+        gemv_acc(
+            &a.data[i * k..(i + 1) * k],
+            &b.data,
+            n,
+            &mut out[i * n..(i + 1) * n],
+        );
     }
     Tensor::new(vec![m, n], out)
 }
 
 /// C = A[m,k] @ B[n,k]ᵀ (B is accessed row-wise — the tied-embedding
 /// LM head projects onto `emb` rows without materializing a transpose).
+/// Four B rows are reduced per A-row pass so the A row stays in
+/// registers; each dot uses the fixed [`dot`] reduction order.
 pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
     assert_eq!(a.shape.len(), 2);
     assert_eq!(b.shape.len(), 2);
@@ -44,13 +147,34 @@ pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
     let mut out = vec![0.0f32; m * n];
     for i in 0..m {
         let arow = &a.data[i * k..(i + 1) * k];
-        for j in 0..n {
-            let brow = &b.data[j * k..(j + 1) * k];
-            let mut acc = 0.0f32;
-            for p in 0..k {
-                acc += arow[p] * brow[p];
+        let orow = &mut out[i * n..(i + 1) * n];
+        let mut j = 0;
+        while j + 4 <= n {
+            let r0 = &b.data[j * k..(j + 1) * k];
+            let r1 = &b.data[(j + 1) * k..(j + 2) * k];
+            let r2 = &b.data[(j + 2) * k..(j + 3) * k];
+            let r3 = &b.data[(j + 3) * k..(j + 4) * k];
+            let mut s0 = 0.0f32;
+            let mut s1 = 0.0f32;
+            let mut s2 = 0.0f32;
+            let mut s3 = 0.0f32;
+            for ((((&x, &y0), &y1), &y2), &y3) in
+                arow.iter().zip(r0).zip(r1).zip(r2).zip(r3)
+            {
+                s0 += x * y0;
+                s1 += x * y1;
+                s2 += x * y2;
+                s3 += x * y3;
             }
-            out[i * n + j] = acc;
+            orow[j] = s0;
+            orow[j + 1] = s1;
+            orow[j + 2] = s2;
+            orow[j + 3] = s3;
+            j += 4;
+        }
+        while j < n {
+            orow[j] = dot(arow, &b.data[j * k..(j + 1) * k]);
+            j += 1;
         }
     }
     Tensor::new(vec![m, n], out)
@@ -60,17 +184,34 @@ pub fn swish(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
-/// SwiGLU FFN (paper Eq. 4) over host tensors.
+/// SwiGLU FFN (paper Eq. 4), fused per row: gate/up projections run as
+/// [`gemv_acc`] passes into two width-sized scratch rows, the
+/// `swish(g) ⊙ u` stage happens in place, and the down projection
+/// accumulates straight into the output row. The `[rows, width]`
+/// intermediates of the unfused formulation are never materialized.
 pub fn swiglu_ffn(x: &Tensor, w1: &Tensor, w3: &Tensor, w2: &Tensor) -> Tensor {
-    let gate = matmul(x, w1);
-    let up = matmul(x, w3);
-    let h: Vec<f32> = gate
-        .data
-        .iter()
-        .zip(&up.data)
-        .map(|(&g, &u)| swish(g) * u)
-        .collect();
-    matmul(&Tensor::new(gate.shape.clone(), h), w2)
+    assert_eq!(x.shape.len(), 2);
+    let (m, d) = (x.shape[0], x.shape[1]);
+    let h = w1.shape[1];
+    assert_eq!(w1.shape[0], d, "swiglu w1 shape mismatch");
+    assert_eq!(w3.shape, w1.shape, "swiglu w3 shape mismatch");
+    assert_eq!(w2.shape[0], h, "swiglu w2 shape mismatch");
+    let dout = w2.shape[1];
+    let mut out = vec![0.0f32; m * dout];
+    let mut g = vec![0.0f32; h];
+    let mut u = vec![0.0f32; h];
+    for i in 0..m {
+        let xrow = &x.data[i * d..(i + 1) * d];
+        g.fill(0.0);
+        u.fill(0.0);
+        gemv_acc(xrow, &w1.data, h, &mut g);
+        gemv_acc(xrow, &w3.data, h, &mut u);
+        for (gv, &uv) in g.iter_mut().zip(u.iter()) {
+            *gv = swish(*gv) * uv;
+        }
+        gemv_acc(&g, &w2.data, dout, &mut out[i * dout..(i + 1) * dout]);
+    }
+    Tensor::new(vec![m, dout], out)
 }
 
 /// Row-wise softmax of a 2-D tensor.
@@ -99,7 +240,7 @@ pub fn rmsnorm_rows(x: &Tensor, g: &[f32]) -> Tensor {
     let mut out = vec![0.0f32; m * n];
     for i in 0..m {
         let row = &x.data[i * n..(i + 1) * n];
-        let ms: f32 = row.iter().map(|v| v * v).sum::<f32>() / n as f32;
+        let ms: f32 = dot(row, row) / n as f32;
         let scale = 1.0 / (ms + 1e-6).sqrt();
         for j in 0..n {
             out[i * n + j] = row[j] * scale * g[j];
@@ -149,12 +290,39 @@ mod tests {
     }
 
     #[test]
+    fn matmul_unroll_remainders() {
+        // k = 5 and n = 3 exercise both the 4-way-unroll remainder in
+        // gemv_acc and the j-remainder in matmul_bt.
+        let a = Tensor::new(vec![2, 5], (0..10).map(|x| x as f32).collect());
+        let b = Tensor::new(vec![5, 3], (0..15).map(|x| x as f32).collect());
+        let c = matmul(&a, &b);
+        // reference by plain triple loop
+        let mut want = vec![0.0f32; 2 * 3];
+        for i in 0..2 {
+            for p in 0..5 {
+                for j in 0..3 {
+                    want[i * 3 + j] += a.data[i * 5 + p] * b.data[p * 3 + j];
+                }
+            }
+        }
+        assert_eq!(c.data, want);
+    }
+
+    #[test]
     fn matmul_bt_matches_explicit_transpose() {
         let a = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
         let b = Tensor::new(vec![2, 3], vec![1., 0., 1., 0., 1., 0.]);
         // bᵀ is [[1,0],[0,1],[1,0]] → a@bᵀ = [[4,2],[10,5]]
         assert_eq!(matmul_bt(&a, &b).data, vec![4., 2., 10., 5.]);
         assert_eq!(matmul_bt(&a, &b).shape, vec![2, 2]);
+    }
+
+    #[test]
+    fn dot_matches_serial_sum() {
+        let x: Vec<f32> = (0..11).map(|v| v as f32 * 0.5).collect();
+        let y: Vec<f32> = (0..11).map(|v| (v as f32 - 3.0) * 0.25).collect();
+        let want: f32 = x.iter().zip(&y).map(|(a, b)| a * b).sum();
+        assert!((dot(&x, &y) - want).abs() < 1e-4);
     }
 
     #[test]
@@ -174,6 +342,26 @@ mod tests {
     }
 
     #[test]
+    fn swiglu_matches_unfused_composition() {
+        let a = Tensor::new(vec![3, 4], (0..12).map(|x| x as f32 * 0.1).collect());
+        let w1 = Tensor::new(vec![4, 6], (0..24).map(|x| (x as f32 - 12.0) * 0.05).collect());
+        let w3 = Tensor::new(vec![4, 6], (0..24).map(|x| (x as f32 - 6.0) * 0.04).collect());
+        let w2 = Tensor::new(vec![6, 4], (0..24).map(|x| (x as f32 - 9.0) * 0.03).collect());
+        let gate = matmul(&a, &w1);
+        let up = matmul(&a, &w3);
+        let h: Vec<f32> = gate
+            .data
+            .iter()
+            .zip(&up.data)
+            .map(|(&g, &u)| swish(g) * u)
+            .collect();
+        let want = matmul(&Tensor::new(gate.shape.clone(), h), &w2);
+        let got = swiglu_ffn(&a, &w1, &w3, &w2);
+        assert_eq!(got.shape, want.shape);
+        assert!(max_abs_diff(&got, &want) < 1e-6);
+    }
+
+    #[test]
     fn rmsnorm_unit_gain() {
         let x = Tensor::new(vec![1, 2], vec![3.0, 4.0]);
         let y = rmsnorm_rows(&x, &[1.0, 1.0]);
@@ -188,5 +376,37 @@ mod tests {
         let b = Tensor::new(vec![2], vec![2.0, 4.0]);
         add_scaled(&mut a, &b, 0.5);
         assert_eq!(a.data, vec![2.0, 3.0]);
+    }
+
+    #[test]
+    fn parallel_matmul_is_thread_count_invariant() {
+        use crate::util::rng::SplitMix64;
+        let mut rng = SplitMix64::new(42);
+        // big enough to cross PAR_MIN_VOLUME: 64·128·256 = 2M
+        let (m, k, n) = (64usize, 128usize, 256usize);
+        let a = Tensor::new(
+            vec![m, k],
+            (0..m * k).map(|_| rng.gauss() as f32 * 0.1).collect(),
+        );
+        let b = Tensor::new(
+            vec![k, n],
+            (0..k * n).map(|_| rng.gauss() as f32 * 0.1).collect(),
+        );
+        // Serial reference built directly from the row kernel — no
+        // dependence on the process-global thread override, which
+        // concurrently-running tests may flip.
+        let mut serial = vec![0.0f32; m * n];
+        for i in 0..m {
+            gemv_acc(
+                &a.data[i * k..(i + 1) * k],
+                &b.data,
+                n,
+                &mut serial[i * n..(i + 1) * n],
+            );
+        }
+        crate::util::threads::set_thread_override(Some(4));
+        let par = matmul(&a, &b);
+        crate::util::threads::set_thread_override(None);
+        assert_eq!(serial, par.data, "row partition must not change bits");
     }
 }

@@ -1,9 +1,10 @@
-//! Shared utilities: deterministic RNG, JSON, stats, timing.
+//! Shared utilities: deterministic RNG, JSON, stats, timing, threads.
 
 pub mod json;
 pub mod linalg;
 pub mod rng;
 pub mod stats;
+pub mod threads;
 
 use std::time::Instant;
 

@@ -1,0 +1,136 @@
+//! Scoped worker threads for the CPU hot path.
+//!
+//! The engine parallelizes *independent* units of work (per-expert
+//! sub-expert calls, per-head prefill attention, row blocks of large
+//! GEMMs) with [`parallel_map`]: each index is computed exactly as in
+//! the serial path and results are merged in index order, so outputs
+//! are **bit-identical for every thread count** — `DUALSPARSE_THREADS=1`
+//! and `=8` produce byte-identical generations.
+//!
+//! Thread-count resolution (first match wins):
+//! 1. [`set_thread_override`] (programmatic; the bench harness sweeps it),
+//! 2. the `DUALSPARSE_THREADS` env var,
+//! 3. `std::thread::available_parallelism()`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Programmatic thread-count override; 0 means "not set".
+static OVERRIDE: AtomicUsize = AtomicUsize::new(0);
+
+/// Env/auto default, resolved once per process — `num_threads()` sits
+/// on the per-GEMM hot path and must not take the env lock each call.
+static DEFAULT: OnceLock<usize> = OnceLock::new();
+
+/// Override the worker thread count for subsequent [`parallel_map`]
+/// calls (`None` restores env-var / auto detection). Used by the bench
+/// harness to sweep thread counts inside one process.
+pub fn set_thread_override(n: Option<usize>) {
+    OVERRIDE.store(n.unwrap_or(0), Ordering::SeqCst);
+}
+
+/// Worker thread count for the CPU hot path (always ≥ 1). The
+/// `DUALSPARSE_THREADS` env var is read once per process.
+pub fn num_threads() -> usize {
+    let o = OVERRIDE.load(Ordering::SeqCst);
+    if o > 0 {
+        return o;
+    }
+    *DEFAULT.get_or_init(|| {
+        if let Ok(v) = std::env::var("DUALSPARSE_THREADS") {
+            if let Ok(n) = v.trim().parse::<usize>() {
+                if n > 0 {
+                    return n;
+                }
+            }
+        }
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+    })
+}
+
+/// Compute `f(0), f(1), …, f(n-1)` on a scoped worker pool and return
+/// the results in index order.
+///
+/// Work is distributed dynamically (an atomic next-index counter), the
+/// calling thread participates as a worker, and every `f(i)` is
+/// computed exactly once — so the result is independent of the thread
+/// count and identical to the serial `(0..n).map(f)`.
+pub fn parallel_map<T, F>(n: usize, f: F) -> Vec<T>
+where
+    T: Send,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = num_threads().min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+    for _ in 0..n {
+        slots.push(None);
+    }
+    let worker = |local: &mut Vec<(usize, T)>| loop {
+        let i = next.fetch_add(1, Ordering::Relaxed);
+        if i >= n {
+            break;
+        }
+        local.push((i, f(i)));
+    };
+    std::thread::scope(|scope| {
+        // threads - 1 spawned workers; the calling thread pulls too.
+        let handles: Vec<_> = (1..threads)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut local = Vec::new();
+                    worker(&mut local);
+                    local
+                })
+            })
+            .collect();
+        let mut local = Vec::new();
+        worker(&mut local);
+        for (i, v) in local {
+            slots[i] = Some(v);
+        }
+        for h in handles {
+            for (i, v) in h.join().expect("worker thread panicked") {
+                slots[i] = Some(v);
+            }
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.expect("every index computed exactly once"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn num_threads_is_positive() {
+        assert!(num_threads() >= 1);
+    }
+
+    #[test]
+    fn parallel_map_matches_serial_at_any_thread_count() {
+        let want: Vec<usize> = (0..97).map(|i| i * i).collect();
+        for t in [1usize, 2, 4, 8] {
+            set_thread_override(Some(t));
+            let got = parallel_map(97, |i| i * i);
+            assert_eq!(got, want, "threads={t}");
+        }
+        set_thread_override(None);
+    }
+
+    #[test]
+    fn parallel_map_handles_edge_sizes() {
+        set_thread_override(Some(4));
+        assert_eq!(parallel_map(0, |i| i), Vec::<usize>::new());
+        assert_eq!(parallel_map(1, |i| i + 10), vec![10]);
+        set_thread_override(None);
+    }
+}

@@ -12,6 +12,8 @@
 //! 3. the `CpuRef` backend executes sub-experts exactly like the shared
 //!    `util::linalg` kernels it is built from.
 
+#![allow(clippy::needless_range_loop, clippy::manual_memcpy, clippy::type_complexity)]
+
 use dualsparse::model::Tensor;
 use dualsparse::moe::{
     importance_order, plan_dispatch, route_token, DropPolicy, TokenRouting,

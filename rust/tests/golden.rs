@@ -13,6 +13,8 @@
 //! `make_backend(Auto)` — PJRT when compiled in, `CpuRef` otherwise —
 //! and are asserted when present instead of panicking when absent.
 
+#![allow(clippy::needless_range_loop, clippy::manual_memcpy, clippy::type_complexity)]
+
 use std::path::{Path, PathBuf};
 
 use dualsparse::model::{ModelConfig, Tensor};

@@ -8,6 +8,8 @@
 //! at a `make artifacts` tree (and the `pjrt` feature is on), the same
 //! tests fall through to trained weights on the PJRT runtime.
 
+#![allow(clippy::needless_range_loop, clippy::manual_memcpy, clippy::type_complexity)]
+
 use std::path::PathBuf;
 
 use dualsparse::engine::{Engine, EngineOptions, EpOptions};

@@ -1,0 +1,186 @@
+//! Parallel-dispatch determinism + kernel-vs-naive property tests.
+//!
+//! The threaded CPU hot path promises that worker count is invisible in
+//! the numerics: every parallel unit (expert task, attention head, GEMM
+//! row block) computes exactly what the serial path computes and merges
+//! in a fixed order. These tests pin that promise at the engine level
+//! (byte-identical generations and metrics for `DUALSPARSE_THREADS=1`
+//! vs `=8`) and pin the blocked linalg kernels against naive
+//! triple-loop references on fuzzed shapes.
+
+#![allow(clippy::needless_range_loop, clippy::manual_memcpy, clippy::type_complexity)]
+
+use std::path::PathBuf;
+
+use dualsparse::engine::{Engine, EngineOptions, EpOptions};
+use dualsparse::model::Tensor;
+use dualsparse::moe::DropPolicy;
+use dualsparse::util::linalg::{matmul, matmul_bt, max_abs_diff, swiglu_ffn, swish};
+use dualsparse::util::rng::SplitMix64;
+use dualsparse::util::threads;
+
+fn artifacts() -> PathBuf {
+    std::env::var("DUALSPARSE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+fn randn(rng: &mut SplitMix64, shape: Vec<usize>, scale: f32) -> Tensor {
+    let n = shape.iter().product();
+    Tensor::new(shape, (0..n).map(|_| rng.gauss() as f32 * scale).collect())
+}
+
+/// Everything deterministic a generation run produces (timings
+/// excluded — only those may differ across thread counts).
+#[derive(Debug, PartialEq)]
+struct RunFingerprint {
+    generations: Vec<String>,
+    full: u64,
+    major_only: u64,
+    dropped: u64,
+    shared_pairs: u64,
+    decode_steps: u64,
+    prefill_tokens: u64,
+    generated_tokens: u64,
+    expert_counts: Vec<Vec<u64>>,
+    raw_scores: Vec<f32>,
+    device_load: Vec<u64>,
+}
+
+fn run_generation(threads: usize, ep: Option<EpOptions>) -> RunFingerprint {
+    threads::set_thread_override(Some(threads));
+    let opts = EngineOptions { collect_stats: true, ep, ..Default::default() };
+    // two_t(0.45) exercises full, major-only and dropped bands on the
+    // synthetic mixtral gates (top-2 norms cluster near 0.5).
+    let mut e = Engine::new(&artifacts(), "mixtral_ish", DropPolicy::two_t(0.45), opts)
+        .expect("hermetic engine");
+    let prompts = ["cpy:abcd|", "add:3+4|", "srt:dcba|", "maj:aabab|", "rev:fgh|"];
+    let generations = e.generate_batch(&prompts, 8).unwrap();
+    threads::set_thread_override(None);
+    let t = e.metrics.total_drop();
+    RunFingerprint {
+        generations,
+        full: t.full,
+        major_only: t.major_only,
+        dropped: t.dropped,
+        shared_pairs: e.metrics.shared_pairs,
+        decode_steps: e.metrics.decode_steps,
+        prefill_tokens: e.metrics.prefill_tokens,
+        generated_tokens: e.metrics.generated_tokens,
+        expert_counts: e.metrics.expert_counts.clone(),
+        raw_scores: e.metrics.raw_scores.clone(),
+        device_load: e.metrics.device_load.clone(),
+    }
+}
+
+/// One test (not several) on purpose: the thread override is a
+/// process-global, and cargo runs tests in one binary concurrently —
+/// two tests flipping it could race and silently compare two runs at
+/// the SAME thread count. Sequential in a single test, the 1-thread
+/// and 8-thread fingerprints really come from different worker counts.
+#[test]
+fn one_thread_and_eight_threads_are_byte_identical() {
+    let serial = run_generation(1, None);
+    let threaded = run_generation(8, None);
+    assert_eq!(serial, threaded, "thread count leaked into the numerics");
+    assert!(serial.major_only > 0, "2T band must actually split work");
+
+    let ep = || Some(EpOptions { n_devices: 4, load_aware: true });
+    let serial_ep = run_generation(1, ep());
+    let threaded_ep = run_generation(8, ep());
+    assert_eq!(serial_ep, threaded_ep);
+    assert!(serial_ep.device_load.iter().sum::<u64>() > 0);
+}
+
+// ---------------------------------------------------------------------
+// Kernel-vs-naive property tests (random shapes, ≤ 1e-5)
+// ---------------------------------------------------------------------
+
+fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let n = b.shape[1];
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for p in 0..k {
+            for j in 0..n {
+                out[i * n + j] += a.data[i * k + p] * b.data[p * n + j];
+            }
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+fn naive_matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape[0], a.shape[1]);
+    let n = b.shape[0];
+    let mut out = vec![0.0f32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let mut acc = 0.0f32;
+            for p in 0..k {
+                acc += a.data[i * k + p] * b.data[j * k + p];
+            }
+            out[i * n + j] = acc;
+        }
+    }
+    Tensor::new(vec![m, n], out)
+}
+
+fn naive_swiglu(x: &Tensor, w1: &Tensor, w3: &Tensor, w2: &Tensor) -> Tensor {
+    let g = naive_matmul(x, w1);
+    let u = naive_matmul(x, w3);
+    let h: Vec<f32> = g
+        .data
+        .iter()
+        .zip(&u.data)
+        .map(|(&gv, &uv)| swish(gv) * uv)
+        .collect();
+    naive_matmul(&Tensor::new(g.shape.clone(), h), w2)
+}
+
+#[test]
+fn blocked_matmul_matches_naive_fuzz() {
+    let mut rng = SplitMix64::new(0xB10C);
+    for case in 0..40 {
+        let m = 1 + rng.below(17);
+        let k = 1 + rng.below(33);
+        let n = 1 + rng.below(33);
+        let a = randn(&mut rng, vec![m, k], 0.3);
+        let b = randn(&mut rng, vec![k, n], 0.3);
+        let err = max_abs_diff(&matmul(&a, &b), &naive_matmul(&a, &b));
+        assert!(err <= 1e-5, "case {case}: matmul |Δ|={err} (m={m} k={k} n={n})");
+    }
+}
+
+#[test]
+fn blocked_matmul_bt_matches_naive_fuzz() {
+    let mut rng = SplitMix64::new(0xB11C);
+    for case in 0..40 {
+        let m = 1 + rng.below(17);
+        let k = 1 + rng.below(33);
+        let n = 1 + rng.below(33);
+        let a = randn(&mut rng, vec![m, k], 0.3);
+        let b = randn(&mut rng, vec![n, k], 0.3);
+        let err = max_abs_diff(&matmul_bt(&a, &b), &naive_matmul_bt(&a, &b));
+        assert!(err <= 1e-5, "case {case}: matmul_bt |Δ|={err} (m={m} k={k} n={n})");
+    }
+}
+
+#[test]
+fn fused_swiglu_matches_naive_fuzz() {
+    let mut rng = SplitMix64::new(0xB12C);
+    for case in 0..30 {
+        let c = 1 + rng.below(9);
+        let d = 2 + rng.below(15);
+        let h = 2 + rng.below(23);
+        let x = randn(&mut rng, vec![c, d], 0.25);
+        let w1 = randn(&mut rng, vec![d, h], 0.25);
+        let w3 = randn(&mut rng, vec![d, h], 0.25);
+        let w2 = randn(&mut rng, vec![h, d], 0.25);
+        let err = max_abs_diff(
+            &swiglu_ffn(&x, &w1, &w3, &w2),
+            &naive_swiglu(&x, &w1, &w3, &w2),
+        );
+        assert!(err <= 1e-5, "case {case}: swiglu |Δ|={err} (c={c} d={d} h={h})");
+    }
+}

@@ -2,6 +2,8 @@
 //! Python generators bit-for-bit. The same golden values are asserted
 //! in python/tests/test_parity.py.
 
+#![allow(clippy::needless_range_loop, clippy::manual_memcpy, clippy::type_complexity)]
+
 use dualsparse::tasks::{self, eval_set};
 use dualsparse::util::rng::SplitMix64;
 
