@@ -1,134 +1,30 @@
-//! Continuous batcher: vLLM-style request loop over the engine.
+//! Continuous batcher — the closed-loop compatibility surface over the
+//! arrival-driven scheduler ([`super::scheduler`]).
 //!
-//! Admits queued requests into free KV slots (prefill), then decodes
-//! the whole active set in lockstep; retiring requests free their slot
-//! and the KV cache compacts so the decode batch stays a contiguous
-//! slot prefix.
+//! The admit-all batch loop that used to live here is now one mode of
+//! the scheduler's request lifecycle (Queued → Prefill → Decode →
+//! Done | Rejected). `serve()` runs it in [`ArrivalMode::Closed`] and
+//! keeps the historical `(completions, stats)` shape; new code that
+//! needs open-loop arrivals or the rejection list should call
+//! [`serve_with`] directly.
 
 use anyhow::Result;
 
-use super::{Engine, EOS, MAX_SLOTS};
-use crate::util::stats::percentile;
-use crate::util::Timer;
+pub use super::scheduler::{
+    poisson_arrivals, serve_with, ArrivalMode, Completion, Phase, Rejection, Request,
+    ServeOutcome, ServeStats,
+};
+use super::Engine;
 
-#[derive(Debug, Clone)]
-pub struct Request {
-    pub id: usize,
-    pub prompt: String,
-    pub max_new: usize,
-}
-
-#[derive(Debug, Clone)]
-pub struct Completion {
-    pub id: usize,
-    pub text: String,
-    /// Seconds from admission to completion.
-    pub latency: f64,
-    pub new_tokens: usize,
-}
-
-#[derive(Debug, Clone, Default)]
-pub struct ServeStats {
-    pub wall_secs: f64,
-    pub requests: usize,
-    pub generated_tokens: u64,
-    pub prefill_tokens: u64,
-    pub tokens_per_sec: f64,
-    pub mean_latency: f64,
-    pub p50_latency: f64,
-    pub p99_latency: f64,
-    /// Seconds inside MoE artifacts (gate + FFN).
-    pub moe_secs: f64,
-    /// Seconds inside all artifacts.
-    pub artifact_secs: f64,
-    pub drop_rate: f64,
-}
-
-struct Active {
-    id: usize,
-    start: f64,
-    out: Vec<u8>,
-    next: u8,
-    max_new: usize,
-}
-
-/// Run all `requests` to completion with continuous batching.
+/// Run all `requests` to completion with continuous batching in
+/// closed-loop mode (every request available at t = 0).
+///
+/// An oversized prompt no longer aborts the run: the offending request
+/// is rejected at admission validation (no KV slot consumed) and the
+/// count shows up in [`ServeStats::rejected`].
 pub fn serve(engine: &mut Engine, requests: &[Request]) -> Result<(Vec<Completion>, ServeStats)> {
-    engine.kv.n_active = 0;
-    engine.reset_metrics();
-    let timer = Timer::start();
-    let mut queue: std::collections::VecDeque<&Request> = requests.iter().collect();
-    let mut active: Vec<Active> = Vec::new(); // index == slot
-    let mut done: Vec<Completion> = Vec::new();
-
-    while !queue.is_empty() || !active.is_empty() {
-        // Admit while there is room.
-        while engine.kv.has_free() && active.len() < MAX_SLOTS {
-            let Some(req) = queue.pop_front() else { break };
-            let slot = engine.kv.alloc();
-            debug_assert_eq!(slot, active.len());
-            let start = timer.secs();
-            let first = engine.prefill(slot, req.prompt.as_bytes())?;
-            active.push(Active {
-                id: req.id,
-                start,
-                out: vec![first],
-                next: first,
-                max_new: req.max_new,
-            });
-        }
-        if active.is_empty() {
-            break;
-        }
-        // One decode step for the whole active set.
-        let tokens: Vec<u8> = active.iter().map(|a| a.next).collect();
-        let next = engine.decode_step(&tokens)?;
-        for (a, &t) in active.iter_mut().zip(&next) {
-            a.out.push(t);
-            a.next = t;
-        }
-        // Retire finished rows (reverse order keeps slot remaps simple).
-        let mut slot = active.len();
-        while slot > 0 {
-            slot -= 1;
-            let fin = active[slot].next == EOS || active[slot].out.len() >= active[slot].max_new;
-            if !fin {
-                continue;
-            }
-            let a = active.swap_remove(slot); // mirrors kv.free's move-last
-            let moved = engine.kv.free(slot);
-            debug_assert_eq!(
-                moved.is_some(),
-                slot < active.len(),
-                "kv compaction must mirror active-list compaction"
-            );
-            let end = a.out.iter().position(|&c| c == EOS).unwrap_or(a.out.len());
-            done.push(Completion {
-                id: a.id,
-                text: a.out[..end].iter().map(|&b| b as char).collect(),
-                latency: timer.secs() - a.start,
-                new_tokens: a.out.len(),
-            });
-        }
-    }
-
-    let wall = timer.secs();
-    let lats: Vec<f64> = done.iter().map(|c| c.latency).collect();
-    let stats = ServeStats {
-        wall_secs: wall,
-        requests: done.len(),
-        generated_tokens: engine.metrics.generated_tokens,
-        prefill_tokens: engine.metrics.prefill_tokens,
-        tokens_per_sec: engine.metrics.generated_tokens as f64 / wall.max(1e-9),
-        mean_latency: crate::util::stats::mean(&lats),
-        p50_latency: percentile(&lats, 50.0),
-        p99_latency: percentile(&lats, 99.0),
-        moe_secs: engine.moe_time(),
-        artifact_secs: engine.total_artifact_time(),
-        drop_rate: engine.metrics.drop_rate(),
-    };
-    done.sort_by_key(|c| c.id);
-    Ok((done, stats))
+    let out = serve_with(engine, requests, ArrivalMode::Closed)?;
+    Ok((out.completions, out.stats))
 }
 
 /// Build a serving workload from the benchmark tasks (round-robin over

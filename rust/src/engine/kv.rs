@@ -55,6 +55,14 @@ impl KvCache {
         self.n_active < self.max_slots
     }
 
+    /// Drop every active slot (start of a fresh serving run). Positions
+    /// are cleared too, so a stale sequence length can never widen a
+    /// later run's attention window (`alloc` re-zeroes slot contents).
+    pub fn reset(&mut self) {
+        self.n_active = 0;
+        self.pos.fill(0);
+    }
+
     /// Floats per slot per layer (`H · T · dh`) — the row stride of the
     /// zero-copy per-slot views the engine feeds to `attn_step_*`.
     pub fn slot_stride(&self) -> usize {
@@ -188,6 +196,19 @@ mod tests {
         // exactly the zero-copy slice the engine lends to attn_step
         assert_eq!(c.k[0].data[0], 0.5);
         assert_eq!(c.k[0].shape, vec![3, 2, 8, 4]);
+    }
+
+    #[test]
+    fn reset_clears_active_and_positions() {
+        let mut c = cache();
+        c.alloc();
+        c.alloc();
+        c.pos[1] = 5;
+        c.reset();
+        assert_eq!(c.n_active, 0);
+        assert!(c.pos.iter().all(|&p| p == 0));
+        assert!(c.has_free());
+        assert_eq!(c.alloc(), 0);
     }
 
     #[test]

@@ -10,6 +10,7 @@
 
 pub mod batcher;
 pub mod kv;
+pub mod scheduler;
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -359,6 +360,11 @@ impl Engine {
                 let mut r = route_token(
                     scores, self.cfg.top_k, self.cfg.normalized_gating,
                 );
+                // Empty selection (top_k == 0): the token simply
+                // contributes zero MoE output — nothing to skip.
+                if r.experts.is_empty() {
+                    return r;
+                }
                 let top = r.experts[0].1;
                 r.experts = r
                     .experts
@@ -389,6 +395,11 @@ impl Engine {
         });
         let k = self.cfg.top_k.min(kept_scores.len());
         let mut sel: Vec<(usize, f32)> = kept_scores[..k].to_vec();
+        // An empty kept list (fully-pruned layer) or top_k == 0 selects
+        // nothing: return an empty routing instead of indexing sel[0].
+        if sel.is_empty() {
+            return TokenRouting { experts: Vec::new() };
+        }
         if let Some(beta) = ees_beta {
             let top = sel[0].1;
             sel = sel
@@ -761,7 +772,7 @@ impl Engine {
     /// simple and deterministic for eval).
     pub fn generate_batch(&mut self, prompts: &[&str], max_new: usize) -> Result<Vec<String>> {
         assert!(prompts.len() <= MAX_SLOTS);
-        self.kv.n_active = 0;
+        self.kv.reset();
         let mut next: Vec<u8> = Vec::new();
         for p in prompts {
             let slot = self.kv.alloc();
@@ -895,5 +906,58 @@ mod tests {
     fn argmax_picks_first_max() {
         assert_eq!(argmax_u8(&[0.0, 3.0, 3.0, 1.0]), 1);
         assert_eq!(argmax_u8(&[-5.0, -2.0]), 1);
+    }
+
+    fn hermetic_engine() -> Engine {
+        Engine::new(
+            Path::new("/nonexistent-artifacts"),
+            "mixtral_ish",
+            DropPolicy::NoDrop,
+            EngineOptions::default(),
+        )
+        .expect("hermetic engine (CpuRef + synthetic weights)")
+    }
+
+    /// Every router mode must return an empty TokenRouting — not panic —
+    /// when nothing is selectable (top_k == 0 or an empty kept list).
+    #[test]
+    fn empty_selection_returns_empty_routing_in_all_modes() {
+        let mut e = hermetic_engine();
+        let nl = e.cfg.n_layers;
+        let scores = vec![1.0 / e.cfg.n_experts as f32; e.cfg.n_experts];
+
+        e.cfg.top_k = 0;
+        for mode in [
+            RouterMode::Standard,
+            RouterMode::Ees { beta: 0.5 },
+            RouterMode::Eep { kept: vec![vec![0, 1]; nl] },
+            RouterMode::EepEes { kept: vec![vec![0, 1]; nl], beta: 0.5 },
+        ] {
+            e.router_mode = mode;
+            let r = e.route(&scores, 0);
+            assert!(r.experts.is_empty(), "{:?}", e.router_mode);
+        }
+
+        // Fully-pruned layer: kept list empty even with top_k > 0.
+        e.cfg.top_k = 2;
+        for mode in [
+            RouterMode::Eep { kept: vec![Vec::new(); nl] },
+            RouterMode::EepEes { kept: vec![Vec::new(); nl], beta: 0.5 },
+        ] {
+            e.router_mode = mode;
+            let r = e.route(&scores, 0);
+            assert!(r.experts.is_empty(), "{:?}", e.router_mode);
+        }
+    }
+
+    /// An empty routing flows through the full MoE layer: the token
+    /// contributes zero MoE output and generation still completes.
+    #[test]
+    fn top_k_zero_generates_with_zero_moe_output() {
+        let mut e = hermetic_engine();
+        e.cfg.top_k = 0;
+        let outs = e.generate_batch(&["cpy:ab|"], 4).expect("no panic");
+        assert_eq!(outs.len(), 1);
+        assert_eq!(e.metrics.total_drop().total(), 0, "no pairs routed at all");
     }
 }

@@ -1,0 +1,447 @@
+//! Arrival-driven serving scheduler: the request lifecycle behind every
+//! measured serving number in this repo.
+//!
+//! Every request walks an explicit state machine
+//!
+//! ```text
+//! Queued → Prefill → Decode → Done
+//!                  ↘ Done      (immediate EOS / max_new ≤ 1)
+//!                  ↘ Rejected  (admission validation: oversized prompt)
+//! ```
+//!
+//! driven by a continuous-batching loop under one of two arrival modes:
+//!
+//! * [`ArrivalMode::Closed`] — the classic closed batch loop: every
+//!   request is available at t = 0 and admission is limited only by KV
+//!   slots. Completion texts reproduce the legacy `serve()` loop
+//!   byte-for-byte (pinned by `rust/tests/scheduler.rs`).
+//! * [`ArrivalMode::Open`] — open-loop serving: deterministic Poisson
+//!   arrivals (SplitMix64 exponential inter-arrival gaps); a request
+//!   becomes admissible only once the wall clock reaches its arrival
+//!   time. This is the arrival process the serving literature (and the
+//!   paper's §5.3.2 efficiency methodology) measures under.
+//!
+//! Latency accounting is **arrival-anchored**: `latency` includes queue
+//! wait, `ttft` is arrival → first token, and the old admission-anchored
+//! number survives as `service_secs` so a report can show both side by
+//! side. Request-level faults are **per-request**: a prompt that fails
+//! admission validation (oversized) is Rejected without consuming a KV
+//! slot and every other request keeps decoding, while a backend
+//! execution error past validation still aborts the run (swallowing it
+//! as rejections would report a dead backend as a successful run).
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use super::{Engine, EOS, MAX_SLOTS, PREFILL_BUCKETS};
+use crate::util::rng::SplitMix64;
+use crate::util::stats::{mean, percentile};
+use crate::util::Timer;
+
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: usize,
+    pub prompt: String,
+    pub max_new: usize,
+}
+
+/// When requests become admissible.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalMode {
+    /// Closed batch loop: every request has arrival time 0.
+    Closed,
+    /// Open loop: Poisson arrivals at `rate` requests/second,
+    /// deterministic given `seed` (SplitMix64 exponential gaps).
+    Open { rate: f64, seed: u64 },
+}
+
+/// Lifecycle states of one request inside the scheduler.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Queued,
+    Prefill,
+    Decode,
+    Done,
+    Rejected,
+}
+
+#[derive(Debug, Clone)]
+pub struct Completion {
+    pub id: usize,
+    pub text: String,
+    /// Generated tokens excluding the EOS terminator (== `text.len()`).
+    pub new_tokens: usize,
+    /// Arrival time (seconds from run start; 0 in closed-loop mode).
+    pub arrival: f64,
+    /// Arrival → admission (time spent waiting for a KV slot).
+    pub queue_secs: f64,
+    /// Arrival → first token (queue wait + prefill).
+    pub ttft: f64,
+    /// Admission → completion — the legacy, admission-anchored metric.
+    pub service_secs: f64,
+    /// Arrival → completion (queue-inclusive — the honest number).
+    pub latency: f64,
+    /// First token → completion (decode-phase wall time).
+    pub decode_secs: f64,
+}
+
+/// A request rejected at admission validation (no KV slot consumed; no
+/// other request was affected).
+#[derive(Debug, Clone)]
+pub struct Rejection {
+    pub id: usize,
+    pub reason: String,
+    pub arrival: f64,
+    pub rejected_at: f64,
+}
+
+#[derive(Debug, Clone, Default)]
+pub struct ServeStats {
+    pub wall_secs: f64,
+    /// Completed requests.
+    pub requests: usize,
+    /// Rejected requests (per-request failures; the run kept going).
+    pub rejected: usize,
+    pub generated_tokens: u64,
+    pub prefill_tokens: u64,
+    pub tokens_per_sec: f64,
+    /// Arrival-anchored (queue-inclusive) latency.
+    pub mean_latency: f64,
+    pub p50_latency: f64,
+    pub p99_latency: f64,
+    /// Admission-anchored service time (the pre-scheduler "latency").
+    pub p50_service: f64,
+    pub p99_service: f64,
+    /// Time to first token, measured from arrival.
+    pub mean_ttft: f64,
+    pub p50_ttft: f64,
+    pub p99_ttft: f64,
+    /// Mean arrival → admission wait across completions.
+    pub mean_queue_secs: f64,
+    /// Mean decode-phase seconds per generated token.
+    pub mean_decode_secs_per_token: f64,
+    /// Time-weighted average queue depth over the whole run.
+    pub mean_queue_depth: f64,
+    pub max_queue_depth: usize,
+    /// Seconds inside MoE artifacts (gate + FFN).
+    pub moe_secs: f64,
+    /// Seconds inside all artifacts.
+    pub artifact_secs: f64,
+    pub drop_rate: f64,
+}
+
+/// Everything one serving run produced.
+#[derive(Debug, Clone)]
+pub struct ServeOutcome {
+    /// Sorted by request id.
+    pub completions: Vec<Completion>,
+    pub rejections: Vec<Rejection>,
+    pub stats: ServeStats,
+}
+
+/// Deterministic Poisson arrival offsets (seconds from run start):
+/// exponential inter-arrival gaps at `rate` requests/second drawn from
+/// a SplitMix64 stream. Strictly increasing.
+pub fn poisson_arrivals(n: usize, rate: f64, seed: u64) -> Vec<f64> {
+    let mut rng = SplitMix64::new(seed);
+    let mut t = 0.0f64;
+    (0..n)
+        .map(|_| {
+            t += rng.exp(rate);
+            t
+        })
+        .collect()
+}
+
+/// One in-flight request; index in the active list == its KV slot.
+struct ActiveSlot {
+    id: usize,
+    /// Index into the `requests` slice (drives the phase table).
+    ridx: usize,
+    arrival: f64,
+    admitted_at: f64,
+    first_token_at: f64,
+    out: Vec<u8>,
+    next: u8,
+    max_new: usize,
+    /// Decode steps this request participated in.
+    steps: u64,
+}
+
+fn set_phase(phases: &mut [Phase], ri: usize, to: Phase) {
+    let from = phases[ri];
+    debug_assert!(
+        matches!(
+            (from, to),
+            (Phase::Queued, Phase::Prefill)
+                | (Phase::Prefill, Phase::Decode)
+                | (Phase::Prefill, Phase::Done)
+                | (Phase::Prefill, Phase::Rejected)
+                | (Phase::Decode, Phase::Done)
+        ),
+        "illegal lifecycle transition {from:?} → {to:?}"
+    );
+    phases[ri] = to;
+}
+
+fn finish(a: ActiveSlot, now: f64) -> Completion {
+    let end = a.out.iter().position(|&c| c == EOS).unwrap_or(a.out.len());
+    Completion {
+        id: a.id,
+        text: a.out[..end].iter().map(|&b| b as char).collect(),
+        new_tokens: end,
+        arrival: a.arrival,
+        queue_secs: a.admitted_at - a.arrival,
+        ttft: a.first_token_at - a.arrival,
+        service_secs: now - a.admitted_at,
+        latency: now - a.arrival,
+        decode_secs: if a.steps > 0 { now - a.first_token_at } else { 0.0 },
+    }
+}
+
+/// Run `requests` to completion (or rejection) under `mode`.
+///
+/// The loop: pull arrived requests into the admission queue, admit into
+/// free KV slots (prefill), decode the whole active set in lockstep,
+/// retire finished rows (slot freed, cache compacted). In open-loop
+/// mode the scheduler sleeps until the next arrival when idle, so wall
+/// time — and therefore every latency column — reflects the arrival
+/// process, not just raw compute.
+pub fn serve_with(
+    engine: &mut Engine,
+    requests: &[Request],
+    mode: ArrivalMode,
+) -> Result<ServeOutcome> {
+    let n = requests.len();
+    engine.kv.reset();
+    engine.reset_metrics();
+    let arrivals: Vec<f64> = match mode {
+        ArrivalMode::Closed => vec![0.0; n],
+        ArrivalMode::Open { rate, seed } => poisson_arrivals(n, rate, seed),
+    };
+    // Arrivals are monotone in request order (cumulative gaps), so the
+    // not-yet-arrived set is a simple index queue.
+    let mut pending: VecDeque<usize> = (0..n).collect();
+    let mut queue: VecDeque<usize> = VecDeque::new();
+    let mut phases = vec![Phase::Queued; n];
+    let mut active: Vec<ActiveSlot> = Vec::new(); // index == slot
+    let mut done: Vec<Completion> = Vec::new();
+    let mut rejections: Vec<Rejection> = Vec::new();
+    // Time-weighted queue-depth integral: the depth observed at one
+    // sample point weights the wall-clock interval until the next.
+    let mut qd_integral = 0.0f64;
+    let mut qd_prev = 0usize;
+    let mut qd_last_t = 0.0f64;
+    let mut qd_max = 0usize;
+    let mut decode_busy = 0.0f64;
+    let mut decode_toks = 0u64;
+    let timer = Timer::start();
+
+    loop {
+        // 1. arrivals: move everything whose time has come into the queue.
+        let now = timer.secs();
+        while pending.front().map(|&i| arrivals[i] <= now).unwrap_or(false) {
+            queue.push_back(pending.pop_front().unwrap());
+        }
+
+        // 2. admission: validate + prefill queued requests into free
+        // slots. Validation failures (oversized prompt) reject exactly
+        // that request before any slot is claimed; a prefill error past
+        // validation is a backend failure and aborts the run (after
+        // freeing the just-claimed slot, which is the last one, so the
+        // free never relocates another request's cache).
+        while engine.kv.has_free() && active.len() < MAX_SLOTS {
+            let Some(ri) = queue.pop_front() else { break };
+            let req = &requests[ri];
+            set_phase(&mut phases, ri, Phase::Prefill);
+            let max_prompt = *PREFILL_BUCKETS.last().unwrap();
+            if req.prompt.len() > max_prompt {
+                set_phase(&mut phases, ri, Phase::Rejected);
+                rejections.push(Rejection {
+                    id: req.id,
+                    reason: format!(
+                        "prompt too long: {} > {max_prompt} (max prefill bucket)",
+                        req.prompt.len()
+                    ),
+                    arrival: arrivals[ri],
+                    rejected_at: timer.secs(),
+                });
+                continue;
+            }
+            let slot = engine.kv.alloc();
+            debug_assert_eq!(slot, active.len());
+            let admitted_at = timer.secs();
+            match engine.prefill(slot, req.prompt.as_bytes()) {
+                Ok(first) => {
+                    let a = ActiveSlot {
+                        id: req.id,
+                        ridx: ri,
+                        arrival: arrivals[ri],
+                        admitted_at,
+                        first_token_at: timer.secs(),
+                        // max_new == 0 honors the bound: zero tokens kept.
+                        out: if req.max_new == 0 { Vec::new() } else { vec![first] },
+                        next: first,
+                        max_new: req.max_new,
+                        steps: 0,
+                    };
+                    if first == EOS || req.max_new <= 1 {
+                        // Finished at prefill: retire immediately instead
+                        // of burning a decode step on a dead row.
+                        let moved = engine.kv.free(slot);
+                        debug_assert!(moved.is_none());
+                        set_phase(&mut phases, ri, Phase::Done);
+                        done.push(finish(a, timer.secs()));
+                    } else {
+                        set_phase(&mut phases, ri, Phase::Decode);
+                        active.push(a);
+                    }
+                }
+                Err(err) => {
+                    // Execution failure, not a request fault: nothing
+                    // leaks, but the run must not masquerade as healthy.
+                    let moved = engine.kv.free(slot);
+                    debug_assert!(moved.is_none());
+                    return Err(err);
+                }
+            }
+        }
+        let qd_now = timer.secs();
+        qd_integral += qd_prev as f64 * (qd_now - qd_last_t);
+        qd_last_t = qd_now;
+        qd_prev = queue.len();
+        qd_max = qd_max.max(queue.len());
+
+        if active.is_empty() {
+            if queue.is_empty() && pending.is_empty() {
+                break;
+            }
+            if queue.is_empty() {
+                // Idle until the next arrival (open-loop only; capped so
+                // the loop re-checks the clock at a sane cadence).
+                let next_at = arrivals[*pending.front().unwrap()];
+                let wait = next_at - timer.secs();
+                if wait > 0.0 {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(wait.min(0.05)));
+                }
+            }
+            continue;
+        }
+
+        // 3. one decode step for the whole active set.
+        let step_t0 = timer.secs();
+        let tokens: Vec<u8> = active.iter().map(|a| a.next).collect();
+        let next = engine.decode_step(&tokens)?;
+        let step_secs = timer.secs() - step_t0;
+        decode_busy += step_secs * active.len() as f64;
+        decode_toks += active.len() as u64;
+        for (a, &t) in active.iter_mut().zip(&next) {
+            a.out.push(t);
+            a.next = t;
+            a.steps += 1;
+        }
+
+        // 4. retire finished rows (reverse order keeps slot remaps simple).
+        let mut slot = active.len();
+        while slot > 0 {
+            slot -= 1;
+            let fin = active[slot].next == EOS || active[slot].out.len() >= active[slot].max_new;
+            if !fin {
+                continue;
+            }
+            let a = active.swap_remove(slot); // mirrors kv.free's move-last
+            let moved = engine.kv.free(slot);
+            debug_assert_eq!(
+                moved.is_some(),
+                slot < active.len(),
+                "kv compaction must mirror active-list compaction"
+            );
+            set_phase(&mut phases, a.ridx, Phase::Done);
+            done.push(finish(a, timer.secs()));
+        }
+    }
+
+    debug_assert!(
+        phases.iter().all(|&p| matches!(p, Phase::Done | Phase::Rejected)),
+        "every request must end Done or Rejected: {phases:?}"
+    );
+    debug_assert_eq!(engine.kv.n_active, 0, "all KV slots must return to free");
+
+    let wall = timer.secs();
+    qd_integral += qd_prev as f64 * (wall - qd_last_t); // close the last interval
+    let lats: Vec<f64> = done.iter().map(|c| c.latency).collect();
+    let servs: Vec<f64> = done.iter().map(|c| c.service_secs).collect();
+    let ttfts: Vec<f64> = done.iter().map(|c| c.ttft).collect();
+    let queues: Vec<f64> = done.iter().map(|c| c.queue_secs).collect();
+    let stats = ServeStats {
+        wall_secs: wall,
+        requests: done.len(),
+        rejected: rejections.len(),
+        generated_tokens: engine.metrics.generated_tokens,
+        prefill_tokens: engine.metrics.prefill_tokens,
+        tokens_per_sec: engine.metrics.generated_tokens as f64 / wall.max(1e-9),
+        mean_latency: mean(&lats),
+        p50_latency: percentile(&lats, 50.0),
+        p99_latency: percentile(&lats, 99.0),
+        p50_service: percentile(&servs, 50.0),
+        p99_service: percentile(&servs, 99.0),
+        mean_ttft: mean(&ttfts),
+        p50_ttft: percentile(&ttfts, 50.0),
+        p99_ttft: percentile(&ttfts, 99.0),
+        mean_queue_secs: mean(&queues),
+        mean_decode_secs_per_token: if decode_toks > 0 {
+            decode_busy / decode_toks as f64
+        } else {
+            0.0
+        },
+        mean_queue_depth: if wall > 0.0 { qd_integral / wall } else { 0.0 },
+        max_queue_depth: qd_max,
+        moe_secs: engine.moe_time(),
+        artifact_secs: engine.total_artifact_time(),
+        drop_rate: engine.metrics.drop_rate(),
+    };
+    done.sort_by_key(|c| c.id);
+    rejections.sort_by_key(|r| r.id);
+    Ok(ServeOutcome { completions: done, rejections, stats })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn poisson_arrivals_are_deterministic_and_increasing() {
+        let a = poisson_arrivals(64, 10.0, 7);
+        let b = poisson_arrivals(64, 10.0, 7);
+        assert_eq!(a, b);
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "strictly increasing");
+        assert!(a[0] > 0.0);
+        // mean gap ≈ 1/rate (loose bound; 64 samples)
+        let mean_gap = a.last().unwrap() / 64.0;
+        assert!(mean_gap > 0.02 && mean_gap < 0.5, "mean gap {mean_gap}");
+        let c = poisson_arrivals(64, 10.0, 8);
+        assert_ne!(a, c, "seed must matter");
+    }
+
+    #[test]
+    fn phase_transitions_legal_paths_only() {
+        let mut p = vec![Phase::Queued];
+        set_phase(&mut p, 0, Phase::Prefill);
+        set_phase(&mut p, 0, Phase::Decode);
+        set_phase(&mut p, 0, Phase::Done);
+        assert_eq!(p[0], Phase::Done);
+        let mut p = vec![Phase::Queued];
+        set_phase(&mut p, 0, Phase::Prefill);
+        set_phase(&mut p, 0, Phase::Rejected);
+        assert_eq!(p[0], Phase::Rejected);
+    }
+
+    #[test]
+    #[should_panic(expected = "illegal lifecycle transition")]
+    #[cfg(debug_assertions)]
+    fn phase_skipping_prefill_is_illegal() {
+        let mut p = vec![Phase::Queued];
+        set_phase(&mut p, 0, Phase::Done);
+    }
+}

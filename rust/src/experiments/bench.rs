@@ -14,9 +14,10 @@
 
 use std::path::{Path, PathBuf};
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
 use crate::engine::batcher::serve;
+use crate::engine::scheduler::{serve_with, ArrivalMode};
 use crate::engine::{Engine, EngineOptions};
 use crate::moe::DropPolicy;
 use crate::server;
@@ -176,6 +177,188 @@ pub fn run(artifacts: &Path, cfg: &BenchConfig) -> Result<()> {
     Ok(())
 }
 
+// ---------------------------------------------------------------------
+// Open-loop serving sweep (`dualsparse serve --sweep|--quick`)
+// ---------------------------------------------------------------------
+
+/// CLI-facing options for the open-loop serving sweep.
+pub struct ServeSweepConfig {
+    /// Few-config smoke sweep (CI); full sweep otherwise.
+    pub quick: bool,
+    /// Output path for the JSON record (next to BENCH_cpu.json).
+    pub out: PathBuf,
+    /// Synthetic preset (or serialized model) to serve.
+    pub model: String,
+}
+
+/// One measured open-loop serving configuration.
+pub struct ServeRow {
+    /// Arrival rate as a multiple of the closed-loop service rate.
+    pub arrival_mult: f64,
+    /// Absolute arrival rate (requests/second).
+    pub rate_rps: f64,
+    pub policy: String,
+    pub completed: usize,
+    pub rejected: usize,
+    pub drop_rate: f64,
+    pub tokens_per_sec: f64,
+    /// Queue-inclusive (arrival-anchored) latency percentiles.
+    pub p50_latency: f64,
+    pub p99_latency: f64,
+    /// Admission-anchored service percentiles (the old metric, kept so
+    /// the report shows what queue wait used to hide).
+    pub p50_service: f64,
+    pub p99_service: f64,
+    pub p50_ttft: f64,
+    pub mean_queue_depth: f64,
+    pub max_queue_depth: usize,
+    pub wall_secs: f64,
+}
+
+/// Sweep arrival rate × drop policy in open-loop mode. Every run
+/// carries one oversized prompt (fault isolation is part of the
+/// measured path): it must cost exactly one rejection and zero lost
+/// completions. Returns the calibrated closed-loop service rate and
+/// the measured rows.
+pub fn serve_sweep_rows(
+    artifacts: &Path,
+    model: &str,
+    quick: bool,
+) -> Result<(f64, Vec<ServeRow>)> {
+    let (n, max_new) = if quick { (12, 5) } else { (48, 10) };
+    let mults: Vec<f64> = if quick { vec![0.75, 1.5] } else { vec![0.5, 1.0, 2.0, 4.0] };
+    let policies: Vec<(&str, DropPolicy)> = if quick {
+        vec![("none", DropPolicy::NoDrop), ("2t:0.45", DropPolicy::two_t(0.45))]
+    } else {
+        vec![
+            ("none", DropPolicy::NoDrop),
+            ("2t:0.44", DropPolicy::two_t(0.44)),
+            ("2t:0.48", DropPolicy::two_t(0.48)),
+            ("1t:0.52", DropPolicy::OneT(0.52)),
+        ]
+    };
+    let mut reqs = server::workload(n, max_new, 7);
+    reqs[n / 2].prompt = "!".repeat(200); // > max prefill bucket ⇒ rejected
+    let mut engine =
+        Engine::new(artifacts, model, DropPolicy::NoDrop, EngineOptions::default())?;
+    // Warm under a 2T band so the half-width (major-only) artifacts are
+    // loaded too — otherwise the first measured 2T row would pay their
+    // lazy compilation inside its latency columns.
+    engine.policy = DropPolicy::TwoT { major: 0.05, minor: 0.5 };
+    serve(&mut engine, &server::workload(n.min(8), 3, 13))?;
+    engine.policy = DropPolicy::NoDrop;
+    // Closed-loop calibration run: measures this machine's service
+    // throughput so the arrival-rate axis sweeps *relative* load.
+    let (done, base) = serve(&mut engine, &reqs)?;
+    if done.is_empty() {
+        bail!("calibration run completed zero requests — cannot derive an arrival rate");
+    }
+    let base_rps = done.len() as f64 / base.wall_secs.max(1e-3);
+    let mut rows = Vec::new();
+    for &mult in &mults {
+        let rate = base_rps * mult;
+        for (label, pol) in &policies {
+            engine.policy = *pol;
+            let out = serve_with(&mut engine, &reqs, ArrivalMode::Open { rate, seed: 11 })?;
+            let st = &out.stats;
+            rows.push(ServeRow {
+                arrival_mult: mult,
+                rate_rps: rate,
+                policy: label.to_string(),
+                completed: st.requests,
+                rejected: st.rejected,
+                drop_rate: st.drop_rate,
+                tokens_per_sec: st.tokens_per_sec,
+                p50_latency: st.p50_latency,
+                p99_latency: st.p99_latency,
+                p50_service: st.p50_service,
+                p99_service: st.p99_service,
+                p50_ttft: st.p50_ttft,
+                mean_queue_depth: st.mean_queue_depth,
+                max_queue_depth: st.max_queue_depth,
+                wall_secs: st.wall_secs,
+            });
+        }
+    }
+    Ok((base_rps, rows))
+}
+
+/// Serialize serve-sweep rows to the `SERVE_cpu.json` schema.
+pub fn write_serve_json(
+    model: &str,
+    quick: bool,
+    base_rps: f64,
+    rows: &[ServeRow],
+    out: &Path,
+) -> Result<()> {
+    let runs = Json::Arr(
+        rows.iter()
+            .map(|r| {
+                obj(vec![
+                    ("arrival_mult", num(r.arrival_mult)),
+                    ("rate_rps", num(r.rate_rps)),
+                    ("policy", s(&r.policy)),
+                    ("completed", num(r.completed as f64)),
+                    ("rejected", num(r.rejected as f64)),
+                    ("drop_rate", num(r.drop_rate)),
+                    ("tokens_per_sec", num(r.tokens_per_sec)),
+                    ("p50_latency", num(r.p50_latency)),
+                    ("p99_latency", num(r.p99_latency)),
+                    ("p50_service", num(r.p50_service)),
+                    ("p99_service", num(r.p99_service)),
+                    ("p50_ttft", num(r.p50_ttft)),
+                    ("mean_queue_depth", num(r.mean_queue_depth)),
+                    ("max_queue_depth", num(r.max_queue_depth as f64)),
+                    ("wall_secs", num(r.wall_secs)),
+                ])
+            })
+            .collect(),
+    );
+    let j = obj(vec![
+        ("model", s(model)),
+        ("quick", Json::Bool(quick)),
+        ("mode", s("open-loop poisson")),
+        ("closed_loop_rps", num(base_rps)),
+        ("runs", runs),
+    ]);
+    let text = j.to_string() + "\n";
+    std::fs::write(out, text).with_context(|| format!("writing {out:?}"))?;
+    Ok(())
+}
+
+/// Full CLI entry for the serving sweep: measure, print, write JSON.
+pub fn serve_sweep(artifacts: &Path, cfg: &ServeSweepConfig) -> Result<()> {
+    println!(
+        "dualsparse serve — model {} ({} open-loop sweep, Poisson arrivals)",
+        cfg.model,
+        if cfg.quick { "quick" } else { "full" }
+    );
+    let (base_rps, rows) = serve_sweep_rows(artifacts, &cfg.model, cfg.quick)?;
+    println!("closed-loop service rate: {base_rps:.2} req/s");
+    println!(
+        "{:>5} {:>8} {:>8} {:>4} {:>4} {:>9} {:>9} {:>9} {:>9} {:>6}",
+        "load", "policy", "tok/s", "done", "rej", "p50(ms)", "p99(ms)", "ttft50", "svc50", "qdep"
+    );
+    for r in &rows {
+        println!(
+            "{:>4.2}x {:>8} {:>8.1} {:>4} {:>4} {:>9.0} {:>9.0} {:>9.0} {:>9.0} {:>6.1}",
+            r.arrival_mult,
+            r.policy,
+            r.tokens_per_sec,
+            r.completed,
+            r.rejected,
+            r.p50_latency * 1e3,
+            r.p99_latency * 1e3,
+            r.p50_ttft * 1e3,
+            r.p50_service * 1e3,
+            r.mean_queue_depth,
+        );
+    }
+    write_serve_json(&cfg.model, cfg.quick, base_rps, &rows, &cfg.out)?;
+    println!("wrote {:?}", cfg.out);
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -197,6 +380,32 @@ mod tests {
         write_json("mixtral_ish", true, &rows, &out).unwrap();
         let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
         assert_eq!(j.get("model").unwrap().as_str().unwrap(), "mixtral_ish");
+        assert_eq!(j.get("runs").unwrap().as_arr().unwrap().len(), rows.len());
+        let _ = std::fs::remove_file(&out);
+    }
+
+    /// The ISSUE-4 acceptance smoke: open-loop rows must show honest
+    /// (queue-inclusive) latency ≥ the admission-anchored service time,
+    /// populated TTFT, and exactly one rejection (the injected oversized
+    /// prompt) with zero lost completions.
+    #[test]
+    fn quick_serve_sweep_is_honest_and_fault_isolated() {
+        let (base_rps, rows) =
+            serve_sweep_rows(Path::new("/nonexistent-artifacts"), "mixtral_ish", true)
+                .expect("hermetic open-loop sweep");
+        assert!(base_rps > 0.0);
+        assert_eq!(rows.len(), 2 * 2, "rates × policies");
+        for r in &rows {
+            assert_eq!(r.rejected, 1, "exactly the oversized prompt");
+            assert_eq!(r.completed, 11, "zero lost completions");
+            assert!(r.p50_latency >= r.p50_service - 1e-12, "queue-inclusive p50");
+            assert!(r.p99_latency >= r.p99_service - 1e-12, "queue-inclusive p99");
+            assert!(r.p50_ttft > 0.0, "TTFT populated");
+            assert!(r.tokens_per_sec > 0.0);
+        }
+        let out = std::env::temp_dir().join("dualsparse_serve_selftest.json");
+        write_serve_json("mixtral_ish", true, base_rps, &rows, &out).unwrap();
+        let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
         assert_eq!(j.get("runs").unwrap().as_arr().unwrap().len(), rows.len());
         let _ = std::fs::remove_file(&out);
     }

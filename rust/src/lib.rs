@@ -13,10 +13,13 @@
 //!   (`python/compile/`), build-time only.
 //! * **L3** — this crate: pluggable execution backends, the DualSparse
 //!   router (Top-K + normalization + 1T/2T drop + load-aware
-//!   thresholding), the serving engine with KV cache and continuous
-//!   batching, the expert-parallel simulation, the ETP/S-ETP
-//!   communication simulator, the EES/EEP/Wanda baselines, and the
-//!   per-figure/table experiment drivers.
+//!   thresholding), the serving engine with KV cache, continuous
+//!   batching and an arrival-driven request scheduler
+//!   ([`engine::scheduler`]: closed-loop batch or open-loop Poisson
+//!   arrivals, per-request fault isolation, arrival-anchored latency),
+//!   the expert-parallel simulation, the ETP/S-ETP communication
+//!   simulator, the EES/EEP/Wanda baselines, and the per-figure/table
+//!   experiment drivers.
 //!
 //! ## Execution backends
 //!

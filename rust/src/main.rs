@@ -1,7 +1,10 @@
 //! `dualsparse` — CLI for the DualSparse-MoE serving stack.
 //!
 //! Subcommands:
-//!   serve <model> [--policy none|1t:<T>|2t:<T>] [--reqs N] [--max-new N]
+//!   serve [model] [--policy none|1t:<T>|2t:<T>] [--reqs N] [--max-new N]
+//!         [--mode closed|open] [--rate R] [--seed S]     one measured run
+//!         [--sweep | --quick] [--out PATH]   arrival-rate × drop-policy
+//!                                            sweep → SERVE_cpu.json
 //!   eval <model> [--policy …] [--reconstruct] [--n N]
 //!   calibrate <model> [--tokens N]
 //!   bench [--quick] [--model M] [--out PATH]   (writes BENCH_cpu.json)
@@ -16,6 +19,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
+use dualsparse::engine::scheduler::ArrivalMode;
 use dualsparse::engine::{artifacts_dir, EngineOptions};
 use dualsparse::moe::DropPolicy;
 use dualsparse::runtime::Backend as _;
@@ -68,6 +72,10 @@ impl Args {
     fn flag_usize(&self, k: &str, default: usize) -> usize {
         self.flag(k).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
+
+    fn flag_f64(&self, k: &str, default: f64) -> f64 {
+        self.flag(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
 }
 
 fn main() -> Result<()> {
@@ -79,27 +87,74 @@ fn main() -> Result<()> {
     let cmd = args.pos.first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "serve" => {
-            let model = args.pos.get(1).context("serve <model>")?;
+            // `dualsparse serve --quick` (the CI smoke) takes no
+            // positional model; the preset default serves hermetically.
+            let model = args
+                .pos
+                .get(1)
+                .map(|s| s.as_str())
+                .unwrap_or("mixtral_ish")
+                .to_string();
+            if args.flag("sweep").is_some() || args.flag("quick").is_some() {
+                let cfg = experiments::bench::ServeSweepConfig {
+                    quick: args.flag("quick").is_some(),
+                    out: args
+                        .flag("out")
+                        .map(PathBuf::from)
+                        .unwrap_or_else(|| PathBuf::from("SERVE_cpu.json")),
+                    model,
+                };
+                experiments::bench::serve_sweep(&artifacts, &cfg)?;
+                return Ok(());
+            }
             let policy = parse_policy(args.flag("policy").unwrap_or("none"))?;
             let n = args.flag_usize("reqs", 100);
             let max_new = args.flag_usize("max-new", 12);
+            let mode = match args.flag("mode").unwrap_or("closed") {
+                "closed" => ArrivalMode::Closed,
+                "open" => {
+                    let rate = args.flag_f64("rate", 4.0);
+                    if !(rate > 0.0 && rate.is_finite()) {
+                        bail!("--rate must be a positive, finite req/s (got {rate})");
+                    }
+                    ArrivalMode::Open { rate, seed: args.flag_usize("seed", 11) as u64 }
+                }
+                other => bail!("unknown --mode {other:?}; use closed | open"),
+            };
             let mut engine =
-                Engine::new(&artifacts, model, policy, EngineOptions::default())?;
+                Engine::new(&artifacts, &model, policy, EngineOptions::default())?;
             println!(
-                "serving {model} on {} ({} requests, policy {policy:?})",
+                "serving {model} on {} ({} requests, policy {policy:?}, {mode:?})",
                 engine.rt.platform(),
                 n
             );
             let reqs = server::workload(n, max_new, 7);
-            let report = server::run_once(&mut engine, &reqs, policy, "serve")?;
+            let report = server::run_once_mode(&mut engine, &reqs, policy, "serve", mode)?;
+            let st = &report.stats;
             println!("{}", server::format_report(&report));
             println!(
                 "wall={:.2}s prefill={} gen={} moe={:.2}s artifacts={:.2}s",
-                report.stats.wall_secs,
-                report.stats.prefill_tokens,
-                report.stats.generated_tokens,
-                report.stats.moe_secs,
-                report.stats.artifact_secs,
+                st.wall_secs, st.prefill_tokens, st.generated_tokens, st.moe_secs,
+                st.artifact_secs,
+            );
+            println!(
+                "latency (arrival-anchored) p50={:.0}ms p99={:.0}ms | \
+                 service (admission-anchored) p50={:.0}ms p99={:.0}ms",
+                st.p50_latency * 1e3,
+                st.p99_latency * 1e3,
+                st.p50_service * 1e3,
+                st.p99_service * 1e3,
+            );
+            println!(
+                "ttft mean={:.0}ms p99={:.0}ms | queue wait={:.0}ms depth mean={:.1} \
+                 max={} | completed={} rejected={}",
+                st.mean_ttft * 1e3,
+                st.p99_ttft * 1e3,
+                st.mean_queue_secs * 1e3,
+                st.mean_queue_depth,
+                st.max_queue_depth,
+                st.requests,
+                st.rejected,
             );
         }
         "eval" => {

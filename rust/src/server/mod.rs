@@ -5,7 +5,7 @@
 
 use anyhow::Result;
 
-use crate::engine::batcher::{serve, Request, ServeStats};
+use crate::engine::batcher::{serve, serve_with, ArrivalMode, Request, ServeStats};
 use crate::engine::Engine;
 use crate::moe::DropPolicy;
 use crate::util::rng::SplitMix64;
@@ -57,14 +57,22 @@ fn task_workload_small() -> Vec<Request> {
 /// restored afterwards. Warms up lazily-compiled artifacts first.
 pub fn run_once(engine: &mut Engine, reqs: &[Request], policy: DropPolicy,
                 label: &str) -> Result<RunReport> {
+    run_once_mode(engine, reqs, policy, label, ArrivalMode::Closed)
+}
+
+/// [`run_once`] under an explicit arrival mode (closed batch loop or
+/// open-loop Poisson arrivals).
+pub fn run_once_mode(engine: &mut Engine, reqs: &[Request], policy: DropPolicy,
+                     label: &str, mode: ArrivalMode) -> Result<RunReport> {
     warmup(engine)?;
     let saved = engine.policy;
     engine.policy = policy;
-    let (_, stats) = serve(engine, reqs)?;
+    let measured = serve_with(engine, reqs, mode);
     engine.policy = saved;
+    let out = measured?;
     Ok(RunReport {
         label: label.to_string(),
-        stats,
+        stats: out.stats,
         moe_speedup: 1.0,
         e2e_speedup: 1.0,
     })
@@ -81,16 +89,21 @@ pub fn compare(baseline: &RunReport, runs: &mut [RunReport]) {
     }
 }
 
-/// Paper-style row: label, drop rate, MoE speedup, e2e speedup, tput.
+/// Paper-style row: label, drop rate, MoE speedup, e2e speedup, tput,
+/// queue-inclusive p50, TTFT, queue depth and rejection count.
 pub fn format_report(r: &RunReport) -> String {
     format!(
-        "{:<22} drop={:>5.1}%  moe×{:<5.2} e2e×{:<5.2} {:>7.1} tok/s  p50={:.0}ms",
+        "{:<22} drop={:>5.1}%  moe×{:<5.2} e2e×{:<5.2} {:>7.1} tok/s  \
+         p50={:.0}ms ttft50={:.0}ms qd={:.1} rej={}",
         r.label,
         100.0 * r.stats.drop_rate,
         r.moe_speedup,
         r.e2e_speedup,
         r.stats.tokens_per_sec,
         r.stats.p50_latency * 1e3,
+        r.stats.p50_ttft * 1e3,
+        r.stats.mean_queue_depth,
+        r.stats.rejected,
     )
 }
 
@@ -118,6 +131,25 @@ mod tests {
         compare(&base, &mut runs);
         assert_eq!(runs[0].moe_speedup, 1.0);
         assert_eq!(runs[0].e2e_speedup, 1.0);
+    }
+
+    #[test]
+    fn report_row_has_ttft_queue_and_rejection_columns() {
+        let r = RunReport {
+            label: "x".into(),
+            stats: ServeStats {
+                p50_ttft: 0.25,
+                mean_queue_depth: 3.5,
+                rejected: 2,
+                ..Default::default()
+            },
+            moe_speedup: 1.0,
+            e2e_speedup: 1.0,
+        };
+        let row = format_report(&r);
+        assert!(row.contains("ttft50=250ms"), "{row}");
+        assert!(row.contains("qd=3.5"), "{row}");
+        assert!(row.contains("rej=2"), "{row}");
     }
 
     #[test]

@@ -43,6 +43,14 @@ impl SplitMix64 {
         (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
     }
 
+    /// Exponential variate with the given `rate` (mean 1/rate), via the
+    /// inverse CDF over the `f64` stream. Drives the deterministic
+    /// open-loop Poisson arrival process in `engine::scheduler`.
+    pub fn exp(&mut self, rate: f64) -> f64 {
+        assert!(rate > 0.0 && rate.is_finite(), "arrival rate must be positive");
+        -(1.0 - self.f64()).ln() / rate
+    }
+
     /// Standard normal via Box-Muller (deterministic; used for the
     /// synthetic test-weight materialization and fuzz fixtures — the
     /// Python fixture generator mirrors this exact formula).
@@ -82,6 +90,17 @@ mod tests {
             let x = r.f64();
             assert!((0.0..1.0).contains(&x));
         }
+    }
+
+    #[test]
+    fn exp_is_positive_with_mean_one_over_rate() {
+        let mut r = SplitMix64::new(77);
+        let n = 4000;
+        let rate = 4.0;
+        let xs: Vec<f64> = (0..n).map(|_| r.exp(rate)).collect();
+        assert!(xs.iter().all(|&x| x > 0.0 && x.is_finite()));
+        let mean: f64 = xs.iter().sum::<f64>() / n as f64;
+        assert!((mean - 1.0 / rate).abs() < 0.03, "mean {mean}");
     }
 
     #[test]

@@ -1,0 +1,253 @@
+//! Arrival-driven scheduler tests: lifecycle conservation, fault
+//! isolation, honest (arrival-anchored) latency accounting, and the
+//! byte-for-byte pin of closed-loop mode against the legacy batch loop.
+//!
+//! Hermetic: CpuRef backend + synthetic SplitMix64 weights.
+
+#![allow(clippy::needless_range_loop, clippy::manual_memcpy, clippy::type_complexity)]
+
+use std::collections::VecDeque;
+use std::path::PathBuf;
+
+use dualsparse::engine::batcher::{serve, serve_with, ArrivalMode, Request};
+use dualsparse::engine::{Engine, EngineOptions, EOS, MAX_SLOTS};
+use dualsparse::moe::DropPolicy;
+use dualsparse::server::workload;
+
+fn artifacts() -> PathBuf {
+    std::env::var("DUALSPARSE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+fn engine() -> Engine {
+    Engine::new(&artifacts(), "mixtral_ish", DropPolicy::NoDrop, EngineOptions::default())
+        .expect("hermetic engine (CpuRef + synthetic weights)")
+}
+
+/// The pre-scheduler `serve()` loop, reproduced verbatim (admit-all
+/// into free slots, lockstep decode, retire on EOS/max_new) minus the
+/// timing fields. This is the reference the closed-loop scheduler must
+/// match byte-for-byte on completion texts.
+fn legacy_serve_texts(e: &mut Engine, reqs: &[Request]) -> Vec<(usize, String)> {
+    e.kv.reset();
+    e.reset_metrics();
+    struct A {
+        id: usize,
+        out: Vec<u8>,
+        next: u8,
+        max_new: usize,
+    }
+    let mut queue: VecDeque<&Request> = reqs.iter().collect();
+    let mut active: Vec<A> = Vec::new();
+    let mut done: Vec<(usize, String)> = Vec::new();
+    while !queue.is_empty() || !active.is_empty() {
+        while e.kv.has_free() && active.len() < MAX_SLOTS {
+            let Some(r) = queue.pop_front() else { break };
+            let slot = e.kv.alloc();
+            let first = e.prefill(slot, r.prompt.as_bytes()).unwrap();
+            active.push(A { id: r.id, out: vec![first], next: first, max_new: r.max_new });
+        }
+        if active.is_empty() {
+            break;
+        }
+        let toks: Vec<u8> = active.iter().map(|a| a.next).collect();
+        let next = e.decode_step(&toks).unwrap();
+        for (a, &t) in active.iter_mut().zip(&next) {
+            a.out.push(t);
+            a.next = t;
+        }
+        let mut slot = active.len();
+        while slot > 0 {
+            slot -= 1;
+            let fin = active[slot].next == EOS || active[slot].out.len() >= active[slot].max_new;
+            if !fin {
+                continue;
+            }
+            let a = active.swap_remove(slot);
+            e.kv.free(slot);
+            let end = a.out.iter().position(|&c| c == EOS).unwrap_or(a.out.len());
+            done.push((a.id, a.out[..end].iter().map(|&b| b as char).collect()));
+        }
+    }
+    done.sort_by_key(|c| c.0);
+    done
+}
+
+#[test]
+fn closed_loop_reproduces_legacy_batcher_byte_for_byte() {
+    let mut e = engine();
+    // > MAX_SLOTS so both waves (initial fill + queued) are exercised.
+    let reqs = workload(20, 5, 7);
+    let legacy = legacy_serve_texts(&mut e, &reqs);
+    let (done, stats) = serve(&mut e, &reqs).unwrap();
+    assert_eq!(done.len(), legacy.len());
+    assert_eq!(stats.requests, reqs.len());
+    assert_eq!(stats.rejected, 0);
+    for (c, (id, text)) in done.iter().zip(&legacy) {
+        assert_eq!(c.id, *id);
+        assert_eq!(&c.text, text, "request {id} diverged from the legacy loop");
+        assert_eq!(c.new_tokens, c.text.len(), "new_tokens must match text.len()");
+    }
+}
+
+#[test]
+fn oversized_prompt_is_rejected_without_losing_completions() {
+    let mut e = engine();
+    // One 200-byte prompt (over the 128-token prefill ceiling) amid 10
+    // good ones: exactly one rejection, zero lost completions, no leak.
+    let good = workload(10, 5, 3);
+    let mut reqs = good.clone();
+    reqs.insert(4, Request { id: 10, prompt: "!".repeat(200), max_new: 5 });
+    let out = serve_with(&mut e, &reqs, ArrivalMode::Closed).unwrap();
+    assert_eq!(out.rejections.len(), 1, "exactly one rejection");
+    assert_eq!(out.rejections[0].id, 10);
+    assert!(
+        out.rejections[0].reason.contains("too long"),
+        "reason: {}",
+        out.rejections[0].reason
+    );
+    assert_eq!(out.completions.len(), 10, "zero lost completions");
+    assert_eq!(e.kv.n_active, 0, "rejected request must not leak its KV slot");
+    // The survivors are unaffected: same texts as a run without the bad
+    // request at all.
+    let clean = serve_with(&mut e, &good, ArrivalMode::Closed).unwrap();
+    for (a, b) in out.completions.iter().zip(&clean.completions) {
+        assert_eq!(a.id, b.id);
+        assert_eq!(a.text, b.text, "request {} was perturbed by the rejection", a.id);
+    }
+}
+
+#[test]
+fn every_request_resolves_exactly_once_in_both_modes() {
+    let mut e = engine();
+    let modes = [
+        ArrivalMode::Closed,
+        ArrivalMode::Open { rate: 200.0, seed: 3 },
+        ArrivalMode::Open { rate: 30.0, seed: 9 },
+    ];
+    for mode in modes {
+        let mut reqs = workload(14, 4, 5);
+        reqs[7].prompt = "!".repeat(200); // one rejection per run
+        let out = serve_with(&mut e, &reqs, mode).unwrap();
+        let mut seen = vec![0usize; reqs.len()];
+        for c in &out.completions {
+            seen[c.id] += 1;
+            assert_eq!(c.new_tokens, c.text.len());
+            assert!(c.latency >= c.service_secs - 1e-12);
+            assert!(c.ttft <= c.latency + 1e-12);
+        }
+        for r in &out.rejections {
+            seen[r.id] += 1;
+        }
+        assert!(
+            seen.iter().all(|&n| n == 1),
+            "{mode:?}: completions ∪ rejections must cover every request exactly once: {seen:?}"
+        );
+        assert_eq!(out.stats.requests + out.stats.rejected, reqs.len());
+        assert_eq!(e.kv.n_active, 0, "{mode:?}: slots must return to free");
+    }
+}
+
+#[test]
+fn latency_is_arrival_anchored_and_queue_inclusive() {
+    let mut e = engine();
+    // 24 > MAX_SLOTS: the second wave waits in the queue, which the old
+    // admission-anchored numbers silently excluded.
+    let reqs = workload(24, 4, 7);
+    let out = serve_with(&mut e, &reqs, ArrivalMode::Closed).unwrap();
+    let st = &out.stats;
+    for c in &out.completions {
+        assert!(
+            (c.queue_secs + c.service_secs - c.latency).abs() < 1e-9,
+            "latency must decompose into queue wait + service"
+        );
+        assert!(c.ttft >= c.queue_secs - 1e-12, "first token can't precede admission");
+    }
+    assert!(st.p50_latency >= st.p50_service - 1e-12, "queue-inclusive p50");
+    assert!(st.p99_latency >= st.p99_service - 1e-12, "queue-inclusive p99");
+    assert!(st.mean_ttft > 0.0, "TTFT populated");
+    assert!(
+        out.completions.iter().any(|c| c.queue_secs > 0.0),
+        "a second-wave request must have waited"
+    );
+    assert!(st.max_queue_depth >= 1, "overflow wave must register queue depth");
+}
+
+#[test]
+fn finished_at_prefill_requests_never_enter_the_decode_batch() {
+    let mut e = engine();
+    // max_new == 1: the prefill token is the whole completion; the old
+    // loop still burned one full decode step per request on these.
+    let reqs: Vec<Request> = workload(3, 1, 7);
+    let out = serve_with(&mut e, &reqs, ArrivalMode::Closed).unwrap();
+    assert_eq!(out.completions.len(), 3);
+    assert_eq!(e.metrics.decode_steps, 0, "no decode step for max_new=1 requests");
+    for c in &out.completions {
+        assert!(c.new_tokens <= 1);
+        assert_eq!(c.new_tokens, c.text.len());
+        assert_eq!(c.decode_secs, 0.0);
+    }
+
+    // max_new == 0 honors the bound exactly: zero tokens, empty text.
+    let mut zero = workload(2, 5, 7);
+    for r in &mut zero {
+        r.max_new = 0;
+    }
+    let out = serve_with(&mut e, &zero, ArrivalMode::Closed).unwrap();
+    assert_eq!(e.metrics.decode_steps, 0);
+    assert!(out.completions.iter().all(|c| c.new_tokens == 0 && c.text.is_empty()));
+
+    // If any prompt yields EOS as its very first token, serving it alone
+    // must also complete without a decode step and count zero new tokens.
+    let candidates = workload(40, 4, 19);
+    let mut eos_req = None;
+    for r in &candidates {
+        e.kv.reset();
+        let slot = e.kv.alloc();
+        if let Ok(first) = e.prefill(slot, r.prompt.as_bytes()) {
+            if first == EOS {
+                eos_req = Some(r.clone());
+                break;
+            }
+        }
+    }
+    e.kv.reset();
+    if let Some(r) = eos_req {
+        let out = serve_with(&mut e, &[r], ArrivalMode::Closed).unwrap();
+        assert_eq!(e.metrics.decode_steps, 0, "immediate EOS must skip decode");
+        assert_eq!(out.completions[0].new_tokens, 0, "EOS terminator is not counted");
+        assert_eq!(out.completions[0].text, "");
+    }
+}
+
+#[test]
+fn open_loop_arrivals_are_deterministic_and_respected() {
+    let mut e = engine();
+    let reqs = workload(6, 3, 7);
+    let mode = ArrivalMode::Open { rate: 150.0, seed: 5 };
+    let a = serve_with(&mut e, &reqs, mode).unwrap();
+    let b = serve_with(&mut e, &reqs, mode).unwrap();
+    let arrivals = |o: &dualsparse::engine::batcher::ServeOutcome| -> Vec<f64> {
+        o.completions.iter().map(|c| c.arrival).collect()
+    };
+    assert_eq!(arrivals(&a), arrivals(&b), "same seed ⇒ same arrival process");
+    assert!(a.completions.iter().all(|c| c.arrival > 0.0));
+    let last_arrival = a
+        .completions
+        .iter()
+        .map(|c| c.arrival)
+        .fold(0.0f64, f64::max);
+    assert!(
+        a.stats.wall_secs >= last_arrival,
+        "the run cannot finish before its last request arrives \
+         (wall={} last={last_arrival})",
+        a.stats.wall_secs
+    );
+    // texts are unaffected by the arrival process
+    let closed = serve_with(&mut e, &reqs, ArrivalMode::Closed).unwrap();
+    for (x, y) in a.completions.iter().zip(&closed.completions) {
+        assert_eq!(x.id, y.id);
+        assert_eq!(x.text, y.text, "arrival process leaked into generation");
+    }
+}
