@@ -77,6 +77,30 @@ fn main() -> Result<()> {
         open.stats.max_queue_depth,
         open.stats.rejected,
     );
+    // Scheduling policies under the same overload with a bounded queue:
+    // admission order + backpressure are the serving levers the drop
+    // policy can't reach (docs/ARCHITECTURE.md).
+    use dualsparse::engine::batcher::{serve_policy, AdmissionControl, PolicyKind};
+    println!("\nscheduling policies @ {:.1} req/s, max queue 32:", 1.5 * rps);
+    for kind in PolicyKind::ALL {
+        let out = serve_policy(
+            &mut engine,
+            &reqs,
+            ArrivalMode::Open { rate: 1.5 * rps, seed: 11 },
+            kind.policy(),
+            AdmissionControl::bounded(32),
+        )?;
+        println!(
+            "  {:>8}: ttft p50={:.0}ms p99={:.0}ms goodput={:.2} req/s \
+             rejected={} (queue-full {})",
+            kind.label(),
+            out.stats.p50_ttft * 1e3,
+            out.stats.p99_ttft * 1e3,
+            out.stats.goodput_rps,
+            out.stats.rejected,
+            out.stats.rejected_queue_full,
+        );
+    }
     println!(
         "(the paper's Fig. 10 effect: drop rate converts into MoE-module\n\
          speedup because dropped pairs shrink whole capacity buckets)"

@@ -17,7 +17,7 @@ use crate::util::json::{Json, self};
 
 pub const METRICS: [&str; 4] = ["gate", "abs_gate", "gate_up", "abs_gate_up"];
 
-/// [layer][expert][metric 0..4][neuron] accumulated importance.
+/// `[layer][expert][metric 0..4][neuron]` accumulated importance.
 #[derive(Debug, Clone)]
 pub struct ProbeTables {
     pub t: Vec<Vec<[Vec<f32>; 4]>>,
@@ -38,7 +38,7 @@ impl ProbeTables {
         }
     }
 
-    /// Importance tables for one metric: [layer][expert][neuron].
+    /// Importance tables for one metric: `[layer][expert][neuron]`.
     pub fn importance(&self, metric: &str) -> Vec<Vec<Vec<f32>>> {
         let mi = METRICS
             .iter()

@@ -6,13 +6,19 @@
 //! Done | Rejected). `serve()` runs it in [`ArrivalMode::Closed`] and
 //! keeps the historical `(completions, stats)` shape; new code that
 //! needs open-loop arrivals or the rejection list should call
-//! [`serve_with`] directly.
+//! [`serve_with`] directly, and code that wants a non-FCFS admission
+//! order or a bounded queue should call [`serve_policy`] with a
+//! [`SchedulingPolicy`] + [`AdmissionControl`] (both re-exported here).
 
 use anyhow::Result;
 
+pub use super::policy::{
+    AdmissionControl, Fcfs, PolicyKind, PriorityLanes, SchedConfig, SchedulingPolicy,
+    ShortestPromptFirst,
+};
 pub use super::scheduler::{
-    poisson_arrivals, serve_with, ArrivalMode, Completion, Phase, Rejection, Request,
-    ServeOutcome, ServeStats,
+    poisson_arrivals, serve_policy, serve_with, ArrivalMode, Completion, Phase, Rejection,
+    Request, ServeOutcome, ServeStats,
 };
 use super::Engine;
 
@@ -39,7 +45,7 @@ pub fn task_workload(n: usize, max_new: usize) -> Vec<Request> {
     for i in 0..n {
         let t = i % tasks.len();
         let (prompt, _) = per_task[t].pop().expect("enough prompts");
-        out.push(Request { id: i, prompt, max_new });
+        out.push(Request { id: i, prompt, max_new, priority: 0 });
     }
     out
 }

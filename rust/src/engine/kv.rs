@@ -5,6 +5,17 @@
 //! (`compact` moves the tail slot into a hole when a request retires),
 //! so the batch cache fed to `attn_step_b{B}` is simply the first
 //! `B` rows — no per-step gather.
+//!
+//! Writers come in three flavors, all appending behind `pos[slot]`'s
+//! invariant (tokens cached == next write position):
+//!
+//! * [`KvCache::write_prefill`] — bulk chunk write at an explicit
+//!   `base`; chunked prefill calls it once per chunk so a long prompt's
+//!   positions land exactly where a single-pass prefill would put them.
+//! * [`KvCache::append`] — one decode-step (k, v) head-vector set.
+//! * [`KvCache::reset`] / [`KvCache::alloc`] — slot recycling between
+//!   runs; `alloc` re-zeroes contents so a stale sequence can never
+//!   widen a later request's attention window.
 
 use crate::model::Tensor;
 
@@ -118,20 +129,27 @@ impl KvCache {
         }
     }
 
-    /// Bulk-write prefill K/V for `slot`: `ks`/`vs` are `[S, H, dh]`.
-    pub fn write_prefill(&mut self, layer: usize, slot: usize, s_len: usize,
-                         ks: &[f32], vs: &[f32]) {
+    /// Bulk-write prefill K/V for `slot` at positions
+    /// `base..base + s_len`: `ks`/`vs` are `[S, H, dh]` chunk-local.
+    /// `base = 0` is a whole-prompt (or first-chunk) prefill; `base > 0`
+    /// is a chunked-prefill continuation appending behind the positions
+    /// already cached. Advances `pos[slot]` to `base + s_len` on the
+    /// last layer, so after the final chunk the slot's decode position
+    /// is exactly the prompt length.
+    pub fn write_prefill(&mut self, layer: usize, slot: usize, base: usize,
+                         s_len: usize, ks: &[f32], vs: &[f32]) {
+        debug_assert!(base + s_len <= self.max_seq, "prefill overflows the KV window");
         let (h, dh, tt) = (self.n_heads, self.d_head, self.max_seq);
         for t in 0..s_len {
             for hi in 0..h {
-                let dst = ((slot * h + hi) * tt + t) * dh;
+                let dst = ((slot * h + hi) * tt + base + t) * dh;
                 let src = (t * h + hi) * dh;
                 self.k[layer].data[dst..dst + dh].copy_from_slice(&ks[src..src + dh]);
                 self.v[layer].data[dst..dst + dh].copy_from_slice(&vs[src..src + dh]);
             }
         }
         if layer == self.n_layers - 1 {
-            self.pos[slot] = s_len;
+            self.pos[slot] = base + s_len;
         }
     }
 
@@ -189,13 +207,42 @@ mod tests {
         let s = c.alloc();
         let ks = vec![0.5; 3 * 2 * 4];
         for li in 0..2 {
-            c.write_prefill(li, s, 3, &ks, &ks);
+            c.write_prefill(li, s, 0, 3, &ks, &ks);
         }
         assert_eq!(c.pos[s], 3);
         // slot 0's K landed at the head of the layer-0 cache, which is
         // exactly the zero-copy slice the engine lends to attn_step
         assert_eq!(c.k[0].data[0], 0.5);
         assert_eq!(c.k[0].shape, vec![3, 2, 8, 4]);
+    }
+
+    #[test]
+    fn chunked_prefill_continuation_appends_behind_base() {
+        // Two chunks into one slot must equal one whole-prompt write:
+        // positions line up and pos[slot] ends at the prompt length.
+        let mut whole = cache();
+        let mut chunked = cache();
+        let sw = whole.alloc();
+        let sc = chunked.alloc();
+        let (h, dh) = (2usize, 4usize);
+        let kv_row = |t: usize| -> Vec<f32> {
+            (0..h * dh).map(|i| (t * 100 + i) as f32).collect()
+        };
+        // 5-token prompt, rows [S, H, dh]
+        let all: Vec<f32> = (0..5).flat_map(kv_row).collect();
+        let head: Vec<f32> = (0..3).flat_map(kv_row).collect();
+        let tail: Vec<f32> = (3..5).flat_map(kv_row).collect();
+        for li in 0..2 {
+            whole.write_prefill(li, sw, 0, 5, &all, &all);
+            chunked.write_prefill(li, sc, 0, 3, &head, &head);
+            chunked.write_prefill(li, sc, 3, 2, &tail, &tail);
+        }
+        assert_eq!(whole.pos[sw], 5);
+        assert_eq!(chunked.pos[sc], 5);
+        for li in 0..2 {
+            assert_eq!(whole.k[li].data, chunked.k[li].data, "layer {li} K diverged");
+            assert_eq!(whole.v[li].data, chunked.v[li].data, "layer {li} V diverged");
+        }
     }
 
     #[test]

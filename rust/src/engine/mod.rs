@@ -10,6 +10,7 @@
 
 pub mod batcher;
 pub mod kv;
+pub mod policy;
 pub mod scheduler;
 
 use std::collections::HashMap;
@@ -62,7 +63,7 @@ pub struct EngineOptions {
     /// Use the 2-sub-expert reconstruction split (requires importance
     /// tables from `calib`); false ⇒ contiguous partition halves.
     pub reconstructed: bool,
-    /// Importance tables [layer][expert][neuron] (from calibration).
+    /// Importance tables `[layer][expert][neuron]` (from calibration).
     pub importance: Option<Vec<Vec<Vec<f32>>>>,
     /// Collect gating-score distributions + per-layer drop stats.
     pub collect_stats: bool,
@@ -71,6 +72,14 @@ pub struct EngineOptions {
     /// and falls back to `CpuRef`. The `DUALSPARSE_BACKEND` env var
     /// (auto | cpu | pjrt) overrides this at engine construction.
     pub backend: BackendKind,
+    /// Override the prefill bucket ladder ([`PREFILL_BUCKETS`] when
+    /// `None`). Must be strictly increasing; the largest bucket is the
+    /// chunk size of chunked prefill (prompts longer than it run as
+    /// several bucket-sized passes into the same KV slot), so it must
+    /// not exceed `max_seq`. Mostly a test hook: the chunked-prefill
+    /// equivalence suite compares a default-bucket engine against one
+    /// whose largest bucket covers the whole prompt in a single pass.
+    pub prefill_buckets: Option<Vec<usize>>,
 }
 
 /// Aggregated engine metrics (fig6/fig10/fig11/fig12 inputs).
@@ -153,9 +162,9 @@ pub struct Engine {
     pub rt: Box<dyn Backend>,
     pub cfg: ModelConfig,
     weights: Weights,
-    /// [layer][original expert] partitioned weights.
+    /// `[layer][original expert]` partitioned weights.
     experts: Vec<Vec<PartitionedExpert>>,
-    /// [layer] shared expert (DeepSeek-style), full width.
+    /// `[layer]` shared expert (DeepSeek-style), full width.
     shared: Vec<Option<SubExpert>>,
     /// Persistent backend buffers mirroring the above.
     lbufs: Vec<LayerBufs>,
@@ -167,6 +176,10 @@ pub struct Engine {
     /// One all-zero KV slot (`H · T · dh`), lent to padding rows of the
     /// decode batch so the zero-copy slice view never clones the cache.
     zero_slot: Vec<f32>,
+    /// Prefill bucket ladder (strictly increasing; last = the chunked-
+    /// prefill chunk size). [`PREFILL_BUCKETS`] unless overridden via
+    /// [`EngineOptions::prefill_buckets`].
+    prefill_buckets: Vec<usize>,
     pub policy: DropPolicy,
     pub router_mode: RouterMode,
     pub opts: EngineOptions,
@@ -280,6 +293,22 @@ impl Engine {
         let kv = kv::KvCache::new(cfg.n_layers, cfg.n_heads, cfg.max_seq,
                                   cfg.d_head, MAX_SLOTS);
         let zero_slot = vec![0.0f32; kv.slot_stride()];
+        let prefill_buckets = match &opts.prefill_buckets {
+            Some(b) => {
+                if b.is_empty() || b.windows(2).any(|w| w[0] >= w[1]) {
+                    bail!("prefill_buckets must be non-empty and strictly increasing: {b:?}");
+                }
+                if *b.last().unwrap() > cfg.max_seq {
+                    bail!(
+                        "largest prefill bucket {} exceeds max_seq {}",
+                        b.last().unwrap(),
+                        cfg.max_seq
+                    );
+                }
+                b.clone()
+            }
+            None => PREFILL_BUCKETS.to_vec(),
+        };
         let n_dev = opts.ep.as_ref().map(|e| e.n_devices).unwrap_or(0);
         let placement = (0..cfg.n_experts)
             .map(|e| if n_dev > 0 { e % n_dev } else { 0 })
@@ -304,6 +333,7 @@ impl Engine {
             emb_buf,
             kv,
             zero_slot,
+            prefill_buckets,
             policy,
             router_mode: RouterMode::Standard,
             opts,
@@ -330,7 +360,7 @@ impl Engine {
     // Embedding
     // ------------------------------------------------------------------
 
-    /// x = emb[token] + pos_emb[position], one row per (token, pos).
+    /// `x = emb[token] + pos_emb[position]`, one row per (token, pos).
     fn embed(&self, tokens: &[u8], positions: &[usize]) -> Result<Tensor> {
         let d = self.cfg.d_model;
         let emb = self.weights.get("emb")?;
@@ -431,7 +461,7 @@ impl Engine {
         // 1. gate scores via artifact (bucketed on the row count)
         let rb = round_up_bucket(
             ln2x.shape[0],
-            if ln2x.shape[0] > 16 { &PREFILL_BUCKETS } else { &BATCH_BUCKETS },
+            if ln2x.shape[0] > 16 { &self.prefill_buckets } else { &BATCH_BUCKETS },
         );
         debug_assert_eq!(ln2x.shape[0], rb, "caller pads to a bucket");
         let gate_out = self.rt.exec(
@@ -630,59 +660,135 @@ impl Engine {
     // Prefill / decode
     // ------------------------------------------------------------------
 
+    /// Longest admissible prompt for a request allowed up to `max_new`
+    /// generated tokens. Prefill writes `prompt.len()` KV positions and
+    /// every decode step appends one more, so admission requires
+    /// `prompt.len() + max_new ≤ max_seq`. Since chunked prefill this —
+    /// true KV capacity — is the only length limit; the largest prefill
+    /// bucket is just the chunk size.
+    pub fn prompt_capacity(&self, max_new: usize) -> usize {
+        self.cfg.max_seq.saturating_sub(max_new)
+    }
+
     /// Prefill one request into `slot`; returns the first generated token.
+    ///
+    /// **Chunked prefill**: a prompt longer than the largest prefill
+    /// bucket is split into successive bucket-sized passes over the
+    /// same KV slot. The first chunk runs the classic
+    /// `attn_prefill_s{S}` artifact; each later chunk runs
+    /// `attn_prefill_chunk_s{S}`, whose queries attend over the slot's
+    /// cached K/V (positions `0..base`) before the in-chunk causal
+    /// window. Every per-token computation (projections, scores in
+    /// cached-then-in-chunk order, softmax, FFN rows) matches a single
+    /// pass with a large-enough bucket operation-for-operation, so
+    /// chunked logits are **bit-identical** to unchunked ones (pinned
+    /// by `rust/tests/chunked_prefill.rs`).
     pub fn prefill(&mut self, slot: usize, prompt: &[u8]) -> Result<u8> {
+        Ok(self.prefill_logits(slot, prompt)?.0)
+    }
+
+    /// [`Engine::prefill`] variant that also returns the logits row of
+    /// the last prompt position (the distribution the first token is
+    /// argmaxed from) — the chunked-prefill equivalence tests pin on it.
+    pub fn prefill_logits(&mut self, slot: usize, prompt: &[u8]) -> Result<(u8, Vec<f32>)> {
         let d = self.cfg.d_model;
         let s_len = prompt.len();
-        if s_len > *PREFILL_BUCKETS.last().unwrap() {
-            bail!("prompt too long: {s_len}");
+        if s_len == 0 {
+            bail!("empty prompt");
         }
-        let sb = round_up_bucket(s_len, &PREFILL_BUCKETS);
-        let mut toks = prompt.to_vec();
-        toks.resize(sb, 0);
-        let positions: Vec<usize> = (0..sb).collect();
-        let mut x = self.embed(&toks, &positions)?;
-        for li in 0..self.cfg.n_layers {
-            let lb = &self.lbufs[li];
-            let outs = self.rt.exec(
-                &format!("attn_prefill_s{sb}"),
-                &[
-                    Arg::F32(&x),
-                    Arg::Buf(lb.ln1),
-                    Arg::Buf(lb.wq),
-                    Arg::Buf(lb.wk),
-                    Arg::Buf(lb.wv),
-                    Arg::Buf(lb.wo),
-                    Arg::Buf(lb.ln2),
-                ],
-            )?;
-            let (y, ln2x, ks, vs) = (&outs[0], &outs[1], &outs[2], &outs[3]);
-            self.kv.write_prefill(li, slot, s_len, &ks.data, &vs.data);
-            let moe = self.moe_layer(li, ln2x, s_len)?;
-            x = Tensor::new(
-                y.shape.clone(),
-                y.data.iter().zip(&moe.data).map(|(a, b)| a + b).collect(),
-            );
+        if s_len > self.cfg.max_seq {
+            bail!("prompt too long: {s_len} > max_seq {}", self.cfg.max_seq);
         }
-        self.metrics.prefill_tokens += s_len as u64;
-        // logits for the last real position only
-        let last = Tensor::new(
-            vec![1, d],
-            x.data[(s_len - 1) * d..s_len * d].to_vec(),
-        );
-        let logits = self.rt.exec(
-            "lm_head_b1",
-            &[
-                Arg::F32(&last),
-                Arg::Buf(self.lnf_buf),
-                Arg::Buf(self.emb_buf),
-            ],
-        )?;
-        Ok(argmax_u8(logits[0].row(0)))
+        let max_chunk = *self.prefill_buckets.last().unwrap();
+        let mut first = 0u8;
+        let mut logits_row: Vec<f32> = Vec::new();
+        let mut base = 0usize;
+        while base < s_len {
+            let take = (s_len - base).min(max_chunk);
+            let sb = round_up_bucket(take, &self.prefill_buckets);
+            let mut toks = prompt[base..base + take].to_vec();
+            toks.resize(sb, 0);
+            // Padding rows clamp to a valid position-embedding row:
+            // their outputs are discarded, their K/V never written, and
+            // no real query attends to them, so the clamp cannot leak.
+            let positions: Vec<usize> =
+                (0..sb).map(|i| (base + i).min(self.cfg.max_seq - 1)).collect();
+            let mut x = self.embed(&toks, &positions)?;
+            for li in 0..self.cfg.n_layers {
+                let outs = if base == 0 {
+                    let lb = &self.lbufs[li];
+                    self.rt.exec(
+                        &format!("attn_prefill_s{sb}"),
+                        &[
+                            Arg::F32(&x),
+                            Arg::Buf(lb.ln1),
+                            Arg::Buf(lb.wq),
+                            Arg::Buf(lb.wk),
+                            Arg::Buf(lb.wv),
+                            Arg::Buf(lb.wo),
+                            Arg::Buf(lb.ln2),
+                        ],
+                    )?
+                } else {
+                    // Continuation chunk: lend the slot's cached K/V as
+                    // zero-copy slices (same mechanism as decode) plus
+                    // the number of cached positions.
+                    let stride = self.kv.slot_stride();
+                    let kslices = [&self.kv.k[li].data[slot * stride..(slot + 1) * stride]];
+                    let vslices = [&self.kv.v[li].data[slot * stride..(slot + 1) * stride]];
+                    let kv_shape =
+                        [1usize, self.cfg.n_heads, self.cfg.max_seq, self.cfg.d_head];
+                    let base_i32 = [base as i32];
+                    let lb = &self.lbufs[li];
+                    self.rt.exec(
+                        &format!("attn_prefill_chunk_s{sb}"),
+                        &[
+                            Arg::F32(&x),
+                            Arg::Buf(lb.ln1),
+                            Arg::Buf(lb.wq),
+                            Arg::Buf(lb.wk),
+                            Arg::Buf(lb.wv),
+                            Arg::Buf(lb.wo),
+                            Arg::Buf(lb.ln2),
+                            Arg::F32Slices(&kslices, &kv_shape[..]),
+                            Arg::F32Slices(&vslices, &kv_shape[..]),
+                            Arg::I32(&base_i32),
+                        ],
+                    )?
+                };
+                let (y, ln2x, ks, vs) = (&outs[0], &outs[1], &outs[2], &outs[3]);
+                self.kv.write_prefill(li, slot, base, take, &ks.data, &vs.data);
+                let moe = self.moe_layer(li, ln2x, take)?;
+                x = Tensor::new(
+                    y.shape.clone(),
+                    y.data.iter().zip(&moe.data).map(|(a, b)| a + b).collect(),
+                );
+            }
+            self.metrics.prefill_tokens += take as u64;
+            if base + take == s_len {
+                // logits for the last real position only
+                let last = Tensor::new(
+                    vec![1, d],
+                    x.data[(take - 1) * d..take * d].to_vec(),
+                );
+                let logits = self.rt.exec(
+                    "lm_head_b1",
+                    &[
+                        Arg::F32(&last),
+                        Arg::Buf(self.lnf_buf),
+                        Arg::Buf(self.emb_buf),
+                    ],
+                )?;
+                logits_row = logits[0].row(0).to_vec();
+                first = argmax_u8(&logits_row);
+            }
+            base += take;
+        }
+        Ok((first, logits_row))
     }
 
     /// One decode step for the active slots `0..tokens.len()` (slot i
-    /// consumes tokens[i]); returns the next token per slot.
+    /// consumes `tokens[i]`); returns the next token per slot.
     pub fn decode_step(&mut self, tokens: &[u8]) -> Result<Vec<u8>> {
         let b = tokens.len();
         let bb = round_up_bucket(b, &BATCH_BUCKETS);
@@ -835,10 +941,15 @@ fn merge_expert_rows(plan: &DispatchPlan, e: usize, d: usize, buf: &Tensor, out:
     }
 }
 
-/// Pack `rows` of ln2x into a capacity bucket, run the FFN artifact,
+/// Pack `rows` of ln2x into capacity buckets, run the FFN artifact,
 /// scatter-add score-weighted outputs into `out`. `scratch` is the
 /// packing buffer, reused across calls (major + minor of one expert
-/// share it; each worker task owns its own).
+/// share it; each worker task owns its own). Row sets larger than the
+/// biggest capacity bucket (possible only with an oversized prefill
+/// bucket override routing one chunk's worth of tokens to one expert)
+/// are split across several maximally-packed calls; the FFN is
+/// row-independent, so the split leaves every row's value bit-identical
+/// to a hypothetical single call.
 ///
 /// Returns **backend exec seconds only** — host-side packing and
 /// scatter are excluded, so EP `device_time` attributes exactly the
@@ -852,28 +963,32 @@ fn run_sub_expert(
     out: &mut Tensor,
     scratch: &mut Vec<f32>,
 ) -> Result<f64> {
-    let c = round_up_bucket(rows.len(), &CAPACITY_BUCKETS);
-    scratch.clear();
-    scratch.resize(c * d, 0.0);
-    for (i, &(r, _)) in rows.iter().enumerate() {
-        scratch[i * d..(i + 1) * d].copy_from_slice(&ln2x.data[r * d..(r + 1) * d]);
-    }
-    let xt = Tensor::new(vec![c, d], std::mem::take(scratch));
-    let name = format!("ffn_h{}_c{}", se.width, c);
-    let t0 = std::time::Instant::now();
-    let y = rt.exec(
-        &name,
-        &[Arg::F32(&xt), Arg::Buf(se.w1), Arg::Buf(se.w3), Arg::Buf(se.w2)],
-    )?;
-    let secs = t0.elapsed().as_secs_f64();
-    // hand the packing buffer back for the next call
-    *scratch = xt.data;
-    let yt = &y[0];
-    for (i, &(r, w)) in rows.iter().enumerate() {
-        let src = &yt.data[i * d..(i + 1) * d];
-        let dst = &mut out.data[r * d..(r + 1) * d];
-        for j in 0..d {
-            dst[j] += w * src[j];
+    let max_c = *CAPACITY_BUCKETS.last().unwrap();
+    let mut secs = 0.0f64;
+    for rows_chunk in rows.chunks(max_c) {
+        let c = round_up_bucket(rows_chunk.len(), &CAPACITY_BUCKETS);
+        scratch.clear();
+        scratch.resize(c * d, 0.0);
+        for (i, &(r, _)) in rows_chunk.iter().enumerate() {
+            scratch[i * d..(i + 1) * d].copy_from_slice(&ln2x.data[r * d..(r + 1) * d]);
+        }
+        let xt = Tensor::new(vec![c, d], std::mem::take(scratch));
+        let name = format!("ffn_h{}_c{}", se.width, c);
+        let t0 = std::time::Instant::now();
+        let y = rt.exec(
+            &name,
+            &[Arg::F32(&xt), Arg::Buf(se.w1), Arg::Buf(se.w3), Arg::Buf(se.w2)],
+        )?;
+        secs += t0.elapsed().as_secs_f64();
+        // hand the packing buffer back for the next call
+        *scratch = xt.data;
+        let yt = &y[0];
+        for (i, &(r, w)) in rows_chunk.iter().enumerate() {
+            let src = &yt.data[i * d..(i + 1) * d];
+            let dst = &mut out.data[r * d..(r + 1) * d];
+            for j in 0..d {
+                dst[j] += w * src[j];
+            }
         }
     }
     Ok(secs)

@@ -1,0 +1,303 @@
+//! Pluggable scheduling policies + admission control for the
+//! arrival-driven scheduler ([`crate::engine::scheduler`]).
+//!
+//! PR 4's scheduler admitted strictly FCFS and queued open-loop traffic
+//! without bound. This module factors both decisions out of the serving
+//! loop:
+//!
+//! * **Ordering** — a [`SchedulingPolicy`] picks which queued request is
+//!   admitted into the next free KV slot. Three built-ins:
+//!   [`Fcfs`] (arrival order — byte-for-byte the PR 4 behavior, pinned
+//!   by `rust/tests/scheduler.rs`), [`ShortestPromptFirst`] (SJF on
+//!   prompt length: short prefills stop head-of-line blocking under
+//!   backlog, the dominant p99-TTFT lever the MoE-serving surveys
+//!   identify), and [`PriorityLanes`] (strict priority lanes over the
+//!   per-request [`crate::engine::scheduler::Request::priority`] field,
+//!   arrival order within a lane).
+//! * **Admission** — an [`AdmissionControl`] bound on the waiting
+//!   queue. With `max_queue_depth = Some(k)`, a request arriving while
+//!   `k` requests already wait is Rejected (`reason` = "queue full…")
+//!   instead of queueing unboundedly, so open-loop overload reports
+//!   **goodput vs offered load** (the knee of the SERVE_cpu.json
+//!   curves) rather than an ever-growing queue.
+//!
+//! Policies see only a [`QueuedRequest`] snapshot per waiting request —
+//! they cannot touch engine state — and return a *position in the
+//! queue*, which keeps every implementation trivially correct: the
+//! scheduler owns admission validation, slot accounting and the
+//! lifecycle state machine regardless of pick order.
+//!
+//! The CLI face is [`PolicyKind`] (`--policy fcfs | spf | priority`);
+//! library users can pass any `&dyn SchedulingPolicy` to
+//! [`crate::engine::scheduler::serve_policy`].
+
+use std::fmt;
+
+use anyhow::{bail, Result};
+
+/// What a [`SchedulingPolicy`] sees about one waiting request: an
+/// immutable snapshot, not the request itself.
+#[derive(Debug, Clone, Copy)]
+pub struct QueuedRequest {
+    /// Caller-assigned request id.
+    pub id: usize,
+    /// Prompt length in tokens (bytes, under the byte tokenizer).
+    pub prompt_len: usize,
+    /// Scheduling lane; higher = more urgent. 0 for legacy requests.
+    pub priority: u8,
+    /// Arrival time (seconds from run start; 0 in closed-loop mode).
+    pub arrival: f64,
+}
+
+/// Admission-ordering policy: given the waiting queue (front = earliest
+/// arrival), choose which request the scheduler admits into the next
+/// free KV slot.
+///
+/// Implementations must be pure functions of the queue snapshot — the
+/// scheduler may call `pick` any number of times per loop iteration and
+/// relies on it for ordering only, never for admission validation
+/// (oversized-prompt rejection and queue bounds stay in the scheduler).
+pub trait SchedulingPolicy {
+    /// Short stable name, used for report rows and JSON tags.
+    fn name(&self) -> &'static str;
+
+    /// Position in `queue` of the request to admit next. `queue` is
+    /// never empty; an out-of-range return is clamped to the last
+    /// element by the scheduler.
+    fn pick(&self, queue: &[QueuedRequest]) -> usize;
+}
+
+/// First-come-first-served: admit the front of the queue. This is
+/// exactly the PR 4 scheduler order — `serve_with` runs it, and the
+/// legacy byte-for-byte pin tests in `rust/tests/scheduler.rs` hold
+/// under it unchanged.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Fcfs;
+
+impl SchedulingPolicy for Fcfs {
+    fn name(&self) -> &'static str {
+        "fcfs"
+    }
+
+    fn pick(&self, _queue: &[QueuedRequest]) -> usize {
+        0
+    }
+}
+
+/// Shortest-prompt-first (SJF on prefill cost): admit the waiting
+/// request with the smallest prompt; ties break toward the earliest
+/// arrival. Long prompts can be deferred indefinitely under sustained
+/// overload — pair with [`AdmissionControl`] or accept the starvation
+/// tail (it is what buys the p99-TTFT win for everyone else).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ShortestPromptFirst;
+
+impl SchedulingPolicy for ShortestPromptFirst {
+    fn name(&self) -> &'static str {
+        "spf"
+    }
+
+    fn pick(&self, queue: &[QueuedRequest]) -> usize {
+        let mut best = 0usize;
+        for (i, q) in queue.iter().enumerate().skip(1) {
+            // strict `<` keeps the earliest arrival among equals (the
+            // queue is arrival-ordered front to back).
+            if q.prompt_len < queue[best].prompt_len {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+/// Strict priority lanes: admit the highest-`priority` waiting request;
+/// ties break toward the earliest arrival (FCFS within a lane). Lane
+/// values come from [`crate::engine::scheduler::Request::priority`]
+/// (higher = more urgent).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PriorityLanes;
+
+impl SchedulingPolicy for PriorityLanes {
+    fn name(&self) -> &'static str {
+        "priority"
+    }
+
+    fn pick(&self, queue: &[QueuedRequest]) -> usize {
+        let mut best = 0usize;
+        for (i, q) in queue.iter().enumerate().skip(1) {
+            // strict `>` keeps the earliest arrival within a lane.
+            if q.priority > queue[best].priority {
+                best = i;
+            }
+        }
+        best
+    }
+}
+
+/// The built-in policies as a CLI-facing enum (`--policy` on
+/// `dualsparse serve`, the `sched` column of SERVE_cpu.json).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PolicyKind {
+    /// [`Fcfs`] — the legacy order and the default.
+    #[default]
+    Fcfs,
+    /// [`ShortestPromptFirst`].
+    ShortestPromptFirst,
+    /// [`PriorityLanes`].
+    PriorityLanes,
+}
+
+impl PolicyKind {
+    /// Every built-in, in report order.
+    pub const ALL: [PolicyKind; 3] =
+        [PolicyKind::Fcfs, PolicyKind::ShortestPromptFirst, PolicyKind::PriorityLanes];
+
+    /// Parse a CLI spelling (`fcfs` | `spf` | `priority`).
+    pub fn parse(spec: &str) -> Result<PolicyKind> {
+        match spec {
+            "fcfs" => Ok(PolicyKind::Fcfs),
+            "spf" => Ok(PolicyKind::ShortestPromptFirst),
+            "priority" => Ok(PolicyKind::PriorityLanes),
+            _ => bail!("unknown scheduling policy {spec:?}; use fcfs | spf | priority"),
+        }
+    }
+
+    /// The policy object behind this kind (all built-ins are stateless
+    /// unit structs, so a `'static` borrow suffices).
+    pub fn policy(&self) -> &'static dyn SchedulingPolicy {
+        match self {
+            PolicyKind::Fcfs => &Fcfs,
+            PolicyKind::ShortestPromptFirst => &ShortestPromptFirst,
+            PolicyKind::PriorityLanes => &PriorityLanes,
+        }
+    }
+
+    /// Stable label (same string [`SchedulingPolicy::name`] returns).
+    pub fn label(&self) -> &'static str {
+        self.policy().name()
+    }
+}
+
+impl fmt::Display for PolicyKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.label())
+    }
+}
+
+/// Queue-bound admission control: how many requests may wait for a KV
+/// slot before new arrivals are rejected.
+///
+/// The bound counts the *waiting* queue only — requests already holding
+/// a slot (Prefill/Decode) are not counted. A request that arrives
+/// while the queue holds `max_queue_depth` entries transitions
+/// Queued → Rejected immediately (`reason` = "queue full…"), consumes
+/// no KV slot, and shows up in
+/// [`crate::engine::scheduler::ServeStats::rejected_queue_full`]. Note
+/// the closed-loop corner: every request "arrives" at t = 0 in one
+/// burst, before any admission, so a bounded closed-loop run completes
+/// exactly `max_queue_depth` requests and rejects the rest — which is
+/// what makes the overflow count exactly testable.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct AdmissionControl {
+    /// Maximum waiting-queue depth; `None` = unbounded (the legacy PR 4
+    /// behavior and the default).
+    pub max_queue_depth: Option<usize>,
+}
+
+impl AdmissionControl {
+    /// No queue bound (legacy behavior).
+    pub fn unbounded() -> AdmissionControl {
+        AdmissionControl { max_queue_depth: None }
+    }
+
+    /// Reject arrivals once `k` requests are already waiting.
+    pub fn bounded(k: usize) -> AdmissionControl {
+        AdmissionControl { max_queue_depth: Some(k) }
+    }
+
+    /// May a request enter a queue currently `depth` deep?
+    pub fn admits(&self, depth: usize) -> bool {
+        match self.max_queue_depth {
+            Some(k) => depth < k,
+            None => true,
+        }
+    }
+}
+
+/// One serving run's scheduling configuration: ordering policy +
+/// admission control. `Default` is FCFS, unbounded — exactly PR 4.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SchedConfig {
+    pub policy: PolicyKind,
+    pub admission: AdmissionControl,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(entries: &[(usize, u8)]) -> Vec<QueuedRequest> {
+        entries
+            .iter()
+            .enumerate()
+            .map(|(i, &(len, pri))| QueuedRequest {
+                id: i,
+                prompt_len: len,
+                priority: pri,
+                arrival: i as f64,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fcfs_always_picks_the_front() {
+        let queue = q(&[(50, 0), (1, 9), (2, 3)]);
+        assert_eq!(Fcfs.pick(&queue), 0);
+        assert_eq!(Fcfs.name(), "fcfs");
+    }
+
+    #[test]
+    fn spf_picks_shortest_with_fcfs_ties() {
+        let queue = q(&[(50, 0), (4, 0), (90, 0), (4, 0)]);
+        // two length-4 prompts: the earlier one (index 1) wins.
+        assert_eq!(ShortestPromptFirst.pick(&queue), 1);
+        let queue = q(&[(3, 0)]);
+        assert_eq!(ShortestPromptFirst.pick(&queue), 0);
+    }
+
+    #[test]
+    fn priority_lanes_pick_highest_with_fcfs_ties() {
+        let queue = q(&[(10, 1), (10, 2), (10, 0), (10, 2)]);
+        // two lane-2 requests: the earlier one (index 1) wins.
+        assert_eq!(PriorityLanes.pick(&queue), 1);
+        // all-equal lanes degenerate to FCFS.
+        let queue = q(&[(10, 1), (9, 1), (8, 1)]);
+        assert_eq!(PriorityLanes.pick(&queue), 0);
+    }
+
+    #[test]
+    fn policy_kind_parses_and_labels() {
+        assert_eq!(PolicyKind::parse("fcfs").unwrap(), PolicyKind::Fcfs);
+        assert_eq!(PolicyKind::parse("spf").unwrap(), PolicyKind::ShortestPromptFirst);
+        assert_eq!(PolicyKind::parse("priority").unwrap(), PolicyKind::PriorityLanes);
+        assert!(PolicyKind::parse("lifo").is_err());
+        for k in PolicyKind::ALL {
+            assert_eq!(k.label(), k.policy().name());
+            assert_eq!(format!("{k}"), k.label());
+        }
+        assert_eq!(PolicyKind::default(), PolicyKind::Fcfs);
+    }
+
+    #[test]
+    fn admission_control_bounds_the_queue() {
+        let open = AdmissionControl::unbounded();
+        assert!(open.admits(0));
+        assert!(open.admits(1_000_000));
+        let tight = AdmissionControl::bounded(2);
+        assert!(tight.admits(0));
+        assert!(tight.admits(1));
+        assert!(!tight.admits(2));
+        assert!(!tight.admits(3));
+        assert_eq!(AdmissionControl::default(), AdmissionControl::unbounded());
+    }
+}

@@ -5,8 +5,10 @@
 //!
 //! ```text
 //! Queued → Prefill → Decode → Done
+//!        ↘ Rejected            (queue full: bounded admission control)
 //!                  ↘ Done      (immediate EOS / max_new ≤ 1)
-//!                  ↘ Rejected  (admission validation: oversized prompt)
+//!                  ↘ Rejected  (admission validation: prompt + max_new
+//!                               exceed the KV window)
 //! ```
 //!
 //! driven by a continuous-batching loop under one of two arrival modes:
@@ -21,20 +23,38 @@
 //!   time. This is the arrival process the serving literature (and the
 //!   paper's §5.3.2 efficiency methodology) measures under.
 //!
+//! Two decisions are pluggable via [`crate::engine::policy`]
+//! (see [`serve_policy`]):
+//!
+//! * **who is admitted next** — a
+//!   [`SchedulingPolicy`](crate::engine::policy::SchedulingPolicy)
+//!   picks from the waiting queue (`fcfs` / `spf` / `priority`);
+//!   [`serve_with`] runs FCFS, which reproduces the pre-policy
+//!   scheduler byte-for-byte.
+//! * **whether an arrival may wait at all** — an
+//!   [`AdmissionControl`](crate::engine::policy::AdmissionControl)
+//!   queue bound turns open-loop overload into `queue full` rejections
+//!   (Queued → Rejected), so [`ServeStats::goodput_rps`] reports
+//!   goodput against offered load instead of an unbounded queue.
+//!
 //! Latency accounting is **arrival-anchored**: `latency` includes queue
 //! wait, `ttft` is arrival → first token, and the old admission-anchored
 //! number survives as `service_secs` so a report can show both side by
 //! side. Request-level faults are **per-request**: a prompt that fails
-//! admission validation (oversized) is Rejected without consuming a KV
-//! slot and every other request keeps decoding, while a backend
-//! execution error past validation still aborts the run (swallowing it
-//! as rejections would report a dead backend as a successful run).
+//! admission validation (it cannot fit the KV window together with its
+//! `max_new` budget — since chunked prefill, length is bounded by KV
+//! capacity, not by the largest prefill bucket) is Rejected without
+//! consuming a KV slot and every other request keeps decoding, while a
+//! backend execution error past validation still aborts the run
+//! (swallowing it as rejections would report a dead backend as a
+//! successful run).
 
 use std::collections::VecDeque;
 
 use anyhow::Result;
 
-use super::{Engine, EOS, MAX_SLOTS, PREFILL_BUCKETS};
+use super::policy::{AdmissionControl, Fcfs, QueuedRequest, SchedulingPolicy};
+use super::{Engine, EOS, MAX_SLOTS};
 use crate::util::rng::SplitMix64;
 use crate::util::stats::{mean, percentile};
 use crate::util::Timer;
@@ -44,6 +64,11 @@ pub struct Request {
     pub id: usize,
     pub prompt: String,
     pub max_new: usize,
+    /// Scheduling lane for
+    /// [`PriorityLanes`](crate::engine::policy::PriorityLanes); higher =
+    /// more urgent. 0 (the conventional default lane) everywhere a
+    /// workload does not say otherwise; FCFS and SPF ignore it.
+    pub priority: u8,
 }
 
 /// When requests become admissible.
@@ -69,6 +94,9 @@ pub enum Phase {
 #[derive(Debug, Clone)]
 pub struct Completion {
     pub id: usize,
+    /// The request's scheduling lane (copied from
+    /// [`Request::priority`]).
+    pub priority: u8,
     pub text: String,
     /// Generated tokens excluding the EOS terminator (== `text.len()`).
     pub new_tokens: usize,
@@ -86,8 +114,9 @@ pub struct Completion {
     pub decode_secs: f64,
 }
 
-/// A request rejected at admission validation (no KV slot consumed; no
-/// other request was affected).
+/// A request rejected without consuming a KV slot and without affecting
+/// any other request — either at admission validation (prompt cannot
+/// fit the KV window) or on arrival at a full bounded queue.
 #[derive(Debug, Clone)]
 pub struct Rejection {
     pub id: usize,
@@ -102,7 +131,15 @@ pub struct ServeStats {
     /// Completed requests.
     pub requests: usize,
     /// Rejected requests (per-request failures; the run kept going).
+    /// Includes both capacity-validation and queue-full rejections.
     pub rejected: usize,
+    /// The subset of `rejected` turned away by the
+    /// [`AdmissionControl`] queue bound (`reason` = "queue full…").
+    pub rejected_queue_full: usize,
+    /// Completed requests per wall-clock second — the goodput to plot
+    /// against offered load (open-loop arrival rate). Diverges from the
+    /// offered rate past the knee, where the queue bound rejects.
+    pub goodput_rps: f64,
     pub generated_tokens: u64,
     pub prefill_tokens: u64,
     pub tokens_per_sec: f64,
@@ -157,6 +194,7 @@ pub fn poisson_arrivals(n: usize, rate: f64, seed: u64) -> Vec<f64> {
 /// One in-flight request; index in the active list == its KV slot.
 struct ActiveSlot {
     id: usize,
+    priority: u8,
     /// Index into the `requests` slice (drives the phase table).
     ridx: usize,
     arrival: f64,
@@ -175,6 +213,7 @@ fn set_phase(phases: &mut [Phase], ri: usize, to: Phase) {
         matches!(
             (from, to),
             (Phase::Queued, Phase::Prefill)
+                | (Phase::Queued, Phase::Rejected) // queue full at arrival
                 | (Phase::Prefill, Phase::Decode)
                 | (Phase::Prefill, Phase::Done)
                 | (Phase::Prefill, Phase::Rejected)
@@ -189,6 +228,7 @@ fn finish(a: ActiveSlot, now: f64) -> Completion {
     let end = a.out.iter().position(|&c| c == EOS).unwrap_or(a.out.len());
     Completion {
         id: a.id,
+        priority: a.priority,
         text: a.out[..end].iter().map(|&b| b as char).collect(),
         new_tokens: end,
         arrival: a.arrival,
@@ -200,18 +240,35 @@ fn finish(a: ActiveSlot, now: f64) -> Completion {
     }
 }
 
-/// Run `requests` to completion (or rejection) under `mode`.
-///
-/// The loop: pull arrived requests into the admission queue, admit into
-/// free KV slots (prefill), decode the whole active set in lockstep,
-/// retire finished rows (slot freed, cache compacted). In open-loop
-/// mode the scheduler sleeps until the next arrival when idle, so wall
-/// time — and therefore every latency column — reflects the arrival
-/// process, not just raw compute.
+/// Run `requests` to completion (or rejection) under `mode` with the
+/// legacy scheduling configuration: FCFS admission order, unbounded
+/// queue. Byte-for-byte identical to the pre-policy scheduler (pinned
+/// by `rust/tests/scheduler.rs`).
 pub fn serve_with(
     engine: &mut Engine,
     requests: &[Request],
     mode: ArrivalMode,
+) -> Result<ServeOutcome> {
+    serve_policy(engine, requests, mode, &Fcfs, AdmissionControl::unbounded())
+}
+
+/// Run `requests` to completion (or rejection) under `mode`, admitting
+/// in the order `policy` chooses and bounding the waiting queue with
+/// `admission`.
+///
+/// The loop: pull arrived requests into the admission queue (rejecting
+/// arrivals the queue bound refuses), let `policy` pick which queued
+/// request claims each free KV slot (prefill), decode the whole active
+/// set in lockstep, retire finished rows (slot freed, cache compacted).
+/// In open-loop mode the scheduler sleeps until the next arrival when
+/// idle, so wall time — and therefore every latency column — reflects
+/// the arrival process, not just raw compute.
+pub fn serve_policy(
+    engine: &mut Engine,
+    requests: &[Request],
+    mode: ArrivalMode,
+    policy: &dyn SchedulingPolicy,
+    admission: AdmissionControl,
 ) -> Result<ServeOutcome> {
     let n = requests.len();
     engine.kv.reset();
@@ -228,6 +285,10 @@ pub fn serve_with(
     let mut active: Vec<ActiveSlot> = Vec::new(); // index == slot
     let mut done: Vec<Completion> = Vec::new();
     let mut rejections: Vec<Rejection> = Vec::new();
+    let mut queue_full = 0usize;
+    // Scratch for the policy's queue snapshot, reused across admissions
+    // so picking never allocates on the serving hot path.
+    let mut view: Vec<QueuedRequest> = Vec::new();
     // Time-weighted queue-depth integral: the depth observed at one
     // sample point weights the wall-clock interval until the next.
     let mut qd_integral = 0.0f64;
@@ -239,30 +300,68 @@ pub fn serve_with(
     let timer = Timer::start();
 
     loop {
-        // 1. arrivals: move everything whose time has come into the queue.
+        // 1. arrivals: move everything whose time has come into the
+        // queue — unless the admission-control bound refuses it, in
+        // which case the request is rejected on the spot (Queued →
+        // Rejected, no slot ever involved).
         let now = timer.secs();
         while pending.front().map(|&i| arrivals[i] <= now).unwrap_or(false) {
-            queue.push_back(pending.pop_front().unwrap());
+            let i = pending.pop_front().unwrap();
+            if !admission.admits(queue.len()) {
+                set_phase(&mut phases, i, Phase::Rejected);
+                queue_full += 1;
+                rejections.push(Rejection {
+                    id: requests[i].id,
+                    reason: format!(
+                        "queue full: {} waiting at max_queue_depth {}",
+                        queue.len(),
+                        admission.max_queue_depth.unwrap_or(0)
+                    ),
+                    arrival: arrivals[i],
+                    rejected_at: timer.secs(),
+                });
+                continue;
+            }
+            queue.push_back(i);
         }
 
-        // 2. admission: validate + prefill queued requests into free
-        // slots. Validation failures (oversized prompt) reject exactly
+        // 2. admission: the policy picks which queued request claims
+        // each free slot; validation + prefill follow. Validation
+        // failures (prompt cannot fit the KV window) reject exactly
         // that request before any slot is claimed; a prefill error past
         // validation is a backend failure and aborts the run (after
         // freeing the just-claimed slot, which is the last one, so the
         // free never relocates another request's cache).
-        while engine.kv.has_free() && active.len() < MAX_SLOTS {
-            let Some(ri) = queue.pop_front() else { break };
+        while engine.kv.has_free() && active.len() < MAX_SLOTS && !queue.is_empty() {
+            // A singleton queue has only one possible pick (out-of-range
+            // picks clamp to the last element anyway), so skip the
+            // snapshot entirely — the common case at low load.
+            let pos = if queue.len() == 1 {
+                0
+            } else {
+                view.clear();
+                view.extend(queue.iter().map(|&i| QueuedRequest {
+                    id: requests[i].id,
+                    prompt_len: requests[i].prompt.len(),
+                    priority: requests[i].priority,
+                    arrival: arrivals[i],
+                }));
+                policy.pick(&view).min(queue.len() - 1)
+            };
+            let ri = queue.remove(pos).expect("pos clamped into range");
             let req = &requests[ri];
             set_phase(&mut phases, ri, Phase::Prefill);
-            let max_prompt = *PREFILL_BUCKETS.last().unwrap();
-            if req.prompt.len() > max_prompt {
+            let capacity = engine.prompt_capacity(req.max_new);
+            if req.prompt.len() > capacity {
                 set_phase(&mut phases, ri, Phase::Rejected);
                 rejections.push(Rejection {
                     id: req.id,
                     reason: format!(
-                        "prompt too long: {} > {max_prompt} (max prefill bucket)",
-                        req.prompt.len()
+                        "prompt too long: {} tokens + max_new {} exceed the \
+                         KV window (max_seq {})",
+                        req.prompt.len(),
+                        req.max_new,
+                        engine.cfg.max_seq
                     ),
                     arrival: arrivals[ri],
                     rejected_at: timer.secs(),
@@ -276,6 +375,7 @@ pub fn serve_with(
                 Ok(first) => {
                     let a = ActiveSlot {
                         id: req.id,
+                        priority: req.priority,
                         ridx: ri,
                         arrival: arrivals[ri],
                         admitted_at,
@@ -378,6 +478,8 @@ pub fn serve_with(
         wall_secs: wall,
         requests: done.len(),
         rejected: rejections.len(),
+        rejected_queue_full: queue_full,
+        goodput_rps: done.len() as f64 / wall.max(1e-9),
         generated_tokens: engine.metrics.generated_tokens,
         prefill_tokens: engine.metrics.prefill_tokens,
         tokens_per_sec: engine.metrics.generated_tokens as f64 / wall.max(1e-9),
@@ -433,6 +535,10 @@ mod tests {
         assert_eq!(p[0], Phase::Done);
         let mut p = vec![Phase::Queued];
         set_phase(&mut p, 0, Phase::Prefill);
+        set_phase(&mut p, 0, Phase::Rejected);
+        assert_eq!(p[0], Phase::Rejected);
+        // queue-full admission control rejects straight from Queued.
+        let mut p = vec![Phase::Queued];
         set_phase(&mut p, 0, Phase::Rejected);
         assert_eq!(p[0], Phase::Rejected);
     }

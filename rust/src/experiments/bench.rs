@@ -17,7 +17,8 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use crate::engine::batcher::serve;
-use crate::engine::scheduler::{serve_with, ArrivalMode};
+use crate::engine::policy::{AdmissionControl, PolicyKind};
+use crate::engine::scheduler::{serve_policy, ArrivalMode};
 use crate::engine::{Engine, EngineOptions};
 use crate::moe::DropPolicy;
 use crate::server;
@@ -189,19 +190,36 @@ pub struct ServeSweepConfig {
     pub out: PathBuf,
     /// Synthetic preset (or serialized model) to serve.
     pub model: String,
+    /// Restrict the scheduling-policy dimension to one policy (the CI
+    /// smoke matrix runs one job per policy); `None` sweeps all three.
+    pub sched: Option<PolicyKind>,
 }
+
+/// Waiting-queue bound applied to every sweep run: past the knee, the
+/// scheduler rejects (`queue full`) instead of queueing unboundedly, so
+/// `goodput_rps` vs `rate_rps` (offered load) is an honest saturation
+/// curve. 1.5 × MAX_SLOTS: small enough to engage at the heaviest
+/// arrival multiples of the full sweep, large enough that the quick
+/// sweep (12 requests) never trips it.
+pub const SWEEP_MAX_QUEUE: usize = 24;
 
 /// One measured open-loop serving configuration.
 pub struct ServeRow {
+    /// Scheduling policy (`fcfs` | `spf` | `priority`).
+    pub sched: String,
     /// Arrival rate as a multiple of the closed-loop service rate.
     pub arrival_mult: f64,
-    /// Absolute arrival rate (requests/second).
+    /// Absolute arrival rate (requests/second) — the offered load.
     pub rate_rps: f64,
     pub policy: String,
     pub completed: usize,
     pub rejected: usize,
+    /// Subset of `rejected` turned away by the queue bound.
+    pub rejected_queue_full: usize,
     pub drop_rate: f64,
     pub tokens_per_sec: f64,
+    /// Completed requests per second — plot against `rate_rps`.
+    pub goodput_rps: f64,
     /// Queue-inclusive (arrival-anchored) latency percentiles.
     pub p50_latency: f64,
     pub p99_latency: f64,
@@ -210,24 +228,31 @@ pub struct ServeRow {
     pub p50_service: f64,
     pub p99_service: f64,
     pub p50_ttft: f64,
+    pub p99_ttft: f64,
     pub mean_queue_depth: f64,
     pub max_queue_depth: usize,
     pub wall_secs: f64,
 }
 
-/// Sweep arrival rate × drop policy in open-loop mode. Every run
+/// Sweep scheduling policy × arrival rate × drop policy in open-loop
+/// mode under the [`SWEEP_MAX_QUEUE`] admission bound. Every run
 /// carries one oversized prompt (fault isolation is part of the
-/// measured path): it must cost exactly one rejection and zero lost
-/// completions. Returns the calibrated closed-loop service rate and
-/// the measured rows.
+/// measured path — it must cost exactly one rejection and zero lost
+/// completions) and one 140-token prompt that exceeds the largest
+/// prefill bucket, so chunked prefill is exercised on the measured
+/// path too (and SPF has a long job to defer). The drop-policy ladder
+/// runs under FCFS only; `spf` / `priority` run drop-free so the
+/// scheduling comparison isn't confounded. Returns the calibrated
+/// closed-loop service rate and the measured rows.
 pub fn serve_sweep_rows(
     artifacts: &Path,
     model: &str,
     quick: bool,
+    sched: Option<PolicyKind>,
 ) -> Result<(f64, Vec<ServeRow>)> {
     let (n, max_new) = if quick { (12, 5) } else { (48, 10) };
-    let mults: Vec<f64> = if quick { vec![0.75, 1.5] } else { vec![0.5, 1.0, 2.0, 4.0] };
-    let policies: Vec<(&str, DropPolicy)> = if quick {
+    let mults: Vec<f64> = if quick { vec![0.75, 2.0, 4.0] } else { vec![0.5, 1.0, 2.0, 4.0] };
+    let drop_ladder: Vec<(&str, DropPolicy)> = if quick {
         vec![("none", DropPolicy::NoDrop), ("2t:0.45", DropPolicy::two_t(0.45))]
     } else {
         vec![
@@ -237,8 +262,13 @@ pub fn serve_sweep_rows(
             ("1t:0.52", DropPolicy::OneT(0.52)),
         ]
     };
+    let scheds: Vec<PolicyKind> = match sched {
+        Some(k) => vec![k],
+        None => PolicyKind::ALL.to_vec(),
+    };
     let mut reqs = server::workload(n, max_new, 7);
-    reqs[n / 2].prompt = "!".repeat(200); // > max prefill bucket ⇒ rejected
+    reqs[n / 2].prompt = "!".repeat(200); // exceeds the KV window ⇒ rejected
+    reqs[n / 3].prompt = "?".repeat(140); // > largest bucket ⇒ chunked prefill
     let mut engine =
         Engine::new(artifacts, model, DropPolicy::NoDrop, EngineOptions::default())?;
     // Warm under a 2T band so the half-width (major-only) artifacts are
@@ -254,30 +284,48 @@ pub fn serve_sweep_rows(
         bail!("calibration run completed zero requests — cannot derive an arrival rate");
     }
     let base_rps = done.len() as f64 / base.wall_secs.max(1e-3);
+    let admission = AdmissionControl::bounded(SWEEP_MAX_QUEUE);
     let mut rows = Vec::new();
-    for &mult in &mults {
-        let rate = base_rps * mult;
-        for (label, pol) in &policies {
-            engine.policy = *pol;
-            let out = serve_with(&mut engine, &reqs, ArrivalMode::Open { rate, seed: 11 })?;
-            let st = &out.stats;
-            rows.push(ServeRow {
-                arrival_mult: mult,
-                rate_rps: rate,
-                policy: label.to_string(),
-                completed: st.requests,
-                rejected: st.rejected,
-                drop_rate: st.drop_rate,
-                tokens_per_sec: st.tokens_per_sec,
-                p50_latency: st.p50_latency,
-                p99_latency: st.p99_latency,
-                p50_service: st.p50_service,
-                p99_service: st.p99_service,
-                p50_ttft: st.p50_ttft,
-                mean_queue_depth: st.mean_queue_depth,
-                max_queue_depth: st.max_queue_depth,
-                wall_secs: st.wall_secs,
-            });
+    for &sk in &scheds {
+        for &mult in &mults {
+            let rate = base_rps * mult;
+            let drops: &[(&str, DropPolicy)] = if sk == PolicyKind::Fcfs {
+                &drop_ladder
+            } else {
+                &drop_ladder[..1] // drop-free scheduling comparison
+            };
+            for (label, pol) in drops {
+                engine.policy = *pol;
+                let out = serve_policy(
+                    &mut engine,
+                    &reqs,
+                    ArrivalMode::Open { rate, seed: 11 },
+                    sk.policy(),
+                    admission,
+                )?;
+                let st = &out.stats;
+                rows.push(ServeRow {
+                    sched: sk.label().to_string(),
+                    arrival_mult: mult,
+                    rate_rps: rate,
+                    policy: label.to_string(),
+                    completed: st.requests,
+                    rejected: st.rejected,
+                    rejected_queue_full: st.rejected_queue_full,
+                    drop_rate: st.drop_rate,
+                    tokens_per_sec: st.tokens_per_sec,
+                    goodput_rps: st.goodput_rps,
+                    p50_latency: st.p50_latency,
+                    p99_latency: st.p99_latency,
+                    p50_service: st.p50_service,
+                    p99_service: st.p99_service,
+                    p50_ttft: st.p50_ttft,
+                    p99_ttft: st.p99_ttft,
+                    mean_queue_depth: st.mean_queue_depth,
+                    max_queue_depth: st.max_queue_depth,
+                    wall_secs: st.wall_secs,
+                });
+            }
         }
     }
     Ok((base_rps, rows))
@@ -295,18 +343,22 @@ pub fn write_serve_json(
         rows.iter()
             .map(|r| {
                 obj(vec![
+                    ("sched", s(&r.sched)),
                     ("arrival_mult", num(r.arrival_mult)),
                     ("rate_rps", num(r.rate_rps)),
                     ("policy", s(&r.policy)),
                     ("completed", num(r.completed as f64)),
                     ("rejected", num(r.rejected as f64)),
+                    ("rejected_queue_full", num(r.rejected_queue_full as f64)),
                     ("drop_rate", num(r.drop_rate)),
                     ("tokens_per_sec", num(r.tokens_per_sec)),
+                    ("goodput_rps", num(r.goodput_rps)),
                     ("p50_latency", num(r.p50_latency)),
                     ("p99_latency", num(r.p99_latency)),
                     ("p50_service", num(r.p50_service)),
                     ("p99_service", num(r.p99_service)),
                     ("p50_ttft", num(r.p50_ttft)),
+                    ("p99_ttft", num(r.p99_ttft)),
                     ("mean_queue_depth", num(r.mean_queue_depth)),
                     ("max_queue_depth", num(r.max_queue_depth as f64)),
                     ("wall_secs", num(r.wall_secs)),
@@ -319,6 +371,7 @@ pub fn write_serve_json(
         ("quick", Json::Bool(quick)),
         ("mode", s("open-loop poisson")),
         ("closed_loop_rps", num(base_rps)),
+        ("max_queue_depth", num(SWEEP_MAX_QUEUE as f64)),
         ("runs", runs),
     ]);
     let text = j.to_string() + "\n";
@@ -329,28 +382,37 @@ pub fn write_serve_json(
 /// Full CLI entry for the serving sweep: measure, print, write JSON.
 pub fn serve_sweep(artifacts: &Path, cfg: &ServeSweepConfig) -> Result<()> {
     println!(
-        "dualsparse serve — model {} ({} open-loop sweep, Poisson arrivals)",
+        "dualsparse serve — model {} ({} open-loop sweep, Poisson arrivals, \
+         sched {}, max queue {SWEEP_MAX_QUEUE})",
         cfg.model,
-        if cfg.quick { "quick" } else { "full" }
+        if cfg.quick { "quick" } else { "full" },
+        match cfg.sched {
+            Some(k) => k.label(),
+            None => "fcfs+spf+priority",
+        },
     );
-    let (base_rps, rows) = serve_sweep_rows(artifacts, &cfg.model, cfg.quick)?;
+    let (base_rps, rows) = serve_sweep_rows(artifacts, &cfg.model, cfg.quick, cfg.sched)?;
     println!("closed-loop service rate: {base_rps:.2} req/s");
     println!(
-        "{:>5} {:>8} {:>8} {:>4} {:>4} {:>9} {:>9} {:>9} {:>9} {:>6}",
-        "load", "policy", "tok/s", "done", "rej", "p50(ms)", "p99(ms)", "ttft50", "svc50", "qdep"
+        "{:>8} {:>5} {:>8} {:>8} {:>7} {:>4} {:>4} {:>9} {:>9} {:>9} {:>9} {:>6}",
+        "sched", "load", "policy", "tok/s", "gp(r/s)", "done", "rej", "p50(ms)", "p99(ms)",
+        "ttft50", "ttft99", "qdep"
     );
     for r in &rows {
         println!(
-            "{:>4.2}x {:>8} {:>8.1} {:>4} {:>4} {:>9.0} {:>9.0} {:>9.0} {:>9.0} {:>6.1}",
+            "{:>8} {:>4.2}x {:>8} {:>8.1} {:>7.2} {:>4} {:>4} {:>9.0} {:>9.0} {:>9.0} \
+             {:>9.0} {:>6.1}",
+            r.sched,
             r.arrival_mult,
             r.policy,
             r.tokens_per_sec,
+            r.goodput_rps,
             r.completed,
             r.rejected,
             r.p50_latency * 1e3,
             r.p99_latency * 1e3,
             r.p50_ttft * 1e3,
-            r.p50_service * 1e3,
+            r.p99_ttft * 1e3,
             r.mean_queue_depth,
         );
     }
@@ -384,29 +446,75 @@ mod tests {
         let _ = std::fs::remove_file(&out);
     }
 
-    /// The ISSUE-4 acceptance smoke: open-loop rows must show honest
-    /// (queue-inclusive) latency ≥ the admission-anchored service time,
-    /// populated TTFT, and exactly one rejection (the injected oversized
-    /// prompt) with zero lost completions.
+    /// The ISSUE-4 acceptance smoke, extended with the ISSUE-5 policy
+    /// dimension: open-loop rows must show honest (queue-inclusive)
+    /// latency ≥ the admission-anchored service time, populated
+    /// TTFT/goodput, exactly one rejection (the injected oversized
+    /// prompt — the quick workload never trips the queue bound) with
+    /// zero lost completions (including the 140-token chunked-prefill
+    /// prompt), per-scheduling-policy rows, and goodput that does not
+    /// grow past the saturation knee.
     #[test]
-    fn quick_serve_sweep_is_honest_and_fault_isolated() {
+    fn quick_serve_sweep_is_honest_fault_isolated_and_policy_tagged() {
         let (base_rps, rows) =
-            serve_sweep_rows(Path::new("/nonexistent-artifacts"), "mixtral_ish", true)
+            serve_sweep_rows(Path::new("/nonexistent-artifacts"), "mixtral_ish", true, None)
                 .expect("hermetic open-loop sweep");
         assert!(base_rps > 0.0);
-        assert_eq!(rows.len(), 2 * 2, "rates × policies");
+        // fcfs: 3 mults × 2 drop policies; spf/priority: 3 mults × drop-free
+        assert_eq!(rows.len(), 3 * 2 + 3 + 3, "sched × rates × drops");
         for r in &rows {
-            assert_eq!(r.rejected, 1, "exactly the oversized prompt");
-            assert_eq!(r.completed, 11, "zero lost completions");
+            assert_eq!(r.rejected, 1, "exactly the oversized prompt ({})", r.sched);
+            assert_eq!(r.rejected_queue_full, 0, "quick load can't fill 24 slots");
+            assert_eq!(
+                r.completed, 11,
+                "zero lost completions incl. the chunked 140-token prompt ({})",
+                r.sched
+            );
             assert!(r.p50_latency >= r.p50_service - 1e-12, "queue-inclusive p50");
             assert!(r.p99_latency >= r.p99_service - 1e-12, "queue-inclusive p99");
+            assert!(r.p99_ttft >= r.p50_ttft - 1e-12, "TTFT percentiles ordered");
             assert!(r.p50_ttft > 0.0, "TTFT populated");
             assert!(r.tokens_per_sec > 0.0);
+            assert!(r.goodput_rps > 0.0, "goodput populated");
+        }
+        for kind in crate::engine::policy::PolicyKind::ALL {
+            assert!(
+                rows.iter().any(|r| r.sched == kind.label()),
+                "policy dimension must include {}",
+                kind.label()
+            );
+        }
+        // Past the knee (arrival ≥ 2× service rate) goodput is pinned at
+        // service capacity: offering 4× instead of 2× must not raise it
+        // (generous tolerance — these are measured wall-clock numbers).
+        for kind in crate::engine::policy::PolicyKind::ALL {
+            let gp = |mult: f64| -> f64 {
+                rows.iter()
+                    .find(|r| {
+                        r.sched == kind.label()
+                            && r.policy == "none"
+                            && (r.arrival_mult - mult).abs() < 1e-9
+                    })
+                    .expect("row present")
+                    .goodput_rps
+            };
+            assert!(
+                gp(4.0) <= gp(2.0) * 1.25,
+                "{}: goodput grew past the knee: {} → {}",
+                kind.label(),
+                gp(2.0),
+                gp(4.0)
+            );
         }
         let out = std::env::temp_dir().join("dualsparse_serve_selftest.json");
         write_serve_json("mixtral_ish", true, base_rps, &rows, &out).unwrap();
         let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
         assert_eq!(j.get("runs").unwrap().as_arr().unwrap().len(), rows.len());
+        let run0 = &j.get("runs").unwrap().as_arr().unwrap()[0];
+        for field in ["sched", "goodput_rps", "p99_ttft", "rejected_queue_full"] {
+            assert!(run0.get(field).is_ok(), "SERVE_cpu.json runs must carry {field}");
+        }
+        assert!(j.get("max_queue_depth").is_ok());
         let _ = std::fs::remove_file(&out);
     }
 }

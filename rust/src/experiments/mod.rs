@@ -106,6 +106,7 @@ pub fn mk_engine_ep(
         importance,
         collect_stats: false,
         ep: Some(EpOptions { n_devices, load_aware }),
+        ..Default::default()
     };
     Engine::new(artifacts, model, policy, opts)
 }

@@ -13,13 +13,20 @@
 //!   (`python/compile/`), build-time only.
 //! * **L3** — this crate: pluggable execution backends, the DualSparse
 //!   router (Top-K + normalization + 1T/2T drop + load-aware
-//!   thresholding), the serving engine with KV cache, continuous
-//!   batching and an arrival-driven request scheduler
-//!   ([`engine::scheduler`]: closed-loop batch or open-loop Poisson
-//!   arrivals, per-request fault isolation, arrival-anchored latency),
-//!   the expert-parallel simulation, the ETP/S-ETP communication
-//!   simulator, the EES/EEP/Wanda baselines, and the per-figure/table
-//!   experiment drivers.
+//!   thresholding), the serving engine with KV cache, chunked prefill
+//!   (prompts beyond the largest prefill bucket split bit-identically
+//!   across bucket-sized passes), continuous batching and an
+//!   arrival-driven request scheduler ([`engine::scheduler`]:
+//!   closed-loop batch or open-loop Poisson arrivals, per-request
+//!   fault isolation, arrival-anchored latency) with pluggable
+//!   scheduling policies and admission control ([`engine::policy`]:
+//!   FCFS / shortest-prompt-first / priority lanes, bounded queues
+//!   reporting goodput vs offered load), the expert-parallel
+//!   simulation, the ETP/S-ETP communication simulator, the
+//!   EES/EEP/Wanda baselines, and the per-figure/table experiment
+//!   drivers. The serving architecture — lifecycle, policy surface,
+//!   latency decomposition — is documented in `docs/ARCHITECTURE.md`;
+//!   the measured-report schemas in `docs/REPORTS.md`.
 //!
 //! ## Execution backends
 //!

@@ -1,10 +1,14 @@
 //! `dualsparse` — CLI for the DualSparse-MoE serving stack.
 //!
 //! Subcommands:
-//!   serve [model] [--policy none|1t:<T>|2t:<T>] [--reqs N] [--max-new N]
+//!   serve [model] [--policy fcfs|spf|priority] [--drop none|1t:<T>|2t:<T>]
+//!         [--max-queue N] [--reqs N] [--max-new N]
 //!         [--mode closed|open] [--rate R] [--seed S]     one measured run
-//!         [--sweep | --quick] [--out PATH]   arrival-rate × drop-policy
+//!         [--sweep | --quick] [--out PATH]   arrival-rate × drop × sched
 //!                                            sweep → SERVE_cpu.json
+//!         (--policy also filters --sweep/--quick to one scheduling
+//!          policy; legacy `--policy none|1t:<T>|2t:<T>` still parses
+//!          as a drop policy for back-compat)
 //!   eval <model> [--policy …] [--reconstruct] [--n N]
 //!   calibrate <model> [--tokens N]
 //!   bench [--quick] [--model M] [--out PATH]   (writes BENCH_cpu.json)
@@ -14,11 +18,14 @@
 //! Artifacts are resolved from ./artifacts (override: DUALSPARSE_ARTIFACTS).
 //! Worker threads for the CPU hot path: DUALSPARSE_THREADS (default:
 //! available parallelism).
+//! Serving architecture and report schemas: docs/ARCHITECTURE.md and
+//! docs/REPORTS.md.
 
 use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
+use dualsparse::engine::policy::{AdmissionControl, PolicyKind, SchedConfig};
 use dualsparse::engine::scheduler::ArrivalMode;
 use dualsparse::engine::{artifacts_dir, EngineOptions};
 use dualsparse::moe::DropPolicy;
@@ -37,6 +44,40 @@ fn parse_policy(spec: &str) -> Result<DropPolicy> {
         return Ok(DropPolicy::two_t(t.parse().context("bad 2t threshold")?));
     }
     bail!("unknown policy {spec:?}; use none | 1t:<T> | 2t:<T>")
+}
+
+/// Split `serve`'s flags into (scheduling policy, drop policy):
+/// `--policy` takes the scheduling spelling (`fcfs|spf|priority`) but
+/// still accepts the legacy drop grammar (`none|1t:<T>|2t:<T>`) it
+/// meant before PR 5; `--drop` is the explicit drop-policy flag and
+/// wins over a legacy `--policy` value.
+fn parse_serve_policies(
+    policy_flag: Option<&str>,
+    drop_flag: Option<&str>,
+) -> Result<(Option<PolicyKind>, DropPolicy)> {
+    let mut drop = match drop_flag {
+        Some(spec) => Some(parse_policy(spec)?),
+        None => None,
+    };
+    let mut sched = None;
+    if let Some(spec) = policy_flag {
+        match PolicyKind::parse(spec) {
+            Ok(k) => sched = Some(k),
+            Err(_) if parse_policy(spec).is_ok() => {
+                // legacy spelling: `--policy 2t:0.15` etc.
+                if drop.is_none() {
+                    drop = Some(parse_policy(spec)?);
+                }
+            }
+            Err(e) => {
+                return Err(e.context(
+                    "--policy takes fcfs | spf | priority (or a legacy \
+                     drop spec none | 1t:<T> | 2t:<T>)",
+                ))
+            }
+        }
+    }
+    Ok((sched, drop.unwrap_or(DropPolicy::NoDrop)))
 }
 
 /// Tiny flag parser: positional args + --key value pairs.
@@ -95,7 +136,30 @@ fn main() -> Result<()> {
                 .map(|s| s.as_str())
                 .unwrap_or("mixtral_ish")
                 .to_string();
+            let (sched_kind, policy) =
+                parse_serve_policies(args.flag("policy"), args.flag("drop"))?;
+            let max_queue = match args.flag("max-queue") {
+                Some(v) => Some(v.parse::<usize>().with_context(|| {
+                    format!("--max-queue must be a request count, got {v:?}")
+                })?),
+                None => None,
+            };
             if args.flag("sweep").is_some() || args.flag("quick").is_some() {
+                // The sweep fixes its own queue bound and drop ladder;
+                // refusing beats silently writing a JSON the user's
+                // flags did not shape (--policy does apply: it
+                // restricts the scheduling dimension).
+                let legacy_drop_spelling =
+                    sched_kind.is_none() && args.flag("policy").is_some();
+                if max_queue.is_some() || args.flag("drop").is_some() || legacy_drop_spelling {
+                    bail!(
+                        "--max-queue and drop-policy flags have no effect with \
+                         --sweep/--quick (the sweep uses max queue {} and its own \
+                         drop ladder); use --policy fcfs|spf|priority to restrict \
+                         the sweep",
+                        experiments::bench::SWEEP_MAX_QUEUE
+                    );
+                }
                 let cfg = experiments::bench::ServeSweepConfig {
                     quick: args.flag("quick").is_some(),
                     out: args
@@ -103,11 +167,18 @@ fn main() -> Result<()> {
                         .map(PathBuf::from)
                         .unwrap_or_else(|| PathBuf::from("SERVE_cpu.json")),
                     model,
+                    sched: sched_kind,
                 };
                 experiments::bench::serve_sweep(&artifacts, &cfg)?;
                 return Ok(());
             }
-            let policy = parse_policy(args.flag("policy").unwrap_or("none"))?;
+            let sched = SchedConfig {
+                policy: sched_kind.unwrap_or_default(),
+                admission: match max_queue {
+                    Some(k) => AdmissionControl::bounded(k),
+                    None => AdmissionControl::unbounded(),
+                },
+            };
             let n = args.flag_usize("reqs", 100);
             let max_new = args.flag_usize("max-new", 12);
             let mode = match args.flag("mode").unwrap_or("closed") {
@@ -124,12 +195,16 @@ fn main() -> Result<()> {
             let mut engine =
                 Engine::new(&artifacts, &model, policy, EngineOptions::default())?;
             println!(
-                "serving {model} on {} ({} requests, policy {policy:?}, {mode:?})",
+                "serving {model} on {} ({} requests, sched {} max-queue {:?}, \
+                 drop {policy:?}, {mode:?})",
                 engine.rt.platform(),
-                n
+                n,
+                sched.policy,
+                sched.admission.max_queue_depth,
             );
             let reqs = server::workload(n, max_new, 7);
-            let report = server::run_once_mode(&mut engine, &reqs, policy, "serve", mode)?;
+            let report =
+                server::run_once_mode(&mut engine, &reqs, policy, "serve", mode, sched)?;
             let st = &report.stats;
             println!("{}", server::format_report(&report));
             println!(
@@ -147,14 +222,17 @@ fn main() -> Result<()> {
             );
             println!(
                 "ttft mean={:.0}ms p99={:.0}ms | queue wait={:.0}ms depth mean={:.1} \
-                 max={} | completed={} rejected={}",
+                 max={} | completed={} goodput={:.2} req/s rejected={} \
+                 (queue-full {})",
                 st.mean_ttft * 1e3,
                 st.p99_ttft * 1e3,
                 st.mean_queue_secs * 1e3,
                 st.mean_queue_depth,
                 st.max_queue_depth,
                 st.requests,
+                st.goodput_rps,
                 st.rejected,
+                st.rejected_queue_full,
             );
         }
         "eval" => {

@@ -7,6 +7,16 @@
 //!   T²_major ≤ score < T²_minor runs only the major half, and
 //!   score < T²_major drops the pair entirely. The paper's default pair
 //!   is (T¹ − 0.01, T¹ + 0.01), constructed by [`DropPolicy::two_t`].
+//!
+//! Dropping is the *intra-request* sparsity lever: it shrinks the
+//! capacity buckets real GEMMs run at, converting drop rate into
+//! MoE-module speedup (Fig. 10). It composes orthogonally with the
+//! *inter-request* levers in [`crate::engine::policy`] (admission
+//! ordering + queue bounds): the serving sweep (`dualsparse serve
+//! --sweep`) measures the drop ladder and the scheduling-policy
+//! dimension side by side into SERVE_cpu.json (see docs/REPORTS.md).
+//! Under expert parallelism, [`DropPolicy::scaled`] applies the §4.3
+//! load-aware per-device threshold scaling.
 
 /// Per-(token, expert) drop decision.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]

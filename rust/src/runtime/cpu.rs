@@ -15,9 +15,10 @@
 //! Concurrency: all interior state is lock- or atomic-guarded, so the
 //! engine's threaded expert dispatch can issue `exec` calls from many
 //! workers at once (the `Backend: Sync` contract). The step-attention
-//! artifact additionally accepts its KV cache as [`Arg::F32Slices`] —
-//! borrowed per-slot slices — so the decode hot path never copies the
-//! cache.
+//! and chunked-prefill (`attn_prefill_chunk_s{S}`) artifacts
+//! additionally accept their KV cache as [`Arg::F32Slices`] — borrowed
+//! per-slot slices — so neither the decode hot path nor a prefill
+//! continuation ever copies the cache.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -126,6 +127,21 @@ impl Backend for CpuRef {
                 targ(name, &rs, 1)?,
                 targ(name, &rs, 2)?,
             )]
+        } else if name.starts_with("attn_prefill_chunk_s") {
+            let kv = kv_arg(name, &rs, 7)?;
+            let vv = kv_arg(name, &rs, 8)?;
+            op_attn_prefill_chunk(
+                targ(name, &rs, 0)?,
+                targ(name, &rs, 1)?,
+                targ(name, &rs, 2)?,
+                targ(name, &rs, 3)?,
+                targ(name, &rs, 4)?,
+                targ(name, &rs, 5)?,
+                targ(name, &rs, 6)?,
+                &kv,
+                &vv,
+                iarg(name, &rs, 9)?,
+            )?
         } else if name.starts_with("attn_prefill_s") {
             let h = self.n_heads.load(Ordering::Relaxed);
             let dh = self.d_head.load(Ordering::Relaxed);
@@ -380,6 +396,119 @@ fn op_attn_prefill(
     ])
 }
 
+/// Chunked-prefill continuation (`attn_prefill_chunk_s{S}`): like
+/// [`op_attn_prefill`] but query `qi` (global position `base + qi`)
+/// first attends over the slot's cached K/V — positions `0..base`,
+/// borrowed zero-copy from the engine's KV cache as a `[1, H, T, dh]`
+/// view — and then over the in-chunk causal window `0..=qi`. Scores are
+/// computed and context accumulated in ascending global-position order
+/// (cached first, then in-chunk), which is the exact operation order of
+/// a single-pass prefill over the whole prompt: chunked outputs are
+/// **bit-identical** to an unchunked pass with a large-enough bucket.
+/// Returns (y [S,d], ln2x [S,d], K [S,H,dh], V [S,H,dh]) — chunk-local
+/// K/V only; the engine writes them behind `base`. Head geometry comes
+/// from the cache view.
+fn op_attn_prefill_chunk(
+    x: &Tensor,
+    ln1: &Tensor,
+    wq: &Tensor,
+    wk: &Tensor,
+    wv: &Tensor,
+    wo: &Tensor,
+    ln2: &Tensor,
+    kcache: &KvView,
+    vcache: &KvView,
+    base_arg: &[i32],
+) -> Result<Vec<Tensor>> {
+    let (s, d) = (x.shape[0], x.shape[1]);
+    let (n_heads, t_max, d_head) = (kcache.n_heads, kcache.t_max, kcache.d_head);
+    if kcache.rows.len() != 1 || vcache.rows.len() != 1 {
+        bail!(
+            "attn_prefill_chunk: expected a single-slot cache view, got {}/{} rows",
+            kcache.rows.len(),
+            vcache.rows.len()
+        );
+    }
+    if (vcache.n_heads, vcache.t_max, vcache.d_head) != (n_heads, t_max, d_head) {
+        bail!("attn_prefill_chunk: K/V cache geometry mismatch");
+    }
+    if n_heads * d_head != d {
+        bail!("attn_prefill_chunk: {n_heads}x{d_head} heads != d_model {d}");
+    }
+    let base = base_arg.first().copied().unwrap_or(0).max(0) as usize;
+    if base > t_max {
+        bail!("attn_prefill_chunk: base {base} > cache window {t_max}");
+    }
+    let xn = rmsnorm_rows(x, &ln1.data);
+    let q = matmul(&xn, wq);
+    let k = matmul(&xn, wk);
+    let v = matmul(&xn, wv);
+    let scale = 1.0 / (d_head as f32).sqrt();
+    let krows = kcache.rows[0];
+    let vrows = vcache.rows[0];
+    let per_head = |hi: usize| -> Vec<f32> {
+        let off = hi * d_head;
+        let hbase = hi * t_max * d_head;
+        let mut hctx = vec![0.0f32; s * d_head];
+        let mut scores = vec![0.0f32; base + s];
+        for qi in 0..s {
+            let qrow = &q.data[qi * d + off..qi * d + off + d_head];
+            // cached positions 0..base first…
+            for ti in 0..base {
+                scores[ti] =
+                    dot(qrow, &krows[hbase + ti * d_head..hbase + (ti + 1) * d_head]) * scale;
+            }
+            // …then the in-chunk causal window (global base..=base+qi).
+            for ki in 0..=qi {
+                scores[base + ki] =
+                    dot(qrow, &k.data[ki * d + off..ki * d + off + d_head]) * scale;
+            }
+            softmax_inplace(&mut scores[..base + qi + 1]);
+            let crow = &mut hctx[qi * d_head..(qi + 1) * d_head];
+            for ti in 0..base {
+                let w = scores[ti];
+                let vrow = &vrows[hbase + ti * d_head..hbase + (ti + 1) * d_head];
+                for (o, &vv) in crow.iter_mut().zip(vrow) {
+                    *o += w * vv;
+                }
+            }
+            for ki in 0..=qi {
+                let w = scores[base + ki];
+                let vrow = &v.data[ki * d + off..ki * d + off + d_head];
+                for (o, &vv) in crow.iter_mut().zip(vrow) {
+                    *o += w * vv;
+                }
+            }
+        }
+        hctx
+    };
+    let head_ctx: Vec<Vec<f32>> = if (base + s) * s * d >= ATTN_PAR_MIN {
+        crate::util::threads::parallel_map(n_heads, per_head)
+    } else {
+        (0..n_heads).map(per_head).collect()
+    };
+    let mut ctx = vec![0.0f32; s * d];
+    for (hi, hctx) in head_ctx.iter().enumerate() {
+        let off = hi * d_head;
+        for qi in 0..s {
+            ctx[qi * d + off..qi * d + off + d_head]
+                .copy_from_slice(&hctx[qi * d_head..(qi + 1) * d_head]);
+        }
+    }
+    let proj = matmul(&Tensor::new(vec![s, d], ctx), wo);
+    let y = Tensor::new(
+        vec![s, d],
+        x.data.iter().zip(&proj.data).map(|(a, b)| a + b).collect(),
+    );
+    let ln2x = rmsnorm_rows(&y, &ln2.data);
+    Ok(vec![
+        y,
+        ln2x,
+        Tensor::new(vec![s, n_heads, d_head], k.data),
+        Tensor::new(vec![s, n_heads, d_head], v.data),
+    ])
+}
+
 /// Single-token decode step with KV cache (`serve_attn_step`): returns
 /// (y [B,d], ln2x [B,d], new_k [B,H,dh], new_v [B,H,dh]). Head geometry
 /// is inferred from the cache view.
@@ -596,6 +725,75 @@ mod tests {
             let got = step[0].data[e];
             assert!((want - got).abs() < 1e-5, "y[{e}]: {want} vs {got}");
         }
+    }
+
+    #[test]
+    fn prefill_chunk_matches_full_prefill_bitwise() {
+        // Rows s0..s of a full prefill must equal a chunk pass whose
+        // cache holds the first s0 positions — the kernel-level
+        // invariant behind chunked prefill.
+        let mut rng = SplitMix64::new(6);
+        let (s, s0, d, h, dh, t_max) = (7usize, 4usize, 8usize, 2usize, 4usize, 10usize);
+        let x = randn(&mut rng, vec![s, d], 0.5);
+        let ln1 = Tensor::new(vec![d], vec![1.0; d]);
+        let ln2 = Tensor::new(vec![d], vec![1.0; d]);
+        let wq = randn(&mut rng, vec![d, d], 0.3);
+        let wk = randn(&mut rng, vec![d, d], 0.3);
+        let wv = randn(&mut rng, vec![d, d], 0.3);
+        let wo = randn(&mut rng, vec![d, d], 0.3);
+        let full = op_attn_prefill(&x, &ln1, &wq, &wk, &wv, &wo, &ln2, h, dh).unwrap();
+        let head = op_attn_prefill(
+            &x.row_slice(0, s0), &ln1, &wq, &wk, &wv, &wo, &ln2, h, dh,
+        )
+        .unwrap();
+        // pack the head chunk's K/V ([s0, H, dh]) into a [1, H, T, dh]
+        // slot exactly like KvCache::write_prefill does.
+        let mut kc = vec![0.0f32; h * t_max * dh];
+        let mut vc = vec![0.0f32; h * t_max * dh];
+        for ti in 0..s0 {
+            for hi in 0..h {
+                for e in 0..dh {
+                    kc[(hi * t_max + ti) * dh + e] = head[2].data[(ti * h + hi) * dh + e];
+                    vc[(hi * t_max + ti) * dh + e] = head[3].data[(ti * h + hi) * dh + e];
+                }
+            }
+        }
+        let kt = Tensor::new(vec![1, h, t_max, dh], kc);
+        let vt = Tensor::new(vec![1, h, t_max, dh], vc);
+        let tail_x = Tensor::new(
+            vec![s - s0, d],
+            x.data[s0 * d..s * d].to_vec(),
+        );
+        let be = CpuRef::new();
+        let tail = be
+            .exec(
+                &format!("attn_prefill_chunk_s{}", s - s0),
+                &[
+                    Arg::F32(&tail_x),
+                    Arg::F32(&ln1),
+                    Arg::F32(&wq),
+                    Arg::F32(&wk),
+                    Arg::F32(&wv),
+                    Arg::F32(&wo),
+                    Arg::F32(&ln2),
+                    Arg::F32(&kt),
+                    Arg::F32(&vt),
+                    Arg::I32(&[s0 as i32]),
+                ],
+            )
+            .unwrap();
+        // y and ln2x rows must be bit-identical to the full pass.
+        for out_i in 0..2 {
+            for r in 0..s - s0 {
+                let want = &full[out_i].data[(s0 + r) * d..(s0 + r + 1) * d];
+                let got = &tail[out_i].data[r * d..(r + 1) * d];
+                assert_eq!(want, got, "output {out_i} row {r} diverged");
+            }
+        }
+        // chunk-local K/V equal the full pass's tail rows bitwise.
+        let hd = h * dh;
+        assert_eq!(tail[2].data, full[2].data[s0 * hd..s * hd]);
+        assert_eq!(tail[3].data, full[3].data[s0 * hd..s * hd]);
     }
 
     #[test]

@@ -15,14 +15,15 @@
 //! Artifact names carry the dispatch contract shared by both backends
 //! (see `python/compile/aot.py::lower_artifacts`):
 //!
-//! | name                  | args                                   |
-//! |-----------------------|----------------------------------------|
-//! | `ffn_h{H}_c{C}`       | x [C,d], w1 [d,H], w3 [d,H], w2 [H,d]  |
-//! | `gate_b{B}_e{E}`      | x [B,d], wg [d,E]                      |
-//! | `probe_h{H}`          | x [C,d], w1 [d,H], w3 [d,H]            |
-//! | `attn_prefill_s{S}`   | x, ln1, wq, wk, wv, wo, ln2            |
-//! | `attn_step_b{B}`      | … + kcache, vcache, pos (i32)          |
-//! | `lm_head_b{B}`        | x [B,d], lnf [d], emb [V,d]            |
+//! | name                       | args                                         |
+//! |----------------------------|----------------------------------------------|
+//! | `ffn_h{H}_c{C}`            | `x [C,d], w1 [d,H], w3 [d,H], w2 [H,d]`      |
+//! | `gate_b{B}_e{E}`           | `x [B,d], wg [d,E]`                          |
+//! | `probe_h{H}`               | `x [C,d], w1 [d,H], w3 [d,H]`                |
+//! | `attn_prefill_s{S}`        | `x, ln1, wq, wk, wv, wo, ln2`                |
+//! | `attn_prefill_chunk_s{S}`  | `… + kcache, vcache, base (i32)`             |
+//! | `attn_step_b{B}`           | `… + kcache, vcache, pos (i32)`              |
+//! | `lm_head_b{B}`             | `x [B,d], lnf [d], emb [V,d]`                |
 //!
 //! Backend selection: [`BackendKind`] on `EngineOptions`, overridable
 //! with the `DUALSPARSE_BACKEND` env var (`cpu` | `pjrt`); `Auto` picks

@@ -5,7 +5,9 @@
 
 use anyhow::Result;
 
-use crate::engine::batcher::{serve, serve_with, ArrivalMode, Request, ServeStats};
+use crate::engine::batcher::{
+    serve, serve_policy, ArrivalMode, Request, SchedConfig, ServeStats,
+};
 use crate::engine::Engine;
 use crate::moe::DropPolicy;
 use crate::util::rng::SplitMix64;
@@ -13,6 +15,11 @@ use crate::util::stats::speedup_ratio;
 
 /// A serving workload: prompts drawn from the benchmark task mixture
 /// with a deterministic shuffle (stand-in for "2000 random prompts").
+///
+/// Each request also carries a deterministic scheduling lane
+/// (`priority` ∈ {0, 1, 2}, higher = more urgent, drawn from the same
+/// seeded stream after the shuffle) so the `priority` policy has lanes
+/// to work with; FCFS/SPF runs ignore the field entirely.
 pub fn workload(n_requests: usize, max_new: usize, seed: u64) -> Vec<Request> {
     let mut reqs = crate::engine::batcher::task_workload(n_requests, max_new);
     let mut rng = SplitMix64::new(seed);
@@ -23,6 +30,7 @@ pub fn workload(n_requests: usize, max_new: usize, seed: u64) -> Vec<Request> {
     }
     for (i, r) in reqs.iter_mut().enumerate() {
         r.id = i;
+        r.priority = rng.below(3) as u8;
     }
     reqs
 }
@@ -57,17 +65,19 @@ fn task_workload_small() -> Vec<Request> {
 /// restored afterwards. Warms up lazily-compiled artifacts first.
 pub fn run_once(engine: &mut Engine, reqs: &[Request], policy: DropPolicy,
                 label: &str) -> Result<RunReport> {
-    run_once_mode(engine, reqs, policy, label, ArrivalMode::Closed)
+    run_once_mode(engine, reqs, policy, label, ArrivalMode::Closed, SchedConfig::default())
 }
 
 /// [`run_once`] under an explicit arrival mode (closed batch loop or
-/// open-loop Poisson arrivals).
+/// open-loop Poisson arrivals) and scheduling configuration (admission
+/// ordering policy + queue bound). `SchedConfig::default()` — FCFS,
+/// unbounded — reproduces the pre-policy scheduler byte-for-byte.
 pub fn run_once_mode(engine: &mut Engine, reqs: &[Request], policy: DropPolicy,
-                     label: &str, mode: ArrivalMode) -> Result<RunReport> {
+                     label: &str, mode: ArrivalMode, sched: SchedConfig) -> Result<RunReport> {
     warmup(engine)?;
     let saved = engine.policy;
     engine.policy = policy;
-    let measured = serve_with(engine, reqs, mode);
+    let measured = serve_policy(engine, reqs, mode, sched.policy.policy(), sched.admission);
     engine.policy = saved;
     let out = measured?;
     Ok(RunReport {
@@ -90,16 +100,17 @@ pub fn compare(baseline: &RunReport, runs: &mut [RunReport]) {
 }
 
 /// Paper-style row: label, drop rate, MoE speedup, e2e speedup, tput,
-/// queue-inclusive p50, TTFT, queue depth and rejection count.
+/// goodput, queue-inclusive p50, TTFT, queue depth and rejection count.
 pub fn format_report(r: &RunReport) -> String {
     format!(
-        "{:<22} drop={:>5.1}%  moe×{:<5.2} e2e×{:<5.2} {:>7.1} tok/s  \
+        "{:<22} drop={:>5.1}%  moe×{:<5.2} e2e×{:<5.2} {:>7.1} tok/s gp={:.2}r/s  \
          p50={:.0}ms ttft50={:.0}ms qd={:.1} rej={}",
         r.label,
         100.0 * r.stats.drop_rate,
         r.moe_speedup,
         r.e2e_speedup,
         r.stats.tokens_per_sec,
+        r.stats.goodput_rps,
         r.stats.p50_latency * 1e3,
         r.stats.p50_ttft * 1e3,
         r.stats.mean_queue_depth,
@@ -167,5 +178,14 @@ mod tests {
         );
         // ids are re-sequenced after shuffling
         assert!(a.iter().enumerate().all(|(i, r)| r.id == i));
+        // priority lanes are deterministic per seed, in-range, and the
+        // workload actually spreads across more than one lane.
+        assert_eq!(
+            a.iter().map(|r| r.priority).collect::<Vec<_>>(),
+            b.iter().map(|r| r.priority).collect::<Vec<_>>()
+        );
+        assert!(a.iter().all(|r| r.priority <= 2));
+        let lanes: std::collections::HashSet<u8> = a.iter().map(|r| r.priority).collect();
+        assert!(lanes.len() > 1, "20 draws over 3 lanes must hit ≥ 2 lanes");
     }
 }

@@ -1,0 +1,168 @@
+//! Chunked-prefill equivalence tests: a prompt longer than the largest
+//! prefill bucket runs as several bucket-sized passes into the same KV
+//! slot and must be **bit-identical** — logits, cached K/V, decode
+//! continuation — to a single pass on an engine configured with a
+//! large-enough bucket. Also pins the serving-level capacity policy:
+//! long prompts complete (not Rejected) up to the KV window, and only
+//! prompts that cannot fit `len + max_new ≤ max_seq` are rejected.
+//!
+//! Hermetic: CpuRef backend + synthetic SplitMix64 weights.
+
+#![allow(clippy::needless_range_loop)]
+
+use std::path::Path;
+
+use dualsparse::engine::batcher::{serve_with, ArrivalMode, Request};
+use dualsparse::engine::{Engine, EngineOptions};
+use dualsparse::model::{ModelConfig, Weights};
+use dualsparse::moe::DropPolicy;
+
+/// A mixtral_ish engine with a widened KV window and an optional
+/// prefill-bucket override (None = the stock [16, 32, 64, 128] ladder).
+fn engine_with(max_seq: usize, buckets: Option<Vec<usize>>) -> Engine {
+    let mut cfg = ModelConfig::preset("mixtral_ish").unwrap();
+    cfg.max_seq = max_seq;
+    let weights = Weights::synthetic(&cfg);
+    Engine::from_weights(
+        Path::new("/nonexistent-artifacts"),
+        weights,
+        DropPolicy::NoDrop,
+        EngineOptions { prefill_buckets: buckets, ..Default::default() },
+    )
+    .expect("hermetic engine (CpuRef + synthetic weights)")
+}
+
+/// 300 deterministic ASCII tokens — spans three stock prefill chunks
+/// (128 + 128 + 44→bucket 64) and never contains EOS (`\n`).
+fn long_prompt() -> String {
+    (0..300).map(|i| (b'a' + (i % 17) as u8) as char).collect()
+}
+
+#[test]
+fn three_bucket_prompt_is_bit_identical_to_single_pass() {
+    let prompt = long_prompt();
+    // Chunked: stock buckets, 3 passes. Single: one 300-wide bucket.
+    let mut chunked = engine_with(400, None);
+    let mut single = engine_with(400, Some(vec![16, 32, 64, 128, 300]));
+
+    chunked.kv.reset();
+    let sa = chunked.kv.alloc();
+    let (ta, la) = chunked.prefill_logits(sa, prompt.as_bytes()).unwrap();
+    single.kv.reset();
+    let sb = single.kv.alloc();
+    let (tb, lb) = single.prefill_logits(sb, prompt.as_bytes()).unwrap();
+
+    assert!(!la.is_empty(), "logits row populated");
+    assert_eq!(la, lb, "chunked logits must be bit-identical to a single pass");
+    assert_eq!(ta, tb, "first generated token must agree");
+
+    // KV positions line up after chunking: the decode cursor sits at the
+    // prompt length and every cached position matches bitwise (untouched
+    // tail positions are zero on both sides, so whole-slot compare is
+    // exact).
+    assert_eq!(chunked.kv.pos[sa], 300);
+    assert_eq!(single.kv.pos[sb], 300);
+    let stride = chunked.kv.slot_stride();
+    assert_eq!(stride, single.kv.slot_stride());
+    for li in 0..chunked.cfg.n_layers {
+        assert_eq!(
+            chunked.kv.k[li].data[..stride],
+            single.kv.k[li].data[..stride],
+            "layer {li} K cache diverged"
+        );
+        assert_eq!(
+            chunked.kv.v[li].data[..stride],
+            single.kv.v[li].data[..stride],
+            "layer {li} V cache diverged"
+        );
+    }
+
+    // Decode continues identically over the chunk-written cache.
+    let a = chunked.decode_step(&[ta]).unwrap();
+    let b = single.decode_step(&[tb]).unwrap();
+    assert_eq!(a, b, "decode over chunk-written KV diverged");
+}
+
+#[test]
+fn three_bucket_prompt_completes_in_serving() {
+    let prompt = long_prompt();
+    let mut e = engine_with(400, None);
+    let reqs = vec![
+        Request { id: 0, prompt: "cpy:ab|".into(), max_new: 4, priority: 0 },
+        Request { id: 1, prompt: prompt.clone(), max_new: 4, priority: 0 },
+        Request { id: 2, prompt: "add:3+4|".into(), max_new: 4, priority: 0 },
+    ];
+    let out = serve_with(&mut e, &reqs, ArrivalMode::Closed).unwrap();
+    assert!(
+        out.rejections.is_empty(),
+        "a 3-bucket prompt must complete, not Reject: {:?}",
+        out.rejections
+    );
+    assert_eq!(out.completions.len(), 3);
+    assert_eq!(e.kv.n_active, 0, "all slots returned");
+
+    // The long request's completion matches an unchunked (single-pass
+    // bucket) engine generating the same continuation.
+    let mut single = engine_with(400, Some(vec![16, 32, 64, 128, 300]));
+    let want = single.generate_batch(&[prompt.as_str()], 4).unwrap();
+    let got = out.completions.iter().find(|c| c.id == 1).unwrap();
+    assert_eq!(got.text, want[0], "chunked serving continuation diverged");
+}
+
+#[test]
+fn stock_engine_accepts_up_to_the_kv_window_and_rejects_past_it() {
+    // Stock mixtral_ish: max_seq 160, largest bucket 128. A 140-token
+    // prompt (PR 4 would have rejected it) now chunks and completes;
+    // 200 tokens cannot fit 200 + 5 ≤ 160 and is the true capacity
+    // rejection.
+    let mut e = Engine::new(
+        Path::new("/nonexistent-artifacts"),
+        "mixtral_ish",
+        DropPolicy::NoDrop,
+        EngineOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(e.prompt_capacity(5), 155);
+    let reqs = vec![
+        Request { id: 0, prompt: "?".repeat(140), max_new: 5, priority: 0 },
+        Request { id: 1, prompt: "!".repeat(200), max_new: 5, priority: 0 },
+    ];
+    let out = serve_with(&mut e, &reqs, ArrivalMode::Closed).unwrap();
+    assert_eq!(out.completions.len(), 1, "the 140-token prompt completes");
+    assert_eq!(out.completions[0].id, 0);
+    assert_eq!(out.rejections.len(), 1);
+    assert_eq!(out.rejections[0].id, 1);
+    assert!(
+        out.rejections[0].reason.contains("too long"),
+        "reason: {}",
+        out.rejections[0].reason
+    );
+    assert_eq!(e.kv.n_active, 0);
+
+    // Chunked prefill leaves the decode cursor at the prompt length.
+    e.kv.reset();
+    let slot = e.kv.alloc();
+    e.prefill(slot, "?".repeat(140).as_bytes()).unwrap();
+    assert_eq!(e.kv.pos[slot], 140);
+
+    // Direct prefill past the KV window is an engine error, not UB.
+    e.kv.reset();
+    let slot = e.kv.alloc();
+    assert!(e.prefill(slot, "!".repeat(200).as_bytes()).is_err());
+}
+
+#[test]
+fn bad_bucket_overrides_are_rejected_at_construction() {
+    let mut cfg = ModelConfig::preset("mixtral_ish").unwrap();
+    cfg.max_seq = 100;
+    for bad in [vec![], vec![16, 16], vec![32, 16], vec![16, 200]] {
+        let weights = Weights::synthetic(&cfg);
+        let r = Engine::from_weights(
+            Path::new("/nonexistent-artifacts"),
+            weights,
+            DropPolicy::NoDrop,
+            EngineOptions { prefill_buckets: Some(bad.clone()), ..Default::default() },
+        );
+        assert!(r.is_err(), "bucket override {bad:?} must be rejected");
+    }
+}

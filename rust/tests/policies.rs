@@ -1,0 +1,204 @@
+//! Scheduling-policy and admission-control tests: FCFS pins the legacy
+//! order, SPF admits by prompt length, priority lanes admit by lane,
+//! and a bounded queue rejects exactly the overflow while completions ∪
+//! rejections stay exhaustive.
+//!
+//! Hermetic: CpuRef backend + synthetic SplitMix64 weights.
+
+use std::path::PathBuf;
+
+use dualsparse::engine::batcher::{serve_policy, serve_with, ArrivalMode, Request};
+use dualsparse::engine::policy::{
+    AdmissionControl, Fcfs, PolicyKind, PriorityLanes, ShortestPromptFirst,
+};
+use dualsparse::engine::{Engine, EngineOptions, MAX_SLOTS};
+use dualsparse::moe::DropPolicy;
+use dualsparse::server::workload;
+
+fn artifacts() -> PathBuf {
+    std::env::var("DUALSPARSE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+fn engine() -> Engine {
+    Engine::new(&artifacts(), "mixtral_ish", DropPolicy::NoDrop, EngineOptions::default())
+        .expect("hermetic engine (CpuRef + synthetic weights)")
+}
+
+/// n requests whose prompt lengths descend with the id (id 0 longest),
+/// so FCFS and SPF admission orders are opposites.
+fn descending_length_requests(n: usize) -> Vec<Request> {
+    (0..n)
+        .map(|i| Request {
+            id: i,
+            prompt: "x".repeat(4 + (n - 1 - i) * 5),
+            max_new: 3,
+            priority: 0,
+        })
+        .collect()
+}
+
+#[test]
+fn fcfs_policy_is_byte_identical_to_default_serve() {
+    let mut e = engine();
+    let reqs = workload(20, 5, 7);
+    for mode in [ArrivalMode::Closed, ArrivalMode::Open { rate: 200.0, seed: 3 }] {
+        let a = serve_with(&mut e, &reqs, mode).unwrap();
+        let b = serve_policy(&mut e, &reqs, mode, &Fcfs, AdmissionControl::unbounded())
+            .unwrap();
+        let c = serve_policy(
+            &mut e,
+            &reqs,
+            mode,
+            PolicyKind::Fcfs.policy(),
+            AdmissionControl::unbounded(),
+        )
+        .unwrap();
+        assert_eq!(a.completions.len(), b.completions.len(), "{mode:?}: completion counts");
+        assert_eq!(a.completions.len(), c.completions.len(), "{mode:?}: completion counts");
+        assert_eq!(a.rejections.len(), b.rejections.len(), "{mode:?}: rejection counts");
+        assert_eq!(a.rejections.len(), c.rejections.len(), "{mode:?}: rejection counts");
+        for (x, y) in a.completions.iter().zip(&b.completions) {
+            assert_eq!((x.id, &x.text), (y.id, &y.text), "{mode:?}: explicit Fcfs diverged");
+        }
+        for (x, y) in a.completions.iter().zip(&c.completions) {
+            assert_eq!((x.id, &x.text), (y.id, &y.text), "{mode:?}: PolicyKind path diverged");
+        }
+    }
+}
+
+/// Admission order is observable through `queue_secs` (closed-loop
+/// arrival is t = 0, so queue wait == admission time, which is strictly
+/// monotone in admission order): everything admitted in the first wave
+/// waited less than everything admitted after the first retirement.
+fn first_wave_ids(completions: &[dualsparse::engine::batcher::Completion]) -> Vec<usize> {
+    let mut by_wait: Vec<(f64, usize)> =
+        completions.iter().map(|c| (c.queue_secs, c.id)).collect();
+    by_wait.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    by_wait[..MAX_SLOTS].iter().map(|&(_, id)| id).collect()
+}
+
+#[test]
+fn spf_admits_shortest_prompts_first() {
+    let mut e = engine();
+    let n = MAX_SLOTS + 4;
+    let reqs = descending_length_requests(n);
+    let out =
+        serve_policy(&mut e, &reqs, ArrivalMode::Closed, &ShortestPromptFirst,
+                     AdmissionControl::unbounded())
+            .unwrap();
+    assert_eq!(out.completions.len(), n);
+    // the four LONGEST prompts (lowest ids) wait for the second wave
+    let wave1 = first_wave_ids(&out.completions);
+    for id in 0..4 {
+        assert!(
+            !wave1.contains(&id),
+            "longest prompt {id} must be deferred by SPF (wave1: {wave1:?})"
+        );
+    }
+
+    // FCFS control: the first 16 by arrival are the first wave.
+    let out = serve_policy(&mut e, &reqs, ArrivalMode::Closed, &Fcfs,
+                           AdmissionControl::unbounded())
+        .unwrap();
+    let wave1 = first_wave_ids(&out.completions);
+    for id in 0..MAX_SLOTS {
+        assert!(wave1.contains(&id), "FCFS wave1 must be ids 0..16 (got {wave1:?})");
+    }
+}
+
+#[test]
+fn priority_lanes_admit_high_lanes_first_fcfs_within_lane() {
+    let mut e = engine();
+    let n = MAX_SLOTS + 4;
+    // equal lengths; lane = id % 3 (lane 2 most urgent).
+    let reqs: Vec<Request> = (0..n)
+        .map(|i| Request {
+            id: i,
+            prompt: "y".repeat(24),
+            max_new: 3,
+            priority: (i % 3) as u8,
+        })
+        .collect();
+    let out = serve_policy(&mut e, &reqs, ArrivalMode::Closed, &PriorityLanes,
+                           AdmissionControl::unbounded())
+        .unwrap();
+    assert_eq!(out.completions.len(), n);
+    // lanes 2 and 1 (13 requests) all fit wave 1; lane 0 fills the
+    // remaining 3 slots in arrival order (ids 0, 3, 6), deferring ids
+    // 9, 12, 15, 18.
+    let wave1 = first_wave_ids(&out.completions);
+    for c in &out.completions {
+        assert_eq!(c.priority, (c.id % 3) as u8, "priority must thread into Completion");
+    }
+    for id in [9usize, 12, 15, 18] {
+        assert!(
+            !wave1.contains(&id),
+            "late lane-0 request {id} must be deferred (wave1: {wave1:?})"
+        );
+    }
+    for id in [0usize, 3, 6] {
+        assert!(
+            wave1.contains(&id),
+            "early lane-0 request {id} rides wave 1 FCFS-within-lane (wave1: {wave1:?})"
+        );
+    }
+}
+
+#[test]
+fn bounded_queue_rejects_exactly_the_overflow() {
+    let mut e = engine();
+    let k = 6usize;
+    let reqs = workload(24, 4, 5);
+    let out = serve_policy(&mut e, &reqs, ArrivalMode::Closed, &Fcfs,
+                           AdmissionControl::bounded(k))
+        .unwrap();
+    // Closed loop: all 24 arrive in one burst before any admission, so
+    // exactly k enter the queue and the overflow is rejected.
+    assert_eq!(out.completions.len(), k, "exactly max_queue_depth complete");
+    assert_eq!(out.rejections.len(), 24 - k, "exactly the overflow is rejected");
+    assert_eq!(out.stats.rejected_queue_full, 24 - k);
+    for c in &out.completions {
+        assert!(c.id < k, "the k earliest arrivals complete (got id {})", c.id);
+    }
+    for r in &out.rejections {
+        assert!(r.id >= k, "only overflow arrivals reject (got id {})", r.id);
+        assert!(r.reason.contains("queue full"), "reason: {}", r.reason);
+    }
+    // exhaustive coverage + no slot leak + goodput bookkeeping
+    let mut seen = vec![0usize; reqs.len()];
+    for c in &out.completions {
+        seen[c.id] += 1;
+    }
+    for r in &out.rejections {
+        seen[r.id] += 1;
+    }
+    assert!(seen.iter().all(|&s| s == 1), "completions ∪ rejections exhaustive: {seen:?}");
+    assert_eq!(e.kv.n_active, 0, "no KV slot leaks");
+    let expect_gp = k as f64 / out.stats.wall_secs;
+    assert!((out.stats.goodput_rps - expect_gp).abs() < 1e-9, "goodput = completed / wall");
+}
+
+#[test]
+fn open_loop_bounded_queue_stays_exhaustive_and_consistent() {
+    let mut e = engine();
+    // Arrivals far faster than service so the tiny queue bound is
+    // exercised; exact rejection counts are timing-dependent, but the
+    // conservation laws are not.
+    let reqs = workload(20, 4, 9);
+    let out = serve_policy(
+        &mut e,
+        &reqs,
+        ArrivalMode::Open { rate: 500.0, seed: 7 },
+        &ShortestPromptFirst,
+        AdmissionControl::bounded(2),
+    )
+    .unwrap();
+    assert_eq!(out.completions.len() + out.rejections.len(), reqs.len());
+    assert_eq!(out.stats.requests + out.stats.rejected, reqs.len());
+    let queue_full =
+        out.rejections.iter().filter(|r| r.reason.contains("queue full")).count();
+    assert_eq!(out.stats.rejected_queue_full, queue_full);
+    assert_eq!(e.kv.n_active, 0);
+}

@@ -98,7 +98,7 @@ fn oversized_prompt_is_rejected_without_losing_completions() {
     // good ones: exactly one rejection, zero lost completions, no leak.
     let good = workload(10, 5, 3);
     let mut reqs = good.clone();
-    reqs.insert(4, Request { id: 10, prompt: "!".repeat(200), max_new: 5 });
+    reqs.insert(4, Request { id: 10, prompt: "!".repeat(200), max_new: 5, priority: 0 });
     let out = serve_with(&mut e, &reqs, ArrivalMode::Closed).unwrap();
     assert_eq!(out.rejections.len(), 1, "exactly one rejection");
     assert_eq!(out.rejections[0].id, 10);
