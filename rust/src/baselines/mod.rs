@@ -31,7 +31,7 @@ pub fn calibrate_ees_beta(engine: &mut Engine, n_tokens: usize) -> Result<f32> {
         if chunk.len() < 2 {
             break;
         }
-        engine.kv.n_active = 0;
+        engine.kv.reset();
         let slot = engine.kv.alloc();
         engine.prefill(slot, chunk)?;
     }
@@ -55,7 +55,7 @@ pub fn calibrate_eep_kept(engine: &mut Engine, n_tokens: usize, r: usize) -> Res
         if chunk.len() < 2 {
             break;
         }
-        engine.kv.n_active = 0;
+        engine.kv.reset();
         let slot = engine.kv.alloc();
         engine.prefill(slot, chunk)?;
     }

@@ -123,7 +123,7 @@ pub fn run_calibration(engine: &mut Engine, n_tokens: usize) -> Result<ProbeTabl
         if chunk.len() < 2 {
             break;
         }
-        engine.kv.n_active = 0;
+        engine.kv.reset();
         let slot = engine.kv.alloc();
         engine.prefill(slot, chunk)?;
     }

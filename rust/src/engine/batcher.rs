@@ -13,12 +13,12 @@
 use anyhow::Result;
 
 pub use super::policy::{
-    AdmissionControl, Fcfs, PolicyKind, PriorityLanes, SchedConfig, SchedulingPolicy,
-    ShortestPromptFirst,
+    AdmissionControl, AgingConfig, Fcfs, PolicyKind, PriorityLanes, SchedConfig,
+    SchedulingPolicy, ShortestPromptFirst,
 };
 pub use super::scheduler::{
-    poisson_arrivals, serve_policy, serve_with, ArrivalMode, Completion, Phase, Rejection,
-    Request, ServeOutcome, ServeStats,
+    poisson_arrivals, serve_opts, serve_policy, serve_with, ArrivalMode, Completion, Phase,
+    Rejection, Request, SchedOptions, ServeOutcome, ServeStats,
 };
 use super::Engine;
 

@@ -1,187 +1,359 @@
-//! KV-cache manager: fixed-slot paged storage for continuous batching.
+//! Paged KV-cache manager: page-granularity storage for continuous
+//! batching with preemption (vLLM-style paging).
 //!
-//! Layout: one tensor per layer, `[B_MAX, H, T, dh]`, plus a free-slot
-//! list. Decode batches always occupy a contiguous slot prefix
-//! (`compact` moves the tail slot into a hole when a request retires),
-//! so the batch cache fed to `attn_step_b{B}` is simply the first
-//! `B` rows — no per-step gather.
+//! Layout: one page pool per layer, `[N_PAGES, H, P, dh]` — a page
+//! holds `P` consecutive logical positions for every head of one
+//! sequence, head-major within the page so each head's positions form
+//! one contiguous run. A sequence owns an ordered *page table*
+//! (`tables[seq]`) shared across layers: logical position `t` of layer
+//! `li` lives in physical page `tables[seq][t / P]` of layer `li`'s
+//! pool, at row `t % P`. The engine lends per-page slices to the
+//! attention kernels (`Arg::F32Pages`), so the decode hot path still
+//! never clones the cache; a gather happens only when a backend needs
+//! contiguous memory (PJRT upload).
 //!
-//! Writers come in three flavors, all appending behind `pos[slot]`'s
-//! invariant (tokens cached == next write position):
+//! Allocation is a free-list of page indices: `alloc` claims a sequence
+//! id (lowest free, deterministic), `ensure` grants pages all-or-nothing
+//! as the sequence grows, and `free` returns every page immediately —
+//! which is what makes preemption cheap: evicting a victim is one
+//! `free(seq)`, and re-admission recomputes from the prompt. There is
+//! no slot compaction anymore; sequence ids are stable for a request's
+//! whole residency.
 //!
-//! * [`KvCache::write_prefill`] — bulk chunk write at an explicit
+//! Writers all append behind `pos[seq]`'s invariant (tokens cached ==
+//! next write position):
+//!
+//! * [`PagedKvCache::write_prefill`] — bulk chunk write at an explicit
 //!   `base`; chunked prefill calls it once per chunk so a long prompt's
 //!   positions land exactly where a single-pass prefill would put them.
-//! * [`KvCache::append`] — one decode-step (k, v) head-vector set.
-//! * [`KvCache::reset`] / [`KvCache::alloc`] — slot recycling between
-//!   runs; `alloc` re-zeroes contents so a stale sequence can never
-//!   widen a later request's attention window.
+//! * [`PagedKvCache::append`] — one decode-step (k, v) head-vector set.
+//! * [`PagedKvCache::reset`] / [`PagedKvCache::alloc`] — recycling
+//!   between runs; `ensure` re-zeroes pages on grant so a stale
+//!   sequence can never widen a later request's attention window.
+//!
+//! With `page_size >= max_seq` every sequence occupies exactly one page
+//! whose interior layout `[H, max_seq, dh]` is byte-identical to the
+//! old slot-granularity cache — the basis of the paged-vs-slot pin in
+//! `rust/tests/scheduler.rs`.
 
 use crate::model::Tensor;
 
-pub struct KvCache {
+/// Default positions per page. Small enough that a retiring request
+/// frees capacity in fine grains, large enough that per-page slice
+/// bookkeeping stays cheap.
+pub const DEFAULT_PAGE_SIZE: usize = 16;
+
+/// Backwards-compatible name: the paged cache replaced the slot cache
+/// in place.
+pub type KvCache = PagedKvCache;
+
+pub struct PagedKvCache {
     pub n_layers: usize,
     pub n_heads: usize,
     pub max_seq: usize,
     pub d_head: usize,
-    pub max_slots: usize,
-    /// Per-layer K / V tensors, shape [B_MAX, H, T, dh].
+    /// Maximum concurrently live sequences (decode batch width bound).
+    pub max_seqs: usize,
+    /// Positions per page.
+    pub page_size: usize,
+    /// Total physical pages per layer pool.
+    pub n_pages: usize,
+    /// Per-layer K / V page pools, shape [N_PAGES, H, P, dh].
     pub k: Vec<Tensor>,
     pub v: Vec<Tensor>,
-    /// Tokens cached per slot (== next write position).
+    /// Tokens cached per sequence (== next write position).
     pub pos: Vec<usize>,
-    /// Slots currently in use (always a prefix 0..n_active).
+    /// Live sequences (ids are stable — no compaction).
     pub n_active: usize,
+    /// Free physical page indices (stack; popped in ascending order
+    /// from a fresh reset, so allocation is deterministic).
+    free_list: Vec<usize>,
+    /// Per-sequence page tables, shared across layers: logical position
+    /// `t` lives in physical page `tables[seq][t / page_size]`.
+    tables: Vec<Vec<usize>>,
+    live: Vec<bool>,
 }
 
-impl KvCache {
+impl PagedKvCache {
     pub fn new(n_layers: usize, n_heads: usize, max_seq: usize, d_head: usize,
-               max_slots: usize) -> Self {
-        let shape = vec![max_slots, n_heads, max_seq, d_head];
-        KvCache {
+               max_seqs: usize, page_size: usize, n_pages: usize) -> Self {
+        assert!(page_size > 0, "page_size must be positive");
+        assert!(n_pages > 0, "page budget must be positive");
+        let shape = vec![n_pages, n_heads, page_size, d_head];
+        PagedKvCache {
             n_layers,
             n_heads,
             max_seq,
             d_head,
-            max_slots,
+            max_seqs,
+            page_size,
+            n_pages,
             k: (0..n_layers).map(|_| Tensor::zeros(shape.clone())).collect(),
             v: (0..n_layers).map(|_| Tensor::zeros(shape.clone())).collect(),
-            pos: vec![0; max_slots],
+            pos: vec![0; max_seqs],
             n_active: 0,
+            free_list: (0..n_pages).rev().collect(),
+            tables: vec![Vec::new(); max_seqs],
+            live: vec![false; max_seqs],
         }
     }
 
-    /// Claim the next slot; returns its index. Panics if full (the
-    /// batcher checks `has_free` first).
-    pub fn alloc(&mut self) -> usize {
-        assert!(self.n_active < self.max_slots, "KV cache full");
-        let slot = self.n_active;
-        self.n_active += 1;
-        self.pos[slot] = 0;
-        self.zero_slot(slot);
-        slot
+    /// Floats per page per layer (`H · P · dh`) — the stride of the
+    /// zero-copy per-page views the engine feeds to attention kernels.
+    pub fn page_stride(&self) -> usize {
+        self.n_heads * self.page_size * self.d_head
     }
 
+    /// Pages needed to hold `positions` logical positions.
+    pub fn pages_for(&self, positions: usize) -> usize {
+        positions.div_ceil(self.page_size)
+    }
+
+    /// Physical pages currently on the free list.
+    pub fn free_page_count(&self) -> usize {
+        self.free_list.len()
+    }
+
+    /// Physical pages currently mapped by live sequences.
+    pub fn pages_in_use(&self) -> usize {
+        self.n_pages - self.free_list.len()
+    }
+
+    /// Fraction of the page pool currently mapped.
+    pub fn utilization(&self) -> f64 {
+        self.pages_in_use() as f64 / self.n_pages as f64
+    }
+
+    /// Whether a sequence id is free (page availability is checked
+    /// separately — admission is page-budget-aware).
     pub fn has_free(&self) -> bool {
-        self.n_active < self.max_slots
+        self.n_active < self.max_seqs
     }
 
-    /// Drop every active slot (start of a fresh serving run). Positions
-    /// are cleared too, so a stale sequence length can never widen a
-    /// later run's attention window (`alloc` re-zeroes slot contents).
-    pub fn reset(&mut self) {
-        self.n_active = 0;
-        self.pos.fill(0);
+    /// Claim the lowest free sequence id. The sequence starts with an
+    /// empty page table; call [`Self::ensure`] (or let the engine's
+    /// prefill/decode paths do it) before writing. Panics if all ids
+    /// are taken (the scheduler checks `has_free` first).
+    pub fn alloc(&mut self) -> usize {
+        let seq = (0..self.max_seqs)
+            .find(|&s| !self.live[s])
+            .expect("KV cache full");
+        self.live[seq] = true;
+        self.pos[seq] = 0;
+        debug_assert!(self.tables[seq].is_empty());
+        self.n_active += 1;
+        seq
     }
 
-    /// Floats per slot per layer (`H · T · dh`) — the row stride of the
-    /// zero-copy per-slot views the engine feeds to `attn_step_*`.
-    pub fn slot_stride(&self) -> usize {
-        self.n_heads * self.max_seq * self.d_head
-    }
-
-    fn zero_slot(&mut self, slot: usize) {
-        let stride = self.slot_stride();
-        for li in 0..self.n_layers {
-            self.k[li].data[slot * stride..(slot + 1) * stride].fill(0.0);
-            self.v[li].data[slot * stride..(slot + 1) * stride].fill(0.0);
+    /// Grow `seq`'s page table to cover positions `0..upto`. Grants are
+    /// all-or-nothing: returns `false` (state unchanged) when the free
+    /// list cannot supply every needed page. Newly granted pages are
+    /// zeroed in every layer so recycled pages never leak stale K/V.
+    pub fn ensure(&mut self, seq: usize, upto: usize) -> bool {
+        debug_assert!(self.live[seq], "ensure on a dead sequence {seq}");
+        debug_assert!(upto <= self.max_seq, "sequence overflow: {upto} > {}", self.max_seq);
+        let need = self.pages_for(upto);
+        let have = self.tables[seq].len();
+        if need <= have {
+            return true;
         }
+        if need - have > self.free_list.len() {
+            return false;
+        }
+        let stride = self.page_stride();
+        for _ in have..need {
+            let page = self.free_list.pop().expect("free list underflow");
+            for li in 0..self.n_layers {
+                self.k[li].data[page * stride..(page + 1) * stride].fill(0.0);
+                self.v[li].data[page * stride..(page + 1) * stride].fill(0.0);
+            }
+            self.tables[seq].push(page);
+        }
+        true
     }
 
-    /// Retire `slot`, moving the last active slot into the hole so active
-    /// slots stay a contiguous prefix. Returns Some(moved_from) when a
-    /// slot was relocated (the batcher must remap its request).
-    pub fn free(&mut self, slot: usize) -> Option<usize> {
-        assert!(slot < self.n_active);
-        let last = self.n_active - 1;
+    /// Retire `seq`: every page returns to the free list immediately
+    /// (pushed in reverse mapping order, so a fresh allocation after a
+    /// lone free reuses the same pages in the same order). Sequence ids
+    /// are stable — nothing moves.
+    pub fn free(&mut self, seq: usize) {
+        assert!(self.live[seq], "double free of sequence {seq}");
+        while let Some(page) = self.tables[seq].pop() {
+            self.free_list.push(page);
+        }
+        self.pos[seq] = 0;
+        self.live[seq] = false;
         self.n_active -= 1;
-        if slot == last {
-            return None;
-        }
-        let stride = self.slot_stride();
-        for li in 0..self.n_layers {
-            let (a, b) = (slot * stride, last * stride);
-            // copy within one buffer: split_at_mut around the later range
-            let data = &mut self.k[li].data;
-            data.copy_within(b..b + stride, a);
-            let data = &mut self.v[li].data;
-            data.copy_within(b..b + stride, a);
-        }
-        self.pos[slot] = self.pos[last];
-        self.pos[last] = 0;
-        Some(last)
     }
 
-    /// Write one new (k, v) head-vector set for `slot` at its current
+    /// Drop every live sequence and rebuild the free list (start of a
+    /// fresh serving run). Deterministic: allocation order after a
+    /// reset is identical run-to-run.
+    pub fn reset(&mut self) {
+        for t in &mut self.tables {
+            t.clear();
+        }
+        self.free_list = (0..self.n_pages).rev().collect();
+        self.pos.fill(0);
+        self.live.fill(false);
+        self.n_active = 0;
+    }
+
+    /// `seq`'s page table: physical page ids in logical order. The
+    /// engine maps these to per-page pool slices for the zero-copy
+    /// attention views.
+    pub fn seq_pages(&self, seq: usize) -> &[usize] {
+        &self.tables[seq]
+    }
+
+    /// Positions `seq`'s page table can hold without another `ensure`.
+    pub fn seq_capacity(&self, seq: usize) -> usize {
+        self.tables[seq].len() * self.page_size
+    }
+
+    /// Write one new (k, v) head-vector set for `seq` at its current
     /// position and advance it. `new_k`/`new_v`: `[H, dh]` row-major.
-    pub fn append(&mut self, layer: usize, slot: usize, new_k: &[f32], new_v: &[f32]) {
-        let t = self.pos[slot];
-        assert!(t < self.max_seq, "sequence overflow in slot {slot}");
-        let (h, dh, tt) = (self.n_heads, self.d_head, self.max_seq);
+    /// The caller must have `ensure`d the page (the engine does this
+    /// once per decode step, before any layer writes).
+    pub fn append(&mut self, layer: usize, seq: usize, new_k: &[f32], new_v: &[f32]) {
+        let t = self.pos[seq];
+        assert!(t < self.max_seq, "sequence overflow in seq {seq}");
+        let (h, dh, p) = (self.n_heads, self.d_head, self.page_size);
+        let page = self.tables[seq][t / p];
+        let within = t % p;
         for hi in 0..h {
-            let dst = ((slot * h + hi) * tt + t) * dh;
+            let dst = ((page * h + hi) * p + within) * dh;
             let src = hi * dh;
             self.k[layer].data[dst..dst + dh].copy_from_slice(&new_k[src..src + dh]);
             self.v[layer].data[dst..dst + dh].copy_from_slice(&new_v[src..src + dh]);
         }
         if layer == self.n_layers - 1 {
-            self.pos[slot] = t + 1;
+            self.pos[seq] = t + 1;
         }
     }
 
-    /// Bulk-write prefill K/V for `slot` at positions
+    /// Bulk-write prefill K/V for `seq` at positions
     /// `base..base + s_len`: `ks`/`vs` are `[S, H, dh]` chunk-local.
     /// `base = 0` is a whole-prompt (or first-chunk) prefill; `base > 0`
     /// is a chunked-prefill continuation appending behind the positions
-    /// already cached. Advances `pos[slot]` to `base + s_len` on the
-    /// last layer, so after the final chunk the slot's decode position
-    /// is exactly the prompt length.
-    pub fn write_prefill(&mut self, layer: usize, slot: usize, base: usize,
+    /// already cached. Advances `pos[seq]` to `base + s_len` on the
+    /// last layer, so after the final chunk the sequence's decode
+    /// position is exactly the prompt length. The caller must have
+    /// `ensure`d pages through `base + s_len`.
+    pub fn write_prefill(&mut self, layer: usize, seq: usize, base: usize,
                          s_len: usize, ks: &[f32], vs: &[f32]) {
         debug_assert!(base + s_len <= self.max_seq, "prefill overflows the KV window");
-        let (h, dh, tt) = (self.n_heads, self.d_head, self.max_seq);
+        debug_assert!(base + s_len <= self.seq_capacity(seq), "prefill without ensure");
+        let (h, dh, p) = (self.n_heads, self.d_head, self.page_size);
         for t in 0..s_len {
+            let page = self.tables[seq][(base + t) / p];
+            let within = (base + t) % p;
             for hi in 0..h {
-                let dst = ((slot * h + hi) * tt + base + t) * dh;
+                let dst = ((page * h + hi) * p + within) * dh;
                 let src = (t * h + hi) * dh;
                 self.k[layer].data[dst..dst + dh].copy_from_slice(&ks[src..src + dh]);
                 self.v[layer].data[dst..dst + dh].copy_from_slice(&vs[src..src + dh]);
             }
         }
         if layer == self.n_layers - 1 {
-            self.pos[slot] = base + s_len;
+            self.pos[seq] = base + s_len;
         }
     }
 
+    /// Materialize `seq`'s layer-`layer` K and V in the old contiguous
+    /// slot layout `[H, max_seq, dh]` (zeros past the mapped pages).
+    /// Test/diagnostic helper — the hot path never gathers on CpuRef.
+    pub fn gather_seq(&self, layer: usize, seq: usize) -> (Vec<f32>, Vec<f32>) {
+        let (h, dh, p, tt) = (self.n_heads, self.d_head, self.page_size, self.max_seq);
+        let mut gk = vec![0.0f32; h * tt * dh];
+        let mut gv = vec![0.0f32; h * tt * dh];
+        for (pi, &page) in self.tables[seq].iter().enumerate() {
+            let t0 = pi * p;
+            let run = p.min(tt.saturating_sub(t0));
+            for hi in 0..h {
+                for r in 0..run {
+                    let src = ((page * h + hi) * p + r) * dh;
+                    let dst = (hi * tt + t0 + r) * dh;
+                    gk[dst..dst + dh].copy_from_slice(&self.k[layer].data[src..src + dh]);
+                    gv[dst..dst + dh].copy_from_slice(&self.v[layer].data[src..src + dh]);
+                }
+            }
+        }
+        (gk, gv)
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn cache() -> KvCache {
-        KvCache::new(2, 2, 8, 4, 3)
+    /// 2 layers, 2 heads, window 8, dh 4, up to 3 seqs, page 4, 6 pages.
+    fn cache() -> PagedKvCache {
+        PagedKvCache::new(2, 2, 8, 4, 3, 4, 6)
+    }
+
+    fn conserved(c: &PagedKvCache) -> bool {
+        let mapped: usize = (0..c.max_seqs).map(|s| c.seq_pages(s).len()).sum();
+        c.free_page_count() + mapped == c.n_pages
     }
 
     #[test]
-    fn alloc_free_compacts() {
+    fn alloc_returns_lowest_free_id_and_free_is_stable() {
+        let mut c = cache();
+        assert_eq!((c.alloc(), c.alloc(), c.alloc()), (0, 1, 2));
+        assert!(!c.has_free());
+        c.free(1);
+        assert_eq!(c.n_active, 2);
+        // ids are stable: seq 2 stays 2, the freed id is reused
+        assert_eq!(c.alloc(), 1);
+        assert!(conserved(&c));
+    }
+
+    #[test]
+    #[should_panic(expected = "double free")]
+    fn double_free_panics() {
+        let mut c = cache();
+        let s = c.alloc();
+        c.free(s);
+        c.free(s);
+    }
+
+    #[test]
+    fn ensure_grants_all_or_nothing_and_frees_return_pages() {
         let mut c = cache();
         let a = c.alloc();
         let b = c.alloc();
+        assert!(c.ensure(a, 8)); // 2 pages
+        assert!(c.ensure(b, 8)); // 2 pages
+        assert_eq!(c.free_page_count(), 2);
         let d = c.alloc();
-        assert_eq!((a, b, d), (0, 1, 2));
-        assert!(!c.has_free());
-        // free middle: slot 2 moves into 1
-        assert_eq!(c.free(1), Some(2));
-        assert_eq!(c.n_active, 2);
-        // free last: no move
-        assert_eq!(c.free(1), None);
+        assert!(c.ensure(d, 8));
+        assert_eq!(c.free_page_count(), 0);
+        assert!(conserved(&c));
+        c.free(b);
+        assert_eq!(c.free_page_count(), 2);
+        assert!(conserved(&c));
+    }
+
+    #[test]
+    fn ensure_failure_leaves_state_unchanged() {
+        let mut c = PagedKvCache::new(1, 2, 8, 4, 2, 4, 2);
+        let a = c.alloc();
+        let b = c.alloc();
+        assert!(c.ensure(a, 8)); // both pages
+        assert!(!c.ensure(b, 4), "no pages left");
+        assert_eq!(c.seq_pages(b).len(), 0);
+        assert_eq!(c.free_page_count(), 0);
+        assert!(c.ensure(b, 0), "zero-page ensure is trivially satisfied");
+        c.free(a);
+        assert!(c.ensure(b, 4), "freed pages become grantable");
     }
 
     #[test]
     fn append_advances_on_last_layer_only() {
         let mut c = cache();
         let s = c.alloc();
+        assert!(c.ensure(s, 1));
         let k = vec![1.0; 8];
         let v = vec![2.0; 8];
         c.append(0, s, &k, &v);
@@ -191,80 +363,116 @@ mod tests {
     }
 
     #[test]
-    fn append_lands_in_layout() {
+    fn append_lands_in_page_layout() {
         let mut c = cache();
         let s = c.alloc();
+        assert!(c.ensure(s, 1));
+        let page = c.seq_pages(s)[0];
         let k: Vec<f32> = (0..8).map(|x| x as f32).collect();
         c.append(0, s, &k, &k);
         c.append(1, s, &k, &k);
-        // head 1, t=0, dh=4 → offset ((0*2+1)*8+0)*4 = 32
-        assert_eq!(c.k[0].data[32..36], [4.0, 5.0, 6.0, 7.0]);
+        // head 1, position 0 of the page → ((page*2+1)*4+0)*4
+        let off = ((page * 2 + 1) * 4) * 4;
+        assert_eq!(c.k[0].data[off..off + 4], [4.0, 5.0, 6.0, 7.0]);
     }
 
     #[test]
-    fn prefill_sets_pos() {
+    fn decode_appends_cross_page_boundaries() {
         let mut c = cache();
         let s = c.alloc();
-        let ks = vec![0.5; 3 * 2 * 4];
-        for li in 0..2 {
-            c.write_prefill(li, s, 0, 3, &ks, &ks);
+        assert!(c.ensure(s, 8)); // window of 8 = two pages of 4
+        for t in 0..8 {
+            let k: Vec<f32> = (0..8).map(|i| (t * 10 + i) as f32).collect();
+            c.append(0, s, &k, &k);
+            c.append(1, s, &k, &k);
         }
-        assert_eq!(c.pos[s], 3);
-        // slot 0's K landed at the head of the layer-0 cache, which is
-        // exactly the zero-copy slice the engine lends to attn_step
-        assert_eq!(c.k[0].data[0], 0.5);
-        assert_eq!(c.k[0].shape, vec![3, 2, 8, 4]);
+        assert_eq!(c.pos[s], 8);
+        let (gk, _) = c.gather_seq(0, s);
+        // head 0, position 5 (page 1, row 1) must hold row 5's head-0 lane
+        assert_eq!(gk[5 * 4..6 * 4], [50.0, 51.0, 52.0, 53.0]);
+        // head 1, position 5
+        assert_eq!(gk[(8 + 5) * 4..(8 + 6) * 4], [54.0, 55.0, 56.0, 57.0]);
     }
 
     #[test]
     fn chunked_prefill_continuation_appends_behind_base() {
-        // Two chunks into one slot must equal one whole-prompt write:
-        // positions line up and pos[slot] ends at the prompt length.
+        // Two chunks into one sequence must equal one whole-prompt
+        // write: positions line up across a page boundary and pos ends
+        // at the prompt length.
         let mut whole = cache();
         let mut chunked = cache();
         let sw = whole.alloc();
         let sc = chunked.alloc();
+        assert!(whole.ensure(sw, 5));
         let (h, dh) = (2usize, 4usize);
         let kv_row = |t: usize| -> Vec<f32> {
             (0..h * dh).map(|i| (t * 100 + i) as f32).collect()
         };
-        // 5-token prompt, rows [S, H, dh]
+        // 5-token prompt (crosses the page-4 boundary), rows [S, H, dh]
         let all: Vec<f32> = (0..5).flat_map(kv_row).collect();
         let head: Vec<f32> = (0..3).flat_map(kv_row).collect();
         let tail: Vec<f32> = (3..5).flat_map(kv_row).collect();
+        assert!(chunked.ensure(sc, 3));
         for li in 0..2 {
             whole.write_prefill(li, sw, 0, 5, &all, &all);
             chunked.write_prefill(li, sc, 0, 3, &head, &head);
+        }
+        assert!(chunked.ensure(sc, 5));
+        for li in 0..2 {
             chunked.write_prefill(li, sc, 3, 2, &tail, &tail);
         }
         assert_eq!(whole.pos[sw], 5);
         assert_eq!(chunked.pos[sc], 5);
         for li in 0..2 {
-            assert_eq!(whole.k[li].data, chunked.k[li].data, "layer {li} K diverged");
-            assert_eq!(whole.v[li].data, chunked.v[li].data, "layer {li} V diverged");
+            assert_eq!(whole.gather_seq(li, sw), chunked.gather_seq(li, sc),
+                       "layer {li} K/V diverged");
         }
     }
 
     #[test]
-    fn reset_clears_active_and_positions() {
+    fn recycled_pages_are_zeroed_on_grant() {
         let mut c = cache();
-        c.alloc();
-        c.alloc();
-        c.pos[1] = 5;
-        c.reset();
-        assert_eq!(c.n_active, 0);
-        assert!(c.pos.iter().all(|&p| p == 0));
-        assert!(c.has_free());
-        assert_eq!(c.alloc(), 0);
+        let s = c.alloc();
+        assert!(c.ensure(s, 4));
+        let k = vec![9.0; 8];
+        c.append(0, s, &k, &k);
+        c.append(1, s, &k, &k);
+        c.free(s);
+        let s2 = c.alloc();
+        assert!(c.ensure(s2, 4));
+        let (gk, gv) = c.gather_seq(0, s2);
+        assert!(gk.iter().chain(&gv).all(|&x| x == 0.0), "stale K/V leaked");
     }
 
     #[test]
-    fn free_moves_pos_too() {
+    fn reset_restores_full_free_list() {
         let mut c = cache();
+        let a = c.alloc();
         c.alloc();
-        c.alloc();
-        c.pos[1] = 5;
-        c.free(0);
-        assert_eq!(c.pos[0], 5);
+        assert!(c.ensure(a, 5));
+        c.reset();
+        assert_eq!(c.n_active, 0);
+        assert_eq!(c.free_page_count(), c.n_pages);
+        assert!(c.pos.iter().all(|&p| p == 0));
+        assert!(c.has_free());
+        assert_eq!(c.alloc(), 0);
+        assert!(conserved(&c));
+    }
+
+    #[test]
+    fn single_page_covers_whole_window() {
+        // page_size >= max_seq: one page per sequence, interior layout
+        // [H, max_seq, dh] — the slot-compatible configuration.
+        let mut c = PagedKvCache::new(1, 2, 8, 4, 2, 8, 2);
+        let s = c.alloc();
+        assert!(c.ensure(s, 8));
+        assert_eq!(c.seq_pages(s).len(), 1);
+        assert_eq!(c.pages_for(8), 1);
+        let k: Vec<f32> = (0..8).map(|x| x as f32).collect();
+        c.append(0, s, &k, &k);
+        // head 1, t=0 inside one [H=2, P=8, dh=4] page → ((p*2+1)*8)*4
+        let page = c.seq_pages(s)[0];
+        let off = (page * 2 + 1) * 8 * 4;
+        assert_eq!(c.k[0].data[off..off + 4], [4.0, 5.0, 6.0, 7.0]);
     }
 }

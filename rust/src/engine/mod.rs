@@ -80,6 +80,15 @@ pub struct EngineOptions {
     /// equivalence suite compares a default-bucket engine against one
     /// whose largest bucket covers the whole prompt in a single pass.
     pub prefill_buckets: Option<Vec<usize>>,
+    /// Positions per KV page ([`kv::DEFAULT_PAGE_SIZE`] when `None`).
+    /// With `page_size >= max_seq` every sequence occupies one page and
+    /// the cache degenerates to the old slot-granularity layout.
+    pub page_size: Option<usize>,
+    /// Total physical KV pages per layer. Defaults to
+    /// `MAX_SLOTS · ceil(max_seq / page_size)` — exactly the old
+    /// slot-world capacity. Smaller budgets make admission
+    /// page-bound (and preemption reachable) before it is slot-bound.
+    pub kv_pages: Option<usize>,
 }
 
 /// Aggregated engine metrics (fig6/fig10/fig11/fig12 inputs).
@@ -173,9 +182,6 @@ pub struct Engine {
     lnf_buf: BufId,
     emb_buf: BufId,
     pub kv: kv::KvCache,
-    /// One all-zero KV slot (`H · T · dh`), lent to padding rows of the
-    /// decode batch so the zero-copy slice view never clones the cache.
-    zero_slot: Vec<f32>,
     /// Prefill bucket ladder (strictly increasing; last = the chunked-
     /// prefill chunk size). [`PREFILL_BUCKETS`] unless overridden via
     /// [`EngineOptions::prefill_buckets`].
@@ -290,9 +296,27 @@ impl Engine {
         }
         let lnf_buf = up(weights.get("lnf")?)?;
         let emb_buf = up(weights.get("emb")?)?;
-        let kv = kv::KvCache::new(cfg.n_layers, cfg.n_heads, cfg.max_seq,
-                                  cfg.d_head, MAX_SLOTS);
-        let zero_slot = vec![0.0f32; kv.slot_stride()];
+        let page_size = opts.page_size.unwrap_or(kv::DEFAULT_PAGE_SIZE);
+        if page_size == 0 {
+            bail!("page_size must be positive");
+        }
+        // Default physical budget reproduces the slot world exactly:
+        // every admitted sequence can always grow to max_seq.
+        let n_pages = opts
+            .kv_pages
+            .unwrap_or(MAX_SLOTS * cfg.max_seq.div_ceil(page_size));
+        if n_pages == 0 {
+            bail!("kv_pages must be positive");
+        }
+        let kv = kv::KvCache::new(
+            cfg.n_layers,
+            cfg.n_heads,
+            cfg.max_seq,
+            cfg.d_head,
+            MAX_SLOTS,
+            page_size,
+            n_pages,
+        );
         let prefill_buckets = match &opts.prefill_buckets {
             Some(b) => {
                 if b.is_empty() || b.windows(2).any(|w| w[0] >= w[1]) {
@@ -332,7 +356,6 @@ impl Engine {
             lnf_buf,
             emb_buf,
             kv,
-            zero_slot,
             prefill_buckets,
             policy,
             router_mode: RouterMode::Standard,
@@ -663,11 +686,42 @@ impl Engine {
     /// Longest admissible prompt for a request allowed up to `max_new`
     /// generated tokens. Prefill writes `prompt.len()` KV positions and
     /// every decode step appends one more, so admission requires
-    /// `prompt.len() + max_new ≤ max_seq`. Since chunked prefill this —
-    /// true KV capacity — is the only length limit; the largest prefill
-    /// bucket is just the chunk size.
+    /// `prompt.len() + max_new ≤ max_seq` — and, since paged KV, that a
+    /// single sequence can even be granted that many positions out of
+    /// the physical page pool (`n_pages · page_size`). The largest
+    /// prefill bucket is just the chunk size, not a length limit.
     pub fn prompt_capacity(&self, max_new: usize) -> usize {
-        self.cfg.max_seq.saturating_sub(max_new)
+        self.cfg
+            .max_seq
+            .min(self.kv.n_pages.saturating_mul(self.kv.page_size))
+            .saturating_sub(max_new)
+    }
+
+    /// The chunked-prefill chunk size (largest prefill bucket). Prompts
+    /// longer than this need one `attn_prefill_chunk_s{S}` pass per
+    /// extra chunk.
+    pub fn max_prefill_chunk(&self) -> usize {
+        *self.prefill_buckets.last().unwrap()
+    }
+
+    /// Fail fast if serving `prompt_len` would need a chunked-prefill
+    /// continuation artifact the backend cannot execute. CpuRef
+    /// synthesizes every artifact so this never fires there; on AOT
+    /// backends (PJRT) a missing `attn_prefill_chunk_s{S}` otherwise
+    /// surfaces mid-run, on the first long prompt.
+    pub fn check_chunked_prefill_support(&self, prompt_len: usize) -> Result<()> {
+        let max_chunk = self.max_prefill_chunk();
+        let mut base = max_chunk;
+        while base < prompt_len {
+            let take = (prompt_len - base).min(max_chunk);
+            let sb = round_up_bucket(take, &self.prefill_buckets);
+            let name = format!("attn_prefill_chunk_s{sb}");
+            if !self.rt.supports_artifact(&name) {
+                bail!("chunked prefill requires CpuRef (missing {name} artifact)");
+            }
+            base += take;
+        }
+        Ok(())
     }
 
     /// Prefill one request into `slot`; returns the first generated token.
@@ -690,7 +744,41 @@ impl Engine {
     /// [`Engine::prefill`] variant that also returns the logits row of
     /// the last prompt position (the distribution the first token is
     /// argmaxed from) — the chunked-prefill equivalence tests pin on it.
-    pub fn prefill_logits(&mut self, slot: usize, prompt: &[u8]) -> Result<(u8, Vec<f32>)> {
+    pub fn prefill_logits(&mut self, seq: usize, prompt: &[u8]) -> Result<(u8, Vec<f32>)> {
+        let mut base = 0usize;
+        loop {
+            let (next, fin) = self.prefill_chunk_inner(seq, prompt, base)?;
+            if let Some(out) = fin {
+                return Ok(out);
+            }
+            base = next;
+        }
+    }
+
+    /// Run exactly **one** prefill chunk of `prompt` into sequence
+    /// `seq`, starting at cached position `base` (0 for the first
+    /// chunk; thereafter the value returned by the previous call).
+    /// Returns `(next_base, Some(first_token))` when the prompt is
+    /// fully prefilled, `(next_base, None)` otherwise. The scheduler's
+    /// interleaved iteration loop drives this so one prefill chunk can
+    /// ride alongside each decode batch instead of monopolizing the
+    /// engine for the whole prompt.
+    pub fn prefill_chunk(
+        &mut self,
+        seq: usize,
+        prompt: &[u8],
+        base: usize,
+    ) -> Result<(usize, Option<u8>)> {
+        let (next, fin) = self.prefill_chunk_inner(seq, prompt, base)?;
+        Ok((next, fin.map(|(t, _)| t)))
+    }
+
+    fn prefill_chunk_inner(
+        &mut self,
+        seq: usize,
+        prompt: &[u8],
+        base: usize,
+    ) -> Result<(usize, Option<(u8, Vec<f32>)>)> {
         let d = self.cfg.d_model;
         let s_len = prompt.len();
         if s_len == 0 {
@@ -699,130 +787,183 @@ impl Engine {
         if s_len > self.cfg.max_seq {
             bail!("prompt too long: {s_len} > max_seq {}", self.cfg.max_seq);
         }
-        let max_chunk = *self.prefill_buckets.last().unwrap();
-        let mut first = 0u8;
-        let mut logits_row: Vec<f32> = Vec::new();
-        let mut base = 0usize;
-        while base < s_len {
-            let take = (s_len - base).min(max_chunk);
-            let sb = round_up_bucket(take, &self.prefill_buckets);
-            let mut toks = prompt[base..base + take].to_vec();
-            toks.resize(sb, 0);
-            // Padding rows clamp to a valid position-embedding row:
-            // their outputs are discarded, their K/V never written, and
-            // no real query attends to them, so the clamp cannot leak.
-            let positions: Vec<usize> =
-                (0..sb).map(|i| (base + i).min(self.cfg.max_seq - 1)).collect();
-            let mut x = self.embed(&toks, &positions)?;
-            for li in 0..self.cfg.n_layers {
-                let outs = if base == 0 {
-                    let lb = &self.lbufs[li];
-                    self.rt.exec(
-                        &format!("attn_prefill_s{sb}"),
-                        &[
-                            Arg::F32(&x),
-                            Arg::Buf(lb.ln1),
-                            Arg::Buf(lb.wq),
-                            Arg::Buf(lb.wk),
-                            Arg::Buf(lb.wv),
-                            Arg::Buf(lb.wo),
-                            Arg::Buf(lb.ln2),
-                        ],
-                    )?
-                } else {
-                    // Continuation chunk: lend the slot's cached K/V as
-                    // zero-copy slices (same mechanism as decode) plus
-                    // the number of cached positions.
-                    let stride = self.kv.slot_stride();
-                    let kslices = [&self.kv.k[li].data[slot * stride..(slot + 1) * stride]];
-                    let vslices = [&self.kv.v[li].data[slot * stride..(slot + 1) * stride]];
-                    let kv_shape =
-                        [1usize, self.cfg.n_heads, self.cfg.max_seq, self.cfg.d_head];
-                    let base_i32 = [base as i32];
-                    let lb = &self.lbufs[li];
-                    self.rt.exec(
-                        &format!("attn_prefill_chunk_s{sb}"),
-                        &[
-                            Arg::F32(&x),
-                            Arg::Buf(lb.ln1),
-                            Arg::Buf(lb.wq),
-                            Arg::Buf(lb.wk),
-                            Arg::Buf(lb.wv),
-                            Arg::Buf(lb.wo),
-                            Arg::Buf(lb.ln2),
-                            Arg::F32Slices(&kslices, &kv_shape[..]),
-                            Arg::F32Slices(&vslices, &kv_shape[..]),
-                            Arg::I32(&base_i32),
-                        ],
-                    )?
-                };
-                let (y, ln2x, ks, vs) = (&outs[0], &outs[1], &outs[2], &outs[3]);
-                self.kv.write_prefill(li, slot, base, take, &ks.data, &vs.data);
-                let moe = self.moe_layer(li, ln2x, take)?;
-                x = Tensor::new(
-                    y.shape.clone(),
-                    y.data.iter().zip(&moe.data).map(|(a, b)| a + b).collect(),
-                );
-            }
-            self.metrics.prefill_tokens += take as u64;
-            if base + take == s_len {
-                // logits for the last real position only
-                let last = Tensor::new(
-                    vec![1, d],
-                    x.data[(take - 1) * d..take * d].to_vec(),
-                );
-                let logits = self.rt.exec(
-                    "lm_head_b1",
-                    &[
-                        Arg::F32(&last),
-                        Arg::Buf(self.lnf_buf),
-                        Arg::Buf(self.emb_buf),
-                    ],
-                )?;
-                logits_row = logits[0].row(0).to_vec();
-                first = argmax_u8(&logits_row);
-            }
-            base += take;
+        debug_assert!(base < s_len, "prefill chunk past end of prompt");
+        let max_chunk = self.max_prefill_chunk();
+        let take = (s_len - base).min(max_chunk);
+        if !self.kv.ensure(seq, base + take) {
+            bail!(
+                "out of KV pages: sequence {seq} needs positions 0..{} \
+                 ({} pages) but only {} pages are free",
+                base + take,
+                self.kv.pages_for(base + take),
+                self.kv.free_page_count()
+            );
         }
-        Ok((first, logits_row))
+        let sb = round_up_bucket(take, &self.prefill_buckets);
+        let mut toks = prompt[base..base + take].to_vec();
+        toks.resize(sb, 0);
+        // Padding rows clamp to a valid position-embedding row:
+        // their outputs are discarded, their K/V never written, and
+        // no real query attends to them, so the clamp cannot leak.
+        let positions: Vec<usize> =
+            (0..sb).map(|i| (base + i).min(self.cfg.max_seq - 1)).collect();
+        let mut x = self.embed(&toks, &positions)?;
+        for li in 0..self.cfg.n_layers {
+            let outs = if base == 0 {
+                let lb = &self.lbufs[li];
+                self.rt.exec(
+                    &format!("attn_prefill_s{sb}"),
+                    &[
+                        Arg::F32(&x),
+                        Arg::Buf(lb.ln1),
+                        Arg::Buf(lb.wq),
+                        Arg::Buf(lb.wk),
+                        Arg::Buf(lb.wv),
+                        Arg::Buf(lb.wo),
+                        Arg::Buf(lb.ln2),
+                    ],
+                )?
+            } else {
+                // Continuation chunk: lend the sequence's cached K/V
+                // pages as a zero-copy paged view (same mechanism as
+                // decode) plus the number of cached positions.
+                let pstride = self.kv.page_stride();
+                let kdata = &self.kv.k[li].data;
+                let vdata = &self.kv.v[li].data;
+                let kpages: Vec<&[f32]> = self
+                    .kv
+                    .seq_pages(seq)
+                    .iter()
+                    .map(|&pg| &kdata[pg * pstride..(pg + 1) * pstride])
+                    .collect();
+                let vpages: Vec<&[f32]> = self
+                    .kv
+                    .seq_pages(seq)
+                    .iter()
+                    .map(|&pg| &vdata[pg * pstride..(pg + 1) * pstride])
+                    .collect();
+                let row_starts = [0usize, kpages.len()];
+                let base_i32 = [base as i32];
+                let lb = &self.lbufs[li];
+                self.rt.exec(
+                    &format!("attn_prefill_chunk_s{sb}"),
+                    &[
+                        Arg::F32(&x),
+                        Arg::Buf(lb.ln1),
+                        Arg::Buf(lb.wq),
+                        Arg::Buf(lb.wk),
+                        Arg::Buf(lb.wv),
+                        Arg::Buf(lb.wo),
+                        Arg::Buf(lb.ln2),
+                        Arg::F32Pages {
+                            pages: &kpages,
+                            row_starts: &row_starts,
+                            n_heads: self.cfg.n_heads,
+                            page: self.kv.page_size,
+                            d_head: self.cfg.d_head,
+                            t_max: self.cfg.max_seq,
+                        },
+                        Arg::F32Pages {
+                            pages: &vpages,
+                            row_starts: &row_starts,
+                            n_heads: self.cfg.n_heads,
+                            page: self.kv.page_size,
+                            d_head: self.cfg.d_head,
+                            t_max: self.cfg.max_seq,
+                        },
+                        Arg::I32(&base_i32),
+                    ],
+                )?
+            };
+            let (y, ln2x, ks, vs) = (&outs[0], &outs[1], &outs[2], &outs[3]);
+            self.kv.write_prefill(li, seq, base, take, &ks.data, &vs.data);
+            let moe = self.moe_layer(li, ln2x, take)?;
+            x = Tensor::new(
+                y.shape.clone(),
+                y.data.iter().zip(&moe.data).map(|(a, b)| a + b).collect(),
+            );
+        }
+        self.metrics.prefill_tokens += take as u64;
+        if base + take < s_len {
+            return Ok((base + take, None));
+        }
+        // logits for the last real position only
+        let last = Tensor::new(vec![1, d], x.data[(take - 1) * d..take * d].to_vec());
+        let logits = self.rt.exec(
+            "lm_head_b1",
+            &[
+                Arg::F32(&last),
+                Arg::Buf(self.lnf_buf),
+                Arg::Buf(self.emb_buf),
+            ],
+        )?;
+        let logits_row = logits[0].row(0).to_vec();
+        let first = argmax_u8(&logits_row);
+        Ok((base + take, Some((first, logits_row))))
     }
 
-    /// One decode step for the active slots `0..tokens.len()` (slot i
-    /// consumes `tokens[i]`); returns the next token per slot.
+    /// One decode step for the active sequences `0..tokens.len()`
+    /// (sequence i consumes `tokens[i]`); returns the next token per
+    /// sequence. Convenience wrapper over [`Engine::decode_step_seqs`]
+    /// for callers (eval, baselines) that allocate sequences densely
+    /// from 0.
     pub fn decode_step(&mut self, tokens: &[u8]) -> Result<Vec<u8>> {
+        let seqs: Vec<usize> = (0..tokens.len()).collect();
+        self.decode_step_seqs(&seqs, tokens)
+    }
+
+    /// One decode step for an arbitrary set of sequence ids (`seqs[i]`
+    /// consumes `tokens[i]`); returns the next token per sequence.
+    ///
+    /// Pages for the appended position are granted up front for every
+    /// sequence (all-or-nothing per sequence); a grant failure is an
+    /// error here — the scheduler resolves page faults by preempting a
+    /// victim *before* calling this.
+    pub fn decode_step_seqs(&mut self, seqs: &[usize], tokens: &[u8]) -> Result<Vec<u8>> {
         let b = tokens.len();
+        assert_eq!(seqs.len(), b, "one token per sequence");
+        for &seq in seqs {
+            let upto = self.kv.pos[seq] + 1;
+            if !self.kv.ensure(seq, upto) {
+                bail!(
+                    "out of KV pages: sequence {seq} needs position {} but \
+                     only {} pages are free",
+                    upto - 1,
+                    self.kv.free_page_count()
+                );
+            }
+        }
         let bb = round_up_bucket(b, &BATCH_BUCKETS);
         let mut toks = tokens.to_vec();
         toks.resize(bb, 0);
-        let mut positions: Vec<usize> = (0..bb)
-            .map(|i| if i < b { self.kv.pos[i] } else { 0 })
+        let positions: Vec<usize> = (0..bb)
+            .map(|i| if i < b { self.kv.pos[seqs[i]] } else { 0 })
             .collect();
-        // padding rows attend to nothing (pos 0 over a zero cache)
-        for p in positions.iter_mut().skip(b) {
-            *p = 0;
-        }
         let mut x = self.embed(&toks, &positions)?;
         let pos_i32: Vec<i32> = positions.iter().map(|&p| p as i32).collect();
-        let kv_shape =
-            [bb, self.cfg.n_heads, self.cfg.max_seq, self.cfg.d_head];
         for li in 0..self.cfg.n_layers {
-            // Zero-copy KV: borrowed per-slot slices of this layer's
-            // cache (padding rows borrow the shared zero slot). The old
-            // path cloned the full [bb, H, T, dh] cache pair here on
-            // every layer of every step.
+            // Zero-copy KV: borrowed per-page slices of this layer's
+            // cache in CSR layout (padding rows own an empty page range
+            // and attend to nothing). The old path cloned the full
+            // [bb, H, T, dh] cache pair here on every layer of every
+            // step.
             let outs = {
-                let stride = self.kv.slot_stride();
+                let pstride = self.kv.page_stride();
                 let kdata = &self.kv.k[li].data;
                 let vdata = &self.kv.v[li].data;
-                let mut kslices: Vec<&[f32]> = Vec::with_capacity(bb);
-                let mut vslices: Vec<&[f32]> = Vec::with_capacity(bb);
-                for si in 0..b {
-                    kslices.push(&kdata[si * stride..(si + 1) * stride]);
-                    vslices.push(&vdata[si * stride..(si + 1) * stride]);
+                let mut kpages: Vec<&[f32]> = Vec::new();
+                let mut vpages: Vec<&[f32]> = Vec::new();
+                let mut row_starts: Vec<usize> = Vec::with_capacity(bb + 1);
+                row_starts.push(0);
+                for &seq in seqs {
+                    for &pg in self.kv.seq_pages(seq) {
+                        kpages.push(&kdata[pg * pstride..(pg + 1) * pstride]);
+                        vpages.push(&vdata[pg * pstride..(pg + 1) * pstride]);
+                    }
+                    row_starts.push(kpages.len());
                 }
                 for _ in b..bb {
-                    kslices.push(&self.zero_slot[..]);
-                    vslices.push(&self.zero_slot[..]);
+                    row_starts.push(kpages.len());
                 }
                 let lb = &self.lbufs[li];
                 self.rt.exec(
@@ -835,19 +976,34 @@ impl Engine {
                         Arg::Buf(lb.wv),
                         Arg::Buf(lb.wo),
                         Arg::Buf(lb.ln2),
-                        Arg::F32Slices(kslices.as_slice(), &kv_shape[..]),
-                        Arg::F32Slices(vslices.as_slice(), &kv_shape[..]),
+                        Arg::F32Pages {
+                            pages: &kpages,
+                            row_starts: &row_starts,
+                            n_heads: self.cfg.n_heads,
+                            page: self.kv.page_size,
+                            d_head: self.cfg.d_head,
+                            t_max: self.cfg.max_seq,
+                        },
+                        Arg::F32Pages {
+                            pages: &vpages,
+                            row_starts: &row_starts,
+                            n_heads: self.cfg.n_heads,
+                            page: self.kv.page_size,
+                            d_head: self.cfg.d_head,
+                            t_max: self.cfg.max_seq,
+                        },
                         Arg::I32(&pos_i32),
                     ],
                 )?
             };
             let (y, ln2x, nk, nv) = (&outs[0], &outs[1], &outs[2], &outs[3]);
             let hd = self.cfg.n_heads * self.cfg.d_head;
-            for slot in 0..b {
+            for (i, &seq) in seqs.iter().enumerate() {
                 self.kv.append(
-                    li, slot,
-                    &nk.data[slot * hd..(slot + 1) * hd],
-                    &nv.data[slot * hd..(slot + 1) * hd],
+                    li,
+                    seq,
+                    &nk.data[i * hd..(i + 1) * hd],
+                    &nv.data[i * hd..(i + 1) * hd],
                 );
             }
             let moe = self.moe_layer(li, ln2x, b)?;

@@ -47,6 +47,32 @@ pub struct QueuedRequest {
     pub priority: u8,
     /// Arrival time (seconds from run start; 0 in closed-loop mode).
     pub arrival: f64,
+    /// Starvation-control boost, computed by the scheduler from queue
+    /// time (`floor(waited / aging.step_secs)`, see [`AgingConfig`]).
+    /// 0 when aging is off. SPF halves the *effective* prompt length
+    /// per boost step; priority lanes add it to the effective lane, so
+    /// any queued request eventually outranks fresh arrivals.
+    pub age_boost: u8,
+}
+
+/// What a [`SchedulingPolicy`] sees about one *admitted* sequence when
+/// choosing a preemption victim: an immutable snapshot of scheduling-
+/// relevant state (never engine internals).
+#[derive(Debug, Clone, Copy)]
+pub struct ActiveSeq {
+    /// Caller-assigned request id.
+    pub id: usize,
+    /// Scheduling lane; higher = more urgent.
+    pub priority: u8,
+    /// Prompt length in tokens.
+    pub prompt_len: usize,
+    /// Arrival time (seconds from run start).
+    pub arrival: f64,
+    /// When the request was (first) admitted out of the queue.
+    pub admitted_at: f64,
+    /// Tokens generated so far — what a preemption throws away
+    /// (recompute-from-prompt re-derives them on re-admission).
+    pub generated: usize,
 }
 
 /// Admission-ordering policy: given the waiting queue (front = earliest
@@ -65,6 +91,34 @@ pub trait SchedulingPolicy {
     /// never empty; an out-of-range return is clamped to the last
     /// element by the scheduler.
     fn pick(&self, queue: &[QueuedRequest]) -> usize;
+
+    /// Position in `active` of the sequence to evict when a page fault
+    /// (no free KV pages) must be resolved by preemption. `active` is
+    /// never empty; an out-of-range return is clamped by the scheduler.
+    ///
+    /// The default — evict the **latest arrival** (ties: latest
+    /// admission) — matches FCFS's contract: the requests that have
+    /// waited longest keep their pages.
+    fn victim(&self, active: &[ActiveSeq]) -> usize {
+        let mut best = 0usize;
+        for (i, a) in active.iter().enumerate().skip(1) {
+            let b = &active[best];
+            if a.arrival > b.arrival || (a.arrival == b.arrival && a.admitted_at >= b.admitted_at)
+            {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// May queued request `cand` preempt admitted sequence `victim` at
+    /// **admission** time (as opposed to resolving a decode-time page
+    /// fault, which any policy does via [`SchedulingPolicy::victim`])?
+    /// Default: never — only [`PriorityLanes`] lets a more urgent lane
+    /// displace a running request outright.
+    fn preempts(&self, _cand: &QueuedRequest, _victim: &ActiveSeq) -> bool {
+        false
+    }
 }
 
 /// First-come-first-served: admit the front of the queue. This is
@@ -87,10 +141,18 @@ impl SchedulingPolicy for Fcfs {
 /// Shortest-prompt-first (SJF on prefill cost): admit the waiting
 /// request with the smallest prompt; ties break toward the earliest
 /// arrival. Long prompts can be deferred indefinitely under sustained
-/// overload — pair with [`AdmissionControl`] or accept the starvation
-/// tail (it is what buys the p99-TTFT win for everyone else).
+/// overload — pair with [`AdmissionControl`], turn on aging
+/// ([`AgingConfig`] halves a request's effective length per waited
+/// step), or accept the starvation tail (it is what buys the p99-TTFT
+/// win for everyone else).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ShortestPromptFirst;
+
+/// SPF's aged sort key: each boost step halves the effective length, so
+/// a long prompt that has waited long enough competes with short ones.
+fn spf_effective_len(q: &QueuedRequest) -> usize {
+    q.prompt_len >> q.age_boost.min(usize::BITS as u8 - 1)
+}
 
 impl SchedulingPolicy for ShortestPromptFirst {
     fn name(&self) -> &'static str {
@@ -102,7 +164,22 @@ impl SchedulingPolicy for ShortestPromptFirst {
         for (i, q) in queue.iter().enumerate().skip(1) {
             // strict `<` keeps the earliest arrival among equals (the
             // queue is arrival-ordered front to back).
-            if q.prompt_len < queue[best].prompt_len {
+            if spf_effective_len(q) < spf_effective_len(&queue[best]) {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// SPF evicts the **longest** prompt (ties: latest arrival) — the
+    /// mirror image of its admission order.
+    fn victim(&self, active: &[ActiveSeq]) -> usize {
+        let mut best = 0usize;
+        for (i, a) in active.iter().enumerate().skip(1) {
+            let b = &active[best];
+            if a.prompt_len > b.prompt_len
+                || (a.prompt_len == b.prompt_len && a.arrival >= b.arrival)
+            {
                 best = i;
             }
         }
@@ -117,6 +194,12 @@ impl SchedulingPolicy for ShortestPromptFirst {
 #[derive(Debug, Clone, Copy, Default)]
 pub struct PriorityLanes;
 
+/// A lane-request's aged lane: aging lifts the effective priority one
+/// lane per waited step, so lane-0 traffic cannot starve forever.
+fn effective_priority(q: &QueuedRequest) -> u8 {
+    q.priority.saturating_add(q.age_boost)
+}
+
 impl SchedulingPolicy for PriorityLanes {
     fn name(&self) -> &'static str {
         "priority"
@@ -126,11 +209,29 @@ impl SchedulingPolicy for PriorityLanes {
         let mut best = 0usize;
         for (i, q) in queue.iter().enumerate().skip(1) {
             // strict `>` keeps the earliest arrival within a lane.
-            if q.priority > queue[best].priority {
+            if effective_priority(q) > effective_priority(&queue[best]) {
                 best = i;
             }
         }
         best
+    }
+
+    /// Priority evicts the **lowest lane** (ties: latest arrival).
+    fn victim(&self, active: &[ActiveSeq]) -> usize {
+        let mut best = 0usize;
+        for (i, a) in active.iter().enumerate().skip(1) {
+            let b = &active[best];
+            if a.priority < b.priority || (a.priority == b.priority && a.arrival >= b.arrival) {
+                best = i;
+            }
+        }
+        best
+    }
+
+    /// A strictly more urgent arrival may displace a running lower-lane
+    /// sequence even when no decode-time page fault forces it.
+    fn preempts(&self, cand: &QueuedRequest, victim: &ActiveSeq) -> bool {
+        effective_priority(cand) > victim.priority
     }
 }
 
@@ -224,12 +325,78 @@ impl AdmissionControl {
     }
 }
 
+/// Starvation control: queued requests gain one `age_boost` step per
+/// `step_secs` waited, lifting their effective rank under SPF (length
+/// halves per step) and priority lanes (lane +1 per step). FCFS ignores
+/// boosts — arrival order already starves nobody.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AgingConfig {
+    /// Seconds of queue time per boost step (> 0).
+    pub step_secs: f64,
+}
+
+impl Default for AgingConfig {
+    fn default() -> Self {
+        AgingConfig { step_secs: 0.5 }
+    }
+}
+
+impl AgingConfig {
+    /// The boost a request that has waited `waited` seconds carries.
+    pub fn boost(&self, waited: f64) -> u8 {
+        if self.step_secs <= 0.0 || waited <= 0.0 {
+            return 0;
+        }
+        (waited / self.step_secs).floor().min(u8::MAX as f64) as u8
+    }
+}
+
 /// One serving run's scheduling configuration: ordering policy +
-/// admission control. `Default` is FCFS, unbounded — exactly PR 4.
-#[derive(Debug, Clone, Copy, Default)]
+/// admission control + the paged-KV knobs (preemption, aging,
+/// prefill/decode interleaving). `Default` is FCFS, unbounded, no
+/// preemption, no aging, interleaving **on** — the PR 4 ordering with
+/// iteration-level prefill chunks.
+#[derive(Debug, Clone, Copy)]
 pub struct SchedConfig {
     pub policy: PolicyKind,
     pub admission: AdmissionControl,
+    /// Resolve page faults by evicting a victim (recompute-from-prompt
+    /// on re-admission) instead of erroring; also enables
+    /// admission-time preemption for policies whose
+    /// [`SchedulingPolicy::preempts`] allows it.
+    pub preempt: bool,
+    /// Starvation control for SPF / priority lanes; `None` = off.
+    pub aging: Option<AgingConfig>,
+    /// Run at most one prefill chunk per scheduler iteration alongside
+    /// the decode batch (`false` = legacy whole-prompt prefill at
+    /// admission, the non-interleaved baseline the sweep compares
+    /// against).
+    pub interleave: bool,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        SchedConfig {
+            policy: PolicyKind::default(),
+            admission: AdmissionControl::default(),
+            preempt: false,
+            aging: None,
+            interleave: true,
+        }
+    }
+}
+
+impl SchedConfig {
+    /// The scheduler-facing slice of this config (everything except the
+    /// ordering policy object).
+    pub fn options(&self) -> super::scheduler::SchedOptions {
+        super::scheduler::SchedOptions {
+            admission: self.admission,
+            preempt: self.preempt,
+            aging: self.aging,
+            interleave: self.interleave,
+        }
+    }
 }
 
 #[cfg(test)]
@@ -245,6 +412,22 @@ mod tests {
                 prompt_len: len,
                 priority: pri,
                 arrival: i as f64,
+                age_boost: 0,
+            })
+            .collect()
+    }
+
+    fn active(entries: &[(u8, usize, f64)]) -> Vec<ActiveSeq> {
+        entries
+            .iter()
+            .enumerate()
+            .map(|(i, &(pri, len, arrival))| ActiveSeq {
+                id: i,
+                priority: pri,
+                prompt_len: len,
+                arrival,
+                admitted_at: arrival,
+                generated: 0,
             })
             .collect()
     }
@@ -286,6 +469,83 @@ mod tests {
             assert_eq!(format!("{k}"), k.label());
         }
         assert_eq!(PolicyKind::default(), PolicyKind::Fcfs);
+    }
+
+    #[test]
+    fn aging_boost_counts_whole_steps() {
+        let aging = AgingConfig { step_secs: 0.5 };
+        assert_eq!(aging.boost(0.0), 0);
+        assert_eq!(aging.boost(0.49), 0);
+        assert_eq!(aging.boost(0.5), 1);
+        assert_eq!(aging.boost(1.7), 3);
+        assert_eq!(aging.boost(1e9), u8::MAX);
+        assert_eq!(AgingConfig { step_secs: 0.0 }.boost(10.0), 0);
+    }
+
+    #[test]
+    fn spf_aging_halves_effective_length() {
+        // 64-byte prompt with 4 boost steps → effective 4: beats the
+        // fresh 5-byte prompt behind it.
+        let mut queue = q(&[(64, 0), (5, 0)]);
+        assert_eq!(ShortestPromptFirst.pick(&queue), 1);
+        queue[0].age_boost = 4;
+        assert_eq!(ShortestPromptFirst.pick(&queue), 0);
+        // absurd boosts must not overflow the shift
+        queue[0].age_boost = u8::MAX;
+        assert_eq!(ShortestPromptFirst.pick(&queue), 0);
+    }
+
+    #[test]
+    fn priority_aging_lifts_the_lane() {
+        let mut queue = q(&[(10, 0), (10, 2)]);
+        assert_eq!(PriorityLanes.pick(&queue), 1);
+        queue[0].age_boost = 2;
+        // equal effective lanes → earliest arrival wins.
+        assert_eq!(PriorityLanes.pick(&queue), 0);
+        queue[0].age_boost = 3;
+        assert_eq!(PriorityLanes.pick(&queue), 0);
+    }
+
+    #[test]
+    fn victim_selection_per_policy() {
+        let a = active(&[(0, 10, 0.0), (0, 90, 1.0), (0, 40, 2.0)]);
+        // FCFS default: latest arrival loses its pages.
+        assert_eq!(Fcfs.victim(&a), 2);
+        // SPF: longest prompt loses.
+        assert_eq!(ShortestPromptFirst.victim(&a), 1);
+        let a = active(&[(2, 10, 0.0), (0, 10, 1.0), (1, 10, 2.0)]);
+        // priority: lowest lane loses.
+        assert_eq!(PriorityLanes.victim(&a), 1);
+    }
+
+    #[test]
+    fn only_priority_preempts_at_admission() {
+        let cand = q(&[(10, 2)])[0];
+        let low = active(&[(0, 10, 0.0)])[0];
+        let high = active(&[(2, 10, 0.0)])[0];
+        assert!(!Fcfs.preempts(&cand, &low));
+        assert!(!ShortestPromptFirst.preempts(&cand, &low));
+        assert!(PriorityLanes.preempts(&cand, &low));
+        assert!(!PriorityLanes.preempts(&cand, &high));
+        // aging makes a starved lane-0 request eventually able to
+        // displace lane-1 traffic.
+        let mut old = q(&[(10, 0)])[0];
+        let mid = active(&[(1, 10, 0.0)])[0];
+        assert!(!PriorityLanes.preempts(&old, &mid));
+        old.age_boost = 2;
+        assert!(PriorityLanes.preempts(&old, &mid));
+    }
+
+    #[test]
+    fn sched_config_default_matches_legacy_plus_interleave() {
+        let c = SchedConfig::default();
+        assert_eq!(c.policy, PolicyKind::Fcfs);
+        assert_eq!(c.admission, AdmissionControl::unbounded());
+        assert!(!c.preempt);
+        assert!(c.aging.is_none());
+        assert!(c.interleave);
+        let o = c.options();
+        assert!(o.interleave && !o.preempt && o.aging.is_none());
     }
 
     #[test]

@@ -8,53 +8,71 @@
 //!        ↘ Rejected            (queue full: bounded admission control)
 //!                  ↘ Done      (immediate EOS / max_new ≤ 1)
 //!                  ↘ Rejected  (admission validation: prompt + max_new
-//!                               exceed the KV window)
+//!                               exceed the KV window / page budget)
+//!            Prefill ↘
+//!             Decode → Preempted → Queued   (page fault or a more
+//!                                  urgent arrival: pages freed now,
+//!                                  recompute-from-prompt on
+//!                                  re-admission)
 //! ```
 //!
-//! driven by a continuous-batching loop under one of two arrival modes:
+//! driven by an **iteration-level** continuous-batching loop: each
+//! iteration admits what fits, runs at most one prefill chunk of the
+//! oldest staged prompt *alongside* the current decode batch
+//! (`interleave`, the default — long prompts no longer monopolize the
+//! engine between decode steps), then decodes the whole active set.
+//! `interleave = false` restores the legacy run-whole-prefill-at-
+//! admission timing, which is the baseline the SERVE_cpu.json sweep
+//! compares p99 TTFT against.
+//!
+//! Two arrival modes:
 //!
 //! * [`ArrivalMode::Closed`] — the classic closed batch loop: every
 //!   request is available at t = 0 and admission is limited only by KV
-//!   slots. Completion texts reproduce the legacy `serve()` loop
-//!   byte-for-byte (pinned by `rust/tests/scheduler.rs`).
+//!   sequence ids + pages. Completion texts reproduce the legacy
+//!   `serve()` loop byte-for-byte (pinned by `rust/tests/scheduler.rs`).
 //! * [`ArrivalMode::Open`] — open-loop serving: deterministic Poisson
 //!   arrivals (SplitMix64 exponential inter-arrival gaps); a request
 //!   becomes admissible only once the wall clock reaches its arrival
-//!   time. This is the arrival process the serving literature (and the
-//!   paper's §5.3.2 efficiency methodology) measures under.
+//!   time.
 //!
-//! Two decisions are pluggable via [`crate::engine::policy`]
-//! (see [`serve_policy`]):
+//! KV capacity is **page-granular** ([`crate::engine::kv`]): admission
+//! is page-budget-aware, and two regimes exist:
 //!
-//! * **who is admitted next** — a
-//!   [`SchedulingPolicy`](crate::engine::policy::SchedulingPolicy)
-//!   picks from the waiting queue (`fcfs` / `spf` / `priority`);
-//!   [`serve_with`] runs FCFS, which reproduces the pre-policy
-//!   scheduler byte-for-byte.
-//! * **whether an arrival may wait at all** — an
-//!   [`AdmissionControl`](crate::engine::policy::AdmissionControl)
-//!   queue bound turns open-loop overload into `queue full` rejections
-//!   (Queued → Rejected), so [`ServeStats::goodput_rps`] reports
-//!   goodput against offered load instead of an unbounded queue.
+//! * `preempt = false` (default) — conservative reservation: admission
+//!   reserves every page the request could ever need
+//!   (`pages_for(prompt + max_new)`), so a decode step can never fault.
+//!   With the default page budget this is exactly the legacy
+//!   slot-bound admission.
+//! * `preempt = true` — optimistic admission (pages for the prompt
+//!   only). A decode-time page fault evicts a victim chosen by the
+//!   [`SchedulingPolicy::victim`] order (Decode → Preempted → Queued,
+//!   pages freed immediately); the victim re-admits later and
+//!   *recomputes from its prompt* (prefill over prompt ++ generated so
+//!   far — [`ServeStats::recompute_tokens`] counts the cost). Priority
+//!   lanes additionally preempt at admission when a strictly more
+//!   urgent request finds no free pages
+//!   ([`SchedulingPolicy::preempts`]).
+//!
+//! Ordering and admission stay pluggable via [`crate::engine::policy`]
+//! ([`serve_policy`] / [`serve_opts`]); starvation control
+//! ([`crate::engine::policy::AgingConfig`]) boosts long-waiting queued
+//! requests for the SPF / priority pickers.
 //!
 //! Latency accounting is **arrival-anchored**: `latency` includes queue
-//! wait, `ttft` is arrival → first token, and the old admission-anchored
-//! number survives as `service_secs` so a report can show both side by
-//! side. Request-level faults are **per-request**: a prompt that fails
-//! admission validation (it cannot fit the KV window together with its
-//! `max_new` budget — since chunked prefill, length is bounded by KV
-//! capacity, not by the largest prefill bucket) is Rejected without
-//! consuming a KV slot and every other request keeps decoding, while a
-//! backend execution error past validation still aborts the run
-//! (swallowing it as rejections would report a dead backend as a
-//! successful run).
+//! wait, `ttft` is arrival → first token (a preempted request keeps its
+//! original first-token time), and the admission-anchored number
+//! survives as `service_secs`. Request-level faults are per-request; a
+//! backend execution error past validation still aborts the run.
 
 use std::collections::VecDeque;
 
 use anyhow::Result;
 
-use super::policy::{AdmissionControl, Fcfs, QueuedRequest, SchedulingPolicy};
-use super::{Engine, EOS, MAX_SLOTS};
+use super::policy::{
+    ActiveSeq, AdmissionControl, AgingConfig, Fcfs, QueuedRequest, SchedulingPolicy,
+};
+use super::{Engine, EOS};
 use crate::util::rng::SplitMix64;
 use crate::util::stats::{mean, percentile};
 use crate::util::Timer;
@@ -87,8 +105,38 @@ pub enum Phase {
     Queued,
     Prefill,
     Decode,
+    /// Evicted mid-flight (page fault or admission preemption): pages
+    /// already freed; transitions straight back to Queued for
+    /// recompute-from-prompt re-admission.
+    Preempted,
     Done,
     Rejected,
+}
+
+/// Scheduler knobs beyond the ordering policy — the
+/// [`crate::engine::policy::SchedConfig::options`] slice.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedOptions {
+    pub admission: AdmissionControl,
+    /// Resolve page faults by eviction instead of reserving worst-case
+    /// pages at admission.
+    pub preempt: bool,
+    /// Starvation control for the SPF / priority pickers.
+    pub aging: Option<AgingConfig>,
+    /// One prefill chunk per iteration alongside the decode batch
+    /// (default); `false` = legacy whole-prompt prefill at admission.
+    pub interleave: bool,
+}
+
+impl Default for SchedOptions {
+    fn default() -> Self {
+        SchedOptions {
+            admission: AdmissionControl::default(),
+            preempt: false,
+            aging: None,
+            interleave: true,
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -102,21 +150,26 @@ pub struct Completion {
     pub new_tokens: usize,
     /// Arrival time (seconds from run start; 0 in closed-loop mode).
     pub arrival: f64,
-    /// Arrival → admission (time spent waiting for a KV slot).
+    /// Arrival → (first) admission (time spent waiting for KV space).
     pub queue_secs: f64,
-    /// Arrival → first token (queue wait + prefill).
+    /// Arrival → first token (queue wait + prefill). A preempted
+    /// request keeps its original first-token time.
     pub ttft: f64,
-    /// Admission → completion — the legacy, admission-anchored metric.
+    /// First admission → completion — the legacy, admission-anchored
+    /// metric.
     pub service_secs: f64,
     /// Arrival → completion (queue-inclusive — the honest number).
     pub latency: f64,
     /// First token → completion (decode-phase wall time).
     pub decode_secs: f64,
+    /// Times this request was evicted and re-admitted.
+    pub preemptions: u32,
 }
 
-/// A request rejected without consuming a KV slot and without affecting
+/// A request rejected without consuming KV space and without affecting
 /// any other request — either at admission validation (prompt cannot
-/// fit the KV window) or on arrival at a full bounded queue.
+/// fit the KV window / page budget) or on arrival at a full bounded
+/// queue.
 #[derive(Debug, Clone)]
 pub struct Rejection {
     pub id: usize,
@@ -161,6 +214,19 @@ pub struct ServeStats {
     /// Time-weighted average queue depth over the whole run.
     pub mean_queue_depth: f64,
     pub max_queue_depth: usize,
+    /// Evictions (Decode/Prefill → Preempted → Queued) over the run.
+    pub preemptions: usize,
+    /// KV positions thrown away by evictions and rebuilt by
+    /// recompute-from-prompt re-admissions.
+    pub recompute_tokens: u64,
+    /// Time-weighted mean fraction of the physical page pool mapped.
+    pub page_utilization: f64,
+    /// Prefill chunks run inside the iteration loop (0 when
+    /// `interleave` is off).
+    pub interleaved_prefill_steps: u64,
+    /// Per-priority-lane p50 TTFT `(lane, seconds)`, ascending lane —
+    /// the starvation-control report column.
+    pub lane_ttft50: Vec<(u8, f64)>,
     /// Seconds inside MoE artifacts (gate + FFN).
     pub moe_secs: f64,
     /// Seconds inside all artifacts.
@@ -191,20 +257,49 @@ pub fn poisson_arrivals(n: usize, rate: f64, seed: u64) -> Vec<f64> {
         .collect()
 }
 
-/// One in-flight request; index in the active list == its KV slot.
-struct ActiveSlot {
+/// One admitted request (staged for prefill or decoding). Its KV
+/// sequence id is stable for the whole residency — eviction frees it,
+/// re-admission claims a fresh one.
+struct InFlight {
     id: usize,
     priority: u8,
     /// Index into the `requests` slice (drives the phase table).
     ridx: usize,
     arrival: f64,
+    /// First admission (queue_secs anchors here even across evictions).
     admitted_at: f64,
     first_token_at: f64,
+    has_first: bool,
+    /// KV sequence id for this residency.
+    seq: usize,
+    /// What prefill recomputes: the prompt, plus — after an eviction —
+    /// every token generated before it (recompute-from-prompt).
+    input: Vec<u8>,
+    /// Prefill progress: positions already cached (chunk base).
+    base: usize,
     out: Vec<u8>,
     next: u8,
     max_new: usize,
     /// Decode steps this request participated in.
     steps: u64,
+    /// Pages reserved at admission (conservative mode; 0 under
+    /// `preempt`). Released when the request retires or is evicted.
+    reserved: usize,
+    /// Evictions suffered so far.
+    preempted: u32,
+}
+
+/// Everything an eviction must park so re-admission can continue the
+/// request exactly where it left off (minus the KV pages, which are
+/// recomputed from the prompt).
+struct ResumeState {
+    admitted_at: f64,
+    first_token_at: f64,
+    has_first: bool,
+    out: Vec<u8>,
+    next: u8,
+    steps: u64,
+    preempted: u32,
 }
 
 fn set_phase(phases: &mut [Phase], ri: usize, to: Phase) {
@@ -217,14 +312,17 @@ fn set_phase(phases: &mut [Phase], ri: usize, to: Phase) {
                 | (Phase::Prefill, Phase::Decode)
                 | (Phase::Prefill, Phase::Done)
                 | (Phase::Prefill, Phase::Rejected)
+                | (Phase::Prefill, Phase::Preempted) // page fault mid-prefill
                 | (Phase::Decode, Phase::Done)
+                | (Phase::Decode, Phase::Preempted) // page fault / urgent arrival
+                | (Phase::Preempted, Phase::Queued) // recompute-from-prompt
         ),
         "illegal lifecycle transition {from:?} → {to:?}"
     );
     phases[ri] = to;
 }
 
-fn finish(a: ActiveSlot, now: f64) -> Completion {
+fn finish(a: InFlight, now: f64) -> Completion {
     let end = a.out.iter().position(|&c| c == EOS).unwrap_or(a.out.len());
     Completion {
         id: a.id,
@@ -237,13 +335,60 @@ fn finish(a: ActiveSlot, now: f64) -> Completion {
         service_secs: now - a.admitted_at,
         latency: now - a.arrival,
         decode_secs: if a.steps > 0 { now - a.first_token_at } else { 0.0 },
+        preemptions: a.preempted,
     }
+}
+
+fn snapshot(a: &InFlight) -> ActiveSeq {
+    ActiveSeq {
+        id: a.id,
+        priority: a.priority,
+        prompt_len: a.input.len(),
+        arrival: a.arrival,
+        admitted_at: a.admitted_at,
+        generated: a.out.len(),
+    }
+}
+
+/// Mutable scheduler state an eviction touches, bundled so the helpers
+/// below stay callable while `active` / `prefilling` are borrowed.
+struct EvictCtx<'a> {
+    phases: &'a mut [Phase],
+    queue: &'a mut VecDeque<usize>,
+    resume: &'a mut [Option<ResumeState>],
+    enqueued_at: &'a mut [f64],
+    committed: &'a mut usize,
+    preemptions: &'a mut usize,
+    recompute_tokens: &'a mut u64,
+}
+
+/// Evict one in-flight request: free its pages now, park its progress,
+/// and push it to the queue **front** (it re-admits with recompute-
+/// from-prompt as soon as space allows).
+fn evict(engine: &mut Engine, a: InFlight, ctx: &mut EvictCtx<'_>, now: f64) {
+    *ctx.recompute_tokens += engine.kv.pos[a.seq] as u64;
+    engine.kv.free(a.seq);
+    *ctx.committed -= a.reserved;
+    set_phase(ctx.phases, a.ridx, Phase::Preempted);
+    set_phase(ctx.phases, a.ridx, Phase::Queued);
+    ctx.resume[a.ridx] = Some(ResumeState {
+        admitted_at: a.admitted_at,
+        first_token_at: a.first_token_at,
+        has_first: a.has_first,
+        out: a.out,
+        next: a.next,
+        steps: a.steps,
+        preempted: a.preempted + 1,
+    });
+    ctx.enqueued_at[a.ridx] = now;
+    *ctx.preemptions += 1;
+    ctx.queue.push_front(a.ridx);
 }
 
 /// Run `requests` to completion (or rejection) under `mode` with the
 /// legacy scheduling configuration: FCFS admission order, unbounded
-/// queue. Byte-for-byte identical to the pre-policy scheduler (pinned
-/// by `rust/tests/scheduler.rs`).
+/// queue, no preemption. Completion texts are byte-for-byte the
+/// pre-policy scheduler's (pinned by `rust/tests/scheduler.rs`).
 pub fn serve_with(
     engine: &mut Engine,
     requests: &[Request],
@@ -252,17 +397,9 @@ pub fn serve_with(
     serve_policy(engine, requests, mode, &Fcfs, AdmissionControl::unbounded())
 }
 
-/// Run `requests` to completion (or rejection) under `mode`, admitting
-/// in the order `policy` chooses and bounding the waiting queue with
-/// `admission`.
-///
-/// The loop: pull arrived requests into the admission queue (rejecting
-/// arrivals the queue bound refuses), let `policy` pick which queued
-/// request claims each free KV slot (prefill), decode the whole active
-/// set in lockstep, retire finished rows (slot freed, cache compacted).
-/// In open-loop mode the scheduler sleeps until the next arrival when
-/// idle, so wall time — and therefore every latency column — reflects
-/// the arrival process, not just raw compute.
+/// [`serve_opts`] with the default scheduler knobs (no preemption, no
+/// aging, interleaving on) — the policy-plus-admission entry point the
+/// pre-paging callers used.
 pub fn serve_policy(
     engine: &mut Engine,
     requests: &[Request],
@@ -270,9 +407,27 @@ pub fn serve_policy(
     policy: &dyn SchedulingPolicy,
     admission: AdmissionControl,
 ) -> Result<ServeOutcome> {
+    serve_opts(engine, requests, mode, policy, SchedOptions { admission, ..Default::default() })
+}
+
+/// Run `requests` to completion (or rejection) under `mode`, admitting
+/// in the order `policy` chooses, with the full paged-KV knob set
+/// ([`SchedOptions`]): bounded admission, preemption, aging,
+/// prefill/decode interleaving.
+pub fn serve_opts(
+    engine: &mut Engine,
+    requests: &[Request],
+    mode: ArrivalMode,
+    policy: &dyn SchedulingPolicy,
+    opts: SchedOptions,
+) -> Result<ServeOutcome> {
     let n = requests.len();
     engine.kv.reset();
     engine.reset_metrics();
+    // Fail fast on backends that cannot run the chunked-prefill
+    // continuation artifacts a long prompt will need mid-run.
+    let longest = requests.iter().map(|r| r.prompt.len()).max().unwrap_or(0);
+    engine.check_chunked_prefill_support(longest)?;
     let arrivals: Vec<f64> = match mode {
         ArrivalMode::Closed => vec![0.0; n],
         ArrivalMode::Open { rate, seed } => poisson_arrivals(n, rate, seed),
@@ -282,32 +437,59 @@ pub fn serve_policy(
     let mut pending: VecDeque<usize> = (0..n).collect();
     let mut queue: VecDeque<usize> = VecDeque::new();
     let mut phases = vec![Phase::Queued; n];
-    let mut active: Vec<ActiveSlot> = Vec::new(); // index == slot
+    let mut enqueued_at = vec![0.0f64; n];
+    let mut resume: Vec<Option<ResumeState>> = (0..n).map(|_| None).collect();
+    // Staged prefill jobs, oldest first; only the front job ever runs
+    // a chunk (and therefore only the front job holds prefill pages —
+    // the invariant that keeps optimistic admission deadlock-free).
+    let mut prefilling: VecDeque<InFlight> = VecDeque::new();
+    let mut active: Vec<InFlight> = Vec::new();
     let mut done: Vec<Completion> = Vec::new();
     let mut rejections: Vec<Rejection> = Vec::new();
     let mut queue_full = 0usize;
+    // Conservative-mode page reservations currently outstanding.
+    let mut committed = 0usize;
+    let mut preemptions = 0usize;
+    let mut recompute_tokens = 0u64;
+    let mut interleaved_chunks = 0u64;
     // Scratch for the policy's queue snapshot, reused across admissions
     // so picking never allocates on the serving hot path.
     let mut view: Vec<QueuedRequest> = Vec::new();
-    // Time-weighted queue-depth integral: the depth observed at one
-    // sample point weights the wall-clock interval until the next.
+    // Time-weighted queue-depth / page-utilization integrals: the value
+    // observed at one sample point weights the interval until the next.
     let mut qd_integral = 0.0f64;
     let mut qd_prev = 0usize;
-    let mut qd_last_t = 0.0f64;
+    let mut util_integral = 0.0f64;
+    let mut util_prev = 0.0f64;
+    let mut sample_last_t = 0.0f64;
     let mut qd_max = 0usize;
     let mut decode_busy = 0.0f64;
     let mut decode_toks = 0u64;
     let timer = Timer::start();
 
+    macro_rules! evict_ctx {
+        () => {
+            EvictCtx {
+                phases: &mut phases,
+                queue: &mut queue,
+                resume: &mut resume,
+                enqueued_at: &mut enqueued_at,
+                committed: &mut committed,
+                preemptions: &mut preemptions,
+                recompute_tokens: &mut recompute_tokens,
+            }
+        };
+    }
+
     loop {
         // 1. arrivals: move everything whose time has come into the
         // queue — unless the admission-control bound refuses it, in
         // which case the request is rejected on the spot (Queued →
-        // Rejected, no slot ever involved).
+        // Rejected, no KV space ever involved).
         let now = timer.secs();
         while pending.front().map(|&i| arrivals[i] <= now).unwrap_or(false) {
             let i = pending.pop_front().unwrap();
-            if !admission.admits(queue.len()) {
+            if !opts.admission.admits(queue.len()) {
                 set_phase(&mut phases, i, Phase::Rejected);
                 queue_full += 1;
                 rejections.push(Rejection {
@@ -315,24 +497,24 @@ pub fn serve_policy(
                     reason: format!(
                         "queue full: {} waiting at max_queue_depth {}",
                         queue.len(),
-                        admission.max_queue_depth.unwrap_or(0)
+                        opts.admission.max_queue_depth.unwrap_or(0)
                     ),
                     arrival: arrivals[i],
                     rejected_at: timer.secs(),
                 });
                 continue;
             }
+            enqueued_at[i] = arrivals[i];
             queue.push_back(i);
         }
 
         // 2. admission: the policy picks which queued request claims
-        // each free slot; validation + prefill follow. Validation
-        // failures (prompt cannot fit the KV window) reject exactly
-        // that request before any slot is claimed; a prefill error past
-        // validation is a backend failure and aborts the run (after
-        // freeing the just-claimed slot, which is the last one, so the
-        // free never relocates another request's cache).
-        while engine.kv.has_free() && active.len() < MAX_SLOTS && !queue.is_empty() {
+        // the next KV sequence; validation, the page gate and prefill
+        // staging follow. Validation failures (prompt cannot fit the
+        // KV window / page budget together with max_new) reject exactly
+        // that request before any KV space is claimed.
+        while engine.kv.has_free() && !queue.is_empty() {
+            let now = timer.secs();
             // A singleton queue has only one possible pick (out-of-range
             // picks clamp to the last element anyway), so skip the
             // snapshot entirely — the common case at low load.
@@ -342,82 +524,231 @@ pub fn serve_policy(
                 view.clear();
                 view.extend(queue.iter().map(|&i| QueuedRequest {
                     id: requests[i].id,
-                    prompt_len: requests[i].prompt.len(),
+                    prompt_len: requests[i].prompt.len()
+                        + resume[i].as_ref().map(|r| r.out.len()).unwrap_or(0),
                     priority: requests[i].priority,
                     arrival: arrivals[i],
+                    age_boost: opts
+                        .aging
+                        .map(|a| a.boost(now - enqueued_at[i]))
+                        .unwrap_or(0),
                 }));
                 policy.pick(&view).min(queue.len() - 1)
             };
             let ri = queue.remove(pos).expect("pos clamped into range");
             let req = &requests[ri];
-            set_phase(&mut phases, ri, Phase::Prefill);
-            let capacity = engine.prompt_capacity(req.max_new);
-            if req.prompt.len() > capacity {
-                set_phase(&mut phases, ri, Phase::Rejected);
-                rejections.push(Rejection {
-                    id: req.id,
-                    reason: format!(
-                        "prompt too long: {} tokens + max_new {} exceed the \
-                         KV window (max_seq {})",
-                        req.prompt.len(),
-                        req.max_new,
-                        engine.cfg.max_seq
-                    ),
-                    arrival: arrivals[ri],
-                    rejected_at: timer.secs(),
-                });
-                continue;
-            }
-            let slot = engine.kv.alloc();
-            debug_assert_eq!(slot, active.len());
-            let admitted_at = timer.secs();
-            match engine.prefill(slot, req.prompt.as_bytes()) {
-                Ok(first) => {
-                    let a = ActiveSlot {
+            let parked = resume[ri].take();
+            // Fresh requests get validated once; a resumed request
+            // already passed (its prompt + max_new fit, and generated
+            // tokens only move budget from max_new to input).
+            if parked.is_none() {
+                let capacity = engine.prompt_capacity(req.max_new);
+                if req.prompt.len() > capacity {
+                    set_phase(&mut phases, ri, Phase::Prefill);
+                    set_phase(&mut phases, ri, Phase::Rejected);
+                    rejections.push(Rejection {
                         id: req.id,
-                        priority: req.priority,
-                        ridx: ri,
+                        reason: format!(
+                            "prompt too long: {} tokens + max_new {} exceed the \
+                             KV window (max_seq {}, page budget {})",
+                            req.prompt.len(),
+                            req.max_new,
+                            engine.cfg.max_seq,
+                            engine.kv.n_pages * engine.kv.page_size,
+                        ),
                         arrival: arrivals[ri],
-                        admitted_at,
-                        first_token_at: timer.secs(),
-                        // max_new == 0 honors the bound: zero tokens kept.
-                        out: if req.max_new == 0 { Vec::new() } else { vec![first] },
-                        next: first,
-                        max_new: req.max_new,
-                        steps: 0,
+                        rejected_at: timer.secs(),
+                    });
+                    continue;
+                }
+            }
+            let mut input = req.prompt.as_bytes().to_vec();
+            if let Some(r) = &parked {
+                input.extend_from_slice(&r.out);
+            }
+            // Page gate. Conservative mode reserves worst-case pages up
+            // front so later ensures can never fail; optimistic mode
+            // needs free pages for the prompt, evicting a victim when a
+            // more urgent arrival is entitled to one (priority lanes).
+            let reserved = if opts.preempt {
+                let need = engine.kv.pages_for(input.len());
+                while engine.kv.free_page_count() < need && !active.is_empty() {
+                    let snap: Vec<ActiveSeq> = active.iter().map(snapshot).collect();
+                    let v = policy.victim(&snap).min(snap.len() - 1);
+                    let cand = QueuedRequest {
+                        id: req.id,
+                        prompt_len: input.len(),
+                        priority: req.priority,
+                        arrival: arrivals[ri],
+                        age_boost: opts
+                            .aging
+                            .map(|a| a.boost(now - enqueued_at[ri]))
+                            .unwrap_or(0),
                     };
-                    if first == EOS || req.max_new <= 1 {
-                        // Finished at prefill: retire immediately instead
-                        // of burning a decode step on a dead row.
-                        let moved = engine.kv.free(slot);
-                        debug_assert!(moved.is_none());
-                        set_phase(&mut phases, ri, Phase::Done);
-                        done.push(finish(a, timer.secs()));
+                    if !policy.preempts(&cand, &snap[v]) {
+                        break;
+                    }
+                    let victim = active.swap_remove(v);
+                    evict(engine, victim, &mut evict_ctx!(), now);
+                }
+                if engine.kv.free_page_count() < need {
+                    // Blocked on pages: put the candidate back (evicted
+                    // victims sit at the front; relative order among
+                    // them is the policy's to re-decide next round) and
+                    // stop admitting this iteration.
+                    resume[ri] = parked;
+                    queue.insert(pos.min(queue.len()), ri);
+                    break;
+                }
+                0
+            } else {
+                let remaining = req.max_new - parked.as_ref().map(|r| r.out.len()).unwrap_or(0);
+                let need = engine.kv.pages_for(input.len() + remaining);
+                if committed + need > engine.kv.n_pages {
+                    resume[ri] = parked;
+                    queue.insert(pos.min(queue.len()), ri);
+                    break;
+                }
+                committed += need;
+                need
+            };
+            let seq = engine.kv.alloc();
+            set_phase(&mut phases, ri, Phase::Prefill);
+            let admitted_at = timer.secs();
+            let job = match parked {
+                Some(r) => InFlight {
+                    id: req.id,
+                    priority: req.priority,
+                    ridx: ri,
+                    arrival: arrivals[ri],
+                    admitted_at: r.admitted_at,
+                    first_token_at: r.first_token_at,
+                    has_first: r.has_first,
+                    seq,
+                    input,
+                    base: 0,
+                    out: r.out,
+                    next: r.next,
+                    max_new: req.max_new,
+                    steps: r.steps,
+                    reserved,
+                    preempted: r.preempted,
+                },
+                None => InFlight {
+                    id: req.id,
+                    priority: req.priority,
+                    ridx: ri,
+                    arrival: arrivals[ri],
+                    admitted_at,
+                    first_token_at: 0.0,
+                    has_first: false,
+                    seq,
+                    input,
+                    base: 0,
+                    out: Vec::new(),
+                    next: 0,
+                    max_new: req.max_new,
+                    steps: 0,
+                    reserved,
+                    preempted: 0,
+                },
+            };
+            prefilling.push_back(job);
+        }
+
+        // 3. time-weighted samples (queue depth, page utilization).
+        let sample_now = timer.secs();
+        qd_integral += qd_prev as f64 * (sample_now - sample_last_t);
+        util_integral += util_prev * (sample_now - sample_last_t);
+        sample_last_t = sample_now;
+        qd_prev = queue.len();
+        util_prev = engine.kv.utilization();
+        qd_max = qd_max.max(queue.len());
+
+        // 4. prefill: one chunk of the oldest staged prompt per
+        // iteration (interleaved with decode), or — with interleaving
+        // off — every chunk of every staged prompt right here (the
+        // legacy whole-prompt-at-admission timing).
+        while let Some(mut job) = prefilling.pop_front() {
+            // Pre-flight the chunk's pages so an engine-level grant
+            // failure (which aborts the run) cannot happen: under
+            // preemption, evict decode victims until the chunk fits.
+            let upto = (job.base + engine.max_prefill_chunk()).min(job.input.len());
+            let need = engine
+                .kv
+                .pages_for(upto)
+                .saturating_sub(engine.kv.seq_pages(job.seq).len());
+            if opts.preempt && engine.kv.free_page_count() < need {
+                let now = timer.secs();
+                while engine.kv.free_page_count() < need && !active.is_empty() {
+                    let snap: Vec<ActiveSeq> = active.iter().map(snapshot).collect();
+                    let v = policy.victim(&snap).min(snap.len() - 1);
+                    let victim = active.swap_remove(v);
+                    evict(engine, victim, &mut evict_ctx!(), now);
+                }
+                if engine.kv.free_page_count() < need {
+                    // No decode victims left and still short: only this
+                    // job holds pages, so re-queue it (front) and let
+                    // re-admission restart it with the full pool.
+                    evict(engine, job, &mut evict_ctx!(), now);
+                    break;
+                }
+            }
+            let chunk = engine.prefill_chunk(job.seq, &job.input, job.base);
+            match chunk {
+                Ok((next_base, None)) => {
+                    job.base = next_base;
+                    if opts.interleave {
+                        interleaved_chunks += 1;
+                        prefilling.push_front(job);
+                        break; // one chunk per iteration
+                    }
+                    prefilling.push_front(job); // keep draining this job
+                }
+                Ok((_, Some(tok))) => {
+                    if opts.interleave {
+                        interleaved_chunks += 1;
+                    }
+                    let now = timer.secs();
+                    if !job.has_first {
+                        job.first_token_at = now;
+                        job.has_first = true;
+                    }
+                    if job.out.len() < job.max_new {
+                        job.out.push(tok);
+                    }
+                    job.next = tok;
+                    if tok == EOS || job.out.len() >= job.max_new {
+                        // Finished at prefill: retire immediately
+                        // instead of burning a decode step on a dead
+                        // row.
+                        engine.kv.free(job.seq);
+                        committed -= job.reserved;
+                        set_phase(&mut phases, job.ridx, Phase::Done);
+                        done.push(finish(job, now));
                     } else {
-                        set_phase(&mut phases, ri, Phase::Decode);
-                        active.push(a);
+                        set_phase(&mut phases, job.ridx, Phase::Decode);
+                        active.push(job);
+                    }
+                    if opts.interleave {
+                        break; // one chunk per iteration
                     }
                 }
                 Err(err) => {
                     // Execution failure, not a request fault: nothing
                     // leaks, but the run must not masquerade as healthy.
-                    let moved = engine.kv.free(slot);
-                    debug_assert!(moved.is_none());
+                    engine.kv.free(job.seq);
+                    committed -= job.reserved;
                     return Err(err);
                 }
             }
         }
-        let qd_now = timer.secs();
-        qd_integral += qd_prev as f64 * (qd_now - qd_last_t);
-        qd_last_t = qd_now;
-        qd_prev = queue.len();
-        qd_max = qd_max.max(queue.len());
 
         if active.is_empty() {
-            if queue.is_empty() && pending.is_empty() {
+            if queue.is_empty() && pending.is_empty() && prefilling.is_empty() {
                 break;
             }
-            if queue.is_empty() {
+            if queue.is_empty() && prefilling.is_empty() {
                 // Idle until the next arrival (open-loop only; capped so
                 // the loop re-checks the clock at a sane cadence).
                 let next_at = arrivals[*pending.front().unwrap()];
@@ -429,10 +760,52 @@ pub fn serve_policy(
             continue;
         }
 
-        // 3. one decode step for the whole active set.
+        // 5. page-fault resolution: every decode row needs one more
+        // position this step. Under preemption a fault evicts a victim
+        // (someone else's pages — self only as the last resort);
+        // conservative reservations make faults impossible otherwise.
+        if opts.preempt {
+            let mut i = 0;
+            while i < active.len() {
+                let seq = active[i].seq;
+                let upto = engine.kv.pos[seq] + 1;
+                if engine.kv.ensure(seq, upto) {
+                    i += 1;
+                    continue;
+                }
+                let now = timer.secs();
+                if active.len() == 1 {
+                    // Alone and faulting: the remaining pages belong to
+                    // a staged prefill — yield them and recompute.
+                    let victim = active.swap_remove(0);
+                    evict(engine, victim, &mut evict_ctx!(), now);
+                    continue;
+                }
+                let snap: Vec<ActiveSeq> = active
+                    .iter()
+                    .enumerate()
+                    .filter(|&(j, _)| j != i)
+                    .map(|(_, a)| snapshot(a))
+                    .collect();
+                let p = policy.victim(&snap).min(snap.len() - 1);
+                let j = if p < i { p } else { p + 1 };
+                let victim = active.swap_remove(j);
+                evict(engine, victim, &mut evict_ctx!(), now);
+                if j < i {
+                    i -= 1; // swap_remove shifted our row down
+                }
+                // retry the same row with the freed pages
+            }
+            if active.is_empty() {
+                continue;
+            }
+        }
+
+        // 6. one decode step for the whole active set.
         let step_t0 = timer.secs();
+        let seqs: Vec<usize> = active.iter().map(|a| a.seq).collect();
         let tokens: Vec<u8> = active.iter().map(|a| a.next).collect();
-        let next = engine.decode_step(&tokens)?;
+        let next = engine.decode_step_seqs(&seqs, &tokens)?;
         let step_secs = timer.secs() - step_t0;
         decode_busy += step_secs * active.len() as f64;
         decode_toks += active.len() as u64;
@@ -442,21 +815,19 @@ pub fn serve_policy(
             a.steps += 1;
         }
 
-        // 4. retire finished rows (reverse order keeps slot remaps simple).
-        let mut slot = active.len();
-        while slot > 0 {
-            slot -= 1;
-            let fin = active[slot].next == EOS || active[slot].out.len() >= active[slot].max_new;
+        // 7. retire finished rows (reverse order keeps swap_remove
+        // index math trivial; sequence ids are stable so nothing else
+        // moves).
+        let mut row = active.len();
+        while row > 0 {
+            row -= 1;
+            let fin = active[row].next == EOS || active[row].out.len() >= active[row].max_new;
             if !fin {
                 continue;
             }
-            let a = active.swap_remove(slot); // mirrors kv.free's move-last
-            let moved = engine.kv.free(slot);
-            debug_assert_eq!(
-                moved.is_some(),
-                slot < active.len(),
-                "kv compaction must mirror active-list compaction"
-            );
+            let a = active.swap_remove(row);
+            engine.kv.free(a.seq);
+            committed -= a.reserved;
             set_phase(&mut phases, a.ridx, Phase::Done);
             done.push(finish(a, timer.secs()));
         }
@@ -466,14 +837,33 @@ pub fn serve_policy(
         phases.iter().all(|&p| matches!(p, Phase::Done | Phase::Rejected)),
         "every request must end Done or Rejected: {phases:?}"
     );
-    debug_assert_eq!(engine.kv.n_active, 0, "all KV slots must return to free");
+    debug_assert_eq!(engine.kv.n_active, 0, "all KV sequences must retire");
+    debug_assert_eq!(
+        engine.kv.free_page_count(),
+        engine.kv.n_pages,
+        "every page must return to the free list"
+    );
+    debug_assert_eq!(committed, 0, "all page reservations must be released");
 
     let wall = timer.secs();
-    qd_integral += qd_prev as f64 * (wall - qd_last_t); // close the last interval
+    // close the last sample interval
+    qd_integral += qd_prev as f64 * (wall - sample_last_t);
+    util_integral += util_prev * (wall - sample_last_t);
     let lats: Vec<f64> = done.iter().map(|c| c.latency).collect();
     let servs: Vec<f64> = done.iter().map(|c| c.service_secs).collect();
     let ttfts: Vec<f64> = done.iter().map(|c| c.ttft).collect();
     let queues: Vec<f64> = done.iter().map(|c| c.queue_secs).collect();
+    let mut lanes: Vec<u8> = done.iter().map(|c| c.priority).collect();
+    lanes.sort_unstable();
+    lanes.dedup();
+    let lane_ttft50: Vec<(u8, f64)> = lanes
+        .iter()
+        .map(|&lane| {
+            let ts: Vec<f64> =
+                done.iter().filter(|c| c.priority == lane).map(|c| c.ttft).collect();
+            (lane, percentile(&ts, 50.0))
+        })
+        .collect();
     let stats = ServeStats {
         wall_secs: wall,
         requests: done.len(),
@@ -499,6 +889,11 @@ pub fn serve_policy(
         },
         mean_queue_depth: if wall > 0.0 { qd_integral / wall } else { 0.0 },
         max_queue_depth: qd_max,
+        preemptions,
+        recompute_tokens,
+        page_utilization: if wall > 0.0 { util_integral / wall } else { 0.0 },
+        interleaved_prefill_steps: interleaved_chunks,
+        lane_ttft50,
         moe_secs: engine.moe_time(),
         artifact_secs: engine.total_artifact_time(),
         drop_rate: engine.metrics.drop_rate(),
@@ -541,6 +936,16 @@ mod tests {
         let mut p = vec![Phase::Queued];
         set_phase(&mut p, 0, Phase::Rejected);
         assert_eq!(p[0], Phase::Rejected);
+        // eviction: Decode → Preempted → Queued → Prefill again.
+        let mut p = vec![Phase::Queued];
+        set_phase(&mut p, 0, Phase::Prefill);
+        set_phase(&mut p, 0, Phase::Decode);
+        set_phase(&mut p, 0, Phase::Preempted);
+        set_phase(&mut p, 0, Phase::Queued);
+        set_phase(&mut p, 0, Phase::Prefill);
+        set_phase(&mut p, 0, Phase::Preempted); // mid-prefill fault
+        set_phase(&mut p, 0, Phase::Queued);
+        assert_eq!(p[0], Phase::Queued);
     }
 
     #[test]
@@ -549,5 +954,25 @@ mod tests {
     fn phase_skipping_prefill_is_illegal() {
         let mut p = vec![Phase::Queued];
         set_phase(&mut p, 0, Phase::Done);
+    }
+
+    #[test]
+    #[should_panic(expected = "illegal lifecycle transition")]
+    #[cfg(debug_assertions)]
+    fn preempted_cannot_finish_without_readmission() {
+        let mut p = vec![Phase::Queued];
+        set_phase(&mut p, 0, Phase::Prefill);
+        set_phase(&mut p, 0, Phase::Decode);
+        set_phase(&mut p, 0, Phase::Preempted);
+        set_phase(&mut p, 0, Phase::Done);
+    }
+
+    #[test]
+    fn sched_options_default_is_legacy_plus_interleave() {
+        let o = SchedOptions::default();
+        assert!(!o.preempt);
+        assert!(o.aging.is_none());
+        assert!(o.interleave);
+        assert_eq!(o.admission, AdmissionControl::unbounded());
     }
 }

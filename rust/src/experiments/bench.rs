@@ -18,7 +18,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::engine::batcher::serve;
 use crate::engine::policy::{AdmissionControl, PolicyKind};
-use crate::engine::scheduler::{serve_policy, ArrivalMode};
+use crate::engine::scheduler::{serve_opts, serve_policy, ArrivalMode, SchedOptions, ServeStats};
 use crate::engine::{Engine, EngineOptions};
 use crate::moe::DropPolicy;
 use crate::server;
@@ -232,6 +232,66 @@ pub struct ServeRow {
     pub mean_queue_depth: f64,
     pub max_queue_depth: usize,
     pub wall_secs: f64,
+    /// Prefill/decode interleaving on. `false` rows are the
+    /// drain-prefill-fully baseline recorded at overload multiples so
+    /// the interleaved rows have an in-file p99-TTFT comparison point.
+    pub interleave: bool,
+    /// Evictions over the run (0 — the sweep runs preemption off).
+    pub preemptions: usize,
+    /// KV positions rebuilt by recompute-from-prompt re-admissions.
+    pub recompute_tokens: u64,
+    /// Time-weighted mean fraction of the KV page pool mapped.
+    pub page_utilization: f64,
+    /// Prefill chunks run inside the iteration loop (0 when
+    /// `interleave` is off).
+    pub interleaved_prefill_steps: u64,
+    /// Per-priority-lane p50 TTFT, 0.0 when the lane saw no
+    /// completions — the starvation-control report columns.
+    pub ttft50_lane0: f64,
+    pub ttft50_lane1: f64,
+    pub ttft50_lane2: f64,
+}
+
+/// Assemble one [`ServeRow`] from a measured run's [`ServeStats`].
+fn serve_row(
+    sched: &str,
+    mult: f64,
+    rate: f64,
+    policy: &str,
+    interleave: bool,
+    st: &ServeStats,
+) -> ServeRow {
+    let lane =
+        |l: u8| st.lane_ttft50.iter().find(|&&(k, _)| k == l).map(|&(_, v)| v).unwrap_or(0.0);
+    ServeRow {
+        sched: sched.to_string(),
+        arrival_mult: mult,
+        rate_rps: rate,
+        policy: policy.to_string(),
+        completed: st.requests,
+        rejected: st.rejected,
+        rejected_queue_full: st.rejected_queue_full,
+        drop_rate: st.drop_rate,
+        tokens_per_sec: st.tokens_per_sec,
+        goodput_rps: st.goodput_rps,
+        p50_latency: st.p50_latency,
+        p99_latency: st.p99_latency,
+        p50_service: st.p50_service,
+        p99_service: st.p99_service,
+        p50_ttft: st.p50_ttft,
+        p99_ttft: st.p99_ttft,
+        mean_queue_depth: st.mean_queue_depth,
+        max_queue_depth: st.max_queue_depth,
+        wall_secs: st.wall_secs,
+        interleave,
+        preemptions: st.preemptions,
+        recompute_tokens: st.recompute_tokens,
+        page_utilization: st.page_utilization,
+        interleaved_prefill_steps: st.interleaved_prefill_steps,
+        ttft50_lane0: lane(0),
+        ttft50_lane1: lane(1),
+        ttft50_lane2: lane(2),
+    }
 }
 
 /// Sweep scheduling policy × arrival rate × drop policy in open-loop
@@ -303,28 +363,24 @@ pub fn serve_sweep_rows(
                     sk.policy(),
                     admission,
                 )?;
-                let st = &out.stats;
-                rows.push(ServeRow {
-                    sched: sk.label().to_string(),
-                    arrival_mult: mult,
-                    rate_rps: rate,
-                    policy: label.to_string(),
-                    completed: st.requests,
-                    rejected: st.rejected,
-                    rejected_queue_full: st.rejected_queue_full,
-                    drop_rate: st.drop_rate,
-                    tokens_per_sec: st.tokens_per_sec,
-                    goodput_rps: st.goodput_rps,
-                    p50_latency: st.p50_latency,
-                    p99_latency: st.p99_latency,
-                    p50_service: st.p50_service,
-                    p99_service: st.p99_service,
-                    p50_ttft: st.p50_ttft,
-                    p99_ttft: st.p99_ttft,
-                    mean_queue_depth: st.mean_queue_depth,
-                    max_queue_depth: st.max_queue_depth,
-                    wall_secs: st.wall_secs,
-                });
+                rows.push(serve_row(sk.label(), mult, rate, label, true, &out.stats));
+            }
+            // Non-interleaved baseline at overload: drain each prefill
+            // fully before the decode batch runs. Recorded so the
+            // report can compare overload p99 TTFT against the
+            // interleaved rows above; deliberately not asserted — the
+            // inequality is a measured wall-clock property and flakes
+            // on loaded CI machines.
+            if mult >= 2.0 {
+                engine.policy = DropPolicy::NoDrop;
+                let out = serve_opts(
+                    &mut engine,
+                    &reqs,
+                    ArrivalMode::Open { rate, seed: 11 },
+                    sk.policy(),
+                    SchedOptions { admission, interleave: false, ..Default::default() },
+                )?;
+                rows.push(serve_row(sk.label(), mult, rate, "none", false, &out.stats));
             }
         }
     }
@@ -362,6 +418,14 @@ pub fn write_serve_json(
                     ("mean_queue_depth", num(r.mean_queue_depth)),
                     ("max_queue_depth", num(r.max_queue_depth as f64)),
                     ("wall_secs", num(r.wall_secs)),
+                    ("interleave", Json::Bool(r.interleave)),
+                    ("preemptions", num(r.preemptions as f64)),
+                    ("recompute_tokens", num(r.recompute_tokens as f64)),
+                    ("page_utilization", num(r.page_utilization)),
+                    ("interleaved_prefill_steps", num(r.interleaved_prefill_steps as f64)),
+                    ("ttft50_lane0", num(r.ttft50_lane0)),
+                    ("ttft50_lane1", num(r.ttft50_lane1)),
+                    ("ttft50_lane2", num(r.ttft50_lane2)),
                 ])
             })
             .collect(),
@@ -394,17 +458,18 @@ pub fn serve_sweep(artifacts: &Path, cfg: &ServeSweepConfig) -> Result<()> {
     let (base_rps, rows) = serve_sweep_rows(artifacts, &cfg.model, cfg.quick, cfg.sched)?;
     println!("closed-loop service rate: {base_rps:.2} req/s");
     println!(
-        "{:>8} {:>5} {:>8} {:>8} {:>7} {:>4} {:>4} {:>9} {:>9} {:>9} {:>9} {:>6}",
-        "sched", "load", "policy", "tok/s", "gp(r/s)", "done", "rej", "p50(ms)", "p99(ms)",
-        "ttft50", "ttft99", "qdep"
+        "{:>8} {:>5} {:>8} {:>3} {:>8} {:>7} {:>4} {:>4} {:>9} {:>9} {:>9} {:>9} {:>6}",
+        "sched", "load", "policy", "il", "tok/s", "gp(r/s)", "done", "rej", "p50(ms)",
+        "p99(ms)", "ttft50", "ttft99", "qdep"
     );
     for r in &rows {
         println!(
-            "{:>8} {:>4.2}x {:>8} {:>8.1} {:>7.2} {:>4} {:>4} {:>9.0} {:>9.0} {:>9.0} \
+            "{:>8} {:>4.2}x {:>8} {:>3} {:>8.1} {:>7.2} {:>4} {:>4} {:>9.0} {:>9.0} {:>9.0} \
              {:>9.0} {:>6.1}",
             r.sched,
             r.arrival_mult,
             r.policy,
+            if r.interleave { "on" } else { "off" },
             r.tokens_per_sec,
             r.goodput_rps,
             r.completed,
@@ -460,8 +525,15 @@ mod tests {
             serve_sweep_rows(Path::new("/nonexistent-artifacts"), "mixtral_ish", true, None)
                 .expect("hermetic open-loop sweep");
         assert!(base_rps > 0.0);
-        // fcfs: 3 mults × 2 drop policies; spf/priority: 3 mults × drop-free
-        assert_eq!(rows.len(), 3 * 2 + 3 + 3, "sched × rates × drops");
+        // fcfs: 3 mults × 2 drop policies; spf/priority: 3 mults ×
+        // drop-free; plus one non-interleaved baseline per sched at
+        // each overload mult (2×, 4×).
+        assert_eq!(rows.len(), 3 * 2 + 3 + 3 + 3 * 2, "sched × rates × drops + baselines");
+        assert_eq!(
+            rows.iter().filter(|r| !r.interleave).count(),
+            3 * 2,
+            "one drain-prefill baseline per sched per overload mult"
+        );
         for r in &rows {
             assert_eq!(r.rejected, 1, "exactly the oversized prompt ({})", r.sched);
             assert_eq!(r.rejected_queue_full, 0, "quick load can't fill 24 slots");
@@ -476,6 +548,18 @@ mod tests {
             assert!(r.p50_ttft > 0.0, "TTFT populated");
             assert!(r.tokens_per_sec > 0.0);
             assert!(r.goodput_rps > 0.0, "goodput populated");
+            assert_eq!(r.preemptions, 0, "sweep runs preemption off");
+            assert_eq!(r.recompute_tokens, 0, "no evictions ⇒ nothing recomputed");
+            assert!(r.page_utilization > 0.0, "page pool was sampled");
+            if r.interleave {
+                assert!(r.interleaved_prefill_steps > 0, "iteration loop ran prefill chunks");
+            } else {
+                assert_eq!(r.interleaved_prefill_steps, 0, "baseline drains prefill fully");
+            }
+            assert!(
+                r.ttft50_lane0 > 0.0 || r.ttft50_lane1 > 0.0 || r.ttft50_lane2 > 0.0,
+                "per-lane TTFT populated"
+            );
         }
         for kind in crate::engine::policy::PolicyKind::ALL {
             assert!(
@@ -493,6 +577,7 @@ mod tests {
                     .find(|r| {
                         r.sched == kind.label()
                             && r.policy == "none"
+                            && r.interleave
                             && (r.arrival_mult - mult).abs() < 1e-9
                     })
                     .expect("row present")
@@ -511,7 +596,20 @@ mod tests {
         let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
         assert_eq!(j.get("runs").unwrap().as_arr().unwrap().len(), rows.len());
         let run0 = &j.get("runs").unwrap().as_arr().unwrap()[0];
-        for field in ["sched", "goodput_rps", "p99_ttft", "rejected_queue_full"] {
+        for field in [
+            "sched",
+            "goodput_rps",
+            "p99_ttft",
+            "rejected_queue_full",
+            "interleave",
+            "preemptions",
+            "recompute_tokens",
+            "page_utilization",
+            "interleaved_prefill_steps",
+            "ttft50_lane0",
+            "ttft50_lane1",
+            "ttft50_lane2",
+        ] {
             assert!(run0.get(field).is_ok(), "SERVE_cpu.json runs must carry {field}");
         }
         assert!(j.get("max_queue_depth").is_ok());

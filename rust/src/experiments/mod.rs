@@ -143,7 +143,7 @@ pub fn find_threshold(
             if chunk.len() < 2 {
                 break;
             }
-            engine.kv.n_active = 0;
+            engine.kv.reset();
             let slot = engine.kv.alloc();
             engine.prefill(slot, chunk)?;
         }

@@ -181,7 +181,7 @@ pub fn fig13(artifacts: &Path) -> Result<()> {
         if chunk.len() < 2 {
             break;
         }
-        engine.kv.n_active = 0;
+        engine.kv.reset();
         let slot = engine.kv.alloc();
         engine.prefill(slot, chunk)?;
     }

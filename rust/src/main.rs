@@ -3,7 +3,9 @@
 //! Subcommands:
 //!   serve [model] [--policy fcfs|spf|priority] [--drop none|1t:<T>|2t:<T>]
 //!         [--max-queue N] [--reqs N] [--max-new N]
-//!         [--mode closed|open] [--rate R] [--seed S]     one measured run
+//!         [--mode closed|open] [--rate R] [--seed S]
+//!         [--page-size P] [--kv-pages N] [--preempt]
+//!         [--age-boost SECS] [--no-interleave]           one measured run
 //!         [--sweep | --quick] [--out PATH]   arrival-rate × drop × sched
 //!                                            sweep → SERVE_cpu.json
 //!         (--policy also filters --sweep/--quick to one scheduling
@@ -25,7 +27,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
-use dualsparse::engine::policy::{AdmissionControl, PolicyKind, SchedConfig};
+use dualsparse::engine::policy::{AdmissionControl, AgingConfig, PolicyKind, SchedConfig};
 use dualsparse::engine::scheduler::ArrivalMode;
 use dualsparse::engine::{artifacts_dir, EngineOptions};
 use dualsparse::moe::DropPolicy;
@@ -144,19 +146,53 @@ fn main() -> Result<()> {
                 })?),
                 None => None,
             };
+            let page_size = match args.flag("page-size") {
+                Some(v) => Some(v.parse::<usize>().with_context(|| {
+                    format!("--page-size must be a token count, got {v:?}")
+                })?),
+                None => None,
+            };
+            let kv_pages = match args.flag("kv-pages") {
+                Some(v) => Some(v.parse::<usize>().with_context(|| {
+                    format!("--kv-pages must be a page count, got {v:?}")
+                })?),
+                None => None,
+            };
+            let preempt = args.flag("preempt").is_some();
+            let aging = match args.flag("age-boost") {
+                Some(v) => {
+                    let step_secs = v.parse::<f64>().with_context(|| {
+                        format!("--age-boost must be seconds per boost step, got {v:?}")
+                    })?;
+                    if !(step_secs > 0.0 && step_secs.is_finite()) {
+                        bail!("--age-boost must be positive, finite seconds (got {step_secs})");
+                    }
+                    Some(AgingConfig { step_secs })
+                }
+                None => None,
+            };
+            let interleave = args.flag("no-interleave").is_none();
             if args.flag("sweep").is_some() || args.flag("quick").is_some() {
-                // The sweep fixes its own queue bound and drop ladder;
-                // refusing beats silently writing a JSON the user's
-                // flags did not shape (--policy does apply: it
-                // restricts the scheduling dimension).
+                // The sweep fixes its own queue bound, drop ladder and
+                // scheduler knobs; refusing beats silently writing a
+                // JSON the user's flags did not shape (--policy does
+                // apply: it restricts the scheduling dimension).
                 let legacy_drop_spelling =
                     sched_kind.is_none() && args.flag("policy").is_some();
-                if max_queue.is_some() || args.flag("drop").is_some() || legacy_drop_spelling {
+                let paging_flags =
+                    page_size.is_some() || kv_pages.is_some() || preempt || aging.is_some()
+                        || !interleave;
+                if max_queue.is_some()
+                    || args.flag("drop").is_some()
+                    || legacy_drop_spelling
+                    || paging_flags
+                {
                     bail!(
-                        "--max-queue and drop-policy flags have no effect with \
-                         --sweep/--quick (the sweep uses max queue {} and its own \
-                         drop ladder); use --policy fcfs|spf|priority to restrict \
-                         the sweep",
+                        "--max-queue, drop-policy and paging/preemption flags have \
+                         no effect with --sweep/--quick (the sweep uses max queue \
+                         {}, its own drop ladder, default paging, and records its \
+                         own interleave-off baselines); use --policy \
+                         fcfs|spf|priority to restrict the sweep",
                         experiments::bench::SWEEP_MAX_QUEUE
                     );
                 }
@@ -178,6 +214,9 @@ fn main() -> Result<()> {
                     Some(k) => AdmissionControl::bounded(k),
                     None => AdmissionControl::unbounded(),
                 },
+                preempt,
+                aging,
+                interleave,
             };
             let n = args.flag_usize("reqs", 100);
             let max_new = args.flag_usize("max-new", 12);
@@ -192,15 +231,20 @@ fn main() -> Result<()> {
                 }
                 other => bail!("unknown --mode {other:?}; use closed | open"),
             };
-            let mut engine =
-                Engine::new(&artifacts, &model, policy, EngineOptions::default())?;
+            let opts = EngineOptions { page_size, kv_pages, ..Default::default() };
+            let mut engine = Engine::new(&artifacts, &model, policy, opts)?;
             println!(
                 "serving {model} on {} ({} requests, sched {} max-queue {:?}, \
-                 drop {policy:?}, {mode:?})",
+                 drop {policy:?}, {mode:?}, pages {}×{} tok, preempt={}, \
+                 interleave={})",
                 engine.rt.platform(),
                 n,
                 sched.policy,
                 sched.admission.max_queue_depth,
+                engine.kv.n_pages,
+                engine.kv.page_size,
+                sched.preempt,
+                sched.interleave,
             );
             let reqs = server::workload(n, max_new, 7);
             let report =
@@ -233,6 +277,36 @@ fn main() -> Result<()> {
                 st.goodput_rps,
                 st.rejected,
                 st.rejected_queue_full,
+            );
+            println!(
+                "pages: util={:.2} | preemptions={} recompute={} interleaved_chunks={}",
+                st.page_utilization,
+                st.preemptions,
+                st.recompute_tokens,
+                st.interleaved_prefill_steps,
+            );
+            if !st.lane_ttft50.is_empty() {
+                let lanes: Vec<String> = st
+                    .lane_ttft50
+                    .iter()
+                    .map(|&(l, t)| format!("{l}:{:.0}ms", t * 1e3))
+                    .collect();
+                println!("ttft50 by lane: {}", lanes.join(" "));
+            }
+            // Binary-enforced lifecycle conservation: every submitted
+            // request must end as exactly one completion or rejection,
+            // even across preemption/re-admission — CI greps the line.
+            if st.requests + st.rejected != n {
+                bail!(
+                    "lifecycle violation: {} completed + {} rejected != {} submitted",
+                    st.requests,
+                    st.rejected,
+                    n
+                );
+            }
+            println!(
+                "lifecycle: exactly-once ({} completed + {} rejected = {} submitted)",
+                st.requests, st.rejected, n
             );
         }
         "eval" => {

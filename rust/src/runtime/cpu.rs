@@ -16,9 +16,12 @@
 //! engine's threaded expert dispatch can issue `exec` calls from many
 //! workers at once (the `Backend: Sync` contract). The step-attention
 //! and chunked-prefill (`attn_prefill_chunk_s{S}`) artifacts
-//! additionally accept their KV cache as [`Arg::F32Slices`] — borrowed
-//! per-slot slices — so neither the decode hot path nor a prefill
-//! continuation ever copies the cache.
+//! additionally accept their KV cache as [`Arg::F32Slices`] (borrowed
+//! per-slot slices) or [`Arg::F32Pages`] (borrowed per-page slices from
+//! the paged cache) — so neither the decode hot path nor a prefill
+//! continuation ever copies or gathers the cache. Both views preserve
+//! the exact ascending-position FP operation order of the contiguous
+//! layout, so all three are bit-identical.
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -108,6 +111,16 @@ impl Backend for CpuRef {
                             .with_context(|| format!("{name}: dangling buffer id {}", id.0))?,
                     ),
                     Arg::F32Slices(slices, shape) => RArg::S(*slices, *shape),
+                    Arg::F32Pages { pages, row_starts, n_heads, page, d_head, t_max } => {
+                        RArg::P {
+                            pages,
+                            row_starts,
+                            n_heads: *n_heads,
+                            page: *page,
+                            d_head: *d_head,
+                            t_max: *t_max,
+                        }
+                    }
                     Arg::I32(v) => RArg::I(*v),
                 })
             })
@@ -216,6 +229,14 @@ impl Backend for CpuRef {
 enum RArg<'a> {
     T(&'a Tensor),
     S(&'a [&'a [f32]], &'a [usize]),
+    P {
+        pages: &'a [&'a [f32]],
+        row_starts: &'a [usize],
+        n_heads: usize,
+        page: usize,
+        d_head: usize,
+        t_max: usize,
+    },
     I(&'a [i32]),
 }
 
@@ -235,14 +256,59 @@ fn iarg<'a>(name: &str, rs: &[RArg<'a>], i: usize) -> Result<&'a [i32]> {
     }
 }
 
-/// Borrowed view of a `[B, H, T, dh]` KV cache: one contiguous
-/// `H·T·dh` block per batch row — either rows of one contiguous tensor
-/// or zero-copy per-slot slices ([`Arg::F32Slices`]).
+/// One batch row of a KV-cache view: either a contiguous `H·T·dh`
+/// block (tensor row or zero-copy per-slot slice) or an ordered list
+/// of `[H, page, dh]` page slices from the paged cache.
+enum KvRow<'a> {
+    Contig(&'a [f32]),
+    Paged { pages: &'a [&'a [f32]], page: usize },
+}
+
+/// Borrowed view of a `[B, H, T, dh]` KV cache. Positions past a
+/// paged row's mapped pages read as zero (attention never looks there:
+/// `pos` is clamped to the row's capacity).
 struct KvView<'a> {
-    rows: Vec<&'a [f32]>,
+    rows: Vec<KvRow<'a>>,
     n_heads: usize,
     t_max: usize,
     d_head: usize,
+}
+
+impl<'a> KvView<'a> {
+    /// Positions row `bi` can actually serve.
+    fn capacity(&self, bi: usize) -> usize {
+        match &self.rows[bi] {
+            KvRow::Contig(_) => self.t_max,
+            KvRow::Paged { pages, page } => (pages.len() * page).min(self.t_max),
+        }
+    }
+
+    /// Walk head `hi` of row `bi` over positions `0..upto` as
+    /// contiguous runs: `f(t0, lane)` where `lane` holds positions
+    /// `t0..t0 + lane.len()/d_head` of that head, in ascending order.
+    /// A contiguous row is one run; a paged row is one run per page —
+    /// exactly the same scalars in exactly the same order, which keeps
+    /// paged attention bit-identical to the contiguous layout.
+    fn head_runs(&self, bi: usize, hi: usize, upto: usize, f: &mut dyn FnMut(usize, &'a [f32])) {
+        let dh = self.d_head;
+        match &self.rows[bi] {
+            KvRow::Contig(data) => {
+                let hbase = hi * self.t_max * dh;
+                f(0, &data[hbase..hbase + upto * dh]);
+            }
+            KvRow::Paged { pages, page } => {
+                for (pi, pg) in pages.iter().enumerate() {
+                    let t0 = pi * page;
+                    if t0 >= upto {
+                        break;
+                    }
+                    let run = page.min(upto - t0);
+                    let hbase = hi * page * dh;
+                    f(t0, &pg[hbase..hbase + run * dh]);
+                }
+            }
+        }
+    }
 }
 
 /// Resolve argument `i` as a KV-cache view.
@@ -256,7 +322,7 @@ fn kv_arg<'a>(name: &str, rs: &[RArg<'a>], i: usize) -> Result<KvView<'a>> {
             let stride = h * tm * dh;
             Ok(KvView {
                 rows: (0..b)
-                    .map(|bi| &t.data[bi * stride..(bi + 1) * stride])
+                    .map(|bi| KvRow::Contig(&t.data[bi * stride..(bi + 1) * stride]))
                     .collect(),
                 n_heads: h,
                 t_max: tm,
@@ -278,10 +344,38 @@ fn kv_arg<'a>(name: &str, rs: &[RArg<'a>], i: usize) -> Result<KvView<'a>> {
                 }
             }
             Ok(KvView {
-                rows: slices.to_vec(),
+                rows: slices.iter().map(|&s| KvRow::Contig(s)).collect(),
                 n_heads: shape[1],
                 t_max: shape[2],
                 d_head: shape[3],
+            })
+        }
+        Some(RArg::P { pages, row_starts, n_heads, page, d_head, t_max }) => {
+            if row_starts.is_empty() || row_starts[0] != 0 {
+                bail!("{name}: kv arg {i} row_starts must begin at 0");
+            }
+            if *row_starts.last().unwrap() != pages.len()
+                || row_starts.windows(2).any(|w| w[0] > w[1])
+            {
+                bail!(
+                    "{name}: kv arg {i} row_starts {row_starts:?} inconsistent with {} pages",
+                    pages.len()
+                );
+            }
+            let stride = n_heads * page * d_head;
+            for (pi, p) in pages.iter().enumerate() {
+                if p.len() != stride {
+                    bail!("{name}: kv arg {i} page {pi} has {} elems, want {stride}", p.len());
+                }
+            }
+            Ok(KvView {
+                rows: row_starts
+                    .windows(2)
+                    .map(|w| KvRow::Paged { pages: &pages[w[0]..w[1]], page })
+                    .collect(),
+                n_heads,
+                t_max,
+                d_head,
             })
         }
         _ => bail!("{name}: missing kv-cache arg {i}"),
@@ -398,13 +492,14 @@ fn op_attn_prefill(
 
 /// Chunked-prefill continuation (`attn_prefill_chunk_s{S}`): like
 /// [`op_attn_prefill`] but query `qi` (global position `base + qi`)
-/// first attends over the slot's cached K/V — positions `0..base`,
-/// borrowed zero-copy from the engine's KV cache as a `[1, H, T, dh]`
-/// view — and then over the in-chunk causal window `0..=qi`. Scores are
-/// computed and context accumulated in ascending global-position order
-/// (cached first, then in-chunk), which is the exact operation order of
-/// a single-pass prefill over the whole prompt: chunked outputs are
-/// **bit-identical** to an unchunked pass with a large-enough bucket.
+/// first attends over the sequence's cached K/V — positions `0..base`,
+/// borrowed zero-copy from the engine's KV cache as a single-row
+/// contiguous or paged view — and then over the in-chunk causal window
+/// `0..=qi`. Scores are computed and context accumulated in ascending
+/// global-position order (cached first, then in-chunk), which is the
+/// exact operation order of a single-pass prefill over the whole
+/// prompt: chunked outputs are **bit-identical** to an unchunked pass
+/// with a large-enough bucket, whatever the page size.
 /// Returns (y [S,d], ln2x [S,d], K [S,H,dh], V [S,H,dh]) — chunk-local
 /// K/V only; the engine writes them behind `base`. Head geometry comes
 /// from the cache view.
@@ -439,25 +534,29 @@ fn op_attn_prefill_chunk(
     if base > t_max {
         bail!("attn_prefill_chunk: base {base} > cache window {t_max}");
     }
+    if base > kcache.capacity(0) || base > vcache.capacity(0) {
+        bail!(
+            "attn_prefill_chunk: base {base} exceeds the view's mapped capacity {}",
+            kcache.capacity(0).min(vcache.capacity(0))
+        );
+    }
     let xn = rmsnorm_rows(x, &ln1.data);
     let q = matmul(&xn, wq);
     let k = matmul(&xn, wk);
     let v = matmul(&xn, wv);
     let scale = 1.0 / (d_head as f32).sqrt();
-    let krows = kcache.rows[0];
-    let vrows = vcache.rows[0];
     let per_head = |hi: usize| -> Vec<f32> {
         let off = hi * d_head;
-        let hbase = hi * t_max * d_head;
         let mut hctx = vec![0.0f32; s * d_head];
         let mut scores = vec![0.0f32; base + s];
         for qi in 0..s {
             let qrow = &q.data[qi * d + off..qi * d + off + d_head];
             // cached positions 0..base first…
-            for ti in 0..base {
-                scores[ti] =
-                    dot(qrow, &krows[hbase + ti * d_head..hbase + (ti + 1) * d_head]) * scale;
-            }
+            kcache.head_runs(0, hi, base, &mut |t0, lane| {
+                for (j, kc) in lane.chunks_exact(d_head).enumerate() {
+                    scores[t0 + j] = dot(qrow, kc) * scale;
+                }
+            });
             // …then the in-chunk causal window (global base..=base+qi).
             for ki in 0..=qi {
                 scores[base + ki] =
@@ -465,13 +564,14 @@ fn op_attn_prefill_chunk(
             }
             softmax_inplace(&mut scores[..base + qi + 1]);
             let crow = &mut hctx[qi * d_head..(qi + 1) * d_head];
-            for ti in 0..base {
-                let w = scores[ti];
-                let vrow = &vrows[hbase + ti * d_head..hbase + (ti + 1) * d_head];
-                for (o, &vv) in crow.iter_mut().zip(vrow) {
-                    *o += w * vv;
+            vcache.head_runs(0, hi, base, &mut |t0, lane| {
+                for (j, vrow) in lane.chunks_exact(d_head).enumerate() {
+                    let w = scores[t0 + j];
+                    for (o, &vv) in crow.iter_mut().zip(vrow) {
+                        *o += w * vv;
+                    }
                 }
-            }
+            });
             for ki in 0..=qi {
                 let w = scores[base + ki];
                 let vrow = &v.data[ki * d + off..ki * d + off + d_head];
@@ -547,29 +647,31 @@ fn op_attn_step(
     let scale = 1.0 / (d_head as f32).sqrt();
     let mut ctx = vec![0.0f32; b * d];
     for bi in 0..b {
-        let p = (pos[bi].max(0) as usize).min(t_max);
-        let krows = kcache.rows[bi];
-        let vrows = vcache.rows[bi];
+        // clamp to the row's mapped capacity: a padding row (no pages)
+        // attends only to itself, exactly like the old zero-slot rows.
+        let p = (pos[bi].max(0) as usize).min(kcache.capacity(bi).min(vcache.capacity(bi)));
         let mut scores = vec![0.0f32; p + 1];
         for hi in 0..n_heads {
             let off = hi * d_head;
-            let hbase = hi * t_max * d_head;
             let qrow = &q.data[bi * d + off..bi * d + off + d_head];
-            for (ti, sc) in scores.iter_mut().enumerate().take(p) {
-                *sc = dot(qrow, &krows[hbase + ti * d_head..hbase + (ti + 1) * d_head]) * scale;
-            }
+            kcache.head_runs(bi, hi, p, &mut |t0, lane| {
+                for (j, kc) in lane.chunks_exact(d_head).enumerate() {
+                    scores[t0 + j] = dot(qrow, kc) * scale;
+                }
+            });
             // the token attends to itself via the freshly-projected K.
             scores[p] =
                 dot(qrow, &new_k.data[bi * d + off..bi * d + off + d_head]) * scale;
             softmax_inplace(&mut scores);
             let crow = &mut ctx[bi * d + off..bi * d + off + d_head];
-            for ti in 0..p {
-                let w = scores[ti];
-                let vrow = &vrows[hbase + ti * d_head..hbase + (ti + 1) * d_head];
-                for (o, &vv) in crow.iter_mut().zip(vrow) {
-                    *o += w * vv;
+            vcache.head_runs(bi, hi, p, &mut |t0, lane| {
+                for (j, vrow) in lane.chunks_exact(d_head).enumerate() {
+                    let w = scores[t0 + j];
+                    for (o, &vv) in crow.iter_mut().zip(vrow) {
+                        *o += w * vv;
+                    }
                 }
-            }
+            });
             let w = scores[p];
             for (o, &vv) in crow
                 .iter_mut()
@@ -848,6 +950,194 @@ mod tests {
         for (a, bt) in via_tensor.iter().zip(&via_slices) {
             assert_eq!(a.data, bt.data);
             assert_eq!(a.shape, bt.shape);
+        }
+    }
+
+    /// Split a contiguous `[H, t_max, dh]` row into `[H, page, dh]`
+    /// pages (zero-padded tail), the layout `PagedKvCache` stores.
+    fn paginate(row: &[f32], h: usize, t_max: usize, dh: usize, page: usize) -> Vec<Vec<f32>> {
+        let n_pages = t_max.div_ceil(page);
+        let mut out = vec![vec![0.0f32; h * page * dh]; n_pages];
+        for (pi, pg) in out.iter_mut().enumerate() {
+            for hi in 0..h {
+                for r in 0..page {
+                    let t = pi * page + r;
+                    if t >= t_max {
+                        break;
+                    }
+                    pg[(hi * page + r) * dh..(hi * page + r + 1) * dh]
+                        .copy_from_slice(&row[(hi * t_max + t) * dh..(hi * t_max + t + 1) * dh]);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn attn_step_paged_view_is_bit_identical_to_contiguous() {
+        // Arg::F32Pages (paged KV, any page size) must be byte-identical
+        // to the same cache fed as one contiguous tensor — including a
+        // pageless padding row, which must behave like a zeroed slot.
+        let mut rng = SplitMix64::new(7);
+        let (b, d, h, dh, t_max) = (3usize, 8usize, 2usize, 4usize, 6usize);
+        let x = randn(&mut rng, vec![b, d], 0.5);
+        let ln1 = Tensor::new(vec![d], vec![1.0; d]);
+        let ln2 = Tensor::new(vec![d], vec![1.0; d]);
+        let wq = randn(&mut rng, vec![d, d], 0.3);
+        let wk = randn(&mut rng, vec![d, d], 0.3);
+        let wv = randn(&mut rng, vec![d, d], 0.3);
+        let wo = randn(&mut rng, vec![d, d], 0.3);
+        let mut kc = randn(&mut rng, vec![b, h, t_max, dh], 0.4);
+        let mut vc = randn(&mut rng, vec![b, h, t_max, dh], 0.4);
+        // row 1 is the "padding" row: pos 0, zero cache contiguously,
+        // zero pages in the paged view.
+        let stride = h * t_max * dh;
+        kc.data[stride..2 * stride].fill(0.0);
+        vc.data[stride..2 * stride].fill(0.0);
+        let pos = [2i32, 0, 5];
+        let be = CpuRef::new();
+        let via_tensor = be
+            .exec(
+                "attn_step_b3",
+                &[
+                    Arg::F32(&x),
+                    Arg::F32(&ln1),
+                    Arg::F32(&wq),
+                    Arg::F32(&wk),
+                    Arg::F32(&wv),
+                    Arg::F32(&wo),
+                    Arg::F32(&ln2),
+                    Arg::F32(&kc),
+                    Arg::F32(&vc),
+                    Arg::I32(&pos),
+                ],
+            )
+            .unwrap();
+        for page in [1usize, 2, 4, 16] {
+            let mut kpages_own: Vec<Vec<f32>> = Vec::new();
+            let mut vpages_own: Vec<Vec<f32>> = Vec::new();
+            let mut row_starts = vec![0usize];
+            for bi in 0..b {
+                if bi != 1 {
+                    kpages_own
+                        .extend(paginate(&kc.data[bi * stride..], h, t_max, dh, page));
+                    vpages_own
+                        .extend(paginate(&vc.data[bi * stride..], h, t_max, dh, page));
+                }
+                row_starts.push(kpages_own.len());
+            }
+            let kpages: Vec<&[f32]> = kpages_own.iter().map(|p| p.as_slice()).collect();
+            let vpages: Vec<&[f32]> = vpages_own.iter().map(|p| p.as_slice()).collect();
+            let via_pages = be
+                .exec(
+                    "attn_step_b3",
+                    &[
+                        Arg::F32(&x),
+                        Arg::F32(&ln1),
+                        Arg::F32(&wq),
+                        Arg::F32(&wk),
+                        Arg::F32(&wv),
+                        Arg::F32(&wo),
+                        Arg::F32(&ln2),
+                        Arg::F32Pages {
+                            pages: &kpages,
+                            row_starts: &row_starts,
+                            n_heads: h,
+                            page,
+                            d_head: dh,
+                            t_max,
+                        },
+                        Arg::F32Pages {
+                            pages: &vpages,
+                            row_starts: &row_starts,
+                            n_heads: h,
+                            page,
+                            d_head: dh,
+                            t_max,
+                        },
+                        Arg::I32(&pos),
+                    ],
+                )
+                .unwrap();
+            for (a, bt) in via_tensor.iter().zip(&via_pages) {
+                assert_eq!(a.data, bt.data, "page size {page} diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn prefill_chunk_paged_view_is_bit_identical_to_contiguous() {
+        let mut rng = SplitMix64::new(8);
+        let (s, base, d, h, dh, t_max) = (3usize, 5usize, 8usize, 2usize, 4usize, 10usize);
+        let x = randn(&mut rng, vec![s, d], 0.5);
+        let ln1 = Tensor::new(vec![d], vec![1.0; d]);
+        let ln2 = Tensor::new(vec![d], vec![1.0; d]);
+        let wq = randn(&mut rng, vec![d, d], 0.3);
+        let wk = randn(&mut rng, vec![d, d], 0.3);
+        let wv = randn(&mut rng, vec![d, d], 0.3);
+        let wo = randn(&mut rng, vec![d, d], 0.3);
+        let kc = randn(&mut rng, vec![1, h, t_max, dh], 0.4);
+        let vc = randn(&mut rng, vec![1, h, t_max, dh], 0.4);
+        let base_arg = [base as i32];
+        let be = CpuRef::new();
+        let name = format!("attn_prefill_chunk_s{s}");
+        let via_tensor = be
+            .exec(
+                &name,
+                &[
+                    Arg::F32(&x),
+                    Arg::F32(&ln1),
+                    Arg::F32(&wq),
+                    Arg::F32(&wk),
+                    Arg::F32(&wv),
+                    Arg::F32(&wo),
+                    Arg::F32(&ln2),
+                    Arg::F32(&kc),
+                    Arg::F32(&vc),
+                    Arg::I32(&base_arg),
+                ],
+            )
+            .unwrap();
+        for page in [2usize, 3, 16] {
+            let kpages_own = paginate(&kc.data, h, t_max, dh, page);
+            let vpages_own = paginate(&vc.data, h, t_max, dh, page);
+            let kpages: Vec<&[f32]> = kpages_own.iter().map(|p| p.as_slice()).collect();
+            let vpages: Vec<&[f32]> = vpages_own.iter().map(|p| p.as_slice()).collect();
+            let row_starts = [0, kpages.len()];
+            let via_pages = be
+                .exec(
+                    &name,
+                    &[
+                        Arg::F32(&x),
+                        Arg::F32(&ln1),
+                        Arg::F32(&wq),
+                        Arg::F32(&wk),
+                        Arg::F32(&wv),
+                        Arg::F32(&wo),
+                        Arg::F32(&ln2),
+                        Arg::F32Pages {
+                            pages: &kpages,
+                            row_starts: &row_starts,
+                            n_heads: h,
+                            page,
+                            d_head: dh,
+                            t_max,
+                        },
+                        Arg::F32Pages {
+                            pages: &vpages,
+                            row_starts: &row_starts,
+                            n_heads: h,
+                            page,
+                            d_head: dh,
+                            t_max,
+                        },
+                        Arg::I32(&base_arg),
+                    ],
+                )
+                .unwrap();
+            for (a, bt) in via_tensor.iter().zip(&via_pages) {
+                assert_eq!(a.data, bt.data, "page size {page} diverged");
+            }
         }
     }
 

@@ -59,6 +59,28 @@ pub enum Arg<'a> {
     /// path never clones the cache; backends without host-pointer
     /// access materialize the view on upload.
     F32Slices(&'a [&'a [f32]], &'a [usize]),
+    /// Zero-copy *paged* KV view: a logical `[B, H, t_max, dh]` cache
+    /// tensor whose positions are scattered over fixed-size pages
+    /// (`engine::kv::PagedKvCache`). Row `bi` owns
+    /// `pages[row_starts[bi]..row_starts[bi + 1]]` (CSR layout); each
+    /// page slice holds `n_heads · page · d_head` floats laid out
+    /// `[H, page, dh]`, covering `page` consecutive logical positions.
+    /// A row with an empty page range is an all-zero padding row.
+    /// CpuRef walks the pages in place (per-head runs stay contiguous
+    /// within a page); backends without host-pointer access gather into
+    /// the contiguous `[B, H, t_max, dh]` layout on upload.
+    F32Pages {
+        pages: &'a [&'a [f32]],
+        /// Length `B + 1`, monotone, `row_starts[B] == pages.len()`.
+        row_starts: &'a [usize],
+        n_heads: usize,
+        /// Positions per page.
+        page: usize,
+        d_head: usize,
+        /// Logical position window (the contiguous materialization
+        /// size; positions past a row's mapped pages read as zero).
+        t_max: usize,
+    },
     I32(&'a [i32]),
     /// A buffer uploaded once via [`Backend::upload`] (weights path).
     Buf(BufId),
@@ -111,6 +133,16 @@ pub trait Backend: Sync {
     /// not proven thread-safe must keep the default.
     fn supports_concurrent_exec(&self) -> bool {
         false
+    }
+
+    /// Whether this backend can execute the named artifact. Callers on
+    /// long-running paths (serving) probe this up front to fail fast
+    /// with a clear error instead of erroring mid-run on the first
+    /// request that needs the artifact. CpuRef synthesizes every
+    /// artifact, so the default is `true`; AOT backends override it
+    /// with an artifact-exists check.
+    fn supports_artifact(&self, _name: &str) -> bool {
+        true
     }
 
     /// Upload a host tensor to a backend-resident buffer.

@@ -104,6 +104,18 @@ impl Backend for PjrtRuntime {
         self.client.platform_name()
     }
 
+    /// An artifact is executable iff it is already compiled or its
+    /// HLO text exists on disk. The scheduler probes
+    /// `attn_prefill_chunk_s{S}` with this before a serving run so a
+    /// missing chunk artifact fails fast instead of mid-run on the
+    /// first long prompt.
+    fn supports_artifact(&self, name: &str) -> bool {
+        if self.cache.lock().unwrap().contains_key(name) {
+            return true;
+        }
+        self.artifacts_dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
     /// Upload a host tensor to a device-resident buffer (weights path).
     fn upload(&self, t: &Tensor) -> Result<BufId> {
         let _serial = self.call.lock().unwrap();
@@ -143,6 +155,39 @@ impl Backend for PjrtRuntime {
                         bail!("{name}: slice view holds {} elems, shape needs {n}", flat.len());
                     }
                     owned.push(self.client.buffer_from_host_buffer(&flat, shape, None)?);
+                    slots.push(Some(owned.len() - 1));
+                }
+                Arg::F32Pages { pages, row_starts, n_heads, page, d_head, t_max } => {
+                    // Gather the paged view into the contiguous
+                    // [B, H, t_max, dh] layout the artifact was lowered
+                    // against (unmapped positions read as zero).
+                    let b = row_starts.len().saturating_sub(1);
+                    let (h, dh, tm) = (*n_heads, *d_head, *t_max);
+                    let stride = h * *page * dh;
+                    let mut flat = vec![0.0f32; b * h * tm * dh];
+                    for bi in 0..b {
+                        for (pi, pg) in pages[row_starts[bi]..row_starts[bi + 1]]
+                            .iter()
+                            .enumerate()
+                        {
+                            if pg.len() != stride {
+                                bail!(
+                                    "{name}: page {pi} of row {bi} has {} elems, want {stride}",
+                                    pg.len()
+                                );
+                            }
+                            let t0 = pi * *page;
+                            let run = (*page).min(tm.saturating_sub(t0));
+                            for hi in 0..h {
+                                let src = hi * *page * dh;
+                                let dst = ((bi * h + hi) * tm + t0) * dh;
+                                flat[dst..dst + run * dh]
+                                    .copy_from_slice(&pg[src..src + run * dh]);
+                            }
+                        }
+                    }
+                    let shape = [b, h, tm, dh];
+                    owned.push(self.client.buffer_from_host_buffer(&flat, &shape, None)?);
                     slots.push(Some(owned.len() - 1));
                 }
                 Arg::I32(v) => {

@@ -5,9 +5,7 @@
 
 use anyhow::Result;
 
-use crate::engine::batcher::{
-    serve, serve_policy, ArrivalMode, Request, SchedConfig, ServeStats,
-};
+use crate::engine::batcher::{serve, serve_opts, ArrivalMode, Request, SchedConfig, ServeStats};
 use crate::engine::Engine;
 use crate::moe::DropPolicy;
 use crate::util::rng::SplitMix64;
@@ -70,14 +68,15 @@ pub fn run_once(engine: &mut Engine, reqs: &[Request], policy: DropPolicy,
 
 /// [`run_once`] under an explicit arrival mode (closed batch loop or
 /// open-loop Poisson arrivals) and scheduling configuration (admission
-/// ordering policy + queue bound). `SchedConfig::default()` — FCFS,
-/// unbounded — reproduces the pre-policy scheduler byte-for-byte.
+/// ordering policy, queue bound, preemption / aging / interleaving
+/// knobs). `SchedConfig::default()` — FCFS, unbounded, no preemption —
+/// reproduces the pre-policy completion texts byte-for-byte.
 pub fn run_once_mode(engine: &mut Engine, reqs: &[Request], policy: DropPolicy,
                      label: &str, mode: ArrivalMode, sched: SchedConfig) -> Result<RunReport> {
     warmup(engine)?;
     let saved = engine.policy;
     engine.policy = policy;
-    let measured = serve_policy(engine, reqs, mode, sched.policy.policy(), sched.admission);
+    let measured = serve_opts(engine, reqs, mode, sched.policy.policy(), sched.options());
     engine.policy = saved;
     let out = measured?;
     Ok(RunReport {

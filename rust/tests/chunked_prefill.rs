@@ -56,25 +56,18 @@ fn three_bucket_prompt_is_bit_identical_to_single_pass() {
     assert_eq!(la, lb, "chunked logits must be bit-identical to a single pass");
     assert_eq!(ta, tb, "first generated token must agree");
 
-    // KV positions line up after chunking: the decode cursor sits at the
-    // prompt length and every cached position matches bitwise (untouched
-    // tail positions are zero on both sides, so whole-slot compare is
-    // exact).
+    // KV positions line up after chunking: the decode cursor sits at
+    // the prompt length and every cached position matches bitwise.
+    // Compare in gathered (logical [H, max_seq, dh]) order — physical
+    // page ids are an allocation detail; unmapped tail positions gather
+    // as zero on both sides, so the whole-window compare is exact.
     assert_eq!(chunked.kv.pos[sa], 300);
     assert_eq!(single.kv.pos[sb], 300);
-    let stride = chunked.kv.slot_stride();
-    assert_eq!(stride, single.kv.slot_stride());
     for li in 0..chunked.cfg.n_layers {
-        assert_eq!(
-            chunked.kv.k[li].data[..stride],
-            single.kv.k[li].data[..stride],
-            "layer {li} K cache diverged"
-        );
-        assert_eq!(
-            chunked.kv.v[li].data[..stride],
-            single.kv.v[li].data[..stride],
-            "layer {li} V cache diverged"
-        );
+        let (ka, va) = chunked.kv.gather_seq(li, sa);
+        let (kb, vb) = single.kv.gather_seq(li, sb);
+        assert_eq!(ka, kb, "layer {li} K cache diverged");
+        assert_eq!(va, vb, "layer {li} V cache diverged");
     }
 
     // Decode continues identically over the chunk-written cache.

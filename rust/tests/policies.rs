@@ -7,9 +7,11 @@
 
 use std::path::PathBuf;
 
-use dualsparse::engine::batcher::{serve_policy, serve_with, ArrivalMode, Request};
+use dualsparse::engine::batcher::{
+    serve_opts, serve_policy, serve_with, ArrivalMode, Request, SchedOptions,
+};
 use dualsparse::engine::policy::{
-    AdmissionControl, Fcfs, PolicyKind, PriorityLanes, ShortestPromptFirst,
+    AdmissionControl, AgingConfig, Fcfs, PolicyKind, PriorityLanes, ShortestPromptFirst,
 };
 use dualsparse::engine::{Engine, EngineOptions, MAX_SLOTS};
 use dualsparse::moe::DropPolicy;
@@ -106,6 +108,38 @@ fn spf_admits_shortest_prompts_first() {
     for id in 0..MAX_SLOTS {
         assert!(wave1.contains(&id), "FCFS wave1 must be ids 0..16 (got {wave1:?})");
     }
+}
+
+#[test]
+fn saturated_aging_degrades_spf_to_arrival_order() {
+    // Starvation control, driven to its limit: with a vanishing aging
+    // step every queued request's effective prompt length collapses to
+    // zero by the first admission pass, so SPF's tie-break (earliest
+    // arrival among equals) must reproduce FCFS — the longest prompts
+    // (lowest ids) can no longer be starved out of wave 1.
+    let mut e = engine();
+    let n = MAX_SLOTS + 4;
+    let reqs = descending_length_requests(n);
+    let out = serve_opts(
+        &mut e,
+        &reqs,
+        ArrivalMode::Closed,
+        &ShortestPromptFirst,
+        SchedOptions { aging: Some(AgingConfig { step_secs: 1e-12 }), ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(out.completions.len(), n);
+    let wave1 = first_wave_ids(&out.completions);
+    for id in 0..MAX_SLOTS {
+        assert!(
+            wave1.contains(&id),
+            "fully aged SPF must admit in arrival order (wave1: {wave1:?})"
+        );
+    }
+    // The per-lane TTFT report column is populated (single lane 0 here).
+    assert_eq!(out.stats.lane_ttft50.len(), 1);
+    assert_eq!(out.stats.lane_ttft50[0].0, 0);
+    assert!(out.stats.lane_ttft50[0].1 > 0.0);
 }
 
 #[test]

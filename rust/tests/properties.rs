@@ -1,7 +1,7 @@
 //! Property-based tests (seeded SplitMix64 fuzzing — proptest is not in
 //! the offline vendor set) over the coordinator invariants: routing,
 //! drop policies, dispatch planning, load-aware thresholding, capacity
-//! bucketing, KV-cache compaction, and the comm model.
+//! bucketing, paged KV-cache allocation, and the comm model.
 
 #![allow(clippy::needless_range_loop, clippy::manual_memcpy, clippy::type_complexity)]
 
@@ -205,30 +205,78 @@ fn bucket_rounding_fuzz() {
 }
 
 #[test]
-fn kv_cache_alloc_free_fuzz() {
+fn kv_paged_alloc_free_fuzz() {
+    // Free-list conservation under a fuzzed alloc / grow / evict
+    // schedule (the preemption path is one `free(seq)`): every page is
+    // either on the free list or mapped by exactly one live sequence,
+    // a refused all-or-nothing grant changes nothing, and nothing ever
+    // double-frees or leaks a page.
     let mut rng = SplitMix64::new(0x5EED);
-    for _ in 0..50 {
-        let mut kv = KvCache::new(2, 2, 16, 4, 8);
-        let mut live = 0usize;
-        for _ in 0..200 {
-            if kv.has_free() && (live == 0 || rng.below(2) == 0) {
-                let s = kv.alloc();
-                assert_eq!(s, live);
-                live += 1;
-                // write a token so pos moves
-                let k = vec![1.0f32; 8];
-                kv.append(0, s, &k, &k);
-                kv.append(1, s, &k, &k);
-            } else if live > 0 {
-                let victim = rng.below(live);
-                kv.free(victim);
-                live -= 1;
+    for round in 0..50 {
+        let page_size = 1 + rng.below(5);
+        let n_pages = 4 + rng.below(13);
+        let max_seq = page_size * n_pages.min(8);
+        let mut kv = KvCache::new(2, 2, max_seq, 4, 6, page_size, n_pages);
+        let mut live: Vec<usize> = Vec::new();
+        for _ in 0..300 {
+            match rng.below(3) {
+                0 if kv.has_free() => {
+                    let s = kv.alloc();
+                    assert!(!live.contains(&s), "sequence id {s} handed out twice");
+                    assert_eq!(kv.seq_pages(s).len(), 0, "fresh sequences own no pages");
+                    live.push(s);
+                }
+                1 if !live.is_empty() => {
+                    // Grow a random live sequence by a random amount.
+                    let s = live[rng.below(live.len())];
+                    if kv.pos[s] >= max_seq {
+                        continue; // window exhausted; only free can help
+                    }
+                    let upto = (kv.pos[s] + 1 + rng.below(2 * page_size)).min(max_seq);
+                    let before = (kv.free_page_count(), kv.seq_pages(s).len());
+                    if kv.ensure(s, upto) {
+                        assert!(kv.seq_capacity(s) >= upto);
+                        // write one token so pos advances into the grant
+                        let k = vec![1.0f32; 8];
+                        kv.append(0, s, &k, &k);
+                        kv.append(1, s, &k, &k);
+                    } else {
+                        assert_eq!(
+                            (kv.free_page_count(), kv.seq_pages(s).len()),
+                            before,
+                            "a refused grant must not partially allocate"
+                        );
+                    }
+                }
+                _ if !live.is_empty() => {
+                    // Evict a random victim: pages return immediately.
+                    let s = live.swap_remove(rng.below(live.len()));
+                    let mapped = kv.seq_pages(s).len();
+                    let free_before = kv.free_page_count();
+                    kv.free(s);
+                    assert_eq!(kv.free_page_count(), free_before + mapped);
+                    assert_eq!(kv.seq_pages(s).len(), 0);
+                }
+                _ => {}
             }
-            assert_eq!(kv.n_active, live);
-            for s in 0..live {
-                assert!(kv.pos[s] <= 16);
+            // Conservation: free + mapped == pool, no page mapped twice.
+            let mut seen = vec![false; n_pages];
+            let mut mapped = 0usize;
+            for &s in &live {
+                for &p in kv.seq_pages(s) {
+                    assert!(!seen[p], "page {p} mapped twice (round {round})");
+                    seen[p] = true;
+                    mapped += 1;
+                }
             }
+            assert_eq!(kv.free_page_count() + mapped, n_pages, "page leak (round {round})");
+            assert_eq!(kv.n_active, live.len());
         }
+        for &s in &live {
+            kv.free(s);
+        }
+        assert_eq!(kv.free_page_count(), n_pages, "drain must restore the full pool");
+        assert_eq!(kv.n_active, 0);
     }
 }
 

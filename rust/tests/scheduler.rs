@@ -9,7 +9,9 @@
 use std::collections::VecDeque;
 use std::path::PathBuf;
 
-use dualsparse::engine::batcher::{serve, serve_with, ArrivalMode, Request};
+use dualsparse::engine::batcher::{
+    serve, serve_opts, serve_with, ArrivalMode, Fcfs, Request, SchedOptions,
+};
 use dualsparse::engine::{Engine, EngineOptions, EOS, MAX_SLOTS};
 use dualsparse::moe::DropPolicy;
 use dualsparse::server::workload;
@@ -25,15 +27,18 @@ fn engine() -> Engine {
         .expect("hermetic engine (CpuRef + synthetic weights)")
 }
 
-/// The pre-scheduler `serve()` loop, reproduced verbatim (admit-all
-/// into free slots, lockstep decode, retire on EOS/max_new) minus the
-/// timing fields. This is the reference the closed-loop scheduler must
-/// match byte-for-byte on completion texts.
+/// The pre-scheduler `serve()` loop (admit-all into free sequence ids,
+/// lockstep decode, retire on EOS/max_new) minus the timing fields —
+/// spelled in stable-sequence-id form now that the paged cache has no
+/// slot compaction. Per-row attention makes it text-equivalent to the
+/// historical compacting loop, so this is still the reference the
+/// closed-loop scheduler must match byte-for-byte on completion texts.
 fn legacy_serve_texts(e: &mut Engine, reqs: &[Request]) -> Vec<(usize, String)> {
     e.kv.reset();
     e.reset_metrics();
     struct A {
         id: usize,
+        seq: usize,
         out: Vec<u8>,
         next: u8,
         max_new: usize,
@@ -44,28 +49,29 @@ fn legacy_serve_texts(e: &mut Engine, reqs: &[Request]) -> Vec<(usize, String)> 
     while !queue.is_empty() || !active.is_empty() {
         while e.kv.has_free() && active.len() < MAX_SLOTS {
             let Some(r) = queue.pop_front() else { break };
-            let slot = e.kv.alloc();
-            let first = e.prefill(slot, r.prompt.as_bytes()).unwrap();
-            active.push(A { id: r.id, out: vec![first], next: first, max_new: r.max_new });
+            let seq = e.kv.alloc();
+            let first = e.prefill(seq, r.prompt.as_bytes()).unwrap();
+            active.push(A { id: r.id, seq, out: vec![first], next: first, max_new: r.max_new });
         }
         if active.is_empty() {
             break;
         }
+        let seqs: Vec<usize> = active.iter().map(|a| a.seq).collect();
         let toks: Vec<u8> = active.iter().map(|a| a.next).collect();
-        let next = e.decode_step(&toks).unwrap();
+        let next = e.decode_step_seqs(&seqs, &toks).unwrap();
         for (a, &t) in active.iter_mut().zip(&next) {
             a.out.push(t);
             a.next = t;
         }
-        let mut slot = active.len();
-        while slot > 0 {
-            slot -= 1;
-            let fin = active[slot].next == EOS || active[slot].out.len() >= active[slot].max_new;
+        let mut row = active.len();
+        while row > 0 {
+            row -= 1;
+            let fin = active[row].next == EOS || active[row].out.len() >= active[row].max_new;
             if !fin {
                 continue;
             }
-            let a = active.swap_remove(slot);
-            e.kv.free(slot);
+            let a = active.swap_remove(row);
+            e.kv.free(a.seq);
             let end = a.out.iter().position(|&c| c == EOS).unwrap_or(a.out.len());
             done.push((a.id, a.out[..end].iter().map(|&b| b as char).collect()));
         }
@@ -250,4 +256,77 @@ fn open_loop_arrivals_are_deterministic_and_respected() {
         assert_eq!(x.id, y.id);
         assert_eq!(x.text, y.text, "arrival process leaked into generation");
     }
+}
+
+fn engine_with_pages(page_size: usize, kv_pages: Option<usize>) -> Engine {
+    Engine::new(
+        &artifacts(),
+        "mixtral_ish",
+        DropPolicy::NoDrop,
+        EngineOptions { page_size: Some(page_size), kv_pages, ..Default::default() },
+    )
+    .expect("hermetic engine (CpuRef + synthetic weights)")
+}
+
+#[test]
+fn page_granularity_is_invisible_to_completion_texts() {
+    // With preemption off and page_size >= max_seq (160), every
+    // sequence occupies exactly one page whose interior layout is the
+    // old slot cache — the slot-scheduler reference configuration. Any
+    // smaller page size must produce byte-identical completion texts:
+    // attention walks positions in logical order regardless of where
+    // page boundaries fall.
+    let reqs = workload(20, 5, 7);
+    let mut slotlike = engine_with_pages(160, None);
+    let reference = serve_with(&mut slotlike, &reqs, ArrivalMode::Closed).unwrap();
+    assert_eq!(reference.completions.len(), reqs.len());
+    for page in [16usize, 3] {
+        let mut paged = engine_with_pages(page, None);
+        let got = serve_with(&mut paged, &reqs, ArrivalMode::Closed).unwrap();
+        assert_eq!(got.completions.len(), reference.completions.len());
+        for (x, y) in reference.completions.iter().zip(&got.completions) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(
+                x.text, y.text,
+                "page size {page} leaked into request {}'s text",
+                x.id
+            );
+        }
+    }
+}
+
+#[test]
+fn preemption_conserves_requests_and_reports_recompute() {
+    // A starved page pool (20 pages × 4 positions, total demand ≈ 4×
+    // that) with preemption on: decode growth must fault, evict and
+    // re-admit with recompute-from-prompt — and still resolve every
+    // request exactly once with no page or sequence leak.
+    let mut e = engine_with_pages(4, Some(20));
+    let reqs = workload(16, 8, 7);
+    let out = serve_opts(
+        &mut e,
+        &reqs,
+        ArrivalMode::Open { rate: 200.0, seed: 3 },
+        &Fcfs,
+        SchedOptions { preempt: true, ..Default::default() },
+    )
+    .unwrap();
+    let mut seen = vec![0usize; reqs.len()];
+    for c in &out.completions {
+        seen[c.id] += 1;
+    }
+    for r in &out.rejections {
+        seen[r.id] += 1;
+    }
+    assert!(
+        seen.iter().all(|&n| n == 1),
+        "completions ∪ rejections must cover every request exactly once: {seen:?}"
+    );
+    assert!(out.stats.preemptions > 0, "a 4× oversubscribed pool must evict");
+    assert!(out.stats.recompute_tokens > 0, "evictions throw away cached positions");
+    assert_eq!(e.kv.n_active, 0, "every sequence must retire");
+    assert_eq!(e.kv.free_page_count(), e.kv.n_pages, "every page must come back");
+    // Per-completion eviction counts are the stats total, distributed.
+    let total: usize = out.completions.iter().map(|c| c.preemptions as usize).sum();
+    assert_eq!(total, out.stats.preemptions, "preemption counts must reconcile");
 }
