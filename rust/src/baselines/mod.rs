@@ -104,9 +104,9 @@ fn prune_2_4_rows(t: &mut Tensor) {
                 continue;
             }
             let mut idx = [0usize, 1, 2, 3];
-            idx.sort_by(|&a, &b| {
-                g[a].abs().partial_cmp(&g[b].abs()).unwrap()
-            });
+            // total_cmp keeps this total under NaN weights (NaN sorts
+            // largest, i.e. survives the prune — deterministic either way).
+            idx.sort_by(|&a, &b| g[a].abs().total_cmp(&g[b].abs()));
             g[idx[0]] = 0.0;
             g[idx[1]] = 0.0;
         }

@@ -84,12 +84,21 @@ impl Topology {
 
 /// AlltoAll over `group` ranks, each sending `send_bytes` total
 /// (spread over the group). Balanced: limited by injection bandwidth.
+///
+/// Only a degenerate group (≤ 1 rank) costs bare `launch`. A
+/// zero-payload collective in a real group still synchronizes every
+/// peer, so it costs `launch + step_lat + per_peer·(group−1)` —
+/// consistent with how `allgather_time`/`reducescatter_time` charge
+/// step latency for zero bytes.
 pub fn alltoall_time(t: &Topology, group: usize, send_bytes: f64) -> f64 {
-    if group <= 1 || send_bytes <= 0.0 {
+    if group <= 1 {
         return t.launch;
     }
-    t.launch + t.step_lat + t.per_peer * (group - 1) as f64
-        + send_bytes / (t.link_bw * t.a2a_eff)
+    let fixed = t.launch + t.step_lat + t.per_peer * (group - 1) as f64;
+    if send_bytes <= 0.0 {
+        return fixed;
+    }
+    fixed + send_bytes / (t.link_bw * t.a2a_eff)
 }
 
 /// Ring AllGather within `group`: each rank contributes `bytes_per_rank`
@@ -115,6 +124,16 @@ pub fn reducescatter_time(t: &Topology, group: usize, bytes_per_rank: f64) -> f6
 /// One MoE layer's communication under classic **ETP** (Fig. 5a):
 /// dispatch = AlltoAll(EP) then AllGather(TP); return = ReduceScatter(TP)
 /// then AlltoAll(EP). `input_bytes` = activation bytes per device.
+///
+/// AG/RS byte accounting — the two calls are explicit duals:
+/// * dispatch AllGather: each TP rank contributes its `s` activation
+///   bytes (per-rank **input** = `s`) and ends holding `s·tp`;
+/// * return ReduceScatter: each TP rank holds `s·tp` partial-sum bytes
+///   (per-rank **input** = `s·tp`) and keeps its reduced `s` shard.
+///
+/// Both move `s·(tp−1)` bytes per rank over the ring, so
+/// `allgather_time(t, tp, s) == reducescatter_time(t, tp, s·tp)`
+/// exactly (pinned by the `ag_rs_duality` test).
 pub fn etp_time(t: &Topology, ep: usize, tp: usize, input_bytes: f64) -> f64 {
     assert!(ep * tp <= t.world, "EP*TP exceeds topology world size");
     let s = input_bytes;
@@ -191,6 +210,40 @@ mod tests {
         let t = Topology::h20_node();
         assert_eq!(alltoall_time(&t, 1, 1e9), t.launch);
         assert_eq!(allgather_time(&t, 1, 1e9), t.launch);
+    }
+
+    #[test]
+    fn zero_payload_collective_still_synchronizes_the_group() {
+        // A zero-byte AlltoAll in a >1 group is a barrier, not a no-op:
+        // it must charge the fixed latency terms, like AG/RS do.
+        let t = Topology::h20_node();
+        let expect = t.launch + t.step_lat + t.per_peer * 7.0;
+        assert_eq!(alltoall_time(&t, 8, 0.0), expect);
+        assert_eq!(alltoall_time(&t, 8, -1.0), expect);
+        // …and only the degenerate group stays at bare launch.
+        assert_eq!(alltoall_time(&t, 1, 0.0), t.launch);
+        // Zero bytes is the infimum of positive payloads, not a cliff.
+        assert!(alltoall_time(&t, 8, 1.0) > alltoall_time(&t, 8, 0.0));
+    }
+
+    #[test]
+    fn ag_rs_duality() {
+        // AllGather with per-rank input b moves the same ring traffic as
+        // ReduceScatter with per-rank input b·g (see `etp_time` docs).
+        for t in [Topology::h20_node(), Topology::nvl72(), Topology::cm384()] {
+            for g in [2usize, 4, 8] {
+                for b in [4096.0, 1.5e6, 2e9] {
+                    let ag = allgather_time(&t, g, b);
+                    let rs = reducescatter_time(&t, g, b * g as f64);
+                    assert!(
+                        (ag - rs).abs() <= 1e-12 * ag.abs(),
+                        "{}: AG({g},{b})={ag} vs RS({g},{})={rs}",
+                        t.name,
+                        b * g as f64
+                    );
+                }
+            }
+        }
     }
 
     #[test]

@@ -9,9 +9,12 @@
 //! buffers as opaque [`BufId`] handles and never names a runtime type.
 
 pub mod batcher;
+pub mod ep;
 pub mod kv;
 pub mod policy;
 pub mod scheduler;
+
+pub use ep::{EpOptions, EpReport, EpSim};
 
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
@@ -48,14 +51,6 @@ pub enum RouterMode {
     Eep { kept: Vec<Vec<usize>> },
     /// EEP + EES stacked (Table 3's combined rows).
     EepEes { kept: Vec<Vec<usize>>, beta: f32 },
-}
-
-/// Expert-parallel simulation attached to the engine (fig10/fig11).
-#[derive(Debug, Clone)]
-pub struct EpOptions {
-    pub n_devices: usize,
-    /// Load-aware thresholding (§4.3) on/off.
-    pub load_aware: bool,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -190,8 +185,9 @@ pub struct Engine {
     pub router_mode: RouterMode,
     pub opts: EngineOptions,
     pub metrics: EngineMetrics,
-    /// expert → EP device placement (round-robin), when EP is on.
-    placement: Vec<usize>,
+    /// Virtual expert-parallel deployment (placement, load accounting,
+    /// load-aware thresholding, replication) when EP is on.
+    ep_sim: Option<EpSim>,
     /// When set, every routed (token, expert) pair is also run through
     /// the probe artifact and accumulated (calibration mode, §4.2b).
     pub probe: Option<crate::calib::ProbeTables>,
@@ -333,15 +329,13 @@ impl Engine {
             }
             None => PREFILL_BUCKETS.to_vec(),
         };
-        let n_dev = opts.ep.as_ref().map(|e| e.n_devices).unwrap_or(0);
-        let placement = (0..cfg.n_experts)
-            .map(|e| if n_dev > 0 { e % n_dev } else { 0 })
-            .collect();
+        let ep_sim = opts.ep.clone().map(|o| EpSim::new(o, cfg.n_experts));
+        let n_dev = ep_sim.as_ref().map(EpSim::n_workers).unwrap_or(1);
         let metrics = EngineMetrics {
             per_layer_drop: vec![DropStats::default(); cfg.n_layers],
             expert_counts: vec![vec![0; cfg.n_experts]; cfg.n_layers],
-            device_time: vec![0.0; n_dev.max(1)],
-            device_load: vec![0; n_dev.max(1)],
+            device_time: vec![0.0; n_dev],
+            device_load: vec![0; n_dev],
             ..Default::default()
         };
         Ok(Engine {
@@ -361,14 +355,18 @@ impl Engine {
             router_mode: RouterMode::Standard,
             opts,
             metrics,
-            placement,
+            ep_sim,
             probe: None,
             force_split: false,
         })
     }
 
+    /// Reset all accumulated metrics AND the EP simulator (fresh
+    /// round-robin placement, zeroed accumulators) — a serve run starts
+    /// from a clean deployment.
     pub fn reset_metrics(&mut self) {
-        let n_dev = self.metrics.device_time.len();
+        self.ep_sim = self.opts.ep.clone().map(|o| EpSim::new(o, self.cfg.n_experts));
+        let n_dev = self.ep_sim.as_ref().map(EpSim::n_workers).unwrap_or(1);
         self.metrics = EngineMetrics {
             per_layer_drop: vec![DropStats::default(); self.cfg.n_layers],
             expert_counts: vec![vec![0; self.cfg.n_experts]; self.cfg.n_layers],
@@ -377,6 +375,20 @@ impl Engine {
             ..Default::default()
         };
         self.rt.reset_counters();
+    }
+
+    /// Swap the EP configuration on a live engine (the serve sweep's EP
+    /// dimension reuses one engine instead of re-uploading weights).
+    /// Resets metrics and the simulated deployment.
+    pub fn set_ep(&mut self, ep: Option<EpOptions>) {
+        self.opts.ep = ep;
+        self.reset_metrics();
+    }
+
+    /// Aggregated EP observables for the run since the last
+    /// [`Engine::reset_metrics`], when EP is on.
+    pub fn ep_report(&self) -> Option<EpReport> {
+        self.ep_sim.as_ref().map(EpSim::report)
     }
 
     // ------------------------------------------------------------------
@@ -443,9 +455,9 @@ impl Engine {
             .iter()
             .map(|&e| (e, if sum > 0.0 { scores[e] / sum } else { 0.0 }))
             .collect();
-        kept_scores.sort_by(|a, b| {
-            b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0))
-        });
+        // total order with NaN-last: degenerate weights can renormalize
+        // to NaN (e.g. inf/inf), which panicked the old partial_cmp sort.
+        kept_scores.sort_by(|a, b| crate::moe::cmp_desc_nan_last(a.0, a.1, b.0, b.1));
         let k = self.cfg.top_k.min(kept_scores.len());
         let mut sel: Vec<(usize, f32)> = kept_scores[..k].to_vec();
         // An empty kept list (fully-pruned layer) or top_k == 0 selects
@@ -507,34 +519,26 @@ impl Engine {
             }
         }
 
-        // 3. drop decisions (load-aware per-device scaling under EP §4.3)
-        let plan = if let Some(ep) = self.opts.ep.clone() {
-            let mut load = vec![0u64; ep.n_devices];
-            for r in &routings {
-                for &(e, _, _) in &r.experts {
-                    load[self.placement[e]] += 1;
+        // 3. drop decisions (load-aware per-worker scaling under EP
+        // §4.3): the EP simulator assigns every routed pair to a
+        // virtual worker; when load-aware, each worker's policy is the
+        // base scaled by its routed load relative to the hottest
+        // worker (the hottest keeps the base policy unchanged).
+        let ep_inv = self.ep_sim.as_ref().map(|sim| sim.observe(&routings, self.policy));
+        if let Some(inv) = &ep_inv {
+            for (w, &l) in inv.routed.iter().enumerate() {
+                self.metrics.device_load[w] += l;
+            }
+        }
+        let plan = match (&self.ep_sim, &ep_inv) {
+            (Some(sim), Some(inv)) => match sim.policies(inv, self.policy) {
+                Some(pols) => {
+                    let f = |row: usize, e: usize| pols[inv.worker(row, e)];
+                    plan_dispatch(&routings, e_count, self.policy, Some(&f))
                 }
-            }
-            for (d0, &l) in load.iter().enumerate() {
-                self.metrics.device_load[d0] += l;
-            }
-            let total: u64 = load.iter().sum();
-            let ideal = total as f32 / ep.n_devices as f32;
-            let policies: Vec<DropPolicy> = load
-                .iter()
-                .map(|&l| {
-                    if !ep.load_aware || ideal == 0.0 {
-                        self.policy
-                    } else {
-                        self.policy.scaled(l as f32 / ideal)
-                    }
-                })
-                .collect();
-            let placement = &self.placement;
-            let f = |_row: usize, e: usize| policies[placement[e]];
-            plan_dispatch(&routings, e_count, self.policy, Some(&f))
-        } else {
-            plan_dispatch(&routings, e_count, self.policy, None)
+                None => plan_dispatch(&routings, e_count, self.policy, None),
+            },
+            _ => plan_dispatch(&routings, e_count, self.policy, None),
         };
         self.metrics.per_layer_drop[li].merge(&plan.stats);
 
@@ -589,7 +593,7 @@ impl Engine {
         // reduction order). Within a task the packing scratch is reused
         // between the major and minor calls.
         let rb_rows = ln2x.shape[0];
-        let ep_on = self.opts.ep.is_some();
+        let ep_on = self.ep_sim.is_some();
         let work: Vec<usize> = (0..e_count)
             .filter(|&e| !plan.full[e].is_empty() || !plan.major_only[e].is_empty())
             .collect();
@@ -639,6 +643,10 @@ impl Engine {
             Ok((buf, dt))
         };
         let mut out = Tensor::zeros(vec![rb_rows, d]);
+        // Per-expert measured exec seconds, collected in ascending
+        // expert order in both branches; the EP simulator attributes
+        // them to workers after the merge.
+        let mut expert_secs: Vec<(usize, f64)> = Vec::new();
         if parallel_worthwhile {
             let results = crate::util::threads::parallel_map(work.len(), &expert_task);
             for (wi, res) in results.into_iter().enumerate() {
@@ -646,7 +654,7 @@ impl Engine {
                 let (buf, dt) = res?;
                 merge_expert_rows(&plan, e, d, &buf, &mut out);
                 if ep_on {
-                    self.metrics.device_time[self.placement[e]] += dt;
+                    expert_secs.push((e, dt));
                 }
             }
         } else {
@@ -662,8 +670,16 @@ impl Engine {
                 let (buf, dt) = expert_task(wi)?;
                 merge_expert_rows(&plan, e, d, &buf, &mut out);
                 if ep_on {
-                    self.metrics.device_time[self.placement[e]] += dt;
+                    expert_secs.push((e, dt));
                 }
+            }
+        }
+        // EP accounting: straggler/comm charging, per-worker busy
+        // attribution, and (if configured) hot-expert replication.
+        if let (Some(sim), Some(inv)) = (self.ep_sim.as_mut(), &ep_inv) {
+            let busy = sim.charge(inv, &plan, &expert_secs, d);
+            for (w, s) in busy.into_iter().enumerate() {
+                self.metrics.device_time[w] += s;
             }
         }
 
@@ -1219,6 +1235,28 @@ mod tests {
             let r = e.route(&scores, 0);
             assert!(r.experts.is_empty(), "{:?}", e.router_mode);
         }
+    }
+
+    /// Degenerate gate scores can renormalize to NaN (inf / inf); the
+    /// routing sort must order them deterministically NaN-last instead
+    /// of panicking (the old `partial_cmp().unwrap()`).
+    #[test]
+    fn eep_routing_survives_nan_normalized_scores() {
+        let mut e = hermetic_engine();
+        let nl = e.cfg.n_layers;
+        e.router_mode = RouterMode::Eep { kept: vec![vec![0, 1, 2]; nl] };
+        let mut scores = vec![0.0f32; e.cfg.n_experts];
+        scores[0] = f32::INFINITY; // kept-set sum = inf ⇒ inf/inf = NaN
+        scores[1] = 1.0;
+        let r = e.route(&scores, 0);
+        assert!(!r.experts.is_empty());
+        // The NaN-scored expert 0 sorts behind the finite scores.
+        assert_eq!(r.experts[0].0, 1);
+        // A NaN *input* score poisons the sum; the sum>0 guard zeroes
+        // the kept scores and routing stays index-ordered — no panic.
+        scores[0] = f32::NAN;
+        let r2 = e.route(&scores, 0);
+        assert_eq!(r2.experts.len(), e.cfg.top_k.min(3));
     }
 
     /// An empty routing flows through the full MoE layer: the token

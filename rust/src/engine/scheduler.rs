@@ -232,6 +232,31 @@ pub struct ServeStats {
     /// Seconds inside all artifacts.
     pub artifact_secs: f64,
     pub drop_rate: f64,
+    /// Virtual EP workers the run simulated (0 = EP off; the remaining
+    /// `ep_*` fields are zeros/empty then).
+    pub ep_workers: usize,
+    /// Whether §4.3 load-aware thresholding modulated per-worker drop
+    /// policies during the run.
+    pub ep_load_aware: bool,
+    /// Per-worker attributed FFN busy seconds.
+    pub ep_worker_busy_secs: Vec<f64>,
+    /// Hottest worker's kept cost ÷ mean per-worker kept cost (1.0 =
+    /// perfectly balanced).
+    pub ep_straggler_ratio: f64,
+    /// The same ratio under the unscaled base policy on identical
+    /// routings (counterfactual; equals `ep_straggler_ratio` when
+    /// load-aware is off, and bounds it from above when on).
+    pub ep_straggler_ratio_static: f64,
+    /// Hot-worker compute seconds avoided by dropping.
+    pub ep_imbalance_saved_secs: f64,
+    /// Simulated AlltoAll dispatch + return seconds.
+    pub ep_comm_secs: f64,
+    /// Drop rate over EP-routed pairs (excludes shared experts).
+    pub ep_drop_rate: f64,
+    /// Counterfactual drop rate under the unscaled base policy.
+    pub ep_drop_rate_static: f64,
+    /// Hot-expert replications (`--ep-replicate-after`).
+    pub ep_replications: u64,
 }
 
 /// Everything one serving run produced.
@@ -864,6 +889,7 @@ pub fn serve_opts(
             (lane, percentile(&ts, 50.0))
         })
         .collect();
+    let ep = engine.ep_report();
     let stats = ServeStats {
         wall_secs: wall,
         requests: done.len(),
@@ -897,6 +923,19 @@ pub fn serve_opts(
         moe_secs: engine.moe_time(),
         artifact_secs: engine.total_artifact_time(),
         drop_rate: engine.metrics.drop_rate(),
+        ep_workers: ep.as_ref().map(|r| r.workers).unwrap_or(0),
+        ep_load_aware: ep.as_ref().map(|r| r.load_aware).unwrap_or(false),
+        ep_worker_busy_secs: ep.as_ref().map(|r| r.busy_secs.clone()).unwrap_or_default(),
+        ep_straggler_ratio: ep.as_ref().map(|r| r.straggler_ratio).unwrap_or(0.0),
+        ep_straggler_ratio_static: ep
+            .as_ref()
+            .map(|r| r.straggler_ratio_static)
+            .unwrap_or(0.0),
+        ep_imbalance_saved_secs: ep.as_ref().map(|r| r.imbalance_saved_secs).unwrap_or(0.0),
+        ep_comm_secs: ep.as_ref().map(|r| r.comm_secs).unwrap_or(0.0),
+        ep_drop_rate: ep.as_ref().map(|r| r.drop_rate).unwrap_or(0.0),
+        ep_drop_rate_static: ep.as_ref().map(|r| r.drop_rate_static).unwrap_or(0.0),
+        ep_replications: ep.as_ref().map(|r| r.replications).unwrap_or(0),
     };
     done.sort_by_key(|c| c.id);
     rejections.sort_by_key(|r| r.id);

@@ -19,7 +19,7 @@ use anyhow::{bail, Context, Result};
 use crate::engine::batcher::serve;
 use crate::engine::policy::{AdmissionControl, PolicyKind};
 use crate::engine::scheduler::{serve_opts, serve_policy, ArrivalMode, SchedOptions, ServeStats};
-use crate::engine::{Engine, EngineOptions};
+use crate::engine::{Engine, EngineOptions, EpOptions};
 use crate::moe::DropPolicy;
 use crate::server;
 use crate::util::json::{num, obj, s, Json};
@@ -250,6 +250,28 @@ pub struct ServeRow {
     pub ttft50_lane0: f64,
     pub ttft50_lane1: f64,
     pub ttft50_lane2: f64,
+    /// Virtual EP workers simulated (0 = EP off; the other `ep_*`
+    /// columns are zeros/empty then).
+    pub ep_workers: usize,
+    /// §4.3 load-aware per-worker thresholding on.
+    pub ep_load_aware: bool,
+    /// Per-worker attributed FFN busy seconds.
+    pub ep_worker_busy_secs: Vec<f64>,
+    /// Hottest worker's kept cost ÷ mean per-worker kept cost.
+    pub ep_straggler_ratio: f64,
+    /// Counterfactual ratio under the unscaled base policy on the
+    /// identical routings (bounds `ep_straggler_ratio` from above).
+    pub ep_straggler_ratio_static: f64,
+    /// Hot-worker compute seconds avoided by dropping.
+    pub ep_imbalance_saved_secs: f64,
+    /// Simulated AlltoAll dispatch + return seconds.
+    pub ep_comm_secs: f64,
+    /// Drop rate over EP-routed pairs.
+    pub ep_drop_rate: f64,
+    /// Counterfactual drop rate under the unscaled base policy.
+    pub ep_drop_rate_static: f64,
+    /// Hot-expert replications over the run.
+    pub ep_replications: u64,
 }
 
 /// Assemble one [`ServeRow`] from a measured run's [`ServeStats`].
@@ -291,6 +313,16 @@ fn serve_row(
         ttft50_lane0: lane(0),
         ttft50_lane1: lane(1),
         ttft50_lane2: lane(2),
+        ep_workers: st.ep_workers,
+        ep_load_aware: st.ep_load_aware,
+        ep_worker_busy_secs: st.ep_worker_busy_secs.clone(),
+        ep_straggler_ratio: st.ep_straggler_ratio,
+        ep_straggler_ratio_static: st.ep_straggler_ratio_static,
+        ep_imbalance_saved_secs: st.ep_imbalance_saved_secs,
+        ep_comm_secs: st.ep_comm_secs,
+        ep_drop_rate: st.ep_drop_rate,
+        ep_drop_rate_static: st.ep_drop_rate_static,
+        ep_replications: st.ep_replications,
     }
 }
 
@@ -384,6 +416,33 @@ pub fn serve_sweep_rows(
             }
         }
     }
+    // EP dimension (§4.3): virtual-worker count × load-aware
+    // thresholding, under FCFS at the 2× overload multiple on the
+    // ladder's first 2T policy. Runs only when FCFS is in the sched
+    // filter — EP rows ride the drop ladder, which is FCFS-only above.
+    if scheds.contains(&PolicyKind::Fcfs) {
+        let (ep_label, ep_pol) = drop_ladder[1];
+        let ep_configs: &[(usize, bool)] = if quick {
+            &[(1, false), (4, false), (4, true)]
+        } else {
+            &[(1, false), (2, false), (2, true), (4, false), (4, true), (8, false), (8, true)]
+        };
+        let mult = 2.0;
+        let rate = base_rps * mult;
+        for &(workers, aware) in ep_configs {
+            engine.policy = ep_pol;
+            engine.set_ep(Some(EpOptions::new(workers, aware)));
+            let out = serve_policy(
+                &mut engine,
+                &reqs,
+                ArrivalMode::Open { rate, seed: 11 },
+                PolicyKind::Fcfs.policy(),
+                admission,
+            )?;
+            rows.push(serve_row("fcfs", mult, rate, ep_label, true, &out.stats));
+        }
+        engine.set_ep(None);
+    }
     Ok((base_rps, rows))
 }
 
@@ -426,6 +485,19 @@ pub fn write_serve_json(
                     ("ttft50_lane0", num(r.ttft50_lane0)),
                     ("ttft50_lane1", num(r.ttft50_lane1)),
                     ("ttft50_lane2", num(r.ttft50_lane2)),
+                    ("ep_workers", num(r.ep_workers as f64)),
+                    ("ep_load_aware", Json::Bool(r.ep_load_aware)),
+                    (
+                        "ep_worker_busy_secs",
+                        Json::Arr(r.ep_worker_busy_secs.iter().map(|&b| num(b)).collect()),
+                    ),
+                    ("ep_straggler_ratio", num(r.ep_straggler_ratio)),
+                    ("ep_straggler_ratio_static", num(r.ep_straggler_ratio_static)),
+                    ("ep_imbalance_saved_secs", num(r.ep_imbalance_saved_secs)),
+                    ("ep_comm_secs", num(r.ep_comm_secs)),
+                    ("ep_drop_rate", num(r.ep_drop_rate)),
+                    ("ep_drop_rate_static", num(r.ep_drop_rate_static)),
+                    ("ep_replications", num(r.ep_replications as f64)),
                 ])
             })
             .collect(),
@@ -481,6 +553,21 @@ pub fn serve_sweep(artifacts: &Path, cfg: &ServeSweepConfig) -> Result<()> {
             r.mean_queue_depth,
         );
     }
+    for r in rows.iter().filter(|r| r.ep_workers > 0) {
+        println!(
+            "ep: workers={} load_aware={} straggler_ratio={:.3} static={:.3} \
+             drop={:.3} drop_static={:.3} saved_s={:.4} comm_s={:.4} repl={}",
+            r.ep_workers,
+            r.ep_load_aware,
+            r.ep_straggler_ratio,
+            r.ep_straggler_ratio_static,
+            r.ep_drop_rate,
+            r.ep_drop_rate_static,
+            r.ep_imbalance_saved_secs,
+            r.ep_comm_secs,
+            r.ep_replications,
+        );
+    }
     write_serve_json(&cfg.model, cfg.quick, base_rps, &rows, &cfg.out)?;
     println!("wrote {:?}", cfg.out);
     Ok(())
@@ -527,8 +614,13 @@ mod tests {
         assert!(base_rps > 0.0);
         // fcfs: 3 mults × 2 drop policies; spf/priority: 3 mults ×
         // drop-free; plus one non-interleaved baseline per sched at
-        // each overload mult (2×, 4×).
-        assert_eq!(rows.len(), 3 * 2 + 3 + 3 + 3 * 2, "sched × rates × drops + baselines");
+        // each overload mult (2×, 4×); plus the 3-config EP dimension
+        // (1 worker, 4 static, 4 load-aware) under fcfs at 2×.
+        assert_eq!(
+            rows.len(),
+            3 * 2 + 3 + 3 + 3 * 2 + 3,
+            "sched × rates × drops + baselines + EP dimension"
+        );
         assert_eq!(
             rows.iter().filter(|r| !r.interleave).count(),
             3 * 2,
@@ -567,6 +659,48 @@ mod tests {
                 "policy dimension must include {}",
                 kind.label()
             );
+        }
+        // The EP dimension: 1-worker is EP-identity (ratio exactly 1,
+        // no comm); 4-worker static exposes routing skew as a straggler
+        // ratio > 1; load-aware never exceeds its in-run static
+        // counterfactual on either straggler ratio or drop rate (the
+        // shadow accounting makes both exact, not statistical).
+        let ep_one = rows.iter().find(|r| r.ep_workers == 1).expect("1-worker EP row");
+        assert_eq!(ep_one.ep_straggler_ratio, 1.0, "single worker is its own mean");
+        assert_eq!(ep_one.ep_comm_secs, 0.0, "no AlltoAll inside one worker");
+        let ep_static =
+            rows.iter().find(|r| r.ep_workers == 4 && !r.ep_load_aware).expect("static EP row");
+        let ep_aware =
+            rows.iter().find(|r| r.ep_workers == 4 && r.ep_load_aware).expect("aware EP row");
+        assert!(
+            ep_static.ep_straggler_ratio > 1.0,
+            "4-worker round-robin on skewed routing must straggle: {}",
+            ep_static.ep_straggler_ratio
+        );
+        assert!(
+            (ep_static.ep_straggler_ratio - ep_static.ep_straggler_ratio_static).abs() < 1e-12,
+            "static run IS its own counterfactual"
+        );
+        assert!(
+            ep_aware.ep_straggler_ratio <= ep_aware.ep_straggler_ratio_static + 1e-12,
+            "load-aware must not worsen the straggler ratio: {} vs {}",
+            ep_aware.ep_straggler_ratio,
+            ep_aware.ep_straggler_ratio_static
+        );
+        assert!(
+            ep_aware.ep_drop_rate <= ep_aware.ep_drop_rate_static + 1e-12,
+            "load-aware only relaxes thresholds ⇒ drop rate ≤ static: {} vs {}",
+            ep_aware.ep_drop_rate,
+            ep_aware.ep_drop_rate_static
+        );
+        for r in &rows {
+            if r.ep_workers > 0 {
+                assert_eq!(r.ep_worker_busy_secs.len(), r.ep_workers);
+                assert!(r.ep_worker_busy_secs.iter().all(|&b| b >= 0.0));
+            } else {
+                assert!(r.ep_worker_busy_secs.is_empty(), "EP columns zeroed when EP off");
+                assert_eq!(r.ep_straggler_ratio, 0.0);
+            }
         }
         // Past the knee (arrival ≥ 2× service rate) goodput is pinned at
         // service capacity: offering 4× instead of 2× must not raise it
@@ -609,6 +743,16 @@ mod tests {
             "ttft50_lane0",
             "ttft50_lane1",
             "ttft50_lane2",
+            "ep_workers",
+            "ep_load_aware",
+            "ep_worker_busy_secs",
+            "ep_straggler_ratio",
+            "ep_straggler_ratio_static",
+            "ep_imbalance_saved_secs",
+            "ep_comm_secs",
+            "ep_drop_rate",
+            "ep_drop_rate_static",
+            "ep_replications",
         ] {
             assert!(run0.get(field).is_ok(), "SERVE_cpu.json runs must carry {field}");
         }

@@ -105,7 +105,7 @@ pub fn mk_engine_ep(
         reconstructed,
         importance,
         collect_stats: false,
-        ep: Some(EpOptions { n_devices, load_aware }),
+        ep: Some(EpOptions::new(n_devices, load_aware)),
         ..Default::default()
     };
     Engine::new(artifacts, model, policy, opts)

@@ -5,7 +5,9 @@
 //!         [--max-queue N] [--reqs N] [--max-new N]
 //!         [--mode closed|open] [--rate R] [--seed S]
 //!         [--page-size P] [--kv-pages N] [--preempt]
-//!         [--age-boost SECS] [--no-interleave]           one measured run
+//!         [--age-boost SECS] [--no-interleave]
+//!         [--ep-workers N] [--ep-load-aware]
+//!         [--ep-replicate-after K]                       one measured run
 //!         [--sweep | --quick] [--out PATH]   arrival-rate × drop × sched
 //!                                            sweep → SERVE_cpu.json
 //!         (--policy also filters --sweep/--quick to one scheduling
@@ -29,7 +31,7 @@ use anyhow::{bail, Context, Result};
 
 use dualsparse::engine::policy::{AdmissionControl, AgingConfig, PolicyKind, SchedConfig};
 use dualsparse::engine::scheduler::ArrivalMode;
-use dualsparse::engine::{artifacts_dir, EngineOptions};
+use dualsparse::engine::{artifacts_dir, EngineOptions, EpOptions};
 use dualsparse::moe::DropPolicy;
 use dualsparse::runtime::Backend as _;
 use dualsparse::tasks::eval::{evaluate, format_row};
@@ -172,6 +174,34 @@ fn main() -> Result<()> {
                 None => None,
             };
             let interleave = args.flag("no-interleave").is_none();
+            let ep_workers = match args.flag("ep-workers") {
+                Some(v) => {
+                    let n = v.parse::<usize>().with_context(|| {
+                        format!("--ep-workers must be a worker count, got {v:?}")
+                    })?;
+                    if n == 0 {
+                        bail!("--ep-workers must be ≥ 1 (omit the flag to turn EP off)");
+                    }
+                    Some(n)
+                }
+                None => None,
+            };
+            let ep_load_aware = args.flag("ep-load-aware").is_some();
+            let ep_replicate_after = match args.flag("ep-replicate-after") {
+                Some(v) => {
+                    let k = v.parse::<u64>().with_context(|| {
+                        format!("--ep-replicate-after must be an invocation count, got {v:?}")
+                    })?;
+                    if k == 0 {
+                        bail!("--ep-replicate-after must be ≥ 1");
+                    }
+                    Some(k)
+                }
+                None => None,
+            };
+            if ep_workers.is_none() && (ep_load_aware || ep_replicate_after.is_some()) {
+                bail!("--ep-load-aware/--ep-replicate-after require --ep-workers N");
+            }
             if args.flag("sweep").is_some() || args.flag("quick").is_some() {
                 // The sweep fixes its own queue bound, drop ladder and
                 // scheduler knobs; refusing beats silently writing a
@@ -186,13 +216,14 @@ fn main() -> Result<()> {
                     || args.flag("drop").is_some()
                     || legacy_drop_spelling
                     || paging_flags
+                    || ep_workers.is_some()
                 {
                     bail!(
-                        "--max-queue, drop-policy and paging/preemption flags have \
-                         no effect with --sweep/--quick (the sweep uses max queue \
-                         {}, its own drop ladder, default paging, and records its \
-                         own interleave-off baselines); use --policy \
-                         fcfs|spf|priority to restrict the sweep",
+                        "--max-queue, drop-policy, paging/preemption and EP flags \
+                         have no effect with --sweep/--quick (the sweep uses max \
+                         queue {}, its own drop ladder, default paging, its own \
+                         interleave-off baselines and its own EP dimension); use \
+                         --policy fcfs|spf|priority to restrict the sweep",
                         experiments::bench::SWEEP_MAX_QUEUE
                     );
                 }
@@ -231,12 +262,17 @@ fn main() -> Result<()> {
                 }
                 other => bail!("unknown --mode {other:?}; use closed | open"),
             };
-            let opts = EngineOptions { page_size, kv_pages, ..Default::default() };
+            let ep = ep_workers.map(|n| {
+                let mut o = EpOptions::new(n, ep_load_aware);
+                o.replicate_after = ep_replicate_after;
+                o
+            });
+            let opts = EngineOptions { page_size, kv_pages, ep, ..Default::default() };
             let mut engine = Engine::new(&artifacts, &model, policy, opts)?;
             println!(
                 "serving {model} on {} ({} requests, sched {} max-queue {:?}, \
                  drop {policy:?}, {mode:?}, pages {}×{} tok, preempt={}, \
-                 interleave={})",
+                 interleave={}, ep={:?})",
                 engine.rt.platform(),
                 n,
                 sched.policy,
@@ -245,6 +281,7 @@ fn main() -> Result<()> {
                 engine.kv.page_size,
                 sched.preempt,
                 sched.interleave,
+                ep_workers,
             );
             let reqs = server::workload(n, max_new, 7);
             let report =
@@ -285,6 +322,10 @@ fn main() -> Result<()> {
                 st.recompute_tokens,
                 st.interleaved_prefill_steps,
             );
+            let ep_line = server::format_ep_report(st);
+            if !ep_line.is_empty() {
+                println!("{ep_line}");
+            }
             if !st.lane_ttft50.is_empty() {
                 let lanes: Vec<String> = st
                     .lane_ttft50

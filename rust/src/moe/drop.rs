@@ -43,7 +43,22 @@ impl DropPolicy {
     /// The paper's default dual-threshold construction:
     /// T²_major = T¹ − δ, T²_minor = T¹ + δ with δ = 0.01 (§4.2c).
     pub fn two_t(t1: f32) -> DropPolicy {
-        DropPolicy::TwoT { major: (t1 - 0.01).max(0.0), minor: t1 + 0.01 }
+        DropPolicy::two_t_bands(t1 - 0.01, t1 + 0.01)
+    }
+
+    /// Validated 2T constructor: clamps both thresholds to ≥ 0 and
+    /// orders them, so the `major ≤ minor` invariant [`decide`] relies
+    /// on always holds. The raw `TwoT { major, minor }` form stays
+    /// constructible for serialization compatibility, but an inverted
+    /// band silently collapses the MajorOnly region — build through
+    /// here (NaN thresholds clamp to 0, i.e. keep everything).
+    ///
+    /// [`decide`]: DropPolicy::decide
+    pub fn two_t_bands(a: f32, b: f32) -> DropPolicy {
+        // f32::max returns the non-NaN operand, so NaN inputs land at 0.
+        let lo = a.max(0.0);
+        let hi = b.max(0.0);
+        DropPolicy::TwoT { major: lo.min(hi), minor: lo.max(hi) }
     }
 
     /// Decide for one token-expert pair given its normalized score.
@@ -58,6 +73,10 @@ impl DropPolicy {
                 }
             }
             DropPolicy::TwoT { major, minor } => {
+                debug_assert!(
+                    major <= minor,
+                    "inverted 2T bands ({major} > {minor}): use DropPolicy::two_t_bands"
+                );
                 if norm_score >= minor {
                     Decision::Full
                 } else if norm_score >= major {
@@ -72,6 +91,10 @@ impl DropPolicy {
     /// Scale the threshold(s) for load-aware thresholding (§4.3): a
     /// device whose load ratio is below 1 applies a proportionally lower
     /// threshold; ratios ≥ 1 keep the full (maximum) threshold.
+    ///
+    /// Multiplying both 2T bands by the same `k ∈ [0, 1]` preserves the
+    /// `major ≤ minor` ordering, so scaling a valid policy never
+    /// produces an inverted band.
     pub fn scaled(&self, ratio: f32) -> DropPolicy {
         let k = ratio.clamp(0.0, 1.0);
         match *self {
@@ -167,6 +190,56 @@ mod tests {
             // TwoT with equal thresholds never yields MajorOnly.
             assert_ne!(pd, Decision::MajorOnly);
             assert_eq!(pd == Decision::Drop, qd == Decision::Drop);
+        }
+    }
+
+    #[test]
+    fn two_t_bands_normalizes_inverted_input() {
+        // Swapped arguments come back ordered, not inverted.
+        assert_eq!(
+            DropPolicy::two_t_bands(0.5, 0.1),
+            DropPolicy::TwoT { major: 0.1, minor: 0.5 }
+        );
+        // Negative thresholds clamp to 0 before ordering.
+        assert_eq!(
+            DropPolicy::two_t_bands(0.2, -0.3),
+            DropPolicy::TwoT { major: 0.0, minor: 0.2 }
+        );
+        // NaN thresholds degrade to keep-everything, not to a poisoned band.
+        assert_eq!(
+            DropPolicy::two_t_bands(f32::NAN, 0.3),
+            DropPolicy::TwoT { major: 0.0, minor: 0.3 }
+        );
+    }
+
+    #[test]
+    fn two_t_small_t1_keeps_bands_ordered() {
+        // t1 ≤ 0.01 used to clamp major to 0 while minor could go
+        // negative (t1 < −0.01), silently inverting the band. The
+        // validated constructor keeps major ≤ minor in every case.
+        for t1 in [-0.5, -0.011, 0.0, 0.005, 0.01, 0.3] {
+            if let DropPolicy::TwoT { major, minor } = DropPolicy::two_t(t1) {
+                assert!(major <= minor, "two_t({t1}) inverted: {major} > {minor}");
+                assert!(major >= 0.0 && minor >= 0.0);
+            } else {
+                unreachable!();
+            }
+        }
+        // Sanity: a degenerate negative t1 keeps everything rather than
+        // computing MajorOnly for scores the band no longer covers.
+        assert_eq!(DropPolicy::two_t(-0.5).decide(0.0), Decision::Full);
+    }
+
+    #[test]
+    fn scaled_preserves_band_ordering() {
+        for ratio in [0.0, 0.3, 0.7, 1.0, 2.5] {
+            if let DropPolicy::TwoT { major, minor } =
+                DropPolicy::two_t_bands(0.44, 0.46).scaled(ratio)
+            {
+                assert!(major <= minor);
+            } else {
+                unreachable!();
+            }
         }
     }
 

@@ -16,15 +16,28 @@ pub struct TokenRouting {
     pub experts: Vec<(usize, f32, f32)>,
 }
 
+/// Total-order comparator for descending score sorts: higher scores
+/// first, NaN strictly last (regardless of its sign bit), ties broken
+/// by ascending index. Degenerate calibrated weights can push NaN
+/// through the gate; `partial_cmp().unwrap()` panics on it and
+/// `unwrap_or(Equal)` builds an *inconsistent* comparator (sort_by may
+/// panic or reorder nondeterministically). This one stays total.
+pub fn cmp_desc_nan_last(ia: usize, sa: f32, ib: usize, sb: f32) -> std::cmp::Ordering {
+    use std::cmp::Ordering;
+    match (sa.is_nan(), sb.is_nan()) {
+        (true, true) => ia.cmp(&ib),
+        (true, false) => Ordering::Greater, // NaN sorts after any real score
+        (false, true) => Ordering::Less,
+        (false, false) => sb.total_cmp(&sa).then(ia.cmp(&ib)),
+    }
+}
+
 /// Top-K indices + scores, descending, ties toward the lower index.
+/// NaN scores order last, so a poisoned gate row degrades to routing
+/// the finite scores first instead of panicking.
 pub fn top_k(scores: &[f32], k: usize) -> Vec<(usize, f32)> {
     let mut idx: Vec<usize> = (0..scores.len()).collect();
-    idx.sort_by(|&a, &b| {
-        scores[b]
-            .partial_cmp(&scores[a])
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(&b))
-    });
+    idx.sort_by(|&a, &b| cmp_desc_nan_last(a, scores[a], b, scores[b]));
     idx.truncate(k);
     idx.into_iter().map(|i| (i, scores[i])).collect()
 }
@@ -98,5 +111,35 @@ mod tests {
         let s = [0.0, 0.0, 0.0, 0.0];
         let r = route_token(&s, 2, false);
         assert!((r.experts[0].2 - 0.5).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nan_scores_sort_last_deterministically() {
+        let s = [0.2, f32::NAN, 0.7, f32::NAN, 0.1];
+        let t = top_k(&s, 5);
+        let order: Vec<usize> = t.iter().map(|(i, _)| *i).collect();
+        // Finite scores descending, then NaN indices ascending.
+        assert_eq!(order, vec![2, 0, 4, 1, 3]);
+        // Negative-sign-bit NaN orders last too (total_cmp alone would
+        // put it *before* every finite score in a descending sort).
+        let s2 = [0.3, -f32::NAN, 0.1];
+        let order2: Vec<usize> = top_k(&s2, 3).iter().map(|(i, _)| *i).collect();
+        assert_eq!(order2, vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn nan_score_routes_without_panicking() {
+        let s = [0.6, f32::NAN, 0.3, 0.1];
+        // NaN-last ordering keeps the poisoned expert out of a small
+        // activated set entirely…
+        let r = route_token(&s, 2, false);
+        assert_eq!(r.experts.len(), 2);
+        assert_eq!(r.experts[0].0, 0);
+        assert!(r.experts.iter().all(|(_, _, n)| n.is_finite()));
+        // …and when k is large enough to include it, the NaN poisons
+        // the normalization sum and the `sum > 0.0` guard falls back to
+        // uniform weights — still finite, never a panic.
+        let r4 = route_token(&s, 4, false);
+        assert!(r4.experts.iter().all(|(_, _, n)| (n - 0.25).abs() < 1e-6));
     }
 }

@@ -10,7 +10,7 @@ pub mod gating;
 pub mod partition;
 
 pub use drop::{Decision, DropPolicy, DropStats};
-pub use gating::{route_token, top_k, TokenRouting};
+pub use gating::{cmp_desc_nan_last, route_token, top_k, TokenRouting};
 pub use partition::{
     build_layer, complete_transform_expert, complete_transform_gate,
     importance_order, remap_indices, PartitionedExpert, SubExpert,

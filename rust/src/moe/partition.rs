@@ -58,14 +58,13 @@ pub fn remap_indices(indices: &[usize], p: usize) -> Vec<usize> {
     out
 }
 
-/// Descending-importance permutation; ties break toward the lower index.
+/// Descending-importance permutation; ties break toward the lower
+/// index, NaN importances order last (same total order as routing —
+/// see [`crate::moe::gating::cmp_desc_nan_last`]).
 pub fn importance_order(importance: &[f32]) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..importance.len()).collect();
     idx.sort_by(|&a, &b| {
-        importance[b]
-            .partial_cmp(&importance[a])
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(a.cmp(&b))
+        crate::moe::gating::cmp_desc_nan_last(a, importance[a], b, importance[b])
     });
     idx
 }

@@ -117,6 +117,34 @@ pub fn format_report(r: &RunReport) -> String {
     )
 }
 
+/// One-line EP simulation summary for a measured serve run, empty when
+/// EP was off (`ep_workers == 0`). The `straggler_ratio=`/`static=`
+/// spellings are load-bearing: CI's `ep-smoke` job extracts both and
+/// asserts the load-aware ratio never exceeds its in-run static
+/// counterfactual.
+pub fn format_ep_report(st: &ServeStats) -> String {
+    if st.ep_workers == 0 {
+        return String::new();
+    }
+    let busy: Vec<String> =
+        st.ep_worker_busy_secs.iter().map(|b| format!("{:.3}", b)).collect();
+    format!(
+        "ep: workers={} load_aware={} straggler_ratio={:.4} static={:.4} \
+         drop={:.4} drop_static={:.4} saved_s={:.4} comm_s={:.4} repl={} \
+         busy_s=[{}]",
+        st.ep_workers,
+        st.ep_load_aware,
+        st.ep_straggler_ratio,
+        st.ep_straggler_ratio_static,
+        st.ep_drop_rate,
+        st.ep_drop_rate_static,
+        st.ep_imbalance_saved_secs,
+        st.ep_comm_secs,
+        st.ep_replications,
+        busy.join(" "),
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -160,6 +188,25 @@ mod tests {
         assert!(row.contains("ttft50=250ms"), "{row}");
         assert!(row.contains("qd=3.5"), "{row}");
         assert!(row.contains("rej=2"), "{row}");
+    }
+
+    #[test]
+    fn ep_report_line_carries_ci_greppable_ratios() {
+        let off = ServeStats::default();
+        assert!(format_ep_report(&off).is_empty(), "no EP line when EP is off");
+        let on = ServeStats {
+            ep_workers: 4,
+            ep_load_aware: true,
+            ep_worker_busy_secs: vec![0.25, 0.125, 0.125, 0.0625],
+            ep_straggler_ratio: 1.25,
+            ep_straggler_ratio_static: 1.5,
+            ..Default::default()
+        };
+        let line = format_ep_report(&on);
+        assert!(line.contains("straggler_ratio=1.2500"), "{line}");
+        assert!(line.contains("static=1.5000"), "{line}");
+        assert!(line.contains("workers=4"), "{line}");
+        assert!(line.contains("busy_s=[0.250 0.125 0.125 0.062]"), "{line}");
     }
 
     #[test]

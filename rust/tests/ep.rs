@@ -1,0 +1,111 @@
+//! Expert-parallel simulation, end-to-end through the engine.
+//!
+//! The EP layer's contract has two halves: (1) it is *pure accounting*
+//! unless load-aware thresholding is on with ≥ 2 workers — static EP
+//! at any worker count and load-aware EP with one worker must leave
+//! generated text byte-identical to a no-EP run; (2) when load-aware
+//! thresholding does change decisions, the in-run counterfactual
+//! static shadow bounds it exactly: straggler ratio and drop rate
+//! never exceed what the unscaled base policy would have produced on
+//! the identical routings. Hermetic (CpuRef + synthetic weights), like
+//! `integration.rs`.
+
+#![allow(clippy::needless_range_loop, clippy::manual_memcpy, clippy::type_complexity)]
+
+use std::path::PathBuf;
+
+use dualsparse::engine::{Engine, EngineOptions, EpOptions};
+use dualsparse::moe::DropPolicy;
+
+fn artifacts() -> PathBuf {
+    std::env::var("DUALSPARSE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+fn engine(policy: DropPolicy, ep: Option<EpOptions>) -> Engine {
+    let opts = EngineOptions { ep, ..Default::default() };
+    Engine::new(&artifacts(), "mixtral_ish", policy, opts)
+        .expect("hermetic engine (CpuRef + synthetic weights)")
+}
+
+const PROMPTS: [&str; 5] = ["cpy:abcd|", "add:3+4|", "srt:dcba|", "maj:aabab|", "rev:fgh|"];
+
+#[test]
+fn static_ep_and_single_aware_worker_are_output_invisible() {
+    // ISSUE-7 acceptance: completion texts byte-identical between
+    // `--ep-workers 1` (even load-aware: every ratio is exactly 1.0,
+    // and t × 1.0 == t in f32) or static EP at any N, and no EP at all.
+    let policy = DropPolicy::two_t(0.45);
+    let want = engine(policy, None).generate_batch(&PROMPTS, 8).unwrap();
+    let mut ep4 = engine(policy, Some(EpOptions::new(4, false)));
+    let got4 = ep4.generate_batch(&PROMPTS, 8).unwrap();
+    assert_eq!(got4, want, "static EP must be pure accounting");
+    let mut ep1 = engine(policy, Some(EpOptions::new(1, true)));
+    let got1 = ep1.generate_batch(&PROMPTS, 8).unwrap();
+    assert_eq!(got1, want, "one load-aware worker scales every threshold by 1.0");
+}
+
+#[test]
+fn load_aware_run_is_bounded_by_its_static_counterfactual() {
+    let mut e = engine(DropPolicy::two_t(0.45), Some(EpOptions::new(4, true)));
+    e.generate_batch(&PROMPTS, 8).unwrap();
+    let rep = e.ep_report().expect("EP is on");
+    assert_eq!(rep.workers, 4);
+    assert!(rep.load_aware);
+    assert!(rep.invocations > 0, "the serve loop drove the simulation");
+    // Exact per-run bounds from the shadow accounting (not statistical:
+    // the hottest worker's policy is unchanged under hot-keyed scaling).
+    assert!(
+        rep.straggler_ratio <= rep.straggler_ratio_static + 1e-12,
+        "aware ratio {} exceeds static counterfactual {}",
+        rep.straggler_ratio,
+        rep.straggler_ratio_static
+    );
+    assert!(
+        rep.drop_rate <= rep.drop_rate_static + 1e-12,
+        "scaling only lowers thresholds ⇒ can only keep more"
+    );
+    assert_eq!(rep.busy_secs.len(), 4);
+    assert!(rep.busy_secs.iter().sum::<f64>() > 0.0, "measured time was attributed");
+    assert!(rep.comm_secs > 0.0, "multi-worker EP pays AlltoAll every invocation");
+    assert!(rep.sim_secs >= rep.comm_secs);
+    assert_eq!(rep.replications, 0, "replication is off by default");
+}
+
+#[test]
+fn static_ep_report_is_its_own_counterfactual() {
+    let mut e = engine(DropPolicy::two_t(0.45), Some(EpOptions::new(4, false)));
+    e.generate_batch(&PROMPTS, 8).unwrap();
+    let rep = e.ep_report().unwrap();
+    assert!(
+        (rep.straggler_ratio - rep.straggler_ratio_static).abs() < 1e-12,
+        "with load-aware off the shadow runs the same policy"
+    );
+    assert!((rep.drop_rate - rep.drop_rate_static).abs() < 1e-12);
+    assert!(rep.straggler_ratio > 1.0, "round-robin placement on real routing straggles");
+}
+
+#[test]
+fn replication_is_count_based_and_output_invisible() {
+    let mk = || {
+        let ep = EpOptions {
+            n_devices: 4,
+            load_aware: false,
+            replicate_after: Some(1),
+        };
+        engine(DropPolicy::NoDrop, Some(ep))
+    };
+    let mut a = mk();
+    let ga = a.generate_batch(&PROMPTS, 8).unwrap();
+    let ra = a.ep_report().unwrap();
+    let mut b = mk();
+    let gb = b.generate_batch(&PROMPTS, 8).unwrap();
+    let rb = b.ep_report().unwrap();
+    assert_eq!(ga, gb, "identical runs take the identical placement trajectory");
+    assert_eq!(ra.replications, rb.replications, "trigger counts invocations, not wall time");
+    assert!(ra.replications > 0, "K=1 on skewed top-2 routing must fire");
+    // Replication redistributes accounting only — never generations.
+    let want = engine(DropPolicy::NoDrop, None).generate_batch(&PROMPTS, 8).unwrap();
+    assert_eq!(ga, want);
+}

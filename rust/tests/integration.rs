@@ -114,7 +114,7 @@ fn shared_expert_counted_in_drop_rate() {
 #[test]
 fn ep_device_accounting() {
     let opts = EngineOptions {
-        ep: Some(EpOptions { n_devices: 4, load_aware: false }),
+        ep: Some(EpOptions::new(4, false)),
         ..Default::default()
     };
     let mut e = Engine::new(&artifacts(), "olmoe_ish", DropPolicy::NoDrop, opts).unwrap();
@@ -131,7 +131,7 @@ fn load_aware_keeps_more_compute_at_same_max_threshold() {
     let reqs: Vec<&str> = vec!["cpy:abcd|", "add:3+3|", "srt:cbad|", "maj:abbba|"];
     let mk = |aware: bool| {
         let opts = EngineOptions {
-            ep: Some(EpOptions { n_devices: 4, load_aware: aware }),
+            ep: Some(EpOptions::new(4, aware)),
             ..Default::default()
         };
         Engine::new(&artifacts(), "olmoe_ish", DropPolicy::OneT(0.2), opts).unwrap()

@@ -85,7 +85,7 @@ fn one_thread_and_eight_threads_are_byte_identical() {
     assert_eq!(serial, threaded, "thread count leaked into the numerics");
     assert!(serial.major_only > 0, "2T band must actually split work");
 
-    let ep = || Some(EpOptions { n_devices: 4, load_aware: true });
+    let ep = || Some(EpOptions::new(4, true));
     let serial_ep = run_generation(1, ep());
     let threaded_ep = run_generation(8, ep());
     assert_eq!(serial_ep, threaded_ep);

@@ -7,6 +7,7 @@
 
 use dualsparse::commsim::{etp_time, setp_time, Topology};
 use dualsparse::engine::kv::KvCache;
+use dualsparse::engine::{EpOptions, EpSim};
 use dualsparse::moe::{
     plan_dispatch, remap_indices, route_token, DropPolicy, TokenRouting,
 };
@@ -156,6 +157,78 @@ fn load_aware_reduces_makespan_bound_fuzz() {
         let ku = kept_per_dev(&uniform);
         let heaviest = (0..n_dev).max_by_key(|&d| load[d]).unwrap();
         assert!(ka[heaviest] <= ku[heaviest] + 0);
+    }
+}
+
+#[test]
+fn ep_assignment_conserves_routed_pairs_fuzz() {
+    // Every routed (token, expert) pair lands on exactly one worker:
+    // Σ per-worker routed load == total routed pairs, and the flat
+    // `(row, expert, worker)` assignment agrees with the per-worker
+    // tallies — at any worker count, load-aware on or off.
+    let mut rng = SplitMix64::new(0xE9001);
+    for _ in 0..200 {
+        let n_experts = 2 + rng.below(15);
+        let k = 1 + rng.below(n_experts.min(4));
+        let workers = 1 + rng.below(8);
+        let aware = rng.below(2) == 1;
+        let routings: Vec<TokenRouting> = (0..(1 + rng.below(30)))
+            .map(|_| route_token(&random_scores(&mut rng, n_experts), k, false))
+            .collect();
+        let total: u64 = routings.iter().map(|r| r.experts.len() as u64).sum();
+        let sim = EpSim::new(EpOptions::new(workers, aware), n_experts);
+        let inv = sim.observe(&routings, DropPolicy::OneT(0.2));
+        assert_eq!(inv.routed.len(), workers);
+        assert_eq!(inv.routed.iter().sum::<u64>(), total, "pair conservation");
+        let mut per_worker = vec![0u64; workers];
+        for &(_, _, w) in &inv.pairs {
+            per_worker[w] += 1;
+        }
+        assert_eq!(per_worker, inv.routed, "flat assignment matches the tallies");
+    }
+}
+
+#[test]
+fn ep_load_aware_never_raises_thresholds_fuzz() {
+    // §4.3 cap: every worker's scaled policy keeps its thresholds at or
+    // below the configured maximum, the routed-hottest worker keeps
+    // exactly the base policy, and 2T bands stay ordered after scaling.
+    let mut rng = SplitMix64::new(0xE9002);
+    for _ in 0..200 {
+        let n_experts = 4 + rng.below(12);
+        let workers = 2 + rng.below(7);
+        let routings: Vec<TokenRouting> = (0..(4 + rng.below(30)))
+            .map(|_| route_token(&random_scores(&mut rng, n_experts), 2, false))
+            .collect();
+        let t = 0.05 + (rng.f64() as f32) * 0.5;
+        let base = if rng.below(2) == 0 {
+            DropPolicy::OneT(t)
+        } else {
+            DropPolicy::two_t(t)
+        };
+        let sim = EpSim::new(EpOptions::new(workers, true), n_experts);
+        let inv = sim.observe(&routings, base);
+        let pols = sim.policies(&inv, base).expect("routed load is nonzero");
+        let bands = |p: DropPolicy| -> (f32, f32) {
+            match p {
+                DropPolicy::NoDrop => (0.0, 0.0),
+                DropPolicy::OneT(t) => (t, t),
+                DropPolicy::TwoT { major, minor } => (major, minor),
+            }
+        };
+        let (b_lo, b_hi) = bands(base);
+        let hot = (0..workers)
+            .max_by_key(|&w| (inv.routed[w], std::cmp::Reverse(w)))
+            .unwrap();
+        assert_eq!(pols[hot], base, "hottest worker keeps the configured maximum");
+        for (w, &p) in pols.iter().enumerate() {
+            let (lo, hi) = bands(p);
+            assert!(
+                lo <= b_lo + 1e-7 && hi <= b_hi + 1e-7,
+                "worker {w} raised a threshold above the configured maximum"
+            );
+            assert!(lo <= hi + 1e-7, "scaling must keep 2T bands ordered");
+        }
     }
 }
 
