@@ -12,13 +12,14 @@
 
 use anyhow::Result;
 
+pub use super::faults::{CancelSet, DegradeController, FaultPlan, FaultSpec};
 pub use super::policy::{
     AdmissionControl, AgingConfig, Fcfs, PolicyKind, PriorityLanes, SchedConfig,
     SchedulingPolicy, ShortestPromptFirst,
 };
 pub use super::scheduler::{
-    poisson_arrivals, serve_opts, serve_policy, serve_with, ArrivalMode, Completion, Phase,
-    Rejection, Request, SchedOptions, ServeOutcome, ServeStats,
+    poisson_arrivals, serve_opts, serve_policy, serve_with, ArrivalMode, Casualty, Completion,
+    Phase, Rejection, Request, SchedOptions, ServeOutcome, ServeStats,
 };
 use super::Engine;
 
@@ -45,7 +46,7 @@ pub fn task_workload(n: usize, max_new: usize) -> Vec<Request> {
     for i in 0..n {
         let t = i % tasks.len();
         let (prompt, _) = per_task[t].pop().expect("enough prompts");
-        out.push(Request { id: i, prompt, max_new, priority: 0 });
+        out.push(Request { id: i, prompt, max_new, priority: 0, deadline_secs: None });
     }
     out
 }

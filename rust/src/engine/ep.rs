@@ -39,6 +39,15 @@
 //! the per-worker policies (the deliberate accuracy/latency trade of
 //! load-aware thresholding). With `load_aware = false`, or with a
 //! single worker, generated text is byte-identical to a no-EP run.
+//!
+//! Failure injection ([`crate::engine::faults`]) can fail a worker
+//! mid-run — its experts re-host onto the least-loaded survivors via
+//! the same append-only placement list replication uses
+//! ([`EpSim::fail_worker`], counted in `EpReport::failovers`) — or
+//! slow one down ([`EpSim::slow_worker`]), which inflates that
+//! worker's attributed busy seconds and lets it overtake the
+//! routed-hottest worker as the charged straggler. Both are pure
+//! accounting like everything else here: generated text never changes.
 
 use std::collections::HashMap;
 
@@ -116,6 +125,9 @@ pub struct EpReport {
     pub drop_rate_static: f64,
     pub replications: u64,
     pub invocations: u64,
+    /// Experts re-hosted onto survivors by injected worker failures
+    /// ([`EpSim::fail_worker`]).
+    pub failovers: u64,
 }
 
 /// The virtual expert-parallel deployment (see module docs).
@@ -142,6 +154,12 @@ pub struct EpSim {
     /// while above ideal load.
     streak: u64,
     streak_worker: usize,
+    /// Injected worker failures ([`EpSim::fail_worker`]); failed
+    /// workers host nothing and are never replication targets.
+    failed: Vec<bool>,
+    /// Injected per-worker slow-down factors (1.0 = nominal speed).
+    slow_factor: Vec<f64>,
+    failovers: u64,
 }
 
 impl EpSim {
@@ -164,8 +182,62 @@ impl EpSim {
             replications: 0,
             streak: 0,
             streak_worker: 0,
+            failed: vec![false; n],
+            slow_factor: vec![1.0; n],
+            failovers: 0,
             opts,
         }
+    }
+
+    /// Injected worker failure (`engine::faults`): remove `w` from
+    /// every expert's host list and re-host experts left homeless onto
+    /// the least-loaded survivor (fewest hosted experts, tie → lowest
+    /// id) — the same append-only placement machinery replication
+    /// uses, so straggler accounting keeps working across the
+    /// failover. Returns the number of experts re-hosted (0 when `w`
+    /// is unknown, already failed, or the last survivor — the
+    /// simulation refuses to lose its final worker).
+    pub fn fail_worker(&mut self, w: usize) -> u64 {
+        let n = self.n_workers();
+        if w >= n || self.failed[w] || self.failed.iter().filter(|&&f| !f).count() <= 1 {
+            return 0;
+        }
+        self.failed[w] = true;
+        let mut hosted = vec![0usize; n];
+        for hs in &self.hosts {
+            for &h in hs {
+                hosted[h] += 1;
+            }
+        }
+        let mut moved = 0u64;
+        for hs in &mut self.hosts {
+            hs.retain(|&h| h != w);
+            if hs.is_empty() {
+                let target = (0..n)
+                    .filter(|&x| !self.failed[x])
+                    .min_by_key(|&x| (hosted[x], x))
+                    .expect("at least one survivor");
+                hosted[target] += 1;
+                hs.push(target);
+                moved += 1;
+            }
+        }
+        self.failovers += moved;
+        moved
+    }
+
+    /// Injected worker slow-down (`engine::faults`): every second of
+    /// work attributed to `w` costs `factor` simulated seconds from
+    /// now on. Factors below 1.0 (or non-finite) are ignored.
+    pub fn slow_worker(&mut self, w: usize, factor: f64) {
+        if w < self.slow_factor.len() && factor.is_finite() && factor >= 1.0 {
+            self.slow_factor[w] = factor;
+        }
+    }
+
+    /// Workers currently failed (tests / diagnostics).
+    pub fn failed_workers(&self) -> Vec<usize> {
+        (0..self.n_workers()).filter(|&w| self.failed[w]).collect()
     }
 
     pub fn n_workers(&self) -> usize {
@@ -277,12 +349,13 @@ impl EpSim {
             let ec: f64 = ew[e].iter().sum();
             if ec > 0.0 {
                 for w in 0..n {
-                    busy[w] += dt * ew[e][w] / ec;
+                    busy[w] += dt * ew[e][w] / ec * self.slow_factor[w];
                 }
             } else {
                 // Executed with no kept pairs cannot happen; degrade to
                 // the first host rather than dropping time on the floor.
-                busy[self.hosts[e][0]] += dt;
+                let w0 = self.hosts[e][0];
+                busy[w0] += dt * self.slow_factor[w0];
             }
         }
         let total_kept: f64 = kept.iter().sum();
@@ -297,7 +370,17 @@ impl EpSim {
         } else {
             0.0
         };
-        self.sim_secs += kept[w_star] * per_pair + comm;
+        // Straggler compute: the routed-hottest anchor at its effective
+        // speed — or any injected-slow worker whose effective time now
+        // exceeds it. With every slow factor at 1.0 this is exactly the
+        // historical `kept[w_star] × per_pair` charge.
+        let mut straggle = kept[w_star] * per_pair * self.slow_factor[w_star];
+        for w in 0..n {
+            if self.slow_factor[w] > 1.0 {
+                straggle = straggle.max(kept[w] * per_pair * self.slow_factor[w]);
+            }
+        }
+        self.sim_secs += straggle + comm;
         self.comm_secs += comm;
         self.saved_secs += (inv.routed[w_star] as f64 - kept[w_star]).max(0.0) * per_pair;
         self.hot_kept += kept[w_star];
@@ -354,11 +437,11 @@ impl EpSim {
         else {
             return;
         };
-        // Coldest worker (tie → lowest id) not already hosting it.
+        // Coldest live worker (tie → lowest id) not already hosting it.
         let mut order: Vec<usize> = (0..n).collect();
         order.sort_by_key(|&w| (inv.routed[w], w));
         for w in order {
-            if w != w_star && !self.hosts[e_hot].contains(&w) {
+            if w != w_star && !self.failed[w] && !self.hosts[e_hot].contains(&w) {
                 self.hosts[e_hot].push(w);
                 self.replications += 1;
                 return;
@@ -388,6 +471,7 @@ impl EpSim {
             drop_rate_static: self.drop_static.drop_rate(),
             replications: self.replications,
             invocations: self.invocations,
+            failovers: self.failovers,
         }
     }
 }
@@ -473,6 +557,66 @@ mod tests {
         assert_eq!(rep.straggler_ratio, 1.0);
         assert_eq!(rep.comm_secs, 0.0, "no AlltoAll within one worker");
         assert!((rep.busy_secs[0] - 3e-3).abs() < 1e-12);
+    }
+
+    #[test]
+    fn failed_worker_rehosts_experts_onto_survivors() {
+        let mut sim = EpSim::new(EpOptions::new(2, false), 4);
+        // round-robin: experts 0, 2 → worker 0; experts 1, 3 → worker 1
+        let moved = sim.fail_worker(0);
+        assert_eq!(moved, 2, "both of worker 0's experts re-host");
+        assert!(sim.hosts().iter().all(|hs| hs == &vec![1]));
+        assert_eq!(sim.failed_workers(), vec![0]);
+        assert_eq!(sim.report().failovers, 2);
+        // the last survivor cannot fail, and double failure is a no-op
+        assert_eq!(sim.fail_worker(1), 0);
+        assert_eq!(sim.fail_worker(0), 0);
+        // routing avoids the failed worker entirely
+        let r = routings(&[&[(0, 0.5)], &[(1, 0.5)]]);
+        let inv = sim.observe(&r, DropPolicy::NoDrop);
+        assert_eq!(inv.routed, vec![0, 2]);
+    }
+
+    #[test]
+    fn replication_never_targets_a_failed_worker() {
+        let mut sim = EpSim::new(
+            EpOptions { n_devices: 3, load_aware: false, replicate_after: Some(1) },
+            3,
+        );
+        assert_eq!(sim.fail_worker(1), 1, "worker 1's expert re-hosts");
+        let r = routings(&[&[(0, 0.9)], &[(0, 0.9)]]);
+        let inv = sim.observe(&r, DropPolicy::NoDrop);
+        let plan = plan_dispatch(&r, 3, DropPolicy::NoDrop, None);
+        sim.charge(&inv, &plan, &[], 16);
+        assert_eq!(sim.report().replications, 1);
+        assert!(!sim.hosts()[0].contains(&1), "replica landed on a live worker");
+    }
+
+    #[test]
+    fn slow_worker_inflates_attributed_time_and_straggler_charge() {
+        let base = DropPolicy::NoDrop;
+        let r = routings(&[&[(0, 0.6)], &[(1, 0.4)]]);
+        let plan = plan_dispatch(&r, 2, base, None);
+        let mut a = EpSim::new(EpOptions::new(2, false), 2);
+        let inv = a.observe(&r, base);
+        a.charge(&inv, &plan, &[(0, 1e-3), (1, 1e-3)], 16);
+        let fast = a.report();
+        let mut b = EpSim::new(EpOptions::new(2, false), 2);
+        b.slow_worker(1, 3.0);
+        let inv = b.observe(&r, base);
+        b.charge(&inv, &plan, &[(0, 1e-3), (1, 1e-3)], 16);
+        let slow = b.report();
+        assert!((slow.busy_secs[1] - 3.0 * fast.busy_secs[1]).abs() < 1e-12);
+        assert_eq!(slow.busy_secs[0], fast.busy_secs[0], "nominal workers are untouched");
+        assert!(slow.sim_secs > fast.sim_secs, "the slow worker becomes the straggler");
+        assert_eq!(slow.failovers, 0);
+        // sub-nominal or garbage factors are ignored
+        let mut c = EpSim::new(EpOptions::new(2, false), 2);
+        c.slow_worker(0, 0.5);
+        c.slow_worker(0, f64::NAN);
+        let inv = c.observe(&r, base);
+        c.charge(&inv, &plan, &[(0, 1e-3), (1, 1e-3)], 16);
+        assert_eq!(c.report().sim_secs, fast.sim_secs);
     }
 
     #[test]

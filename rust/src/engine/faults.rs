@@ -1,0 +1,556 @@
+//! Deterministic fault injection and SLO-driven degradation for the
+//! serve loop — the chaos half of the scheduler's failure-domain
+//! contract (the survival half lives in [`crate::engine::scheduler`]).
+//!
+//! Three cooperating pieces:
+//!
+//! * [`FaultPlan`] — a seeded, fully deterministic schedule of injected
+//!   failures: per-attempt backend execution errors, per-decode-step
+//!   latency spikes, KV page-pool pressure (pages sequestered from the
+//!   free list for a bounded hold), EP worker failure/slow-down, and
+//!   client disconnects. Every draw comes from one [`SplitMix64`]
+//!   stream, so in closed-loop mode the same seed replays the same
+//!   faults at the same loop positions. A zero plan draws nothing and
+//!   injects nothing — the scheduler is byte-identical with
+//!   `Some(zero plan)`, and with `None`.
+//! * [`CancelSet`] — the external-cancellation hook: a thread-safe id
+//!   set a network front end (or a fault plan simulating disconnects)
+//!   marks; the scheduler sweeps it every iteration and retires marked
+//!   requests as `Cancelled`, freeing their pages immediately.
+//! * [`DegradeController`] — closes the loop from observed TTFT /
+//!   queue depth to the active [`DropPolicy`](crate::moe::DropPolicy)
+//!   via `DropPolicy::scaled`: the configured policy is the *ceiling*,
+//!   level 0 scales it to keep-everything, and each SLO breach climbs
+//!   one rung of the ladder (the paper's drop-rate→speedup curve run
+//!   as a feedback controller); healthy evaluations relax it back down
+//!   with hysteresis so the level does not flap.
+
+use std::collections::HashSet;
+use std::sync::{Arc, Mutex};
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::SplitMix64;
+use crate::util::stats::percentile;
+
+/// Parsed `--faults` specification: rates and magnitudes only, no
+/// state. `Default` is the zero spec (inject nothing).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct FaultSpec {
+    /// Per-attempt probability of an injected backend execution error
+    /// (one draw per prefill-chunk attempt and per decode step).
+    pub exec_p: f64,
+    /// Per-decode-step probability of a latency spike…
+    pub spike_p: f64,
+    /// …of this many milliseconds (a real stall, so TTFT/latency
+    /// percentiles — and the [`DegradeController`] — feel it).
+    pub spike_ms: f64,
+    /// Per-iteration probability of page-pool pressure…
+    pub pressure_p: f64,
+    /// …sequestering up to this many free pages…
+    pub pressure_pages: usize,
+    /// …for this many scheduler iterations (an equal cool-down window
+    /// follows each release, so admission is guaranteed forward
+    /// progress between pressure episodes).
+    pub pressure_hold: u64,
+    /// Fail EP worker `.0` once the run's decode-step count reaches
+    /// `.1` (its experts re-host onto survivors).
+    pub ep_fail: Option<(usize, u64)>,
+    /// Slow EP worker `.0` by factor `.1` (≥ 1.0) for the whole run.
+    pub ep_slow: Option<(usize, f64)>,
+    /// Per-arrival probability that the client disconnects immediately
+    /// (marks the request in the run's [`CancelSet`]).
+    pub cancel_p: f64,
+}
+
+impl FaultSpec {
+    /// True when nothing can ever be injected.
+    pub fn is_zero(&self) -> bool {
+        self.exec_p <= 0.0
+            && self.spike_p <= 0.0
+            && self.pressure_p <= 0.0
+            && self.ep_fail.is_none()
+            && self.ep_slow.is_none()
+            && self.cancel_p <= 0.0
+    }
+}
+
+fn parse_prob(kind: &str, raw: &str) -> Result<f64> {
+    let p: f64 = raw.parse().map_err(|_| {
+        anyhow::anyhow!("--faults {kind}: probability `{raw}` is not a number")
+    })?;
+    if !(0.0..=1.0).contains(&p) {
+        bail!("--faults {kind}: probability {p} outside [0, 1]");
+    }
+    Ok(p)
+}
+
+/// Deterministic fault schedule: a [`FaultSpec`] plus the seeded draw
+/// stream and an injected-event counter. Cloning clones the stream
+/// state, so two clones replay identical faults.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    pub spec: FaultSpec,
+    rng: SplitMix64,
+    injected: u64,
+    ep_fail_armed: bool,
+}
+
+impl FaultPlan {
+    pub fn new(spec: FaultSpec, seed: u64) -> Self {
+        FaultPlan { spec, rng: SplitMix64::new(seed), injected: 0, ep_fail_armed: true }
+    }
+
+    /// The zero plan: draws nothing, injects nothing. A serve run with
+    /// this plan is byte-identical to one with no plan at all.
+    pub fn none() -> Self {
+        FaultPlan::new(FaultSpec::default(), 0)
+    }
+
+    /// Parse a comma-separated `--faults` spec. Components:
+    ///
+    /// * `exec=P` — backend execution errors at probability P/attempt
+    /// * `spike=P:MS` — P/decode-step latency spikes of MS milliseconds
+    /// * `pressure=P:PAGES[:HOLD]` — P/iteration sequestration of PAGES
+    ///   free KV pages for HOLD iterations (default 3)
+    /// * `ep-fail=W@STEP` — fail EP worker W at decode step STEP
+    /// * `ep-slow=W@FACTOR` — slow EP worker W by FACTOR (≥ 1.0)
+    /// * `cancel=P` — P/arrival immediate client disconnects
+    ///
+    /// The empty string parses to the zero plan.
+    pub fn parse(spec: &str, seed: u64) -> Result<FaultPlan> {
+        let mut out = FaultSpec::default();
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("--faults component `{part}` is not key=value"))?;
+            match key {
+                "exec" => out.exec_p = parse_prob("exec", val)?,
+                "cancel" => out.cancel_p = parse_prob("cancel", val)?,
+                "spike" => {
+                    let (p, ms) = val.split_once(':').ok_or_else(|| {
+                        anyhow::anyhow!("--faults spike wants P:MS, got `{val}`")
+                    })?;
+                    out.spike_p = parse_prob("spike", p)?;
+                    out.spike_ms = ms
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("--faults spike: `{ms}` ms is not a number"))?;
+                    if !(out.spike_ms > 0.0 && out.spike_ms.is_finite()) {
+                        bail!("--faults spike: milliseconds must be positive and finite");
+                    }
+                }
+                "pressure" => {
+                    let mut it = val.split(':');
+                    let p = it.next().unwrap_or_default();
+                    let pages = it.next().ok_or_else(|| {
+                        anyhow::anyhow!("--faults pressure wants P:PAGES[:HOLD], got `{val}`")
+                    })?;
+                    out.pressure_p = parse_prob("pressure", p)?;
+                    out.pressure_pages = pages.parse().map_err(|_| {
+                        anyhow::anyhow!("--faults pressure: `{pages}` pages is not an integer")
+                    })?;
+                    if out.pressure_pages == 0 {
+                        bail!("--faults pressure: page count must be positive");
+                    }
+                    out.pressure_hold = match it.next() {
+                        Some(h) => h.parse().map_err(|_| {
+                            anyhow::anyhow!("--faults pressure: hold `{h}` is not an integer")
+                        })?,
+                        None => 3,
+                    };
+                    if out.pressure_hold == 0 {
+                        bail!("--faults pressure: hold must be at least one iteration");
+                    }
+                }
+                "ep-fail" => {
+                    let (w, step) = val.split_once('@').ok_or_else(|| {
+                        anyhow::anyhow!("--faults ep-fail wants W@STEP, got `{val}`")
+                    })?;
+                    let w: usize = w.parse().map_err(|_| {
+                        anyhow::anyhow!("--faults ep-fail: worker `{w}` is not an integer")
+                    })?;
+                    let step: u64 = step.parse().map_err(|_| {
+                        anyhow::anyhow!("--faults ep-fail: step `{step}` is not an integer")
+                    })?;
+                    out.ep_fail = Some((w, step));
+                }
+                "ep-slow" => {
+                    let (w, f) = val.split_once('@').ok_or_else(|| {
+                        anyhow::anyhow!("--faults ep-slow wants W@FACTOR, got `{val}`")
+                    })?;
+                    let w: usize = w.parse().map_err(|_| {
+                        anyhow::anyhow!("--faults ep-slow: worker `{w}` is not an integer")
+                    })?;
+                    let f: f64 = f.parse().map_err(|_| {
+                        anyhow::anyhow!("--faults ep-slow: factor `{f}` is not a number")
+                    })?;
+                    if !(f >= 1.0 && f.is_finite()) {
+                        bail!("--faults ep-slow: factor must be ≥ 1.0 and finite");
+                    }
+                    out.ep_slow = Some((w, f));
+                }
+                other => bail!(
+                    "--faults: unknown component `{other}` \
+                     (want exec/spike/pressure/ep-fail/ep-slow/cancel)"
+                ),
+            }
+        }
+        Ok(FaultPlan::new(out, seed))
+    }
+
+    fn draw(&mut self, p: f64) -> bool {
+        if p <= 0.0 {
+            return false;
+        }
+        let hit = self.rng.f64() < p;
+        if hit {
+            self.injected += 1;
+        }
+        hit
+    }
+
+    /// One draw per backend-op attempt (prefill chunk / decode step):
+    /// should this attempt fail with an injected execution error? The
+    /// error is injected *before* the engine runs, so no partial state
+    /// ever needs unwinding — retrying the attempt is always safe.
+    pub fn inject_exec_error(&mut self) -> bool {
+        self.draw(self.spec.exec_p)
+    }
+
+    /// One draw per decode step: a latency spike of `Some(ms)` to
+    /// stall for, or `None`.
+    pub fn spike_ms(&mut self) -> Option<f64> {
+        if self.draw(self.spec.spike_p) {
+            Some(self.spec.spike_ms)
+        } else {
+            None
+        }
+    }
+
+    /// One draw per eligible scheduler iteration: `Some((pages, hold))`
+    /// to sequester, or `None`.
+    pub fn pressure(&mut self) -> Option<(usize, u64)> {
+        if self.draw(self.spec.pressure_p) {
+            Some((self.spec.pressure_pages, self.spec.pressure_hold.max(1)))
+        } else {
+            None
+        }
+    }
+
+    /// One draw per arrival: does this client disconnect immediately?
+    pub fn cancel_on_arrival(&mut self) -> bool {
+        self.draw(self.spec.cancel_p)
+    }
+
+    /// Deterministic victim pick among `n` active decode rows.
+    pub fn pick(&mut self, n: usize) -> usize {
+        debug_assert!(n > 0);
+        self.rng.below(n)
+    }
+
+    /// Fire the one-shot EP worker failure once the run's decode-step
+    /// count reaches the configured trigger. Consumes the trigger.
+    pub fn take_ep_fail(&mut self, decode_steps: u64) -> Option<usize> {
+        let (w, at) = self.spec.ep_fail?;
+        if !self.ep_fail_armed || decode_steps < at {
+            return None;
+        }
+        self.ep_fail_armed = false;
+        self.injected += 1;
+        Some(w)
+    }
+
+    /// Record the whole-run EP slow-down as one injected event (called
+    /// by the scheduler when it applies `spec.ep_slow`).
+    pub fn note_injected(&mut self) {
+        self.injected += 1;
+    }
+
+    /// Total injected events so far (exec errors + spikes + pressure
+    /// episodes + disconnects + EP failures/slow-downs).
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+}
+
+/// External-cancellation hook: the serve loop sweeps this set every
+/// iteration and retires marked requests (by
+/// [`Request::id`](crate::engine::scheduler::Request)) as `Cancelled`,
+/// freeing their KV pages immediately. Clones share the underlying
+/// set, so a network front end can hold one clone and cancel from
+/// another thread mid-run.
+#[derive(Debug, Clone, Default)]
+pub struct CancelSet {
+    inner: Arc<Mutex<HashSet<usize>>>,
+}
+
+impl CancelSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Mark `id` for cancellation (idempotent).
+    pub fn cancel(&self, id: usize) {
+        self.inner.lock().expect("cancel set poisoned").insert(id);
+    }
+
+    pub fn is_cancelled(&self, id: usize) -> bool {
+        self.inner.lock().expect("cancel set poisoned").contains(&id)
+    }
+
+    /// Fast emptiness probe so the per-iteration sweep is free when no
+    /// cancellation was ever requested.
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().expect("cancel set poisoned").is_empty()
+    }
+}
+
+/// SLO feedback controller over the
+/// [`DropPolicy::scaled`](crate::moe::DropPolicy::scaled) ladder.
+///
+/// The configured drop policy is the **ceiling**: the controller holds
+/// a level in `0..=levels` and the scheduler runs
+/// `base.scaled(level / levels)` — level 0 keeps everything (thresholds
+/// scaled to zero), the top level is the full configured policy. Every
+/// `eval_every` iterations the controller compares the windowed p99
+/// TTFT and the instantaneous queue depth against the SLOs: a breach
+/// escalates one level immediately; only `hysteresis` *consecutive*
+/// healthy evaluations relax one level, so the ladder ratchets up fast
+/// under overload and climbs down slowly when the queue drains.
+#[derive(Debug, Clone)]
+pub struct DegradeController {
+    /// Windowed p99 TTFT above this breaches the SLO.
+    pub ttft_slo_secs: f64,
+    /// Instantaneous queue depth above this breaches the SLO.
+    pub queue_depth_slo: usize,
+    /// Ladder rungs (level ∈ 0..=levels).
+    pub levels: u32,
+    /// Iterations between evaluations.
+    pub eval_every: u64,
+    /// Consecutive healthy evaluations required to relax one level.
+    pub hysteresis: u32,
+    level: u32,
+    healthy_streak: u32,
+    window: Vec<f64>,
+    timeline: Vec<(u64, u32)>,
+    max_level: u32,
+}
+
+impl DegradeController {
+    pub fn new(ttft_slo_secs: f64, queue_depth_slo: usize) -> Self {
+        DegradeController {
+            ttft_slo_secs,
+            queue_depth_slo,
+            levels: 4,
+            eval_every: 8,
+            hysteresis: 2,
+            level: 0,
+            healthy_streak: 0,
+            window: Vec::new(),
+            timeline: Vec::new(),
+            max_level: 0,
+        }
+    }
+
+    /// Current ladder position as the `DropPolicy::scaled` ratio.
+    pub fn scale(&self) -> f64 {
+        f64::from(self.level) / f64::from(self.levels.max(1))
+    }
+
+    pub fn level(&self) -> u32 {
+        self.level
+    }
+
+    /// Highest level the run reached.
+    pub fn max_level(&self) -> u32 {
+        self.max_level
+    }
+
+    /// `(iteration, new_level)` for every level change, in order.
+    pub fn timeline(&self) -> &[(u64, u32)] {
+        &self.timeline
+    }
+
+    /// Feed one observed TTFT (seconds, arrival-anchored) into the
+    /// current evaluation window.
+    pub fn observe_ttft(&mut self, secs: f64) {
+        self.window.push(secs);
+    }
+
+    /// Called once per scheduler iteration; on evaluation boundaries
+    /// returns `Some(new scale)` iff the level changed.
+    pub fn tick(&mut self, iter: u64, queue_depth: usize) -> Option<f64> {
+        if iter == 0 || !iter.is_multiple_of(self.eval_every.max(1)) {
+            return None;
+        }
+        let ttft_p99 = if self.window.is_empty() {
+            0.0
+        } else {
+            percentile(&self.window, 99.0)
+        };
+        self.window.clear();
+        let breach = ttft_p99 > self.ttft_slo_secs || queue_depth > self.queue_depth_slo;
+        let before = self.level;
+        if breach {
+            self.healthy_streak = 0;
+            self.level = (self.level + 1).min(self.levels);
+        } else {
+            self.healthy_streak += 1;
+            if self.healthy_streak >= self.hysteresis && self.level > 0 {
+                self.healthy_streak = 0;
+                self.level -= 1;
+            }
+        }
+        if self.level == before {
+            return None;
+        }
+        self.max_level = self.max_level.max(self.level);
+        self.timeline.push((iter, self.level));
+        Some(self.scale())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_every_component() {
+        let p = FaultPlan::parse(
+            "exec=0.3, spike=0.25:30, pressure=0.2:4:5, ep-fail=1@40, ep-slow=2@1.5, cancel=0.1",
+            7,
+        )
+        .unwrap();
+        assert_eq!(p.spec.exec_p, 0.3);
+        assert_eq!(p.spec.spike_p, 0.25);
+        assert_eq!(p.spec.spike_ms, 30.0);
+        assert_eq!(p.spec.pressure_p, 0.2);
+        assert_eq!(p.spec.pressure_pages, 4);
+        assert_eq!(p.spec.pressure_hold, 5);
+        assert_eq!(p.spec.ep_fail, Some((1, 40)));
+        assert_eq!(p.spec.ep_slow, Some((2, 1.5)));
+        assert_eq!(p.spec.cancel_p, 0.1);
+        assert!(!p.spec.is_zero());
+        // pressure hold defaults to 3 when omitted
+        let q = FaultPlan::parse("pressure=0.5:2", 0).unwrap();
+        assert_eq!(q.spec.pressure_hold, 3);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        for bad in [
+            "exec",           // no value
+            "exec=1.5",       // p out of range
+            "exec=-0.1",      // negative p
+            "spike=0.5",      // missing ms
+            "spike=0.5:0",    // non-positive ms
+            "pressure=0.5",   // missing pages
+            "pressure=0.5:0", // zero pages
+            "pressure=0.5:2:0", // zero hold
+            "ep-fail=1",      // missing @step
+            "ep-slow=1@0.5",  // factor < 1
+            "warp=0.5",       // unknown component
+        ] {
+            assert!(FaultPlan::parse(bad, 0).is_err(), "`{bad}` must not parse");
+        }
+    }
+
+    #[test]
+    fn empty_spec_is_the_zero_plan_and_draws_nothing() {
+        let mut p = FaultPlan::parse("", 99).unwrap();
+        assert!(p.spec.is_zero());
+        for _ in 0..100 {
+            assert!(!p.inject_exec_error());
+            assert!(p.spike_ms().is_none());
+            assert!(p.pressure().is_none());
+            assert!(!p.cancel_on_arrival());
+            assert!(p.take_ep_fail(u64::MAX).is_none());
+        }
+        assert_eq!(p.injected(), 0);
+    }
+
+    #[test]
+    fn draws_are_seed_deterministic_and_counted() {
+        let mk = || FaultPlan::parse("exec=0.4,spike=0.3:5", 42).unwrap();
+        let (mut a, mut b) = (mk(), mk());
+        let sa: Vec<(bool, Option<u64>)> = (0..200)
+            .map(|_| (a.inject_exec_error(), a.spike_ms().map(|m| m as u64)))
+            .collect();
+        let sb: Vec<(bool, Option<u64>)> = (0..200)
+            .map(|_| (b.inject_exec_error(), b.spike_ms().map(|m| m as u64)))
+            .collect();
+        assert_eq!(sa, sb, "same seed ⇒ same fault schedule");
+        let hits = sa.iter().map(|(e, s)| u64::from(*e) + u64::from(s.is_some())).sum::<u64>();
+        assert!(hits > 0, "p=0.4 over 200 draws must fire");
+        assert_eq!(a.injected(), hits, "every injected event is counted");
+        let mut c = FaultPlan::parse("exec=0.4,spike=0.3:5", 43).unwrap();
+        let sc: Vec<(bool, Option<u64>)> = (0..200)
+            .map(|_| (c.inject_exec_error(), c.spike_ms().map(|m| m as u64)))
+            .collect();
+        assert_ne!(sa, sc, "seed must matter");
+    }
+
+    #[test]
+    fn ep_fail_trigger_is_one_shot() {
+        let mut p = FaultPlan::parse("ep-fail=2@10", 0).unwrap();
+        assert_eq!(p.take_ep_fail(9), None, "before the trigger step");
+        assert_eq!(p.take_ep_fail(10), Some(2));
+        assert_eq!(p.take_ep_fail(11), None, "consumed");
+        assert_eq!(p.injected(), 1);
+    }
+
+    #[test]
+    fn cancel_set_is_shared_across_clones() {
+        let cs = CancelSet::new();
+        assert!(cs.is_empty());
+        let other = cs.clone();
+        other.cancel(7);
+        assert!(cs.is_cancelled(7), "clones share the set");
+        assert!(!cs.is_cancelled(8));
+        assert!(!cs.is_empty());
+    }
+
+    #[test]
+    fn degrade_escalates_on_breach_and_relaxes_with_hysteresis() {
+        let mut d = DegradeController::new(0.010, 4);
+        assert_eq!(d.level(), 0);
+        assert_eq!(d.scale(), 0.0, "healthy start keeps everything");
+        // Breach via TTFT: escalate one level per evaluation.
+        d.observe_ttft(0.050);
+        assert_eq!(d.tick(8, 0), Some(0.25));
+        d.observe_ttft(0.050);
+        assert_eq!(d.tick(16, 0), Some(0.5));
+        // Breach via queue depth alone (empty TTFT window).
+        assert_eq!(d.tick(24, 9), Some(0.75));
+        assert_eq!(d.max_level(), 3);
+        // One healthy eval is not enough (hysteresis = 2)…
+        assert_eq!(d.tick(32, 0), None);
+        // …the second relaxes one level.
+        assert_eq!(d.tick(40, 0), Some(0.5));
+        // Non-boundary iterations never evaluate.
+        d.observe_ttft(9.0);
+        assert_eq!(d.tick(41, 99), None);
+        assert_eq!(
+            d.timeline(),
+            &[(8, 1), (16, 2), (24, 3), (40, 2)],
+            "every level change is on the timeline"
+        );
+    }
+
+    #[test]
+    fn degrade_saturates_at_the_ceiling_and_the_floor() {
+        let mut d = DegradeController::new(1e-9, 0);
+        for k in 1..=10u64 {
+            d.observe_ttft(1.0);
+            d.tick(k * 8, 100);
+        }
+        assert_eq!(d.level(), d.levels, "escalation saturates at the configured policy");
+        assert_eq!(d.scale(), 1.0);
+        let mut h = DegradeController::new(1e9, usize::MAX);
+        for k in 1..=10u64 {
+            h.tick(k * 8, 0);
+        }
+        assert_eq!(h.level(), 0, "healthy runs stay at keep-everything");
+        assert!(h.timeline().is_empty());
+    }
+}

@@ -72,6 +72,10 @@ pub struct PagedKvCache {
     /// `t` lives in physical page `tables[seq][t / page_size]`.
     tables: Vec<Vec<usize>>,
     live: Vec<bool>,
+    /// Pages withheld from the free list by injected page-pool pressure
+    /// (`engine::faults`): physically absent from `free_list` until
+    /// [`Self::release_sequestered`] returns them.
+    sequestered: Vec<usize>,
 }
 
 impl PagedKvCache {
@@ -95,6 +99,7 @@ impl PagedKvCache {
             free_list: (0..n_pages).rev().collect(),
             tables: vec![Vec::new(); max_seqs],
             live: vec![false; max_seqs],
+            sequestered: Vec::new(),
         }
     }
 
@@ -114,9 +119,10 @@ impl PagedKvCache {
         self.free_list.len()
     }
 
-    /// Physical pages currently mapped by live sequences.
+    /// Physical pages currently mapped by live sequences (sequestered
+    /// pages are neither free nor mapped).
     pub fn pages_in_use(&self) -> usize {
-        self.n_pages - self.free_list.len()
+        self.n_pages - self.free_list.len() - self.sequestered.len()
     }
 
     /// Fraction of the page pool currently mapped.
@@ -188,15 +194,45 @@ impl PagedKvCache {
 
     /// Drop every live sequence and rebuild the free list (start of a
     /// fresh serving run). Deterministic: allocation order after a
-    /// reset is identical run-to-run.
+    /// reset is identical run-to-run. Sequestered pages come back too.
     pub fn reset(&mut self) {
         for t in &mut self.tables {
             t.clear();
         }
         self.free_list = (0..self.n_pages).rev().collect();
+        self.sequestered.clear();
         self.pos.fill(0);
         self.live.fill(false);
         self.n_active = 0;
+    }
+
+    /// Withhold up to `n` free pages from the pool — injected page-pool
+    /// pressure (`engine::faults`). Pages are popped off the free list,
+    /// so `ensure` and `free_page_count` genuinely see a smaller pool.
+    /// Returns how many pages were actually taken; the caller must
+    /// leave enough for outstanding conservative reservations.
+    pub fn sequester_pages(&mut self, n: usize) -> usize {
+        let take = n.min(self.free_list.len());
+        for _ in 0..take {
+            let page = self.free_list.pop().expect("free list underflow");
+            self.sequestered.push(page);
+        }
+        take
+    }
+
+    /// Return every sequestered page to the free list (pressure over).
+    /// Returns how many pages came back.
+    pub fn release_sequestered(&mut self) -> usize {
+        let n = self.sequestered.len();
+        while let Some(page) = self.sequestered.pop() {
+            self.free_list.push(page);
+        }
+        n
+    }
+
+    /// Pages currently withheld by [`Self::sequester_pages`].
+    pub fn sequestered_count(&self) -> usize {
+        self.sequestered.len()
     }
 
     /// `seq`'s page table: physical page ids in logical order. The
@@ -457,6 +493,34 @@ mod tests {
         assert!(c.has_free());
         assert_eq!(c.alloc(), 0);
         assert!(conserved(&c));
+    }
+
+    #[test]
+    fn sequester_shrinks_the_pool_and_release_restores_it() {
+        let mut c = cache();
+        assert_eq!(c.sequester_pages(2), 2);
+        assert_eq!(c.free_page_count(), 4);
+        assert_eq!(c.sequestered_count(), 2);
+        assert_eq!(c.pages_in_use(), 0, "sequestered pages are not mapped");
+        let s = c.alloc();
+        assert!(c.ensure(s, 8), "a 2-page grant fits beside 2 sequestered pages");
+        let t = c.alloc();
+        // pressure beyond the free list is clamped, never underflows
+        assert_eq!(c.sequester_pages(100), 2);
+        assert_eq!(c.free_page_count(), 0);
+        assert!(!c.ensure(t, 8), "the sequestered pages are genuinely gone");
+        assert_eq!(c.release_sequestered(), 4);
+        assert!(c.ensure(t, 8), "released pages are grantable again");
+        c.free(t);
+        assert_eq!(c.free_page_count(), 4);
+        assert_eq!(c.sequestered_count(), 0);
+        let mapped: usize = (0..c.max_seqs).map(|q| c.seq_pages(q).len()).sum();
+        assert_eq!(c.free_page_count() + mapped, c.n_pages, "pool conserved after release");
+        // reset drops sequestered state entirely
+        assert_eq!(c.sequester_pages(1), 1);
+        c.reset();
+        assert_eq!(c.sequestered_count(), 0);
+        assert_eq!(c.free_page_count(), c.n_pages);
     }
 
     #[test]

@@ -10,6 +10,7 @@
 
 pub mod batcher;
 pub mod ep;
+pub mod faults;
 pub mod kv;
 pub mod policy;
 pub mod scheduler;
@@ -389,6 +390,21 @@ impl Engine {
     /// [`Engine::reset_metrics`], when EP is on.
     pub fn ep_report(&self) -> Option<EpReport> {
         self.ep_sim.as_ref().map(EpSim::report)
+    }
+
+    /// Injected EP worker failure ([`EpSim::fail_worker`]): re-host its
+    /// experts onto survivors. Returns the number of experts re-hosted
+    /// (0 when EP is off or the failure is refused).
+    pub fn fail_ep_worker(&mut self, w: usize) -> u64 {
+        self.ep_sim.as_mut().map(|s| s.fail_worker(w)).unwrap_or(0)
+    }
+
+    /// Injected EP worker slow-down ([`EpSim::slow_worker`]). No-op
+    /// when EP is off.
+    pub fn slow_ep_worker(&mut self, w: usize, factor: f64) {
+        if let Some(s) = self.ep_sim.as_mut() {
+            s.slow_worker(w, factor);
+        }
     }
 
     // ------------------------------------------------------------------

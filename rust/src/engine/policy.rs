@@ -356,7 +356,7 @@ impl AgingConfig {
 /// prefill/decode interleaving). `Default` is FCFS, unbounded, no
 /// preemption, no aging, interleaving **on** — the PR 4 ordering with
 /// iteration-level prefill chunks.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct SchedConfig {
     pub policy: PolicyKind,
     pub admission: AdmissionControl,
@@ -372,6 +372,16 @@ pub struct SchedConfig {
     /// admission, the non-interleaved baseline the sweep compares
     /// against).
     pub interleave: bool,
+    /// Deterministic chaos plan (`--faults`); `None` = no injection.
+    pub faults: Option<crate::engine::faults::FaultPlan>,
+    /// Retry budget per request for injected transient backend errors.
+    pub max_retries: u32,
+    /// Run-default per-request deadline (`--deadline-ms`), seconds.
+    pub deadline_secs: Option<f64>,
+    /// External-cancellation hook for the future network front end.
+    pub cancel: Option<crate::engine::faults::CancelSet>,
+    /// SLO feedback → drop-policy degradation controller.
+    pub degrade: Option<crate::engine::faults::DegradeController>,
 }
 
 impl Default for SchedConfig {
@@ -382,6 +392,11 @@ impl Default for SchedConfig {
             preempt: false,
             aging: None,
             interleave: true,
+            faults: None,
+            max_retries: 2,
+            deadline_secs: None,
+            cancel: None,
+            degrade: None,
         }
     }
 }
@@ -395,6 +410,11 @@ impl SchedConfig {
             preempt: self.preempt,
             aging: self.aging,
             interleave: self.interleave,
+            faults: self.faults.clone(),
+            max_retries: self.max_retries,
+            deadline_secs: self.deadline_secs,
+            cancel: self.cancel.clone(),
+            degrade: self.degrade.clone(),
         }
     }
 }
@@ -544,8 +564,12 @@ mod tests {
         assert!(!c.preempt);
         assert!(c.aging.is_none());
         assert!(c.interleave);
+        assert!(c.faults.is_none() && c.cancel.is_none() && c.degrade.is_none());
+        assert!(c.deadline_secs.is_none());
+        assert_eq!(c.max_retries, 2);
         let o = c.options();
         assert!(o.interleave && !o.preempt && o.aging.is_none());
+        assert!(o.faults.is_none() && o.cancel.is_none() && o.degrade.is_none());
     }
 
     #[test]

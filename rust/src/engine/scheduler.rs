@@ -14,6 +14,10 @@
 //!                                  urgent arrival: pages freed now,
 //!                                  recompute-from-prompt on
 //!                                  re-admission)
+//!   Queued / Prefill / Decode → Failed     (injected backend error:
+//!                                  bounded retries exhausted)
+//!   Queued / Prefill / Decode → TimedOut   (deadline exceeded)
+//!   Queued / Prefill / Decode → Cancelled  (external CancelSet)
 //! ```
 //!
 //! driven by an **iteration-level** continuous-batching loop: each
@@ -62,13 +66,29 @@
 //! Latency accounting is **arrival-anchored**: `latency` includes queue
 //! wait, `ttft` is arrival → first token (a preempted request keeps its
 //! original first-token time), and the admission-anchored number
-//! survives as `service_secs`. Request-level faults are per-request; a
-//! backend execution error past validation still aborts the run.
+//! survives as `service_secs`.
+//!
+//! **Failure domains** ([`crate::engine::faults`]): every fault is
+//! contained to the request it hits. *Injected* transient backend
+//! errors (chaos testing) get bounded retries with virtual-backoff
+//! accounting, then fail exactly the offending request (`Failed`,
+//! pages freed immediately — the run never aborts). Deadlines
+//! (per-request or run-default) and external cancellation
+//! ([`CancelSet`]) retire requests as `TimedOut` / `Cancelled` at the
+//! per-iteration sweep. A *real* (non-injected) backend error past
+//! validation still aborts the run: it signals an engine invariant
+//! violation, not traffic weather. A [`DegradeController`] closes the
+//! loop from observed TTFT / queue depth onto the engine's drop policy
+//! via `DropPolicy::scaled`. The exactly-once invariant is completions
+//! ∪ rejections ∪ casualties: every request ends in exactly one of
+//! Done / Rejected / Failed / TimedOut / Cancelled, with every KV page
+//! back on the free list.
 
 use std::collections::VecDeque;
 
 use anyhow::Result;
 
+use super::faults::{CancelSet, DegradeController, FaultPlan};
 use super::policy::{
     ActiveSeq, AdmissionControl, AgingConfig, Fcfs, QueuedRequest, SchedulingPolicy,
 };
@@ -87,6 +107,10 @@ pub struct Request {
     /// more urgent. 0 (the conventional default lane) everywhere a
     /// workload does not say otherwise; FCFS and SPF ignore it.
     pub priority: u8,
+    /// Optional per-request deadline, seconds from arrival. Past it the
+    /// scheduler retires the request as [`Phase::TimedOut`] at the next
+    /// iteration sweep. `None` defers to [`SchedOptions::deadline_secs`].
+    pub deadline_secs: Option<f64>,
 }
 
 /// When requests become admissible.
@@ -111,11 +135,20 @@ pub enum Phase {
     Preempted,
     Done,
     Rejected,
+    /// Injected-fault casualty: a transient backend error exhausted the
+    /// request's retry budget. Pages freed immediately; the run keeps
+    /// going (real, non-injected errors still abort).
+    Failed,
+    /// Deadline exceeded ([`Request::deadline_secs`] or
+    /// [`SchedOptions::deadline_secs`]).
+    TimedOut,
+    /// Externally cancelled via [`CancelSet`].
+    Cancelled,
 }
 
 /// Scheduler knobs beyond the ordering policy — the
 /// [`crate::engine::policy::SchedConfig::options`] slice.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct SchedOptions {
     pub admission: AdmissionControl,
     /// Resolve page faults by eviction instead of reserving worst-case
@@ -126,6 +159,23 @@ pub struct SchedOptions {
     /// One prefill chunk per iteration alongside the decode batch
     /// (default); `false` = legacy whole-prompt prefill at admission.
     pub interleave: bool,
+    /// Deterministic fault injection ([`crate::engine::faults`]).
+    /// `None` — and a zero-probability plan — leave the loop
+    /// byte-identical to the fault-free scheduler.
+    pub faults: Option<FaultPlan>,
+    /// Bounded retries per request for *injected* transient backend
+    /// errors before the request fails (`Failed`). Retries charge
+    /// exponential virtual backoff to [`ServeStats::backoff_secs`].
+    pub max_retries: u32,
+    /// Run-default deadline (seconds from arrival) for every request
+    /// without its own [`Request::deadline_secs`].
+    pub deadline_secs: Option<f64>,
+    /// External-cancellation hook, swept every iteration; the network
+    /// front end drives this from client disconnects.
+    pub cancel: Option<CancelSet>,
+    /// SLO-driven drop-policy degradation: observed p99 TTFT / queue
+    /// depth feed `DropPolicy::scaled` at runtime.
+    pub degrade: Option<DegradeController>,
 }
 
 impl Default for SchedOptions {
@@ -135,6 +185,11 @@ impl Default for SchedOptions {
             preempt: false,
             aging: None,
             interleave: true,
+            faults: None,
+            max_retries: 2,
+            deadline_secs: None,
+            cancel: None,
+            degrade: None,
         }
     }
 }
@@ -176,6 +231,23 @@ pub struct Rejection {
     pub reason: String,
     pub arrival: f64,
     pub rejected_at: f64,
+}
+
+/// A request that died mid-lifecycle — [`Phase::Failed`],
+/// [`Phase::TimedOut`] or [`Phase::Cancelled`]. Its KV pages were freed
+/// on the spot and the run kept going; no other request was affected.
+#[derive(Debug, Clone)]
+pub struct Casualty {
+    pub id: usize,
+    /// Terminal state (`Failed` / `TimedOut` / `Cancelled`).
+    pub phase: Phase,
+    pub reason: String,
+    pub arrival: f64,
+    pub ended_at: f64,
+    /// Injected-error retries this request burned before dying.
+    pub retries: u32,
+    /// Tokens generated before the cut — work thrown away.
+    pub generated: usize,
 }
 
 #[derive(Debug, Clone, Default)]
@@ -257,6 +329,26 @@ pub struct ServeStats {
     pub ep_drop_rate_static: f64,
     /// Hot-expert replications (`--ep-replicate-after`).
     pub ep_replications: u64,
+    /// Injected-fault casualties (retry budget exhausted).
+    pub failed: usize,
+    /// Deadline casualties.
+    pub timed_out: usize,
+    /// External cancellations honored.
+    pub cancelled: usize,
+    /// Bounded retries of injected transient backend errors.
+    pub retries: u64,
+    /// Virtual backoff seconds charged by those retries (accounting
+    /// only — the loop never actually sleeps on a retry).
+    pub backoff_secs: f64,
+    /// Total fault events the plan injected over the run.
+    pub faults_injected: u64,
+    /// Highest degrade-ladder level reached (0 = controller off or
+    /// never escalated).
+    pub degrade_level_max: u32,
+    /// `(iteration, level)` at every degrade-level change.
+    pub degrade_timeline: Vec<(u64, u32)>,
+    /// Experts re-hosted off injected EP worker failures.
+    pub ep_failovers: u64,
 }
 
 /// Everything one serving run produced.
@@ -265,6 +357,9 @@ pub struct ServeOutcome {
     /// Sorted by request id.
     pub completions: Vec<Completion>,
     pub rejections: Vec<Rejection>,
+    /// Failed / timed-out / cancelled requests, sorted by id. Empty
+    /// without chaos, deadlines or cancellation.
+    pub casualties: Vec<Casualty>,
     pub stats: ServeStats,
 }
 
@@ -327,6 +422,11 @@ struct ResumeState {
     preempted: u32,
 }
 
+/// Virtual backoff base for injected-error retries: attempt `k`
+/// charges `base × 2^(k−1)` seconds to [`ServeStats::backoff_secs`]
+/// (accounting only; the loop never sleeps on a retry).
+const RETRY_BACKOFF_BASE_SECS: f64 = 1e-3;
+
 fn set_phase(phases: &mut [Phase], ri: usize, to: Phase) {
     let from = phases[ri];
     debug_assert!(
@@ -341,6 +441,17 @@ fn set_phase(phases: &mut [Phase], ri: usize, to: Phase) {
                 | (Phase::Decode, Phase::Done)
                 | (Phase::Decode, Phase::Preempted) // page fault / urgent arrival
                 | (Phase::Preempted, Phase::Queued) // recompute-from-prompt
+                // failure domains: any live stage can be cut down,
+                // always straight to a terminal state.
+                | (Phase::Queued, Phase::Failed)
+                | (Phase::Queued, Phase::TimedOut)
+                | (Phase::Queued, Phase::Cancelled)
+                | (Phase::Prefill, Phase::Failed)
+                | (Phase::Prefill, Phase::TimedOut)
+                | (Phase::Prefill, Phase::Cancelled)
+                | (Phase::Decode, Phase::Failed)
+                | (Phase::Decode, Phase::TimedOut)
+                | (Phase::Decode, Phase::Cancelled)
         ),
         "illegal lifecycle transition {from:?} → {to:?}"
     );
@@ -490,6 +601,40 @@ pub fn serve_opts(
     let mut qd_max = 0usize;
     let mut decode_busy = 0.0f64;
     let mut decode_toks = 0u64;
+    // Chaos state. Everything lives on locals cloned out of `opts` so
+    // the fault-free path stays identical to the pre-chaos loop: a
+    // `None` plan (or a zero-probability one) draws nothing, sweeps
+    // nothing, and changes no policy.
+    let mut plan = opts.faults.clone();
+    let cancel = match (&opts.cancel, &plan) {
+        (Some(c), _) => Some(c.clone()),
+        (None, Some(p)) if p.spec.cancel_p > 0.0 => Some(CancelSet::new()),
+        _ => None,
+    };
+    let mut degrade = opts.degrade.clone();
+    let base_policy = engine.policy;
+    let deadlines_on =
+        opts.deadline_secs.is_some() || requests.iter().any(|r| r.deadline_secs.is_some());
+    let mut req_retries = vec![0u32; n];
+    let mut retries_total = 0u64;
+    let mut backoff_secs = 0.0f64;
+    let mut casualties: Vec<Casualty> = Vec::new();
+    let mut iter = 0u64;
+    let mut total_decode_steps = 0u64;
+    // Page-pool pressure episode: sequestered pages return at
+    // `pressure_until`, and an equal-length cool-down window follows so
+    // admission always makes forward progress between episodes.
+    let mut pressure_until: Option<u64> = None;
+    let mut pressure_cooldown = 0u64;
+    if let Some(p) = plan.as_mut() {
+        if let Some((w, f)) = p.spec.ep_slow {
+            engine.slow_ep_worker(w, f);
+            p.note_injected();
+        }
+    }
+    if let Some(d) = degrade.as_ref() {
+        engine.policy = base_policy.scaled(d.scale() as f32);
+    }
     let timer = Timer::start();
 
     macro_rules! evict_ctx {
@@ -506,7 +651,49 @@ pub fn serve_opts(
         };
     }
 
+    // Cut one live request down to a terminal failure-domain state and
+    // record the casualty. Pages (if any) are freed by the caller —
+    // each holding collection knows what it holds.
+    macro_rules! reap {
+        ($ri:expr, $to:expr, $reason:expr, $generated:expr, $now:expr) => {{
+            let ri = $ri;
+            set_phase(&mut phases, ri, $to);
+            casualties.push(Casualty {
+                id: requests[ri].id,
+                phase: $to,
+                reason: $reason,
+                arrival: arrivals[ri],
+                ended_at: $now,
+                retries: req_retries[ri],
+                generated: $generated,
+            });
+        }};
+    }
+
     loop {
+        iter += 1;
+        // 0. chaos clock: expire a page-pool pressure episode (pages
+        // return to the free list, a cool-down window opens), then
+        // maybe start a new one. Sequestration never touches pages
+        // backing conservative reservations — a granted reservation
+        // must always be able to map.
+        if let Some(p) = plan.as_mut() {
+            if pressure_until.is_some_and(|t| iter >= t) {
+                engine.kv.release_sequestered();
+                pressure_until = None;
+                pressure_cooldown = iter + p.spec.pressure_hold.max(1);
+            }
+            if pressure_until.is_none() && iter >= pressure_cooldown {
+                if let Some((pages, hold)) = p.pressure() {
+                    let reserved_unmapped = committed.saturating_sub(engine.kv.pages_in_use());
+                    let cap = engine.kv.free_page_count().saturating_sub(reserved_unmapped);
+                    if engine.kv.sequester_pages(pages.min(cap)) > 0 {
+                        pressure_until = Some(iter + hold);
+                    }
+                }
+            }
+        }
+
         // 1. arrivals: move everything whose time has come into the
         // queue — unless the admission-control bound refuses it, in
         // which case the request is rejected on the spot (Queued →
@@ -514,6 +701,13 @@ pub fn serve_opts(
         let now = timer.secs();
         while pending.front().map(|&i| arrivals[i] <= now).unwrap_or(false) {
             let i = pending.pop_front().unwrap();
+            // Injected client disconnect: mark the id cancelled so the
+            // sweep below reaps it wherever it lands.
+            if plan.as_mut().is_some_and(|p| p.cancel_on_arrival()) {
+                if let Some(cs) = cancel.as_ref() {
+                    cs.cancel(requests[i].id);
+                }
+            }
             if !opts.admission.admits(queue.len()) {
                 set_phase(&mut phases, i, Phase::Rejected);
                 queue_full += 1;
@@ -531,6 +725,64 @@ pub fn serve_opts(
             }
             enqueued_at[i] = arrivals[i];
             queue.push_back(i);
+        }
+
+        // 1b. failure-domain sweep: deadlines and external
+        // cancellation. Terminal transitions free held pages
+        // immediately; queued victims simply never admit. Cancellation
+        // wins over a simultaneous deadline expiry.
+        let cancel_live = cancel.as_ref().is_some_and(|c| !c.is_empty());
+        if deadlines_on || cancel_live {
+            let now = timer.secs();
+            let axed = |ri: usize| -> Option<(Phase, String)> {
+                if cancel_live && cancel.as_ref().is_some_and(|c| c.is_cancelled(requests[ri].id))
+                {
+                    return Some((Phase::Cancelled, "cancelled by client".to_string()));
+                }
+                match requests[ri].deadline_secs.or(opts.deadline_secs) {
+                    Some(d) if now - arrivals[ri] > d => Some((
+                        Phase::TimedOut,
+                        format!("deadline {:.0} ms exceeded", d * 1e3),
+                    )),
+                    _ => None,
+                }
+            };
+            let mut qi = 0;
+            while qi < queue.len() {
+                let ri = queue[qi];
+                match axed(ri) {
+                    Some((to, reason)) => {
+                        queue.remove(qi).expect("index in range");
+                        let generated = resume[ri].take().map(|r| r.out.len()).unwrap_or(0);
+                        reap!(ri, to, reason, generated, now);
+                    }
+                    None => qi += 1,
+                }
+            }
+            let mut pi = 0;
+            while pi < prefilling.len() {
+                match axed(prefilling[pi].ridx) {
+                    Some((to, reason)) => {
+                        let job = prefilling.remove(pi).expect("index in range");
+                        engine.kv.free(job.seq);
+                        committed -= job.reserved;
+                        reap!(job.ridx, to, reason, job.out.len(), now);
+                    }
+                    None => pi += 1,
+                }
+            }
+            let mut ai = 0;
+            while ai < active.len() {
+                match axed(active[ai].ridx) {
+                    Some((to, reason)) => {
+                        let a = active.swap_remove(ai);
+                        engine.kv.free(a.seq);
+                        committed -= a.reserved;
+                        reap!(a.ridx, to, reason, a.out.len(), now);
+                    }
+                    None => ai += 1,
+                }
+            }
         }
 
         // 2. admission: the policy picks which queued request claims
@@ -629,7 +881,7 @@ pub fn serve_opts(
             } else {
                 let remaining = req.max_new - parked.as_ref().map(|r| r.out.len()).unwrap_or(0);
                 let need = engine.kv.pages_for(input.len() + remaining);
-                if committed + need > engine.kv.n_pages {
+                if committed + need > engine.kv.n_pages - engine.kv.sequestered_count() {
                     resume[ri] = parked;
                     queue.insert(pos.min(queue.len()), ri);
                     break;
@@ -690,6 +942,14 @@ pub fn serve_opts(
         util_prev = engine.kv.utilization();
         qd_max = qd_max.max(queue.len());
 
+        // 3b. degrade-controller evaluation: observed TTFT / queue
+        // depth move the live drop policy along the scaled ladder.
+        if let Some(d) = degrade.as_mut() {
+            if let Some(scale) = d.tick(iter, queue.len()) {
+                engine.policy = base_policy.scaled(scale as f32);
+            }
+        }
+
         // 4. prefill: one chunk of the oldest staged prompt per
         // iteration (interleaved with decode), or — with interleaving
         // off — every chunk of every staged prompt right here (the
@@ -719,6 +979,36 @@ pub fn serve_opts(
                     break;
                 }
             }
+            // Injected transient backend error — intercepted *before*
+            // the engine runs, so there is never partial state to
+            // unwind. Burn a retry (virtual backoff) and try again next
+            // iteration, or fail exactly this request when the budget
+            // is gone.
+            if plan.as_mut().is_some_and(|p| p.inject_exec_error()) {
+                let now = timer.secs();
+                if req_retries[job.ridx] < opts.max_retries {
+                    req_retries[job.ridx] += 1;
+                    retries_total += 1;
+                    backoff_secs += RETRY_BACKOFF_BASE_SECS
+                        * f64::from(1u32 << (req_retries[job.ridx] - 1).min(16));
+                    prefilling.push_front(job);
+                } else {
+                    engine.kv.free(job.seq);
+                    committed -= job.reserved;
+                    let generated = job.out.len();
+                    reap!(
+                        job.ridx,
+                        Phase::Failed,
+                        format!(
+                            "injected backend error at prefill: {} retries exhausted",
+                            opts.max_retries
+                        ),
+                        generated,
+                        now
+                    );
+                }
+                break;
+            }
             let chunk = engine.prefill_chunk(job.seq, &job.input, job.base);
             match chunk {
                 Ok((next_base, None)) => {
@@ -738,6 +1028,9 @@ pub fn serve_opts(
                     if !job.has_first {
                         job.first_token_at = now;
                         job.has_first = true;
+                        if let Some(d) = degrade.as_mut() {
+                            d.observe_ttft(now - job.arrival);
+                        }
                     }
                     if job.out.len() < job.max_new {
                         job.out.push(tok);
@@ -760,8 +1053,12 @@ pub fn serve_opts(
                     }
                 }
                 Err(err) => {
-                    // Execution failure, not a request fault: nothing
-                    // leaks, but the run must not masquerade as healthy.
+                    // A real backend failure — injected ones never
+                    // reach the engine (intercepted above). Free what
+                    // this job holds, then abort: past validation an
+                    // execution error signals an engine invariant
+                    // violation, and masking it as a request fault
+                    // would corrupt every number downstream.
                     engine.kv.free(job.seq);
                     committed -= job.reserved;
                     return Err(err);
@@ -826,18 +1123,73 @@ pub fn serve_opts(
             }
         }
 
-        // 6. one decode step for the whole active set.
+        // 6. one decode step for the whole active set — after chaos has
+        // its say. A latency spike stalls the step; an injected exec
+        // error costs one victim row its turn (bounded retry) or its
+        // life (budget exhausted). Per-row attention means a skipped
+        // row's eventual text is byte-identical — the fault only delays
+        // it.
+        if let Some(p) = plan.as_mut() {
+            if let Some(ms) = p.spike_ms() {
+                std::thread::sleep(std::time::Duration::from_secs_f64(ms / 1e3));
+            }
+        }
+        let mut skip_row = usize::MAX;
+        if let Some(p) = plan.as_mut() {
+            if p.inject_exec_error() {
+                let v = p.pick(active.len());
+                let ridx = active[v].ridx;
+                if req_retries[ridx] < opts.max_retries {
+                    req_retries[ridx] += 1;
+                    retries_total += 1;
+                    backoff_secs += RETRY_BACKOFF_BASE_SECS
+                        * f64::from(1u32 << (req_retries[ridx] - 1).min(16));
+                    skip_row = v;
+                } else {
+                    let now = timer.secs();
+                    let a = active.swap_remove(v);
+                    engine.kv.free(a.seq);
+                    committed -= a.reserved;
+                    reap!(
+                        a.ridx,
+                        Phase::Failed,
+                        format!(
+                            "injected backend error at decode: {} retries exhausted",
+                            opts.max_retries
+                        ),
+                        a.out.len(),
+                        now
+                    );
+                    if active.is_empty() {
+                        continue;
+                    }
+                }
+            }
+        }
         let step_t0 = timer.secs();
-        let seqs: Vec<usize> = active.iter().map(|a| a.seq).collect();
-        let tokens: Vec<u8> = active.iter().map(|a| a.next).collect();
+        let rows: Vec<usize> = (0..active.len()).filter(|&r| r != skip_row).collect();
+        if rows.is_empty() {
+            continue; // the lone decode row is sitting out an injected error
+        }
+        let seqs: Vec<usize> = rows.iter().map(|&r| active[r].seq).collect();
+        let tokens: Vec<u8> = rows.iter().map(|&r| active[r].next).collect();
         let next = engine.decode_step_seqs(&seqs, &tokens)?;
         let step_secs = timer.secs() - step_t0;
-        decode_busy += step_secs * active.len() as f64;
-        decode_toks += active.len() as u64;
-        for (a, &t) in active.iter_mut().zip(&next) {
-            a.out.push(t);
-            a.next = t;
+        decode_busy += step_secs * rows.len() as f64;
+        decode_toks += rows.len() as u64;
+        for (k, &r) in rows.iter().enumerate() {
+            let a = &mut active[r];
+            a.out.push(next[k]);
+            a.next = next[k];
             a.steps += 1;
+        }
+        total_decode_steps += 1;
+        // Injected EP worker failure: trip at the configured decode
+        // step; surviving workers re-host its experts.
+        if let Some(p) = plan.as_mut() {
+            if let Some(w) = p.take_ep_fail(total_decode_steps) {
+                engine.fail_ep_worker(w);
+            }
         }
 
         // 7. retire finished rows (reverse order keeps swap_remove
@@ -858,9 +1210,22 @@ pub fn serve_opts(
         }
     }
 
+    // Chaos teardown: return any sequestered pages so the conservation
+    // asserts below see the full pool, and restore the configured drop
+    // policy the degrade controller may have scaled.
+    if plan.is_some() {
+        engine.kv.release_sequestered();
+    }
+    if degrade.is_some() {
+        engine.policy = base_policy;
+    }
+
     debug_assert!(
-        phases.iter().all(|&p| matches!(p, Phase::Done | Phase::Rejected)),
-        "every request must end Done or Rejected: {phases:?}"
+        phases.iter().all(|&p| matches!(
+            p,
+            Phase::Done | Phase::Rejected | Phase::Failed | Phase::TimedOut | Phase::Cancelled
+        )),
+        "every request must end in a terminal phase: {phases:?}"
     );
     debug_assert_eq!(engine.kv.n_active, 0, "all KV sequences must retire");
     debug_assert_eq!(
@@ -936,10 +1301,20 @@ pub fn serve_opts(
         ep_drop_rate: ep.as_ref().map(|r| r.drop_rate).unwrap_or(0.0),
         ep_drop_rate_static: ep.as_ref().map(|r| r.drop_rate_static).unwrap_or(0.0),
         ep_replications: ep.as_ref().map(|r| r.replications).unwrap_or(0),
+        failed: phases.iter().filter(|&&p| p == Phase::Failed).count(),
+        timed_out: phases.iter().filter(|&&p| p == Phase::TimedOut).count(),
+        cancelled: phases.iter().filter(|&&p| p == Phase::Cancelled).count(),
+        retries: retries_total,
+        backoff_secs,
+        faults_injected: plan.as_ref().map(|p| p.injected()).unwrap_or(0),
+        degrade_level_max: degrade.as_ref().map(|d| d.max_level()).unwrap_or(0),
+        degrade_timeline: degrade.as_ref().map(|d| d.timeline().to_vec()).unwrap_or_default(),
+        ep_failovers: ep.as_ref().map(|r| r.failovers).unwrap_or(0),
     };
     done.sort_by_key(|c| c.id);
     rejections.sort_by_key(|r| r.id);
-    Ok(ServeOutcome { completions: done, rejections, stats })
+    casualties.sort_by_key(|c| c.id);
+    Ok(ServeOutcome { completions: done, rejections, casualties, stats })
 }
 
 #[cfg(test)]
@@ -988,6 +1363,36 @@ mod tests {
     }
 
     #[test]
+    fn every_live_stage_can_reach_every_failure_terminal() {
+        for terminal in [Phase::Failed, Phase::TimedOut, Phase::Cancelled] {
+            // Queued → terminal (deadline/cancel while waiting).
+            let mut p = vec![Phase::Queued];
+            set_phase(&mut p, 0, terminal);
+            assert_eq!(p[0], terminal);
+            // Prefill → terminal.
+            let mut p = vec![Phase::Queued];
+            set_phase(&mut p, 0, Phase::Prefill);
+            set_phase(&mut p, 0, terminal);
+            assert_eq!(p[0], terminal);
+            // Decode → terminal.
+            let mut p = vec![Phase::Queued];
+            set_phase(&mut p, 0, Phase::Prefill);
+            set_phase(&mut p, 0, Phase::Decode);
+            set_phase(&mut p, 0, terminal);
+            assert_eq!(p[0], terminal);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "illegal lifecycle transition")]
+    #[cfg(debug_assertions)]
+    fn failure_terminals_are_terminal() {
+        let mut p = vec![Phase::Queued];
+        set_phase(&mut p, 0, Phase::TimedOut);
+        set_phase(&mut p, 0, Phase::Queued); // no resurrection
+    }
+
+    #[test]
     #[should_panic(expected = "illegal lifecycle transition")]
     #[cfg(debug_assertions)]
     fn phase_skipping_prefill_is_illegal() {
@@ -1013,5 +1418,12 @@ mod tests {
         assert!(o.aging.is_none());
         assert!(o.interleave);
         assert_eq!(o.admission, AdmissionControl::unbounded());
+        // Chaos off by default: no plan, no deadline, no cancellation
+        // hook, no degrade controller; retry budget bounded.
+        assert!(o.faults.is_none());
+        assert!(o.deadline_secs.is_none());
+        assert!(o.cancel.is_none());
+        assert!(o.degrade.is_none());
+        assert_eq!(o.max_retries, 2);
     }
 }

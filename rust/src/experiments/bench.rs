@@ -17,6 +17,7 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 
 use crate::engine::batcher::serve;
+use crate::engine::faults::{DegradeController, FaultPlan};
 use crate::engine::policy::{AdmissionControl, PolicyKind};
 use crate::engine::scheduler::{serve_opts, serve_policy, ArrivalMode, SchedOptions, ServeStats};
 use crate::engine::{Engine, EngineOptions, EpOptions};
@@ -272,6 +273,23 @@ pub struct ServeRow {
     pub ep_drop_rate_static: f64,
     /// Hot-expert replications over the run.
     pub ep_replications: u64,
+    /// Injected-fault casualties (retry budget exhausted; 0 outside
+    /// the chaos rows).
+    pub failed: usize,
+    /// Deadline casualties.
+    pub timed_out: usize,
+    /// External cancellations honored.
+    pub cancelled: usize,
+    /// Bounded retries of injected transient backend errors.
+    pub retries: u64,
+    /// Total fault events injected by the row's `FaultPlan`.
+    pub faults_injected: u64,
+    /// Highest degrade-ladder level the run reached.
+    pub degrade_level_max: u32,
+    /// `(iteration, level)` at every degrade-level change.
+    pub degrade_timeline: Vec<(u64, u32)>,
+    /// Experts re-hosted off injected EP worker failures.
+    pub ep_failovers: u64,
 }
 
 /// Assemble one [`ServeRow`] from a measured run's [`ServeStats`].
@@ -323,6 +341,14 @@ fn serve_row(
         ep_drop_rate: st.ep_drop_rate,
         ep_drop_rate_static: st.ep_drop_rate_static,
         ep_replications: st.ep_replications,
+        failed: st.failed,
+        timed_out: st.timed_out,
+        cancelled: st.cancelled,
+        retries: st.retries,
+        faults_injected: st.faults_injected,
+        degrade_level_max: st.degrade_level_max,
+        degrade_timeline: st.degrade_timeline.clone(),
+        ep_failovers: st.ep_failovers,
     }
 }
 
@@ -443,6 +469,40 @@ pub fn serve_sweep_rows(
         }
         engine.set_ep(None);
     }
+    // Chaos dimension: the failure-domain subsystem on the measured
+    // path, under FCFS at the heaviest multiple. One row closes the
+    // SLO → drop-policy loop (a DegradeController over the ladder's 2T
+    // policy — the paper's drop-rate→speedup curve as a runtime
+    // controller, with a deliberately unmeetable TTFT SLO so the
+    // escalation is exercised); one row injects deterministic backend
+    // faults and page-pool pressure and must still resolve every
+    // request exactly once.
+    if scheds.contains(&PolicyKind::Fcfs) {
+        let mult = *mults.last().expect("mults non-empty");
+        let rate = base_rps * mult;
+        let (deg_label, deg_pol) = drop_ladder[1];
+        engine.policy = deg_pol;
+        let degrade = DegradeController::new(1e-6, SWEEP_MAX_QUEUE);
+        let out = serve_opts(
+            &mut engine,
+            &reqs,
+            ArrivalMode::Open { rate, seed: 11 },
+            PolicyKind::Fcfs.policy(),
+            SchedOptions { admission, degrade: Some(degrade), ..Default::default() },
+        )?;
+        let label = format!("degrade:{deg_label}");
+        rows.push(serve_row("fcfs", mult, rate, &label, true, &out.stats));
+        engine.policy = DropPolicy::NoDrop;
+        let plan = FaultPlan::parse("exec=0.4,spike=0.2:2,pressure=0.3:8:4", 11)?;
+        let out = serve_opts(
+            &mut engine,
+            &reqs,
+            ArrivalMode::Open { rate, seed: 11 },
+            PolicyKind::Fcfs.policy(),
+            SchedOptions { admission, faults: Some(plan), ..Default::default() },
+        )?;
+        rows.push(serve_row("fcfs", mult, rate, "chaos", true, &out.stats));
+    }
     Ok((base_rps, rows))
 }
 
@@ -498,6 +558,24 @@ pub fn write_serve_json(
                     ("ep_drop_rate", num(r.ep_drop_rate)),
                     ("ep_drop_rate_static", num(r.ep_drop_rate_static)),
                     ("ep_replications", num(r.ep_replications as f64)),
+                    ("failed", num(r.failed as f64)),
+                    ("timed_out", num(r.timed_out as f64)),
+                    ("cancelled", num(r.cancelled as f64)),
+                    ("retries", num(r.retries as f64)),
+                    ("faults_injected", num(r.faults_injected as f64)),
+                    ("degrade_level_max", num(r.degrade_level_max as f64)),
+                    (
+                        "degrade_timeline",
+                        Json::Arr(
+                            r.degrade_timeline
+                                .iter()
+                                .map(|&(it, lvl)| {
+                                    Json::Arr(vec![num(it as f64), num(lvl as f64)])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                    ("ep_failovers", num(r.ep_failovers as f64)),
                 ])
             })
             .collect(),
@@ -568,6 +646,23 @@ pub fn serve_sweep(artifacts: &Path, cfg: &ServeSweepConfig) -> Result<()> {
             r.ep_replications,
         );
     }
+    for r in rows.iter().filter(|r| {
+        r.faults_injected > 0 || r.degrade_level_max > 0 || r.failed + r.timed_out + r.cancelled > 0
+    }) {
+        println!(
+            "chaos[{}/{}]: faults_injected={} retries={} failed={} timed_out={} cancelled={} \
+             degrade_max={} ep_failovers={}",
+            r.sched,
+            r.policy,
+            r.faults_injected,
+            r.retries,
+            r.failed,
+            r.timed_out,
+            r.cancelled,
+            r.degrade_level_max,
+            r.ep_failovers,
+        );
+    }
     write_serve_json(&cfg.model, cfg.quick, base_rps, &rows, &cfg.out)?;
     println!("wrote {:?}", cfg.out);
     Ok(())
@@ -615,11 +710,13 @@ mod tests {
         // fcfs: 3 mults × 2 drop policies; spf/priority: 3 mults ×
         // drop-free; plus one non-interleaved baseline per sched at
         // each overload mult (2×, 4×); plus the 3-config EP dimension
-        // (1 worker, 4 static, 4 load-aware) under fcfs at 2×.
+        // (1 worker, 4 static, 4 load-aware) under fcfs at 2×; plus
+        // the 2-row chaos dimension (degrade controller, fault plan)
+        // under fcfs at the heaviest mult.
         assert_eq!(
             rows.len(),
-            3 * 2 + 3 + 3 + 3 * 2 + 3,
-            "sched × rates × drops + baselines + EP dimension"
+            3 * 2 + 3 + 3 + 3 * 2 + 3 + 2,
+            "sched × rates × drops + baselines + EP dimension + chaos dimension"
         );
         assert_eq!(
             rows.iter().filter(|r| !r.interleave).count(),
@@ -629,11 +726,21 @@ mod tests {
         for r in &rows {
             assert_eq!(r.rejected, 1, "exactly the oversized prompt ({})", r.sched);
             assert_eq!(r.rejected_queue_full, 0, "quick load can't fill 24 slots");
-            assert_eq!(
-                r.completed, 11,
-                "zero lost completions incl. the chunked 140-token prompt ({})",
-                r.sched
-            );
+            if r.policy == "chaos" {
+                // Injected faults may exhaust a request's retry budget;
+                // the run must still resolve every request exactly once.
+                assert_eq!(
+                    r.completed + r.failed,
+                    11,
+                    "chaos row resolves every admitted request"
+                );
+            } else {
+                assert_eq!(
+                    r.completed, 11,
+                    "zero lost completions incl. the chunked 140-token prompt ({})",
+                    r.sched
+                );
+            }
             assert!(r.p50_latency >= r.p50_service - 1e-12, "queue-inclusive p50");
             assert!(r.p99_latency >= r.p99_service - 1e-12, "queue-inclusive p99");
             assert!(r.p99_ttft >= r.p50_ttft - 1e-12, "TTFT percentiles ordered");
@@ -702,6 +809,38 @@ mod tests {
                 assert_eq!(r.ep_straggler_ratio, 0.0);
             }
         }
+        // The chaos dimension: the fault row deterministically injects
+        // (seeded plan, exec_p = 0.4 over dozens of draws) yet resolves
+        // every request with a drained page pool (the conservation law
+        // itself is asserted inside serve_opts); the degrade row's
+        // unmeetable TTFT SLO must push the controller off level 0 and
+        // the timeline must record the escalation.
+        let chaos = rows.iter().find(|r| r.policy == "chaos").expect("chaos row");
+        assert!(chaos.faults_injected > 0, "seeded plan must actually inject");
+        assert!(
+            chaos.faults_injected >= chaos.retries,
+            "every retry answers an injected exec error ({} vs {})",
+            chaos.faults_injected,
+            chaos.retries
+        );
+        assert!(
+            chaos.retries >= 2 * chaos.failed as u64,
+            "a failed request first burned its whole retry budget"
+        );
+        assert_eq!(chaos.timed_out, 0, "no deadline configured on the chaos row");
+        assert_eq!(chaos.cancelled, 0, "no cancellation configured on the chaos row");
+        assert_eq!(chaos.degrade_level_max, 0, "no controller on the fault row");
+        let deg = rows
+            .iter()
+            .find(|r| r.policy.starts_with("degrade:"))
+            .expect("degrade row");
+        assert!(deg.degrade_level_max >= 1, "unmeetable SLO must escalate the ladder");
+        assert!(!deg.degrade_timeline.is_empty(), "level changes are timestamped");
+        assert!(
+            deg.degrade_timeline.iter().any(|&(_, lvl)| lvl == deg.degrade_level_max),
+            "timeline reaches the recorded max level"
+        );
+        assert_eq!(deg.faults_injected, 0, "degrade row runs fault-free");
         // Past the knee (arrival ≥ 2× service rate) goodput is pinned at
         // service capacity: offering 4× instead of 2× must not raise it
         // (generous tolerance — these are measured wall-clock numbers).
@@ -753,6 +892,14 @@ mod tests {
             "ep_drop_rate",
             "ep_drop_rate_static",
             "ep_replications",
+            "failed",
+            "timed_out",
+            "cancelled",
+            "retries",
+            "faults_injected",
+            "degrade_level_max",
+            "degrade_timeline",
+            "ep_failovers",
         ] {
             assert!(run0.get(field).is_ok(), "SERVE_cpu.json runs must carry {field}");
         }

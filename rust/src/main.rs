@@ -7,7 +7,11 @@
 //!         [--page-size P] [--kv-pages N] [--preempt]
 //!         [--age-boost SECS] [--no-interleave]
 //!         [--ep-workers N] [--ep-load-aware]
-//!         [--ep-replicate-after K]                       one measured run
+//!         [--ep-replicate-after K]
+//!         [--faults SPEC] [--retries N] [--deadline-ms MS]
+//!         [--slo-ttft-ms MS [--slo-queue-depth N]]       one measured run
+//!         (SPEC grammar: exec=P,spike=P:MS,pressure=P:PAGES[:HOLD],
+//!          ep-fail=W@STEP,ep-slow=W@FACTOR,cancel=P — seeded by --seed)
 //!         [--sweep | --quick] [--out PATH]   arrival-rate × drop × sched
 //!                                            sweep → SERVE_cpu.json
 //!         (--policy also filters --sweep/--quick to one scheduling
@@ -29,6 +33,7 @@ use std::path::PathBuf;
 
 use anyhow::{bail, Context, Result};
 
+use dualsparse::engine::faults::{DegradeController, FaultPlan};
 use dualsparse::engine::policy::{AdmissionControl, AgingConfig, PolicyKind, SchedConfig};
 use dualsparse::engine::scheduler::ArrivalMode;
 use dualsparse::engine::{artifacts_dir, EngineOptions, EpOptions};
@@ -92,9 +97,13 @@ struct Args {
 
 impl Args {
     fn parse() -> Args {
+        Args::from_vec(std::env::args().skip(1).collect())
+    }
+
+    fn from_vec(argv: Vec<String>) -> Args {
         let mut pos = Vec::new();
         let mut flags = std::collections::HashMap::new();
-        let mut it = std::env::args().skip(1).peekable();
+        let mut it = argv.into_iter().peekable();
         while let Some(a) = it.next() {
             if let Some(k) = a.strip_prefix("--") {
                 let v = if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
@@ -118,8 +127,45 @@ impl Args {
         self.flag(k).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
-    fn flag_f64(&self, k: &str, default: f64) -> f64 {
-        self.flag(k).and_then(|v| v.parse().ok()).unwrap_or(default)
+    /// Strict numeric flag: absent → default; present but unparseable
+    /// (including overflow of the target type) → error, never a silent
+    /// fallback.
+    fn flag_f64_strict(&self, k: &str, default: f64) -> Result<f64> {
+        match self.flag(k) {
+            Some(v) => v
+                .parse()
+                .with_context(|| format!("--{k} must be a number, got {v:?}")),
+            None => Ok(default),
+        }
+    }
+
+    /// Strict u32 flag: a value that overflows u32 (or is negative /
+    /// non-numeric) is an error instead of silently using the default.
+    fn flag_u32_strict(&self, k: &str, default: u32) -> Result<u32> {
+        match self.flag(k) {
+            Some(v) => v.parse().with_context(|| {
+                format!("--{k} must be a count that fits u32, got {v:?}")
+            }),
+            None => Ok(default),
+        }
+    }
+}
+
+/// Parse `--deadline-ms`: positive finite milliseconds → seconds.
+/// Zero is rejected loudly — it would time every request out before its
+/// first sweep, which is never what the caller meant.
+fn parse_deadline_ms(v: Option<&str>) -> Result<Option<f64>> {
+    match v {
+        Some(s) => {
+            let ms: f64 = s
+                .parse()
+                .with_context(|| format!("--deadline-ms must be milliseconds, got {s:?}"))?;
+            if !(ms > 0.0 && ms.is_finite()) {
+                bail!("--deadline-ms must be positive, finite milliseconds (got {s:?})");
+            }
+            Ok(Some(ms / 1e3))
+        }
+        None => Ok(None),
     }
 }
 
@@ -202,6 +248,41 @@ fn main() -> Result<()> {
             if ep_workers.is_none() && (ep_load_aware || ep_replicate_after.is_some()) {
                 bail!("--ep-load-aware/--ep-replicate-after require --ep-workers N");
             }
+            let seed = args.flag_usize("seed", 11) as u64;
+            let faults = match args.flag("faults") {
+                Some(spec) => Some(
+                    FaultPlan::parse(spec, seed)
+                        .context("--faults spec (grammar: exec=P,spike=P:MS,\
+                                  pressure=P:PAGES[:HOLD],ep-fail=W@STEP,\
+                                  ep-slow=W@FACTOR,cancel=P)")?,
+                ),
+                None => None,
+            };
+            let max_retries = args.flag_u32_strict("retries", 2)?;
+            let deadline_secs = parse_deadline_ms(args.flag("deadline-ms"))?;
+            let degrade = match args.flag("slo-ttft-ms") {
+                Some(v) => {
+                    let ms: f64 = v.parse().with_context(|| {
+                        format!("--slo-ttft-ms must be milliseconds, got {v:?}")
+                    })?;
+                    if !(ms > 0.0 && ms.is_finite()) {
+                        bail!("--slo-ttft-ms must be positive, finite milliseconds (got {v:?})");
+                    }
+                    let qd = args.flag_usize("slo-queue-depth", usize::MAX);
+                    Some(DegradeController::new(ms / 1e3, qd))
+                }
+                None => {
+                    if args.flag("slo-queue-depth").is_some() {
+                        bail!("--slo-queue-depth requires --slo-ttft-ms MS");
+                    }
+                    None
+                }
+            };
+            if faults.as_ref().is_some_and(|p| p.spec.ep_fail.is_some() || p.spec.ep_slow.is_some())
+                && ep_workers.is_none()
+            {
+                bail!("--faults ep-fail/ep-slow require --ep-workers N");
+            }
             if args.flag("sweep").is_some() || args.flag("quick").is_some() {
                 // The sweep fixes its own queue bound, drop ladder and
                 // scheduler knobs; refusing beats silently writing a
@@ -212,18 +293,24 @@ fn main() -> Result<()> {
                 let paging_flags =
                     page_size.is_some() || kv_pages.is_some() || preempt || aging.is_some()
                         || !interleave;
+                let chaos_flags = faults.is_some()
+                    || deadline_secs.is_some()
+                    || degrade.is_some()
+                    || args.flag("retries").is_some();
                 if max_queue.is_some()
                     || args.flag("drop").is_some()
                     || legacy_drop_spelling
                     || paging_flags
                     || ep_workers.is_some()
+                    || chaos_flags
                 {
                     bail!(
-                        "--max-queue, drop-policy, paging/preemption and EP flags \
-                         have no effect with --sweep/--quick (the sweep uses max \
-                         queue {}, its own drop ladder, default paging, its own \
-                         interleave-off baselines and its own EP dimension); use \
-                         --policy fcfs|spf|priority to restrict the sweep",
+                        "--max-queue, drop-policy, paging/preemption, EP and \
+                         chaos flags have no effect with --sweep/--quick (the \
+                         sweep uses max queue {}, its own drop ladder, default \
+                         paging, its own interleave-off baselines and its own \
+                         EP + chaos dimensions); use --policy fcfs|spf|priority \
+                         to restrict the sweep",
                         experiments::bench::SWEEP_MAX_QUEUE
                     );
                 }
@@ -248,17 +335,25 @@ fn main() -> Result<()> {
                 preempt,
                 aging,
                 interleave,
+                faults,
+                max_retries,
+                deadline_secs,
+                cancel: None,
+                degrade,
             };
             let n = args.flag_usize("reqs", 100);
             let max_new = args.flag_usize("max-new", 12);
             let mode = match args.flag("mode").unwrap_or("closed") {
                 "closed" => ArrivalMode::Closed,
                 "open" => {
-                    let rate = args.flag_f64("rate", 4.0);
+                    // Strict parse: a typo'd --rate must not silently
+                    // serve at the default (the open-loop Poisson gap
+                    // is 1/rate, so a wrong rate poisons every number).
+                    let rate = args.flag_f64_strict("rate", 4.0)?;
                     if !(rate > 0.0 && rate.is_finite()) {
                         bail!("--rate must be a positive, finite req/s (got {rate})");
                     }
-                    ArrivalMode::Open { rate, seed: args.flag_usize("seed", 11) as u64 }
+                    ArrivalMode::Open { rate, seed }
                 }
                 other => bail!("unknown --mode {other:?}; use closed | open"),
             };
@@ -326,6 +421,22 @@ fn main() -> Result<()> {
             if !ep_line.is_empty() {
                 println!("{ep_line}");
             }
+            // Leaked pages = page-pool deficit after the run; must be 0
+            // even when chaos freed pages mid-lifecycle. CI greps the
+            // chaos line's counters.
+            let leaked = engine.kv.n_pages - engine.kv.free_page_count();
+            let chaos_line = server::format_chaos_report(st, leaked);
+            if !chaos_line.is_empty() {
+                println!("{chaos_line}");
+            }
+            if !st.degrade_timeline.is_empty() {
+                let steps: Vec<String> = st
+                    .degrade_timeline
+                    .iter()
+                    .map(|&(it, lvl)| format!("{it}:{lvl}"))
+                    .collect();
+                println!("degrade timeline (iter:level): {}", steps.join(" "));
+            }
             if !st.lane_ttft50.is_empty() {
                 let lanes: Vec<String> = st
                     .lane_ttft50
@@ -335,19 +446,28 @@ fn main() -> Result<()> {
                 println!("ttft50 by lane: {}", lanes.join(" "));
             }
             // Binary-enforced lifecycle conservation: every submitted
-            // request must end as exactly one completion or rejection,
-            // even across preemption/re-admission — CI greps the line.
-            if st.requests + st.rejected != n {
+            // request must end in exactly one terminal state — completed,
+            // rejected, failed, timed-out or cancelled — even across
+            // preemption/re-admission and chaos. CI greps the line.
+            let resolved =
+                st.requests + st.rejected + st.failed + st.timed_out + st.cancelled;
+            if resolved != n || leaked != 0 {
                 bail!(
-                    "lifecycle violation: {} completed + {} rejected != {} submitted",
+                    "lifecycle violation: {} completed + {} rejected + {} failed + \
+                     {} timed-out + {} cancelled != {} submitted (leaked pages: {})",
                     st.requests,
                     st.rejected,
-                    n
+                    st.failed,
+                    st.timed_out,
+                    st.cancelled,
+                    n,
+                    leaked
                 );
             }
             println!(
-                "lifecycle: exactly-once ({} completed + {} rejected = {} submitted)",
-                st.requests, st.rejected, n
+                "lifecycle: exactly-once ({} completed + {} rejected + {} failed + \
+                 {} timed-out + {} cancelled = {} submitted)",
+                st.requests, st.rejected, st.failed, st.timed_out, st.cancelled, n
             );
         }
         "eval" => {
@@ -438,4 +558,62 @@ fn main() -> Result<()> {
         }
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Args {
+        Args::from_vec(s.split_whitespace().map(String::from).collect())
+    }
+
+    #[test]
+    fn args_split_positionals_and_flags() {
+        let a = argv("serve mixtral_ish --reqs 32 --preempt --rate 6.5");
+        assert_eq!(a.pos, vec!["serve", "mixtral_ish"]);
+        assert_eq!(a.flag("reqs"), Some("32"));
+        assert_eq!(a.flag("preempt"), Some("true"), "bare flag gets a truthy value");
+        assert_eq!(a.flag_usize("reqs", 0), 32);
+        assert_eq!(a.flag_f64_strict("rate", 4.0).unwrap(), 6.5);
+        assert_eq!(a.flag_f64_strict("absent", 4.0).unwrap(), 4.0);
+    }
+
+    #[test]
+    fn strict_flags_reject_garbage_instead_of_defaulting() {
+        let a = argv("serve --rate zero --retries many");
+        assert!(a.flag_f64_strict("rate", 4.0).is_err(), "--rate zero must not become 4.0");
+        assert!(a.flag_u32_strict("retries", 2).is_err());
+    }
+
+    #[test]
+    fn retry_counts_that_overflow_u32_are_errors() {
+        let a = argv("serve --retries 4294967296"); // u32::MAX + 1
+        assert!(a.flag_u32_strict("retries", 2).is_err());
+        let a = argv("serve --retries -1");
+        assert!(a.flag_u32_strict("retries", 2).is_err());
+        let a = argv("serve --retries 3");
+        assert_eq!(a.flag_u32_strict("retries", 2).unwrap(), 3);
+    }
+
+    #[test]
+    fn deadline_ms_rejects_zero_and_nonsense() {
+        assert_eq!(parse_deadline_ms(None).unwrap(), None);
+        assert_eq!(parse_deadline_ms(Some("250")).unwrap(), Some(0.25));
+        assert!(parse_deadline_ms(Some("0")).is_err(), "a zero deadline kills every request");
+        assert!(parse_deadline_ms(Some("-5")).is_err());
+        assert!(parse_deadline_ms(Some("inf")).is_err());
+        assert!(parse_deadline_ms(Some("soon")).is_err());
+    }
+
+    #[test]
+    fn serve_policy_split_keeps_legacy_drop_spelling() {
+        let (sched, drop) = parse_serve_policies(Some("spf"), None).unwrap();
+        assert_eq!(sched, Some(PolicyKind::ShortestPromptFirst));
+        assert_eq!(drop, DropPolicy::NoDrop);
+        let (sched, drop) = parse_serve_policies(Some("1t:0.2"), None).unwrap();
+        assert_eq!(sched, None);
+        assert_eq!(drop, DropPolicy::OneT(0.2));
+        assert!(parse_serve_policies(Some("lifo"), None).is_err());
+    }
 }

@@ -145,6 +145,32 @@ pub fn format_ep_report(st: &ServeStats) -> String {
     )
 }
 
+/// One-line failure-domain summary for a measured serve run, empty when
+/// nothing was injected and nothing died. The `faults_injected=` /
+/// `timed_out=` / `leaked_pages=` spellings are load-bearing: CI's
+/// `chaos-smoke` job greps them to pin that injected faults stay
+/// contained. `leaked_pages` is the page-pool deficit after the run
+/// (`n_pages - free_page_count`), which must be 0.
+pub fn format_chaos_report(st: &ServeStats, leaked_pages: usize) -> String {
+    if st.faults_injected == 0 && st.failed + st.timed_out + st.cancelled == 0 && st.retries == 0
+    {
+        return String::new();
+    }
+    format!(
+        "chaos: faults_injected={} retries={} backoff_ms={:.1} failed={} \
+         timed_out={} cancelled={} degrade_max={} ep_failovers={} leaked_pages={}",
+        st.faults_injected,
+        st.retries,
+        st.backoff_secs * 1e3,
+        st.failed,
+        st.timed_out,
+        st.cancelled,
+        st.degrade_level_max,
+        st.ep_failovers,
+        leaked_pages,
+    )
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -207,6 +233,34 @@ mod tests {
         assert!(line.contains("static=1.5000"), "{line}");
         assert!(line.contains("workers=4"), "{line}");
         assert!(line.contains("busy_s=[0.250 0.125 0.125 0.062]"), "{line}");
+    }
+
+    #[test]
+    fn chaos_report_line_carries_ci_greppable_counts() {
+        let quiet = ServeStats::default();
+        assert!(format_chaos_report(&quiet, 0).is_empty(), "no chaos line when nothing happened");
+        let loud = ServeStats {
+            faults_injected: 7,
+            retries: 3,
+            backoff_secs: 0.007,
+            failed: 1,
+            timed_out: 2,
+            cancelled: 1,
+            degrade_level_max: 3,
+            ep_failovers: 2,
+            ..Default::default()
+        };
+        let line = format_chaos_report(&loud, 0);
+        assert!(line.contains("faults_injected=7"), "{line}");
+        assert!(line.contains("retries=3"), "{line}");
+        assert!(line.contains("timed_out=2"), "{line}");
+        assert!(line.contains("cancelled=1"), "{line}");
+        assert!(line.contains("leaked_pages=0"), "{line}");
+        assert!(line.contains("degrade_max=3"), "{line}");
+        assert!(line.contains("ep_failovers=2"), "{line}");
+        // deadline-only runs still report (timed_out > 0, no injection).
+        let dl = ServeStats { timed_out: 4, ..Default::default() };
+        assert!(format_chaos_report(&dl, 0).contains("timed_out=4"));
     }
 
     #[test]

@@ -81,9 +81,9 @@ fn three_bucket_prompt_completes_in_serving() {
     let prompt = long_prompt();
     let mut e = engine_with(400, None);
     let reqs = vec![
-        Request { id: 0, prompt: "cpy:ab|".into(), max_new: 4, priority: 0 },
-        Request { id: 1, prompt: prompt.clone(), max_new: 4, priority: 0 },
-        Request { id: 2, prompt: "add:3+4|".into(), max_new: 4, priority: 0 },
+        Request { id: 0, prompt: "cpy:ab|".into(), max_new: 4, priority: 0, deadline_secs: None },
+        Request { id: 1, prompt: prompt.clone(), max_new: 4, priority: 0, deadline_secs: None },
+        Request { id: 2, prompt: "add:3+4|".into(), max_new: 4, priority: 0, deadline_secs: None },
     ];
     let out = serve_with(&mut e, &reqs, ArrivalMode::Closed).unwrap();
     assert!(
@@ -117,8 +117,8 @@ fn stock_engine_accepts_up_to_the_kv_window_and_rejects_past_it() {
     .unwrap();
     assert_eq!(e.prompt_capacity(5), 155);
     let reqs = vec![
-        Request { id: 0, prompt: "?".repeat(140), max_new: 5, priority: 0 },
-        Request { id: 1, prompt: "!".repeat(200), max_new: 5, priority: 0 },
+        Request { id: 0, prompt: "?".repeat(140), max_new: 5, priority: 0, deadline_secs: None },
+        Request { id: 1, prompt: "!".repeat(200), max_new: 5, priority: 0, deadline_secs: None },
     ];
     let out = serve_with(&mut e, &reqs, ArrivalMode::Closed).unwrap();
     assert_eq!(out.completions.len(), 1, "the 140-token prompt completes");

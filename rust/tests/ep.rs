@@ -109,3 +109,46 @@ fn replication_is_count_based_and_output_invisible() {
     let want = engine(DropPolicy::NoDrop, None).generate_batch(&PROMPTS, 8).unwrap();
     assert_eq!(ga, want);
 }
+
+#[test]
+fn injected_ep_worker_failure_rehosts_experts_and_conserves_requests() {
+    // ISSUE-8: a FaultPlan `ep-fail=W@STEP` trips at the configured
+    // decode step; the failed worker's experts re-host onto the
+    // least-loaded survivors (PR-7 replication machinery) and serving
+    // carries on — every request still completes, and the failover
+    // count surfaces in the serve stats.
+    use dualsparse::engine::batcher::{serve_opts, ArrivalMode, FaultPlan, Fcfs, SchedOptions};
+    use dualsparse::server::workload;
+
+    let mut e = engine(DropPolicy::two_t(0.45), Some(EpOptions::new(4, false)));
+    let reqs = workload(8, 6, 7);
+    let plan = FaultPlan::parse("ep-fail=1@2", 3).unwrap();
+    let out = serve_opts(
+        &mut e,
+        &reqs,
+        ArrivalMode::Closed,
+        &Fcfs,
+        SchedOptions { faults: Some(plan), ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(out.completions.len(), 8, "an EP worker failure must not cost completions");
+    assert!(out.casualties.is_empty(), "EP failure is infrastructure, not a request fault");
+    assert!(out.stats.ep_failovers >= 1, "the failed worker hosted experts to re-host");
+    assert_eq!(out.stats.ep_workers, 4);
+    assert_eq!(out.stats.faults_injected, 1, "the armed ep-fail fires exactly once");
+
+    // Static EP remains pure accounting even across a failover: texts
+    // match a chaos-free, EP-free run byte-for-byte.
+    let mut plain = engine(DropPolicy::two_t(0.45), None);
+    let want = serve_opts(
+        &mut plain,
+        &reqs,
+        ArrivalMode::Closed,
+        &Fcfs,
+        SchedOptions::default(),
+    )
+    .unwrap();
+    for (a, b) in out.completions.iter().zip(&want.completions) {
+        assert_eq!((a.id, &a.text), (b.id, &b.text), "failover leaked into generation");
+    }
+}

@@ -37,6 +37,7 @@ fn descending_length_requests(n: usize) -> Vec<Request> {
             prompt: "x".repeat(4 + (n - 1 - i) * 5),
             max_new: 3,
             priority: 0,
+            deadline_secs: None,
         })
         .collect()
 }
@@ -153,6 +154,7 @@ fn priority_lanes_admit_high_lanes_first_fcfs_within_lane() {
             prompt: "y".repeat(24),
             max_new: 3,
             priority: (i % 3) as u8,
+            deadline_secs: None,
         })
         .collect();
     let out = serve_policy(&mut e, &reqs, ArrivalMode::Closed, &PriorityLanes,

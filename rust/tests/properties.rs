@@ -374,3 +374,113 @@ fn commsim_monotonicity_fuzz() {
         assert!(setp_time(t, ep, tp, s1) > 0.0);
     }
 }
+
+#[test]
+fn fault_plan_is_deterministic_and_conserves_requests() {
+    // ISSUE-8 satellite: across 50 random fault plans, the same seed
+    // replays the identical run (texts and counters), the five-way
+    // terminal partition (Done ∪ Rejected ∪ Failed ∪ TimedOut ∪
+    // Cancelled) covers every request exactly once, and the KV page
+    // pool drains back to its full size after every chaos run.
+    use dualsparse::engine::batcher::{
+        serve_opts, ArrivalMode, FaultPlan, FaultSpec, Fcfs, SchedOptions,
+    };
+    use dualsparse::engine::{Engine, EngineOptions};
+    use dualsparse::server::workload;
+    use std::path::PathBuf;
+
+    let artifacts = std::env::var("DUALSPARSE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    let mut e =
+        Engine::new(&artifacts, "mixtral_ish", DropPolicy::NoDrop, EngineOptions::default())
+            .expect("hermetic engine (CpuRef + synthetic weights)");
+    let reqs = workload(6, 3, 7);
+    let mut rng = SplitMix64::new(0xFA017);
+    for round in 0..50 {
+        let spec = FaultSpec {
+            exec_p: if rng.below(2) == 0 { rng.f64() * 0.6 } else { 0.0 },
+            spike_p: if rng.below(2) == 0 { rng.f64() * 0.3 } else { 0.0 },
+            spike_ms: 1.0,
+            pressure_p: if rng.below(2) == 0 { rng.f64() * 0.4 } else { 0.0 },
+            pressure_pages: 1 + rng.below(6),
+            pressure_hold: 1 + rng.below(4) as u64,
+            ep_fail: None,
+            ep_slow: None,
+            cancel_p: if rng.below(3) == 0 { rng.f64() * 0.5 } else { 0.0 },
+        };
+        let seed = rng.next_u64();
+        let run = |e: &mut Engine| {
+            serve_opts(
+                e,
+                &reqs,
+                ArrivalMode::Closed,
+                &Fcfs,
+                SchedOptions {
+                    faults: Some(FaultPlan::new(spec, seed)),
+                    max_retries: 2,
+                    ..Default::default()
+                },
+            )
+            .expect("injected faults must never abort the run")
+        };
+        let a = run(&mut e);
+        let b = run(&mut e);
+        // Same seed ⇒ identical resolution (closed mode: wall-clock
+        // never reaches a scheduling or injection decision).
+        assert_eq!(
+            (a.stats.requests, a.stats.rejected, a.stats.failed, a.stats.cancelled),
+            (b.stats.requests, b.stats.rejected, b.stats.failed, b.stats.cancelled),
+            "round {round}: same seed must replay the same resolution"
+        );
+        assert_eq!(a.stats.retries, b.stats.retries, "round {round}: retry counts");
+        assert_eq!(
+            a.stats.faults_injected, b.stats.faults_injected,
+            "round {round}: injection counts"
+        );
+        assert_eq!(a.completions.len(), b.completions.len());
+        for (x, y) in a.completions.iter().zip(&b.completions) {
+            assert_eq!((x.id, &x.text), (y.id, &y.text), "round {round}: texts diverged");
+        }
+        // Five-way exactly-once + page-pool conservation.
+        let mut seen = vec![0usize; reqs.len()];
+        for c in &a.completions {
+            seen[c.id] += 1;
+        }
+        for r in &a.rejections {
+            seen[r.id] += 1;
+        }
+        for c in &a.casualties {
+            seen[c.id] += 1;
+        }
+        assert!(seen.iter().all(|&k| k == 1), "round {round}: exactly-once broken: {seen:?}");
+        assert_eq!(a.stats.timed_out, 0, "no deadline configured in this fuzz");
+        assert_eq!(e.kv.free_page_count(), e.kv.n_pages, "round {round}: leaked pages");
+        assert_eq!(e.kv.n_active, 0, "round {round}: leaked sequences");
+    }
+    // Exec-only plans under an unbounded retry budget: every injected
+    // transient error is answered by exactly one retry, so the counters
+    // must agree and nothing ever fails.
+    for round in 0..20 {
+        let spec = FaultSpec { exec_p: rng.f64() * 0.8, ..Default::default() };
+        let out = serve_opts(
+            &mut e,
+            &reqs,
+            ArrivalMode::Closed,
+            &Fcfs,
+            SchedOptions {
+                faults: Some(FaultPlan::new(spec, rng.next_u64())),
+                max_retries: u32::MAX,
+                ..Default::default()
+            },
+        )
+        .expect("retried faults must never abort the run");
+        assert_eq!(
+            out.stats.retries, out.stats.faults_injected,
+            "round {round}: retry count == injected transient errors"
+        );
+        assert_eq!(out.stats.failed, 0, "an unbounded budget never exhausts");
+        assert_eq!(out.completions.len(), reqs.len(), "round {round}: everything completes");
+        assert_eq!(e.kv.free_page_count(), e.kv.n_pages, "round {round}: leaked pages");
+    }
+}

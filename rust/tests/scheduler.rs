@@ -10,7 +10,8 @@ use std::collections::VecDeque;
 use std::path::PathBuf;
 
 use dualsparse::engine::batcher::{
-    serve, serve_opts, serve_with, ArrivalMode, Fcfs, Request, SchedOptions,
+    serve, serve_opts, serve_with, ArrivalMode, CancelSet, FaultPlan, Fcfs, Phase, Request,
+    SchedOptions,
 };
 use dualsparse::engine::{Engine, EngineOptions, EOS, MAX_SLOTS};
 use dualsparse::moe::DropPolicy;
@@ -104,7 +105,10 @@ fn oversized_prompt_is_rejected_without_losing_completions() {
     // good ones: exactly one rejection, zero lost completions, no leak.
     let good = workload(10, 5, 3);
     let mut reqs = good.clone();
-    reqs.insert(4, Request { id: 10, prompt: "!".repeat(200), max_new: 5, priority: 0 });
+    reqs.insert(
+        4,
+        Request { id: 10, prompt: "!".repeat(200), max_new: 5, priority: 0, deadline_secs: None },
+    );
     let out = serve_with(&mut e, &reqs, ArrivalMode::Closed).unwrap();
     assert_eq!(out.rejections.len(), 1, "exactly one rejection");
     assert_eq!(out.rejections[0].id, 10);
@@ -329,4 +333,174 @@ fn preemption_conserves_requests_and_reports_recompute() {
     // Per-completion eviction counts are the stats total, distributed.
     let total: usize = out.completions.iter().map(|c| c.preemptions as usize).sum();
     assert_eq!(total, out.stats.preemptions, "preemption counts must reconcile");
+}
+
+/// Five-way exactly-once: Done ∪ Rejected ∪ Failed ∪ TimedOut ∪
+/// Cancelled covers every submitted request exactly once.
+fn assert_exactly_once(out: &dualsparse::engine::batcher::ServeOutcome, n: usize) {
+    let mut seen = vec![0usize; n];
+    for c in &out.completions {
+        seen[c.id] += 1;
+    }
+    for r in &out.rejections {
+        seen[r.id] += 1;
+    }
+    for c in &out.casualties {
+        seen[c.id] += 1;
+    }
+    assert!(
+        seen.iter().all(|&k| k == 1),
+        "completions ∪ rejections ∪ casualties must cover every request exactly once: {seen:?}"
+    );
+    assert_eq!(
+        out.stats.requests
+            + out.stats.rejected
+            + out.stats.failed
+            + out.stats.timed_out
+            + out.stats.cancelled,
+        n,
+        "stats counters must reconcile with the five-way partition"
+    );
+}
+
+#[test]
+fn zero_fault_plan_is_byte_identical_to_a_run_without_the_subsystem() {
+    // ISSUE-8 acceptance: `FaultPlan::none()` draws nothing and sweeps
+    // nothing, so the chaos plumbing itself must be invisible — same
+    // completion texts, same counts, no casualties.
+    let mut e = engine();
+    let reqs = workload(20, 5, 7);
+    let plain = serve_opts(
+        &mut e,
+        &reqs,
+        ArrivalMode::Closed,
+        &Fcfs,
+        SchedOptions::default(),
+    )
+    .unwrap();
+    let chaos = serve_opts(
+        &mut e,
+        &reqs,
+        ArrivalMode::Closed,
+        &Fcfs,
+        SchedOptions { faults: Some(FaultPlan::none()), ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(plain.completions.len(), chaos.completions.len());
+    for (a, b) in plain.completions.iter().zip(&chaos.completions) {
+        assert_eq!((a.id, &a.text), (b.id, &b.text), "the zero plan perturbed generation");
+    }
+    assert_eq!(chaos.stats.faults_injected, 0);
+    assert_eq!(chaos.stats.retries, 0);
+    assert_eq!(chaos.stats.backoff_secs, 0.0);
+    assert!(chaos.casualties.is_empty());
+    assert_eq!(e.kv.free_page_count(), e.kv.n_pages);
+}
+
+#[test]
+fn per_request_deadlines_time_out_without_leaking_pages() {
+    let mut e = engine();
+    let mut reqs = workload(12, 3, 7);
+    // A deadline that is already expired by the first sweep: even ids
+    // are reaped from Queued before any admission, odd ids complete.
+    for r in reqs.iter_mut().filter(|r| r.id % 2 == 0) {
+        r.deadline_secs = Some(1e-12);
+    }
+    let out = serve_opts(
+        &mut e,
+        &reqs,
+        ArrivalMode::Closed,
+        &Fcfs,
+        SchedOptions::default(),
+    )
+    .unwrap();
+    assert_eq!(out.stats.timed_out, 6);
+    assert_eq!(out.stats.requests, 6);
+    for c in &out.casualties {
+        assert_eq!(c.id % 2, 0, "only the deadlined requests may time out");
+        assert_eq!(c.phase, Phase::TimedOut);
+        assert!(c.reason.contains("deadline"), "reason: {}", c.reason);
+    }
+    assert_exactly_once(&out, reqs.len());
+    assert_eq!(e.kv.n_active, 0);
+    assert_eq!(e.kv.free_page_count(), e.kv.n_pages, "timeouts must free pages immediately");
+
+    // The run-wide `--deadline-ms` equivalent applies where the
+    // per-request field is unset: everything times out.
+    let reqs = workload(5, 3, 7);
+    let out = serve_opts(
+        &mut e,
+        &reqs,
+        ArrivalMode::Closed,
+        &Fcfs,
+        SchedOptions { deadline_secs: Some(1e-12), ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(out.stats.timed_out, 5);
+    assert!(out.completions.is_empty());
+    assert_exactly_once(&out, reqs.len());
+    assert_eq!(e.kv.free_page_count(), e.kv.n_pages);
+}
+
+#[test]
+fn pre_cancelled_requests_resolve_exactly_once_as_cancelled() {
+    // The external-cancellation hook: ids marked in a shared CancelSet
+    // (the future network front end's side of the channel) are reaped
+    // wherever the sweep finds them.
+    let mut e = engine();
+    let reqs = workload(10, 4, 7);
+    let cs = CancelSet::new();
+    cs.cancel(2);
+    cs.cancel(7);
+    let out = serve_opts(
+        &mut e,
+        &reqs,
+        ArrivalMode::Closed,
+        &Fcfs,
+        SchedOptions { cancel: Some(cs), ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(out.stats.cancelled, 2);
+    assert_eq!(out.stats.requests, 8);
+    assert_eq!(out.casualties.len(), 2);
+    for c in &out.casualties {
+        assert!([2usize, 7].contains(&c.id), "only marked ids cancel (got {})", c.id);
+        assert_eq!(c.phase, Phase::Cancelled);
+        assert!(c.reason.contains("cancel"), "reason: {}", c.reason);
+    }
+    assert_exactly_once(&out, reqs.len());
+    assert_eq!(e.kv.n_active, 0);
+    assert_eq!(e.kv.free_page_count(), e.kv.n_pages);
+}
+
+#[test]
+fn retry_exhaustion_fails_requests_without_aborting_the_run() {
+    // exec=1.0: every prefill attempt is injected. With max_retries = 1
+    // each request burns its one retry, then fails — deterministically
+    // two injected errors and one retry per request, and the run still
+    // returns Ok instead of aborting.
+    let mut e = engine();
+    let reqs = workload(12, 3, 7);
+    let plan = FaultPlan::parse("exec=1.0", 5).unwrap();
+    let out = serve_opts(
+        &mut e,
+        &reqs,
+        ArrivalMode::Closed,
+        &Fcfs,
+        SchedOptions { faults: Some(plan), max_retries: 1, ..Default::default() },
+    )
+    .unwrap();
+    assert_eq!(out.stats.failed, 12);
+    assert_eq!(out.stats.requests, 0);
+    assert_eq!(out.stats.retries, 12);
+    assert_eq!(out.stats.faults_injected, 24, "two injected errors per request");
+    assert!(out.stats.backoff_secs > 0.0, "virtual backoff must be accounted");
+    for c in &out.casualties {
+        assert_eq!(c.phase, Phase::Failed);
+        assert_eq!(c.retries, 1, "the whole budget was spent first");
+        assert!(c.reason.contains("retries exhausted"), "reason: {}", c.reason);
+    }
+    assert_exactly_once(&out, reqs.len());
+    assert_eq!(e.kv.n_active, 0);
+    assert_eq!(e.kv.free_page_count(), e.kv.n_pages, "failures must free pages immediately");
 }
