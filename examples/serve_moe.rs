@@ -1,6 +1,6 @@
 //! End-to-end serving driver (the DESIGN.md §"End-to-end validation"
 //! example): load a trained model, serve a batched request workload
-//! through the continuous batcher under several drop policies, and
+//! through the continuous-batching scheduler under several drop policies, and
 //! report latency / throughput / MoE-module speedup.
 //!
 //!     cargo run --release --example serve_moe [model] [n_reqs]
@@ -80,7 +80,8 @@ fn main() -> Result<()> {
     // Scheduling policies under the same overload with a bounded queue:
     // admission order + backpressure are the serving levers the drop
     // policy can't reach (docs/ARCHITECTURE.md).
-    use dualsparse::engine::batcher::{serve_policy, AdmissionControl, PolicyKind};
+    use dualsparse::engine::policy::{AdmissionControl, PolicyKind};
+    use dualsparse::engine::scheduler::serve_policy;
     println!("\nscheduling policies @ {:.1} req/s, max queue 32:", 1.5 * rps);
     for kind in PolicyKind::ALL {
         let out = serve_policy(

@@ -278,7 +278,10 @@ impl FaultPlan {
 /// [`Request::id`](crate::engine::scheduler::Request)) as `Cancelled`,
 /// freeing their KV pages immediately. Clones share the underlying
 /// set, so a network front end can hold one clone and cancel from
-/// another thread mid-run.
+/// another thread mid-run — real client disconnects
+/// ([`crate::server::net`] hangups and dead-sink token writes) land in
+/// the same set as `cancel=P`-injected chaos, so both take the one
+/// audited path through the sweep.
 #[derive(Debug, Clone, Default)]
 pub struct CancelSet {
     inner: Arc<Mutex<HashSet<usize>>>,

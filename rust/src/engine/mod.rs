@@ -8,7 +8,6 @@
 //! contributes. The engine is backend-agnostic: it holds weight
 //! buffers as opaque [`BufId`] handles and never names a runtime type.
 
-pub mod batcher;
 pub mod ep;
 pub mod faults;
 pub mod kv;

@@ -377,6 +377,102 @@ pub fn poisson_arrivals(n: usize, rate: f64, seed: u64) -> Vec<f64> {
         .collect()
 }
 
+/// The receiving end of a per-request [`TokenSink`] went away (client
+/// disconnected, writer thread dead). The scheduler reacts by marking
+/// the request in the run's [`CancelSet`] so the next sweep retires it
+/// as [`Phase::Cancelled`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SinkClosed;
+
+/// Per-request streaming output: the scheduler pushes every retired
+/// token the moment it exists, then exactly one terminal notification.
+///
+/// The token stream is **append-only and lossless**: the concatenation
+/// of all `token` calls equals the final [`Completion::text`] byte for
+/// byte (the EOS terminator is never emitted, and a preempted request's
+/// recompute re-derives — never re-emits — what was already streamed).
+pub trait TokenSink {
+    /// One retired, non-EOS token. `Err(SinkClosed)` tells the
+    /// scheduler the client is unreachable; the request is cancelled at
+    /// the next sweep.
+    fn token(&mut self, tok: u8) -> std::result::Result<(), SinkClosed>;
+    /// Terminal: the request completed.
+    fn done(&mut self, c: &Completion);
+    /// Terminal: rejected at admission (queue full / validation).
+    fn rejected(&mut self, r: &Rejection);
+    /// Terminal: failed / timed out / cancelled mid-lifecycle.
+    fn casualty(&mut self, c: &Casualty);
+}
+
+/// One request delivered by an [`ArrivalSource`]: the request itself,
+/// its arrival timestamp (seconds from run start — a workload source
+/// reports its scheduled offset, a live source the delivery time), and
+/// an optional streaming sink for its output.
+pub struct Arrival {
+    pub request: Request,
+    pub at: f64,
+    pub sink: Option<Box<dyn TokenSink>>,
+}
+
+/// Where requests come from. The scheduler polls the source once per
+/// iteration instead of walking a pre-materialized `Vec<Request>`, so
+/// the same loop serves both synthetic workloads ([`WorkloadSource`])
+/// and live sockets ([`crate::server::net`]).
+pub trait ArrivalSource {
+    /// Every request that has arrived by `now`, in arrival order.
+    fn poll(&mut self, now: f64) -> Vec<Arrival>;
+    /// Earliest known future arrival, if the source has a schedule
+    /// (workloads do; a socket source returns `None` and is polled at a
+    /// steady cadence instead).
+    fn next_arrival(&self) -> Option<f64>;
+    /// True once no further arrival can ever be delivered; the loop
+    /// exits when the source is exhausted and nothing is in flight.
+    fn exhausted(&self) -> bool;
+}
+
+/// The pre-materialized workload as an [`ArrivalSource`]: a request
+/// list plus [`ArrivalMode`] offsets (closed loop = everything at
+/// t = 0). Delivery replays the legacy scheduler's arrival scan
+/// exactly, which is what keeps `serve_opts` byte-pinned.
+pub struct WorkloadSource {
+    requests: Vec<Request>,
+    arrivals: Vec<f64>,
+    next: usize,
+}
+
+impl WorkloadSource {
+    pub fn new(requests: &[Request], mode: ArrivalMode) -> Self {
+        let arrivals = match mode {
+            ArrivalMode::Closed => vec![0.0; requests.len()],
+            ArrivalMode::Open { rate, seed } => poisson_arrivals(requests.len(), rate, seed),
+        };
+        WorkloadSource { requests: requests.to_vec(), arrivals, next: 0 }
+    }
+}
+
+impl ArrivalSource for WorkloadSource {
+    fn poll(&mut self, now: f64) -> Vec<Arrival> {
+        let mut out = Vec::new();
+        while self.next < self.requests.len() && self.arrivals[self.next] <= now {
+            out.push(Arrival {
+                request: self.requests[self.next].clone(),
+                at: self.arrivals[self.next],
+                sink: None,
+            });
+            self.next += 1;
+        }
+        out
+    }
+
+    fn next_arrival(&self) -> Option<f64> {
+        self.arrivals.get(self.next).copied()
+    }
+
+    fn exhausted(&self) -> bool {
+        self.next == self.requests.len()
+    }
+}
+
 /// One admitted request (staged for prefill or decoding). Its KV
 /// sequence id is stable for the whole residency — eviction frees it,
 /// re-admission claims a fresh one.
@@ -521,6 +617,18 @@ fn evict(engine: &mut Engine, a: InFlight, ctx: &mut EvictCtx<'_>, now: f64) {
     ctx.queue.push_front(a.ridx);
 }
 
+/// Run all `requests` to completion with continuous batching in
+/// closed-loop mode (every request available at t = 0), keeping the
+/// historical `(completions, stats)` shape.
+///
+/// An oversized prompt does not abort the run: the offending request
+/// is rejected at admission validation (no KV slot consumed) and the
+/// count shows up in [`ServeStats::rejected`].
+pub fn serve(engine: &mut Engine, requests: &[Request]) -> Result<(Vec<Completion>, ServeStats)> {
+    let out = serve_with(engine, requests, ArrivalMode::Closed)?;
+    Ok((out.completions, out.stats))
+}
+
 /// Run `requests` to completion (or rejection) under `mode` with the
 /// legacy scheduling configuration: FCFS admission order, unbounded
 /// queue, no preemption. Completion texts are byte-for-byte the
@@ -549,7 +657,9 @@ pub fn serve_policy(
 /// Run `requests` to completion (or rejection) under `mode`, admitting
 /// in the order `policy` chooses, with the full paged-KV knob set
 /// ([`SchedOptions`]): bounded admission, preemption, aging,
-/// prefill/decode interleaving.
+/// prefill/decode interleaving. Thin wrapper over [`serve_source`]
+/// with a [`WorkloadSource`]; completion texts stay byte-pinned by
+/// `rust/tests/scheduler.rs`.
 pub fn serve_opts(
     engine: &mut Engine,
     requests: &[Request],
@@ -557,24 +667,41 @@ pub fn serve_opts(
     policy: &dyn SchedulingPolicy,
     opts: SchedOptions,
 ) -> Result<ServeOutcome> {
-    let n = requests.len();
-    engine.kv.reset();
-    engine.reset_metrics();
     // Fail fast on backends that cannot run the chunked-prefill
-    // continuation artifacts a long prompt will need mid-run.
+    // continuation artifacts a long prompt will need mid-run. A live
+    // source cannot know its prompts up front, so the check lives here
+    // on the workload path only.
     let longest = requests.iter().map(|r| r.prompt.len()).max().unwrap_or(0);
     engine.check_chunked_prefill_support(longest)?;
-    let arrivals: Vec<f64> = match mode {
-        ArrivalMode::Closed => vec![0.0; n],
-        ArrivalMode::Open { rate, seed } => poisson_arrivals(n, rate, seed),
-    };
-    // Arrivals are monotone in request order (cumulative gaps), so the
-    // not-yet-arrived set is a simple index queue.
-    let mut pending: VecDeque<usize> = (0..n).collect();
+    let mut source = WorkloadSource::new(requests, mode);
+    serve_source(engine, &mut source, policy, opts)
+}
+
+/// The iteration-level serving loop over an arbitrary
+/// [`ArrivalSource`]: requests enter whenever the source delivers them
+/// (synthetic workload offsets or live socket frames), tokens leave
+/// through each request's [`TokenSink`] the moment a decode step (or
+/// the final prefill chunk) retires them, and a sink write failure
+/// flips the request into the run's [`CancelSet`] so the next sweep
+/// retires it as [`Phase::Cancelled`] and frees its KV pages.
+pub fn serve_source(
+    engine: &mut Engine,
+    source: &mut dyn ArrivalSource,
+    policy: &dyn SchedulingPolicy,
+    opts: SchedOptions,
+) -> Result<ServeOutcome> {
+    engine.kv.reset();
+    engine.reset_metrics();
+    // Per-request state, indexed by delivery order (`ridx`). Grown as
+    // the source delivers — a live source's request count is unknown
+    // until shutdown.
+    let mut reqs: Vec<Request> = Vec::new();
+    let mut arrivals: Vec<f64> = Vec::new();
     let mut queue: VecDeque<usize> = VecDeque::new();
-    let mut phases = vec![Phase::Queued; n];
-    let mut enqueued_at = vec![0.0f64; n];
-    let mut resume: Vec<Option<ResumeState>> = (0..n).map(|_| None).collect();
+    let mut phases: Vec<Phase> = Vec::new();
+    let mut enqueued_at: Vec<f64> = Vec::new();
+    let mut resume: Vec<Option<ResumeState>> = Vec::new();
+    let mut sinks: Vec<Option<Box<dyn TokenSink>>> = Vec::new();
     // Staged prefill jobs, oldest first; only the front job ever runs
     // a chunk (and therefore only the front job holds prefill pages —
     // the invariant that keeps optimistic admission deadlock-free).
@@ -613,9 +740,10 @@ pub fn serve_opts(
     };
     let mut degrade = opts.degrade.clone();
     let base_policy = engine.policy;
-    let deadlines_on =
-        opts.deadline_secs.is_some() || requests.iter().any(|r| r.deadline_secs.is_some());
-    let mut req_retries = vec![0u32; n];
+    // Re-evaluated as arrivals come in: a deadline only needs sweeping
+    // once a request carrying one exists.
+    let mut deadlines_on = opts.deadline_secs.is_some();
+    let mut req_retries: Vec<u32> = Vec::new();
     let mut retries_total = 0u64;
     let mut backoff_secs = 0.0f64;
     let mut casualties: Vec<Casualty> = Vec::new();
@@ -653,13 +781,14 @@ pub fn serve_opts(
 
     // Cut one live request down to a terminal failure-domain state and
     // record the casualty. Pages (if any) are freed by the caller —
-    // each holding collection knows what it holds.
+    // each holding collection knows what it holds. The request's sink
+    // (if streaming) gets its terminal notification here.
     macro_rules! reap {
         ($ri:expr, $to:expr, $reason:expr, $generated:expr, $now:expr) => {{
             let ri = $ri;
             set_phase(&mut phases, ri, $to);
             casualties.push(Casualty {
-                id: requests[ri].id,
+                id: reqs[ri].id,
                 phase: $to,
                 reason: $reason,
                 arrival: arrivals[ri],
@@ -667,6 +796,9 @@ pub fn serve_opts(
                 retries: req_retries[ri],
                 generated: $generated,
             });
+            if let Some(mut sk) = sinks[ri].take() {
+                sk.casualty(casualties.last().expect("just pushed"));
+            }
         }};
     }
 
@@ -694,25 +826,35 @@ pub fn serve_opts(
             }
         }
 
-        // 1. arrivals: move everything whose time has come into the
-        // queue — unless the admission-control bound refuses it, in
-        // which case the request is rejected on the spot (Queued →
-        // Rejected, no KV space ever involved).
+        // 1. arrivals: poll the source for everything whose time has
+        // come and move it into the queue — unless the admission-
+        // control bound refuses it, in which case the request is
+        // rejected on the spot (Queued → Rejected, no KV space ever
+        // involved) and the rejection is answered on its sink.
         let now = timer.secs();
-        while pending.front().map(|&i| arrivals[i] <= now).unwrap_or(false) {
-            let i = pending.pop_front().unwrap();
+        for arrival in source.poll(now) {
+            let Arrival { request, at, sink } = arrival;
+            let i = reqs.len();
+            deadlines_on |= request.deadline_secs.is_some();
+            reqs.push(request);
+            arrivals.push(at);
+            phases.push(Phase::Queued);
+            enqueued_at.push(0.0);
+            resume.push(None);
+            req_retries.push(0);
+            sinks.push(sink);
             // Injected client disconnect: mark the id cancelled so the
             // sweep below reaps it wherever it lands.
             if plan.as_mut().is_some_and(|p| p.cancel_on_arrival()) {
                 if let Some(cs) = cancel.as_ref() {
-                    cs.cancel(requests[i].id);
+                    cs.cancel(reqs[i].id);
                 }
             }
             if !opts.admission.admits(queue.len()) {
                 set_phase(&mut phases, i, Phase::Rejected);
                 queue_full += 1;
                 rejections.push(Rejection {
-                    id: requests[i].id,
+                    id: reqs[i].id,
                     reason: format!(
                         "queue full: {} waiting at max_queue_depth {}",
                         queue.len(),
@@ -721,6 +863,9 @@ pub fn serve_opts(
                     arrival: arrivals[i],
                     rejected_at: timer.secs(),
                 });
+                if let Some(mut sk) = sinks[i].take() {
+                    sk.rejected(rejections.last().expect("just pushed"));
+                }
                 continue;
             }
             enqueued_at[i] = arrivals[i];
@@ -735,11 +880,10 @@ pub fn serve_opts(
         if deadlines_on || cancel_live {
             let now = timer.secs();
             let axed = |ri: usize| -> Option<(Phase, String)> {
-                if cancel_live && cancel.as_ref().is_some_and(|c| c.is_cancelled(requests[ri].id))
-                {
+                if cancel_live && cancel.as_ref().is_some_and(|c| c.is_cancelled(reqs[ri].id)) {
                     return Some((Phase::Cancelled, "cancelled by client".to_string()));
                 }
-                match requests[ri].deadline_secs.or(opts.deadline_secs) {
+                match reqs[ri].deadline_secs.or(opts.deadline_secs) {
                     Some(d) if now - arrivals[ri] > d => Some((
                         Phase::TimedOut,
                         format!("deadline {:.0} ms exceeded", d * 1e3),
@@ -800,10 +944,10 @@ pub fn serve_opts(
             } else {
                 view.clear();
                 view.extend(queue.iter().map(|&i| QueuedRequest {
-                    id: requests[i].id,
-                    prompt_len: requests[i].prompt.len()
+                    id: reqs[i].id,
+                    prompt_len: reqs[i].prompt.len()
                         + resume[i].as_ref().map(|r| r.out.len()).unwrap_or(0),
-                    priority: requests[i].priority,
+                    priority: reqs[i].priority,
                     arrival: arrivals[i],
                     age_boost: opts
                         .aging
@@ -813,7 +957,7 @@ pub fn serve_opts(
                 policy.pick(&view).min(queue.len() - 1)
             };
             let ri = queue.remove(pos).expect("pos clamped into range");
-            let req = &requests[ri];
+            let req = &reqs[ri];
             let parked = resume[ri].take();
             // Fresh requests get validated once; a resumed request
             // already passed (its prompt + max_new fit, and generated
@@ -836,6 +980,9 @@ pub fn serve_opts(
                         arrival: arrivals[ri],
                         rejected_at: timer.secs(),
                     });
+                    if let Some(mut sk) = sinks[ri].take() {
+                        sk.rejected(rejections.last().expect("just pushed"));
+                    }
                     continue;
                 }
             }
@@ -1034,6 +1181,18 @@ pub fn serve_opts(
                     }
                     if job.out.len() < job.max_new {
                         job.out.push(tok);
+                        // Stream the token the moment it retires. A closed
+                        // sink (client hung up) flips the id into the
+                        // CancelSet so the next sweep reaps the request.
+                        if tok != EOS {
+                            if let Some(sk) = sinks[job.ridx].as_mut() {
+                                if sk.token(tok).is_err() {
+                                    if let Some(cs) = cancel.as_ref() {
+                                        cs.cancel(reqs[job.ridx].id);
+                                    }
+                                }
+                            }
+                        }
                     }
                     job.next = tok;
                     if tok == EOS || job.out.len() >= job.max_new {
@@ -1042,8 +1201,12 @@ pub fn serve_opts(
                         // row.
                         engine.kv.free(job.seq);
                         committed -= job.reserved;
-                        set_phase(&mut phases, job.ridx, Phase::Done);
+                        let ridx = job.ridx;
+                        set_phase(&mut phases, ridx, Phase::Done);
                         done.push(finish(job, now));
+                        if let Some(mut sk) = sinks[ridx].take() {
+                            sk.done(done.last().expect("just pushed"));
+                        }
                     } else {
                         set_phase(&mut phases, job.ridx, Phase::Decode);
                         active.push(job);
@@ -1067,16 +1230,22 @@ pub fn serve_opts(
         }
 
         if active.is_empty() {
-            if queue.is_empty() && pending.is_empty() && prefilling.is_empty() {
+            if queue.is_empty() && prefilling.is_empty() && source.exhausted() {
                 break;
             }
             if queue.is_empty() && prefilling.is_empty() {
-                // Idle until the next arrival (open-loop only; capped so
-                // the loop re-checks the clock at a sane cadence).
-                let next_at = arrivals[*pending.front().unwrap()];
-                let wait = next_at - timer.secs();
-                if wait > 0.0 {
-                    std::thread::sleep(std::time::Duration::from_secs_f64(wait.min(0.05)));
+                // Idle until the next arrival (capped so the loop re-checks
+                // the clock — and live sources like a socket queue — at a
+                // sane cadence). A source with no known next arrival (e.g.
+                // the network front end) is polled every millisecond.
+                match source.next_arrival() {
+                    Some(next_at) => {
+                        let wait = next_at - timer.secs();
+                        if wait > 0.0 {
+                            std::thread::sleep(std::time::Duration::from_secs_f64(wait.min(0.05)));
+                        }
+                    }
+                    None => std::thread::sleep(std::time::Duration::from_millis(1)),
                 }
             }
             continue;
@@ -1182,6 +1351,19 @@ pub fn serve_opts(
             a.out.push(next[k]);
             a.next = next[k];
             a.steps += 1;
+            let (ridx, id) = (a.ridx, reqs[a.ridx].id);
+            // Stream the freshly retired token; EOS terminates the text and
+            // is never emitted. A closed sink (client hung up mid-decode)
+            // cancels the request so the next sweep frees its pages.
+            if next[k] != EOS {
+                if let Some(sk) = sinks[ridx].as_mut() {
+                    if sk.token(next[k]).is_err() {
+                        if let Some(cs) = cancel.as_ref() {
+                            cs.cancel(id);
+                        }
+                    }
+                }
+            }
         }
         total_decode_steps += 1;
         // Injected EP worker failure: trip at the configured decode
@@ -1205,8 +1387,12 @@ pub fn serve_opts(
             let a = active.swap_remove(row);
             engine.kv.free(a.seq);
             committed -= a.reserved;
-            set_phase(&mut phases, a.ridx, Phase::Done);
+            let ridx = a.ridx;
+            set_phase(&mut phases, ridx, Phase::Done);
             done.push(finish(a, timer.secs()));
+            if let Some(mut sk) = sinks[ridx].take() {
+                sk.done(done.last().expect("just pushed"));
+            }
         }
     }
 

@@ -16,10 +16,11 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
-use crate::engine::batcher::serve;
 use crate::engine::faults::{DegradeController, FaultPlan};
 use crate::engine::policy::{AdmissionControl, PolicyKind};
-use crate::engine::scheduler::{serve_opts, serve_policy, ArrivalMode, SchedOptions, ServeStats};
+use crate::engine::scheduler::{
+    serve, serve_opts, serve_policy, ArrivalMode, SchedOptions, ServeStats,
+};
 use crate::engine::{Engine, EngineOptions, EpOptions};
 use crate::moe::DropPolicy;
 use crate::server;

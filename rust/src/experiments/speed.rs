@@ -9,7 +9,7 @@ use super::{
     ensure_importance, eval_with_rate, find_threshold, mk_engine,
     mk_engine_ep, save_result,
 };
-use crate::engine::batcher::serve;
+use crate::engine::scheduler::serve;
 use crate::moe::DropPolicy;
 use crate::server::{compare, format_report, run_once, workload};
 use crate::tasks::eval::avg_accuracy;

@@ -37,7 +37,8 @@
 //!   `python/compile/kernels/ref.py`. When no serialized model exists
 //!   the engine materializes deterministic SplitMix64 synthetic weights
 //!   ([`model::Weights::synthetic`]), so the entire stack — engine,
-//!   batcher, server, experiments, tests — runs **hermetically**:
+//!   scheduler, server, network front end, experiments, tests — runs
+//!   **hermetically**:
 //!   `cargo test -q` needs no `make artifacts`, no Python, no PJRT.
 //! * **PJRT** (`pjrt` cargo feature) — loads the AOT HLO-text artifacts
 //!   for trained weights; Python still never runs on the request path.

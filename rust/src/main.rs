@@ -17,6 +17,17 @@
 //!         (--policy also filters --sweep/--quick to one scheduling
 //!          policy; legacy `--policy none|1t:<T>|2t:<T>` still parses
 //!          as a drop policy for back-compat)
+//!         [--listen HOST:PORT [--conn-queue N]
+//!          [--max-frame-bytes B]]             network front end: NDJSON
+//!                                            `generate` frames in,
+//!                                            per-token frames out; runs
+//!                                            until a `shutdown` frame
+//!                                            (excludes --sweep/--quick
+//!                                            and --mode/--rate/--reqs)
+//!   client --connect HOST:PORT [--reqs N] [--max-new N] [--seed S]
+//!          [--shutdown]                       loopback NDJSON client
+//!                                            driver (the net-smoke CI
+//!                                            counterpart of --listen)
 //!   eval <model> [--policy …] [--reconstruct] [--n N]
 //!   calibrate <model> [--tokens N]
 //!   bench [--quick] [--model M] [--out PATH]   (writes BENCH_cpu.json)
@@ -169,6 +180,63 @@ fn parse_deadline_ms(v: Option<&str>) -> Result<Option<f64>> {
     }
 }
 
+/// Parse the network-front-end flags (`--listen`, `--conn-queue`,
+/// `--max-frame-bytes`) into [`server::net::NetOptions`]. All the
+/// refusals are loud: a bad socket address, net flags without
+/// `--listen`, and `--listen` combined with flags that synthesize a
+/// workload (`--sweep`/`--quick`, `--mode`/`--rate`/`--reqs`) — a live
+/// server takes its requests off the wire, so silently ignoring either
+/// side would misrepresent the run.
+fn parse_net_options(args: &Args) -> Result<Option<(String, server::net::NetOptions)>> {
+    let Some(addr) = args.flag("listen") else {
+        for k in ["conn-queue", "max-frame-bytes"] {
+            if args.flag(k).is_some() {
+                bail!("--{k} configures the network front end; it requires --listen HOST:PORT");
+            }
+        }
+        return Ok(None);
+    };
+    // `--listen` with no value parses as the bare-flag sentinel "true",
+    // which this rejects like any other non-address.
+    addr.parse::<std::net::SocketAddr>()
+        .with_context(|| format!("--listen {addr:?} is not a HOST:PORT socket address"))?;
+    if args.flag("sweep").is_some() || args.flag("quick").is_some() {
+        bail!("--listen runs a live server; it cannot combine with --sweep/--quick");
+    }
+    for k in ["mode", "rate", "reqs"] {
+        if args.flag(k).is_some() {
+            bail!(
+                "--{k} shapes a synthetic workload; a --listen server takes its \
+                 requests off the wire (drive it with `dualsparse client`)"
+            );
+        }
+    }
+    let mut opts = server::net::NetOptions::default();
+    if let Some(v) = args.flag("conn-queue") {
+        let q: usize = v
+            .parse()
+            .with_context(|| format!("--conn-queue must be a request count, got {v:?}"))?;
+        if q == 0 {
+            bail!("--conn-queue must be ≥ 1 (0 would refuse every generate frame)");
+        }
+        opts.conn_queue = q;
+    }
+    if let Some(v) = args.flag("max-frame-bytes") {
+        let b: usize = v
+            .parse()
+            .with_context(|| format!("--max-frame-bytes must be a byte count, got {v:?}"))?;
+        if b < 64 {
+            bail!("--max-frame-bytes must be ≥ 64 (a minimal generate frame is bigger)");
+        }
+        opts.max_frame_bytes = b;
+    }
+    // In net mode `--max-new` is the per-request default for frames
+    // that omit the field (the synthetic-workload meaning is rejected
+    // above alongside --reqs).
+    opts.default_max_new = args.flag_usize("max-new", opts.default_max_new);
+    Ok(Some((addr.to_string(), opts)))
+}
+
 fn main() -> Result<()> {
     let args = Args::parse();
     let artifacts: PathBuf = args
@@ -283,6 +351,7 @@ fn main() -> Result<()> {
             {
                 bail!("--faults ep-fail/ep-slow require --ep-workers N");
             }
+            let listen = parse_net_options(&args)?;
             if args.flag("sweep").is_some() || args.flag("quick").is_some() {
                 // The sweep fixes its own queue bound, drop ladder and
                 // scheduler knobs; refusing beats silently writing a
@@ -341,6 +410,89 @@ fn main() -> Result<()> {
                 cancel: None,
                 degrade,
             };
+            if let Some((addr, net_opts)) = listen {
+                let ep = ep_workers.map(|n| {
+                    let mut o = EpOptions::new(n, ep_load_aware);
+                    o.replicate_after = ep_replicate_after;
+                    o
+                });
+                let opts = EngineOptions { page_size, kv_pages, ep, ..Default::default() };
+                let mut engine = Engine::new(&artifacts, &model, policy, opts)?;
+                server::warmup(&mut engine)?;
+                let srv = server::net::NetServer::bind(&addr, net_opts)?;
+                let bound = srv.local_addr();
+                println!(
+                    "serving {model} on {} (sched {}, drop {policy:?}, pages {}×{} tok, \
+                     preempt={}, interleave={}, ep={:?})",
+                    engine.rt.platform(),
+                    sched.policy,
+                    engine.kv.n_pages,
+                    engine.kv.page_size,
+                    sched.preempt,
+                    sched.interleave,
+                    ep_workers,
+                );
+                // CI discovers the ephemeral port from this line; keep
+                // the spelling stable.
+                println!("listening on {bound}");
+                let (outcome, net) =
+                    srv.serve(&mut engine, sched.policy.policy(), sched.options())?;
+                let st = &outcome.stats;
+                println!(
+                    "latency p50={:.0}ms p99={:.0}ms | ttft mean={:.0}ms p99={:.0}ms | \
+                     completed={} goodput={:.2} req/s rejected={} (queue-full {})",
+                    st.p50_latency * 1e3,
+                    st.p99_latency * 1e3,
+                    st.mean_ttft * 1e3,
+                    st.p99_ttft * 1e3,
+                    st.requests,
+                    st.goodput_rps,
+                    st.rejected,
+                    st.rejected_queue_full,
+                );
+                let leaked = engine.kv.n_pages - engine.kv.free_page_count();
+                println!("{}", server::net::format_net_report(&net, leaked));
+                let chaos_line = server::format_chaos_report(st, leaked);
+                if !chaos_line.is_empty() {
+                    println!("{chaos_line}");
+                }
+                // Same conservation law as the offline path, with the
+                // submitted count taken off the wire: every request the
+                // scheduler accepted must end in exactly one terminal
+                // state, and the page pool must drain to full.
+                let resolved =
+                    st.requests + st.rejected + st.failed + st.timed_out + st.cancelled;
+                if resolved != net.accepted_requests || leaked != 0 {
+                    bail!(
+                        "lifecycle violation: {} completed + {} rejected + {} failed + \
+                         {} timed-out + {} cancelled != {} accepted off the wire \
+                         (leaked pages: {})",
+                        st.requests,
+                        st.rejected,
+                        st.failed,
+                        st.timed_out,
+                        st.cancelled,
+                        net.accepted_requests,
+                        leaked
+                    );
+                }
+                println!(
+                    "lifecycle: exactly-once ({} completed + {} rejected + {} failed + \
+                     {} timed-out + {} cancelled = {} submitted)",
+                    st.requests,
+                    st.rejected,
+                    st.failed,
+                    st.timed_out,
+                    st.cancelled,
+                    net.accepted_requests
+                );
+                let out = args
+                    .flag("out")
+                    .map(PathBuf::from)
+                    .unwrap_or_else(|| PathBuf::from("SERVE_cpu.json"));
+                server::net::write_net_serve_json(&model, &bound, st, &net, &out)?;
+                return Ok(());
+            }
             let n = args.flag_usize("reqs", 100);
             let max_new = args.flag_usize("max-new", 12);
             let mode = match args.flag("mode").unwrap_or("closed") {
@@ -516,6 +668,51 @@ fn main() -> Result<()> {
             };
             experiments::bench::run(&artifacts, &cfg)?;
         }
+        "client" => {
+            // Loopback driver for `serve --listen`: replays the built-in
+            // task workload over NDJSON and reports wire-level streaming
+            // accounting (CI's net-smoke counterpart of the server).
+            let addr = args.flag("connect").context(
+                "client --connect HOST:PORT [--reqs N] [--max-new N] [--seed S] [--shutdown]",
+            )?;
+            let sock: std::net::SocketAddr = addr
+                .parse()
+                .with_context(|| format!("--connect {addr:?} is not HOST:PORT"))?;
+            let n = args.flag_usize("reqs", 12);
+            let max_new = args.flag_usize("max-new", 6);
+            let seed = args.flag_usize("seed", 7) as u64;
+            let reqs: Vec<server::net::ClientRequest> = server::workload(n, max_new, seed)
+                .into_iter()
+                .map(|r| server::net::ClientRequest {
+                    tag: r.id.to_string(),
+                    prompt: r.prompt,
+                    max_new: r.max_new,
+                })
+                .collect();
+            let rep = server::net::run_client(&sock, &reqs, args.flag("shutdown").is_some())?;
+            // Streaming must be real: each completion's token frames
+            // arrive before its done frame and concatenate to its text.
+            let stream_matches_done = rep
+                .outcomes
+                .iter()
+                .filter(|(_, o)| o.terminal == "done")
+                .all(|(_, o)| {
+                    (o.token_frames == 0 || o.token_before_done)
+                        && o.done_text.as_deref() == Some(o.streamed.as_str())
+                });
+            println!(
+                "client: sent={n} completions={} token_frames={} errors={} \
+                 stream_matches_done={} shutdown_acked={}",
+                rep.completions(),
+                rep.token_frames(),
+                rep.errors,
+                stream_matches_done,
+                rep.shutdown_acked,
+            );
+            if !stream_matches_done {
+                bail!("streamed token frames do not reconstruct the done text");
+            }
+        }
         "exp" => {
             let id = args.pos.get(1).context("exp <id|all>")?;
             experiments::run(id, &artifacts)?;
@@ -552,7 +749,7 @@ fn main() -> Result<()> {
         _ => {
             println!(
                 "dualsparse — DualSparse-MoE inference system\n\
-                 usage: dualsparse <serve|eval|calibrate|bench|exp|info> …\n\
+                 usage: dualsparse <serve|client|eval|calibrate|bench|exp|info> …\n\
                  see `rust/src/main.rs` header or README.md"
             );
         }
@@ -604,6 +801,62 @@ mod tests {
         assert!(parse_deadline_ms(Some("-5")).is_err());
         assert!(parse_deadline_ms(Some("inf")).is_err());
         assert!(parse_deadline_ms(Some("soon")).is_err());
+    }
+
+    #[test]
+    fn net_flags_parse_and_default() {
+        let got = parse_net_options(&argv("serve --listen 127.0.0.1:0")).unwrap();
+        let (addr, opts) = got.expect("--listen present");
+        assert_eq!(addr, "127.0.0.1:0");
+        assert_eq!(opts.conn_queue, server::net::NetOptions::default().conn_queue);
+        let got = parse_net_options(
+            &argv("serve --listen 127.0.0.1:0 --conn-queue 4 --max-frame-bytes 4096 --max-new 9"),
+        )
+        .unwrap()
+        .expect("--listen present");
+        assert_eq!(got.1.conn_queue, 4);
+        assert_eq!(got.1.max_frame_bytes, 4096);
+        assert_eq!(got.1.default_max_new, 9);
+        assert!(parse_net_options(&argv("serve --reqs 32")).unwrap().is_none());
+    }
+
+    #[test]
+    fn net_flags_reject_bad_addresses_and_orphans() {
+        assert!(
+            parse_net_options(&argv("serve --listen nonsense")).is_err(),
+            "a non-address must not bind"
+        );
+        assert!(
+            parse_net_options(&argv("serve --listen --preempt")).is_err(),
+            "valueless --listen parses as the bare-flag sentinel and must be rejected"
+        );
+        assert!(
+            parse_net_options(&argv("serve --conn-queue 8")).is_err(),
+            "net flags without --listen are a misconfiguration, not a no-op"
+        );
+        assert!(parse_net_options(&argv("serve --max-frame-bytes 4096")).is_err());
+    }
+
+    #[test]
+    fn listen_excludes_synthetic_workload_flags() {
+        for flags in [
+            "serve --listen 127.0.0.1:0 --sweep",
+            "serve --listen 127.0.0.1:0 --quick",
+            "serve --listen 127.0.0.1:0 --mode open --rate 4",
+            "serve --listen 127.0.0.1:0 --reqs 32",
+        ] {
+            assert!(parse_net_options(&argv(flags)).is_err(), "{flags:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn net_bounds_reject_zero_and_garbage() {
+        assert!(parse_net_options(&argv("serve --listen 127.0.0.1:0 --conn-queue 0")).is_err());
+        assert!(parse_net_options(&argv("serve --listen 127.0.0.1:0 --conn-queue many")).is_err());
+        assert!(
+            parse_net_options(&argv("serve --listen 127.0.0.1:0 --max-frame-bytes 8")).is_err(),
+            "a frame cap below any valid generate frame refuses everything"
+        );
     }
 
     #[test]

@@ -1,15 +1,36 @@
 //! Serving front-end: workload generation + benchmark runs over the
-//! continuous batcher (the paper's §5.3.2 efficiency methodology:
-//! "2,000 random prompts, input 500 / output 100", scaled to this
-//! testbed per DESIGN.md §2).
+//! arrival-driven scheduler (the paper's §5.3.2 efficiency
+//! methodology: "2,000 random prompts, input 500 / output 100", scaled
+//! to this testbed per DESIGN.md §2), plus the TCP network front end
+//! ([`net`]) that feeds the same scheduler off live sockets.
+
+pub mod net;
 
 use anyhow::Result;
 
-use crate::engine::batcher::{serve, serve_opts, ArrivalMode, Request, SchedConfig, ServeStats};
+use crate::engine::policy::SchedConfig;
+use crate::engine::scheduler::{serve, serve_opts, ArrivalMode, Request, ServeStats};
 use crate::engine::Engine;
 use crate::moe::DropPolicy;
 use crate::util::rng::SplitMix64;
 use crate::util::stats::speedup_ratio;
+
+/// Build a serving workload from the benchmark tasks (round-robin over
+/// tasks), standing in for the paper's "2000 random prompts".
+pub fn task_workload(n: usize, max_new: usize) -> Vec<Request> {
+    let tasks = crate::tasks::TASKS;
+    let mut out = Vec::with_capacity(n);
+    let mut per_task: Vec<Vec<(String, String)>> = tasks
+        .iter()
+        .map(|t| crate::tasks::eval_set(t, n / tasks.len() + 1, false))
+        .collect();
+    for i in 0..n {
+        let t = i % tasks.len();
+        let (prompt, _) = per_task[t].pop().expect("enough prompts");
+        out.push(Request { id: i, prompt, max_new, priority: 0, deadline_secs: None });
+    }
+    out
+}
 
 /// A serving workload: prompts drawn from the benchmark task mixture
 /// with a deterministic shuffle (stand-in for "2000 random prompts").
@@ -19,7 +40,7 @@ use crate::util::stats::speedup_ratio;
 /// seeded stream after the shuffle) so the `priority` policy has lanes
 /// to work with; FCFS/SPF runs ignore the field entirely.
 pub fn workload(n_requests: usize, max_new: usize, seed: u64) -> Vec<Request> {
-    let mut reqs = crate::engine::batcher::task_workload(n_requests, max_new);
+    let mut reqs = task_workload(n_requests, max_new);
     let mut rng = SplitMix64::new(seed);
     // Fisher-Yates shuffle for arrival order.
     for i in (1..reqs.len()).rev() {
@@ -56,7 +77,7 @@ pub fn warmup(engine: &mut Engine) -> Result<()> {
 }
 
 fn task_workload_small() -> Vec<Request> {
-    crate::engine::batcher::task_workload(18, 6)
+    task_workload(18, 6)
 }
 
 /// Run the workload under `policy`; the engine's drop policy is

@@ -1,0 +1,791 @@
+//! TCP network front end: socket-fed arrivals, per-token streaming,
+//! and disconnect-driven cancellation.
+//!
+//! The serving loop itself lives in
+//! [`crate::engine::scheduler::serve_source`]; this module supplies its
+//! live endpoints:
+//!
+//! * an accept loop + per-connection reader/writer threads speaking a
+//!   framed NDJSON protocol (one JSON object per line in both
+//!   directions), parsed *incrementally* off the socket by
+//!   [`FrameDecoder`] — a request body is never buffered beyond the
+//!   frame-size bound, and an oversized frame is discarded as it
+//!   streams in;
+//! * [`SocketSource`], the [`ArrivalSource`] that drains the inbound
+//!   queue into the scheduler; and
+//! * [`NetSink`], the per-request [`TokenSink`] that writes a `token`
+//!   frame the moment a decode step (or the final prefill chunk)
+//!   retires a token, then a terminal `done` / `rejected` /
+//!   `cancelled` / `timed_out` / `failed` frame — so the five-way
+//!   exactly-once lifecycle is observable on the wire.
+//!
+//! Failure handling is one path, shared with injected faults: a read
+//! or write error on a connection marks every request it still has in
+//! flight in the run's [`CancelSet`], and the scheduler's next sweep
+//! retires them as `Cancelled` and frees their KV pages immediately.
+//!
+//! ## Wire protocol
+//!
+//! Client → server frames (`op` discriminates):
+//!
+//! ```json
+//! {"op":"generate","prompt":"...","max_new":16,"priority":0,
+//!  "deadline_ms":500,"tag":"r0"}
+//! {"op":"shutdown"}
+//! ```
+//!
+//! Only `prompt` is required. `tag` is an opaque client string echoed
+//! on every response frame for that request. `shutdown` stops the
+//! accept loop, drains every in-flight request to a terminal state,
+//! and ends the serve run (the graceful-shutdown path).
+//!
+//! Server → client frames (`frame` discriminates): `token`, `done`,
+//! `rejected`, `cancelled`, `timed_out`, `failed`, `error` (a frame
+//! the connection layer refused: malformed, oversized, unknown op,
+//! connection queue full, shutting down), and `shutdown` (the ack).
+//! Concatenating a request's `token` texts reproduces its `done` text
+//! byte-for-byte.
+
+use std::collections::{HashSet, VecDeque};
+use std::io::{BufWriter, Read};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::engine::faults::CancelSet;
+use crate::engine::policy::SchedulingPolicy;
+use crate::engine::scheduler::{
+    serve_source, Arrival, ArrivalSource, Casualty, Completion, Phase, Rejection, Request,
+    SchedOptions, ServeOutcome, ServeStats, SinkClosed, TokenSink,
+};
+use crate::engine::Engine;
+use crate::util::json::{num, obj, s, write_ndjson, FrameDecoder, FrameEvent, Json};
+use crate::util::stats::percentile;
+
+/// Connection-layer knobs (the scheduler's own bounds — global
+/// admission control, deadlines — live in [`SchedOptions`]).
+#[derive(Debug, Clone)]
+pub struct NetOptions {
+    /// Per-connection bound on requests accepted but not yet terminal.
+    /// Past it, `generate` frames are refused with an `error` frame —
+    /// the connection-level backpressure in front of the scheduler's
+    /// global admission control.
+    pub conn_queue: usize,
+    /// Largest request frame the decoder will buffer; bigger frames
+    /// are discarded as they stream in and answered with `error`.
+    pub max_frame_bytes: usize,
+    /// `max_new` for `generate` frames that do not carry one.
+    pub default_max_new: usize,
+}
+
+impl Default for NetOptions {
+    fn default() -> Self {
+        NetOptions { conn_queue: 32, max_frame_bytes: 64 * 1024, default_max_new: 16 }
+    }
+}
+
+/// Wire-level counters for the run (the scheduler's own accounting is
+/// in [`ServeStats`]).
+#[derive(Debug, Clone, Default)]
+pub struct NetStats {
+    /// Requests delivered to the scheduler (== the submitted count the
+    /// five-way exactly-once identity covers).
+    pub accepted_requests: usize,
+    /// Connections accepted over the run.
+    pub connections: usize,
+    /// Connections that dropped with requests still in flight (each
+    /// drove its requests through the disconnect → Cancelled path).
+    pub disconnects: usize,
+    /// Frames refused at the connection layer: malformed, oversized,
+    /// unknown op, bad fields, per-connection queue full, shutdown.
+    pub inbound_rejections: usize,
+    /// `token` frames written — streaming is real iff this exceeds the
+    /// completion count.
+    pub token_frames: u64,
+    /// Median seconds from reading a `generate` frame to writing its
+    /// first `token` frame — TTFT as a client on this host observes
+    /// it (queue wait + prefill + frame plumbing).
+    pub client_ttft50: f64,
+}
+
+/// State shared between the socket threads and the scheduler thread.
+struct Shared {
+    inbound: Mutex<VecDeque<NetArrival>>,
+    /// Set by a `shutdown` frame (under the `inbound` lock, so a frame
+    /// admitted concurrently is either refused or drained — never
+    /// stranded). Stops the accept loop and, once the queue drains,
+    /// ends the serve run.
+    shutdown: AtomicBool,
+    cancel: CancelSet,
+    connections: AtomicUsize,
+    disconnects: AtomicUsize,
+    inbound_rejections: AtomicUsize,
+    token_frames: AtomicU64,
+    ttfts: Mutex<Vec<f64>>,
+}
+
+/// One accepted request, parked between the reader thread and
+/// [`SocketSource::poll`].
+struct NetArrival {
+    conn: Arc<Conn>,
+    prompt: String,
+    max_new: usize,
+    priority: u8,
+    deadline_secs: Option<f64>,
+    tag: Option<String>,
+    received: Instant,
+}
+
+/// Per-connection shared state. The writer thread owns the stream's
+/// write half; everyone else talks to it through the channel.
+struct Conn {
+    /// `None` once the connection is torn down (dropping the sender
+    /// unblocks the writer thread).
+    tx: Mutex<Option<Sender<Json>>>,
+    /// Request ids this connection has in flight in the scheduler.
+    live: Mutex<HashSet<usize>>,
+    /// Requests accepted but not yet terminal (backpressure gauge;
+    /// counts queued-inbound as well as live ids).
+    pending: AtomicUsize,
+    dead: AtomicBool,
+}
+
+impl Conn {
+    fn new(tx: Sender<Json>) -> Self {
+        Conn {
+            tx: Mutex::new(Some(tx)),
+            live: Mutex::new(HashSet::new()),
+            pending: AtomicUsize::new(0),
+            dead: AtomicBool::new(false),
+        }
+    }
+
+    /// Queue one frame to the writer thread. Fails iff the connection
+    /// is (or just became) dead — the caller treats that as a closed
+    /// sink.
+    fn send(&self, frame: Json) -> std::result::Result<(), SinkClosed> {
+        if self.dead.load(Ordering::SeqCst) {
+            return Err(SinkClosed);
+        }
+        match self.tx.lock().expect("conn.tx lock").as_ref() {
+            Some(tx) => tx.send(frame).map_err(|_| SinkClosed),
+            None => Err(SinkClosed),
+        }
+    }
+
+    /// Tear the connection down exactly once: close the writer channel
+    /// and flip every live request into the run's [`CancelSet`] so the
+    /// scheduler's next sweep frees its pages.
+    fn hangup(&self, shared: &Shared) {
+        if self.dead.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        *self.tx.lock().expect("conn.tx lock") = None;
+        let live: Vec<usize> = self.live.lock().expect("conn.live lock").drain().collect();
+        if !live.is_empty() {
+            shared.disconnects.fetch_add(1, Ordering::SeqCst);
+            for id in live {
+                shared.cancel.cancel(id);
+            }
+        }
+    }
+
+    /// A request reached a terminal state: drop it from the live set
+    /// *before* its terminal frame is written, so a hangup racing the
+    /// frame can no longer cancel an already-resolved id.
+    fn finish(&self, id: usize) {
+        self.live.lock().expect("conn.live lock").remove(&id);
+        self.pending.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// The [`TokenSink`] half of a connection: one per in-flight request,
+/// owned by the scheduler.
+struct NetSink {
+    conn: Arc<Conn>,
+    shared: Arc<Shared>,
+    id: usize,
+    tag: Option<String>,
+    received: Instant,
+    got_first: bool,
+}
+
+impl NetSink {
+    fn frame(&self, kind: &str, extra: Vec<(&str, Json)>) -> Json {
+        let mut pairs = vec![("frame", s(kind)), ("id", num(self.id as f64))];
+        pairs.extend(extra);
+        if let Some(t) = &self.tag {
+            pairs.push(("tag", s(t)));
+        }
+        obj(pairs)
+    }
+}
+
+impl TokenSink for NetSink {
+    fn token(&mut self, tok: u8) -> std::result::Result<(), SinkClosed> {
+        let text = (tok as char).to_string();
+        self.conn.send(self.frame("token", vec![("text", s(&text))]))?;
+        self.shared.token_frames.fetch_add(1, Ordering::SeqCst);
+        if !self.got_first {
+            self.got_first = true;
+            let t = self.received.elapsed().as_secs_f64();
+            self.shared.ttfts.lock().expect("ttfts lock").push(t);
+        }
+        Ok(())
+    }
+
+    fn done(&mut self, c: &Completion) {
+        self.conn.finish(self.id);
+        let _ = self.conn.send(self.frame(
+            "done",
+            vec![
+                ("text", s(&c.text)),
+                ("new_tokens", num(c.new_tokens as f64)),
+                ("ttft_ms", num(c.ttft * 1e3)),
+                ("latency_ms", num(c.latency * 1e3)),
+            ],
+        ));
+    }
+
+    fn rejected(&mut self, r: &Rejection) {
+        self.conn.finish(self.id);
+        let _ = self.conn.send(self.frame("rejected", vec![("reason", s(&r.reason))]));
+    }
+
+    fn casualty(&mut self, c: &Casualty) {
+        self.conn.finish(self.id);
+        let kind = match c.phase {
+            Phase::TimedOut => "timed_out",
+            Phase::Failed => "failed",
+            _ => "cancelled",
+        };
+        let _ = self.conn.send(self.frame(
+            kind,
+            vec![("reason", s(&c.reason)), ("generated", num(c.generated as f64))],
+        ));
+    }
+}
+
+/// The [`ArrivalSource`] over the shared inbound queue: assigns the
+/// run-global request ids, registers each with its connection, and
+/// attaches the streaming sink.
+struct SocketSource {
+    shared: Arc<Shared>,
+    delivered: usize,
+}
+
+impl ArrivalSource for SocketSource {
+    fn poll(&mut self, now: f64) -> Vec<Arrival> {
+        let drained: Vec<NetArrival> =
+            self.shared.inbound.lock().expect("inbound lock").drain(..).collect();
+        drained
+            .into_iter()
+            .map(|na| {
+                let id = self.delivered;
+                self.delivered += 1;
+                na.conn.live.lock().expect("conn.live lock").insert(id);
+                if na.conn.dead.load(Ordering::SeqCst) {
+                    // The client vanished while this request sat in the
+                    // inbound queue (after its hangup drained `live`).
+                    // Deliver it cancelled so it is still accounted.
+                    self.shared.cancel.cancel(id);
+                }
+                let sink = NetSink {
+                    conn: na.conn.clone(),
+                    shared: self.shared.clone(),
+                    id,
+                    tag: na.tag,
+                    received: na.received,
+                    got_first: false,
+                };
+                Arrival {
+                    request: Request {
+                        id,
+                        prompt: na.prompt,
+                        max_new: na.max_new,
+                        priority: na.priority,
+                        deadline_secs: na.deadline_secs,
+                    },
+                    at: now,
+                    sink: Some(Box::new(sink)),
+                }
+            })
+            .collect()
+    }
+
+    fn next_arrival(&self) -> Option<f64> {
+        None // live source: the scheduler polls at its idle cadence
+    }
+
+    fn exhausted(&self) -> bool {
+        // Checked under the inbound lock: a reader admits a frame only
+        // while `shutdown` is unset under this same lock, so shutdown
+        // + empty here means no request can appear later.
+        let inbound = self.shared.inbound.lock().expect("inbound lock");
+        self.shared.shutdown.load(Ordering::SeqCst) && inbound.is_empty()
+    }
+}
+
+/// A bound TCP listener plus its accept thread. `serve` runs the
+/// scheduler loop on the calling thread until a `shutdown` frame
+/// drains the run.
+pub struct NetServer {
+    shared: Arc<Shared>,
+    local_addr: SocketAddr,
+    accept_thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and
+    /// start accepting connections. Requests queue up until [`serve`]
+    /// starts draining them.
+    ///
+    /// [`serve`]: NetServer::serve
+    pub fn bind(addr: &str, opts: NetOptions) -> Result<NetServer> {
+        let sock: SocketAddr =
+            addr.parse().with_context(|| format!("--listen {addr:?} is not HOST:PORT"))?;
+        let listener = TcpListener::bind(sock).with_context(|| format!("binding {sock}"))?;
+        let local_addr = listener.local_addr().context("resolving bound address")?;
+        listener.set_nonblocking(true).context("nonblocking listener")?;
+        let shared = Arc::new(Shared {
+            inbound: Mutex::new(VecDeque::new()),
+            shutdown: AtomicBool::new(false),
+            cancel: CancelSet::new(),
+            connections: AtomicUsize::new(0),
+            disconnects: AtomicUsize::new(0),
+            inbound_rejections: AtomicUsize::new(0),
+            token_frames: AtomicU64::new(0),
+            ttfts: Mutex::new(Vec::new()),
+        });
+        let accept_shared = shared.clone();
+        let accept_thread = std::thread::spawn(move || {
+            accept_loop(&listener, &accept_shared, &opts);
+        });
+        Ok(NetServer { shared, local_addr, accept_thread: Some(accept_thread) })
+    }
+
+    /// The address actually bound (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Run the scheduler over the socket queue until a `shutdown`
+    /// frame arrives and every in-flight request reaches a terminal
+    /// state. The run's [`CancelSet`] is installed over whatever the
+    /// caller put in `sched.cancel` — disconnects must land in the set
+    /// the loop sweeps.
+    pub fn serve(
+        mut self,
+        engine: &mut Engine,
+        policy: &dyn SchedulingPolicy,
+        mut sched: SchedOptions,
+    ) -> Result<(ServeOutcome, NetStats)> {
+        sched.cancel = Some(self.shared.cancel.clone());
+        let mut source = SocketSource { shared: self.shared.clone(), delivered: 0 };
+        let outcome = serve_source(engine, &mut source, policy, sched)?;
+        // The scheduler only returns after shutdown; reap the accept
+        // thread (it exits within one poll interval).
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+        let ttfts = self.shared.ttfts.lock().expect("ttfts lock");
+        let net = NetStats {
+            accepted_requests: source.delivered,
+            connections: self.shared.connections.load(Ordering::SeqCst),
+            disconnects: self.shared.disconnects.load(Ordering::SeqCst),
+            inbound_rejections: self.shared.inbound_rejections.load(Ordering::SeqCst),
+            token_frames: self.shared.token_frames.load(Ordering::SeqCst),
+            client_ttft50: percentile(&ttfts, 50.0),
+        };
+        Ok((outcome, net))
+    }
+}
+
+impl Drop for NetServer {
+    /// Stop accepting even if `serve` never ran (or errored out): the
+    /// accept thread exits within one poll interval once `shutdown` is
+    /// set.
+    fn drop(&mut self) {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        if let Some(t) = self.accept_thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+fn accept_loop(listener: &TcpListener, shared: &Arc<Shared>, opts: &NetOptions) {
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        match listener.accept() {
+            Ok((stream, _)) => {
+                shared.connections.fetch_add(1, Ordering::SeqCst);
+                spawn_connection(stream, shared.clone(), opts.clone());
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(std::time::Duration::from_millis(5));
+            }
+            Err(_) => return, // listener died; the serve run ends via shutdown
+        }
+    }
+}
+
+fn spawn_connection(stream: TcpStream, shared: Arc<Shared>, opts: NetOptions) {
+    let write_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let _ = stream.set_nodelay(true);
+    let (tx, rx) = channel::<Json>();
+    let conn = Arc::new(Conn::new(tx));
+    let wconn = conn.clone();
+    let wshared = shared.clone();
+    std::thread::spawn(move || {
+        let mut w = BufWriter::new(write_half);
+        while let Ok(frame) = rx.recv() {
+            if write_ndjson(&mut w, &frame).is_err() {
+                wconn.hangup(&wshared);
+                // Drain so senders never block on a dead peer (the
+                // channel is unbounded, but the sender half is dropped
+                // by hangup — this just empties what raced in).
+                while rx.try_recv().is_ok() {}
+                return;
+            }
+        }
+    });
+    std::thread::spawn(move || {
+        reader_loop(stream, &conn, &shared, &opts);
+        conn.hangup(&shared);
+    });
+}
+
+fn reader_loop(mut stream: TcpStream, conn: &Arc<Conn>, shared: &Arc<Shared>, opts: &NetOptions) {
+    let mut dec = FrameDecoder::new(opts.max_frame_bytes);
+    let mut buf = [0u8; 4096];
+    loop {
+        let n = match stream.read(&mut buf) {
+            Ok(0) | Err(_) => return, // EOF or error: caller hangs up
+            Ok(n) => n,
+        };
+        for ev in dec.feed(&buf[..n]) {
+            match ev {
+                FrameEvent::Frame(v) => handle_frame(&v, conn, shared, opts),
+                FrameEvent::Malformed(e) => {
+                    refuse(conn, shared, None, &format!("malformed frame: {e}"));
+                }
+                FrameEvent::Oversized(size) => {
+                    refuse(
+                        conn,
+                        shared,
+                        None,
+                        &format!("frame of {size} bytes exceeds {} limit", opts.max_frame_bytes),
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Refuse one inbound frame with an `error` frame (counted — these are
+/// the wire-level rejections the report surfaces).
+fn refuse(conn: &Arc<Conn>, shared: &Arc<Shared>, tag: Option<&str>, reason: &str) {
+    shared.inbound_rejections.fetch_add(1, Ordering::SeqCst);
+    let mut pairs = vec![("frame", s("error")), ("reason", s(reason))];
+    if let Some(t) = tag {
+        pairs.push(("tag", s(t)));
+    }
+    let _ = conn.send(obj(pairs));
+}
+
+fn handle_frame(v: &Json, conn: &Arc<Conn>, shared: &Arc<Shared>, opts: &NetOptions) {
+    let tag = v.opt("tag").and_then(|t| t.as_str().ok()).map(str::to_string);
+    let op = match v.opt("op").and_then(|o| o.as_str().ok()) {
+        Some(op) => op.to_string(),
+        None => return refuse(conn, shared, tag.as_deref(), "missing \"op\""),
+    };
+    match op.as_str() {
+        "generate" => {
+            let prompt = match v.opt("prompt").and_then(|p| p.as_str().ok()) {
+                Some(p) if !p.is_empty() => p.to_string(),
+                Some(_) => {
+                    return refuse(conn, shared, tag.as_deref(), "empty \"prompt\"");
+                }
+                None => {
+                    return refuse(conn, shared, tag.as_deref(), "generate needs a \"prompt\"");
+                }
+            };
+            let max_new = match v.opt("max_new") {
+                Some(m) => match m.as_f64() {
+                    Ok(x) if x >= 1.0 => x as usize,
+                    _ => {
+                        return refuse(
+                            conn,
+                            shared,
+                            tag.as_deref(),
+                            "\"max_new\" must be a number ≥ 1",
+                        );
+                    }
+                },
+                None => opts.default_max_new,
+            };
+            let priority = v
+                .opt("priority")
+                .and_then(|p| p.as_f64().ok())
+                .map(|x| x.clamp(0.0, 2.0) as u8)
+                .unwrap_or(0);
+            let deadline_secs =
+                v.opt("deadline_ms").and_then(|d| d.as_f64().ok()).map(|ms| ms / 1e3);
+            if conn.pending.load(Ordering::SeqCst) >= opts.conn_queue {
+                return refuse(
+                    conn,
+                    shared,
+                    tag.as_deref(),
+                    &format!("connection queue full ({} in flight)", opts.conn_queue),
+                );
+            }
+            let arrival = NetArrival {
+                conn: conn.clone(),
+                prompt,
+                max_new,
+                priority,
+                deadline_secs,
+                tag,
+                received: Instant::now(),
+            };
+            // Admit under the inbound lock so shutdown linearizes: a
+            // frame either lands before the drain check or is refused.
+            let mut inbound = shared.inbound.lock().expect("inbound lock");
+            if shared.shutdown.load(Ordering::SeqCst) {
+                drop(inbound);
+                return refuse(conn, shared, arrival.tag.as_deref(), "server shutting down");
+            }
+            conn.pending.fetch_add(1, Ordering::SeqCst);
+            inbound.push_back(arrival);
+        }
+        "shutdown" => {
+            // Store under the inbound lock (see `SocketSource::exhausted`).
+            let inbound = shared.inbound.lock().expect("inbound lock");
+            shared.shutdown.store(true, Ordering::SeqCst);
+            drop(inbound);
+            let _ = conn.send(obj(vec![("frame", s("shutdown"))]));
+        }
+        other => refuse(conn, shared, tag.as_deref(), &format!("unknown op {other:?}")),
+    }
+}
+
+/// One-line wire summary, printed next to the chaos line. The
+/// `token_frames=` / `leaked_pages=` spellings are load-bearing: CI's
+/// `net-smoke` job greps them to pin that streaming is real (more
+/// token frames than completions) and nothing leaked.
+pub fn format_net_report(net: &NetStats, leaked_pages: usize) -> String {
+    format!(
+        "net: connections={} disconnects={} accepted={} inbound_rejections={} \
+         token_frames={} client_ttft50_ms={:.1} leaked_pages={}",
+        net.connections,
+        net.disconnects,
+        net.accepted_requests,
+        net.inbound_rejections,
+        net.token_frames,
+        net.client_ttft50 * 1e3,
+        leaked_pages,
+    )
+}
+
+/// Serialize a network serve run to the SERVE_cpu.json schema's net
+/// variant: the usual stats columns that apply plus the wire columns
+/// (see docs/REPORTS.md).
+pub fn write_net_serve_json(
+    model: &str,
+    addr: &SocketAddr,
+    st: &ServeStats,
+    net: &NetStats,
+    out: &std::path::Path,
+) -> Result<()> {
+    let j = obj(vec![
+        ("model", s(model)),
+        ("mode", s("network ndjson")),
+        ("listen", s(&addr.to_string())),
+        ("completed", num(st.requests as f64)),
+        ("rejected", num(st.rejected as f64)),
+        ("rejected_queue_full", num(st.rejected_queue_full as f64)),
+        ("failed", num(st.failed as f64)),
+        ("timed_out", num(st.timed_out as f64)),
+        ("cancelled", num(st.cancelled as f64)),
+        ("tokens_per_sec", num(st.tokens_per_sec)),
+        ("goodput_rps", num(st.goodput_rps)),
+        ("p50_latency", num(st.p50_latency)),
+        ("p99_latency", num(st.p99_latency)),
+        ("p50_ttft", num(st.p50_ttft)),
+        ("p99_ttft", num(st.p99_ttft)),
+        ("wall_secs", num(st.wall_secs)),
+        ("drop_rate", num(st.drop_rate)),
+        ("page_utilization", num(st.page_utilization)),
+        ("connections", num(net.connections as f64)),
+        ("disconnects", num(net.disconnects as f64)),
+        ("accepted_requests", num(net.accepted_requests as f64)),
+        ("inbound_rejections", num(net.inbound_rejections as f64)),
+        ("token_frames", num(net.token_frames as f64)),
+        ("client_ttft50", num(net.client_ttft50)),
+    ]);
+    let text = j.to_string() + "\n";
+    std::fs::write(out, text).with_context(|| format!("writing {out:?}"))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Loopback client driver (CI net-smoke + integration tests)
+// ---------------------------------------------------------------------
+
+/// One request the client driver submits.
+#[derive(Debug, Clone)]
+pub struct ClientRequest {
+    /// Echoed on every response frame — the client's correlation key.
+    pub tag: String,
+    pub prompt: String,
+    pub max_new: usize,
+}
+
+/// Client-observed outcome of one tagged request.
+#[derive(Debug, Clone, Default)]
+pub struct ClientOutcome {
+    /// Concatenation of the `token` frame texts, in arrival order.
+    pub streamed: String,
+    /// The `done` frame's full text (None if the request ended
+    /// rejected / cancelled / timed out / failed).
+    pub done_text: Option<String>,
+    /// Terminal frame kind (`done`, `rejected`, `cancelled`, …).
+    pub terminal: String,
+    /// Number of `token` frames that arrived before the terminal one.
+    pub token_frames: usize,
+    /// A `token` frame arrived strictly before the terminal frame.
+    pub token_before_done: bool,
+    /// Seconds from submit to the first `token` frame.
+    pub ttft: Option<f64>,
+}
+
+/// What one driver connection observed.
+#[derive(Debug, Clone, Default)]
+pub struct ClientReport {
+    /// Keyed by tag, submission order.
+    pub outcomes: Vec<(String, ClientOutcome)>,
+    /// `error` frames received (wire-level refusals).
+    pub errors: usize,
+    pub shutdown_acked: bool,
+}
+
+impl ClientReport {
+    pub fn outcome(&self, tag: &str) -> Option<&ClientOutcome> {
+        self.outcomes.iter().find(|(t, _)| t == tag).map(|(_, o)| o)
+    }
+
+    pub fn completions(&self) -> usize {
+        self.outcomes.iter().filter(|(_, o)| o.terminal == "done").count()
+    }
+
+    pub fn token_frames(&self) -> usize {
+        self.outcomes.iter().map(|(_, o)| o.token_frames).sum()
+    }
+}
+
+/// Drive one connection: submit every request up front (tags must be
+/// unique), stream responses until each reaches a terminal frame, then
+/// optionally send `shutdown` and wait for the ack. Per-frame receive
+/// gaps are bounded by a 60 s read timeout so a wedged server fails
+/// loudly instead of hanging CI.
+pub fn run_client(
+    addr: &SocketAddr,
+    reqs: &[ClientRequest],
+    shutdown_after: bool,
+) -> Result<ClientReport> {
+    let mut stream = TcpStream::connect(addr).with_context(|| format!("connecting {addr}"))?;
+    stream
+        .set_read_timeout(Some(std::time::Duration::from_secs(60)))
+        .context("setting read timeout")?;
+    let _ = stream.set_nodelay(true);
+    let submitted = Instant::now();
+    for r in reqs {
+        let frame = obj(vec![
+            ("op", s("generate")),
+            ("prompt", s(&r.prompt)),
+            ("max_new", num(r.max_new as f64)),
+            ("tag", s(&r.tag)),
+        ]);
+        write_ndjson(&mut stream, &frame)?;
+    }
+    if reqs.is_empty() && shutdown_after {
+        write_ndjson(&mut stream, &obj(vec![("op", s("shutdown"))]))?;
+    }
+    let mut report = ClientReport::default();
+    for r in reqs {
+        report.outcomes.push((r.tag.clone(), ClientOutcome::default()));
+    }
+    let mut dec = FrameDecoder::new(1 << 20);
+    let mut buf = [0u8; 4096];
+    let mut terminal = 0usize;
+    let mut shutdown_sent = reqs.is_empty() && shutdown_after;
+    loop {
+        if terminal == reqs.len() && !shutdown_after {
+            return Ok(report);
+        }
+        if terminal == reqs.len() && shutdown_after && !shutdown_sent {
+            write_ndjson(&mut stream, &obj(vec![("op", s("shutdown"))]))?;
+            shutdown_sent = true;
+        }
+        let n = stream.read(&mut buf).context("reading response frames")?;
+        if n == 0 {
+            anyhow::bail!("server closed the connection with {terminal}/{} terminal", reqs.len());
+        }
+        for ev in dec.feed(&buf[..n]) {
+            let v = match ev {
+                FrameEvent::Frame(v) => v,
+                other => anyhow::bail!("undecodable server frame: {other:?}"),
+            };
+            let kind = v.get("frame")?.as_str()?.to_string();
+            if kind == "shutdown" {
+                report.shutdown_acked = true;
+                if terminal == reqs.len() {
+                    return Ok(report);
+                }
+                continue;
+            }
+            if kind == "error" {
+                report.errors += 1;
+                terminal += 1; // an error frame is this request's only answer
+                continue;
+            }
+            let tag = v.get("tag")?.as_str()?.to_string();
+            let out = report
+                .outcomes
+                .iter_mut()
+                .find(|(t, _)| *t == tag)
+                .map(|(_, o)| o)
+                .ok_or_else(|| anyhow::anyhow!("unknown tag {tag:?}"))?;
+            if kind == "token" {
+                out.streamed.push_str(v.get("text")?.as_str()?);
+                out.token_frames += 1;
+                if out.ttft.is_none() {
+                    out.ttft = Some(submitted.elapsed().as_secs_f64());
+                }
+            } else {
+                out.terminal = kind.clone();
+                out.token_before_done = out.token_frames > 0;
+                if kind == "done" {
+                    out.done_text = Some(v.get("text")?.as_str()?.to_string());
+                }
+                terminal += 1;
+            }
+        }
+    }
+}
+
+/// Connect, send a `shutdown` frame, and wait for the ack — the
+/// graceful-shutdown trigger for tests and operators.
+pub fn send_shutdown(addr: &SocketAddr) -> Result<()> {
+    run_client(addr, &[], true).map(|_| ())
+}

@@ -181,6 +181,152 @@ pub fn arr_f64(xs: &[f64]) -> Json {
     Json::Arr(xs.iter().map(|x| Json::Num(*x)).collect())
 }
 
+/// One event surfaced by [`FrameDecoder::feed`].
+#[derive(Debug)]
+pub enum FrameEvent {
+    /// A complete, well-formed frame.
+    Frame(Json),
+    /// A syntactically broken frame (or a line that never opened one).
+    /// The connection survives: the decoder resynchronizes on the next
+    /// newline / balanced brace and keeps going.
+    Malformed(String),
+    /// A frame that exceeded the size bound. Its bytes were discarded
+    /// as they streamed in (never buffered); the payload is the total
+    /// size observed.
+    Oversized(usize),
+}
+
+/// Incremental NDJSON frame decoder for the wire protocol.
+///
+/// Bytes are fed in whatever chunks the socket delivers; complete
+/// frames come out as they close. Only the *current* frame is ever
+/// buffered — a frame that grows past `max_frame` flips the decoder
+/// into a counting discard state until the braces balance, so a
+/// hostile connection cannot make the server hold its body in memory.
+/// Framing is brace-depth based (strings and escapes tracked), so
+/// frames may contain raw newlines even though well-behaved clients
+/// write one frame per line.
+pub struct FrameDecoder {
+    buf: Vec<u8>,
+    depth: usize,
+    in_str: bool,
+    esc: bool,
+    max_frame: usize,
+    /// Oversized frame being discarded: bytes seen so far.
+    discarding: Option<usize>,
+    /// Garbage outside any frame: skip until the next newline.
+    skip_line: bool,
+}
+
+impl FrameDecoder {
+    pub fn new(max_frame: usize) -> Self {
+        FrameDecoder {
+            buf: Vec::new(),
+            depth: 0,
+            in_str: false,
+            esc: false,
+            max_frame,
+            discarding: None,
+            skip_line: false,
+        }
+    }
+
+    /// Consume one chunk off the wire, returning every event it
+    /// completes (possibly none — a frame can span many chunks — or
+    /// several, when one chunk carries several frames).
+    pub fn feed(&mut self, bytes: &[u8]) -> Vec<FrameEvent> {
+        let mut out = Vec::new();
+        for &b in bytes {
+            if self.skip_line {
+                if b == b'\n' {
+                    self.skip_line = false;
+                }
+                continue;
+            }
+            if let Some(n) = self.discarding.as_mut() {
+                *n += 1;
+                if Self::track(&mut self.depth, &mut self.in_str, &mut self.esc, b)
+                    && self.depth == 0
+                {
+                    out.push(FrameEvent::Oversized(*n));
+                    self.discarding = None;
+                }
+                continue;
+            }
+            if self.depth == 0 {
+                // Between frames: tolerate whitespace, demand a frame
+                // opener for anything else.
+                match b {
+                    b' ' | b'\t' | b'\r' | b'\n' => continue,
+                    b'{' | b'[' => {}
+                    _ => {
+                        out.push(FrameEvent::Malformed(format!(
+                            "frame must open with '{{' or '[', got {:?}",
+                            b as char
+                        )));
+                        self.skip_line = true;
+                        continue;
+                    }
+                }
+            }
+            self.buf.push(b);
+            if Self::track(&mut self.depth, &mut self.in_str, &mut self.esc, b) && self.depth == 0 {
+                let ev = match std::str::from_utf8(&self.buf)
+                    .map_err(|e| anyhow!(e))
+                    .and_then(Json::parse)
+                {
+                    Ok(v) => FrameEvent::Frame(v),
+                    Err(e) => FrameEvent::Malformed(e.to_string()),
+                };
+                out.push(ev);
+                self.buf.clear();
+            } else if self.buf.len() > self.max_frame {
+                self.discarding = Some(self.buf.len());
+                self.buf.clear();
+                self.buf.shrink_to_fit();
+            }
+        }
+        out
+    }
+
+    /// Advance the brace/string state machine by one byte. Returns
+    /// whether the byte could have closed the frame (i.e. it was a
+    /// structural close outside a string).
+    fn track(depth: &mut usize, in_str: &mut bool, esc: &mut bool, b: u8) -> bool {
+        if *in_str {
+            if *esc {
+                *esc = false;
+            } else if b == b'\\' {
+                *esc = true;
+            } else if b == b'"' {
+                *in_str = false;
+            }
+            return false;
+        }
+        match b {
+            b'"' => *in_str = true,
+            b'{' | b'[' => *depth += 1,
+            b'}' | b']' => {
+                *depth = depth.saturating_sub(1);
+                return true;
+            }
+            _ => {}
+        }
+        false
+    }
+}
+
+/// Write `v` as one NDJSON frame (single line + `\n`) and flush, so
+/// the peer observes it immediately — the per-token streaming path
+/// depends on the flush. The serializer escapes control characters,
+/// so the payload can never contain a raw newline.
+pub fn write_ndjson<W: std::io::Write>(w: &mut W, v: &Json) -> std::io::Result<()> {
+    let mut line = v.to_string();
+    line.push('\n');
+    w.write_all(line.as_bytes())?;
+    w.flush()
+}
+
 struct Parser<'a> {
     b: &'a [u8],
     i: usize,
@@ -382,5 +528,74 @@ mod tests {
     fn unicode_string() {
         let v = Json::parse("\"caf\\u00e9 — ok\"").unwrap();
         assert_eq!(v.as_str().unwrap(), "café — ok");
+    }
+
+    #[test]
+    fn decoder_frame_split_across_arbitrary_chunks() {
+        let wire = b"{\"op\":\"generate\",\"prompt\":\"a}b{\\\"c\"}\n{\"op\":\"shutdown\"}\n";
+        // Byte-at-a-time is the worst case; every split must agree.
+        let mut d = FrameDecoder::new(1024);
+        let mut evs = Vec::new();
+        for b in wire.iter() {
+            evs.extend(d.feed(std::slice::from_ref(b)));
+        }
+        assert_eq!(evs.len(), 2, "{evs:?}");
+        match &evs[0] {
+            FrameEvent::Frame(v) => {
+                assert_eq!(v.get("prompt").unwrap().as_str().unwrap(), "a}b{\"c");
+            }
+            other => panic!("expected frame, got {other:?}"),
+        }
+        // One big chunk must produce the identical events.
+        let mut d = FrameDecoder::new(1024);
+        assert_eq!(d.feed(wire).len(), 2);
+    }
+
+    #[test]
+    fn decoder_resyncs_after_malformed_line() {
+        let mut d = FrameDecoder::new(1024);
+        let evs = d.feed(b"not json at all\n{\"op\":1}\n{\"x\":\n\"unterminated\n");
+        // garbage line -> Malformed; good frame -> Frame; the last
+        // frame is still open (raw newlines are legal inside frames).
+        assert_eq!(evs.len(), 2, "{evs:?}");
+        assert!(matches!(evs[0], FrameEvent::Malformed(_)));
+        assert!(matches!(evs[1], FrameEvent::Frame(_)));
+        // broken-syntax-but-balanced frames also come back Malformed
+        // without poisoning the stream.
+        let mut d = FrameDecoder::new(1024);
+        let evs = d.feed(b"{\"a\" 1}\n{\"a\":2}\n");
+        assert_eq!(evs.len(), 2, "{evs:?}");
+        assert!(matches!(evs[0], FrameEvent::Malformed(_)));
+        assert!(matches!(evs[1], FrameEvent::Frame(_)));
+    }
+
+    #[test]
+    fn decoder_discards_oversized_without_buffering() {
+        let mut d = FrameDecoder::new(32);
+        let huge = format!("{{\"p\":\"{}\"}}\n", "x".repeat(1000));
+        let mut evs = d.feed(huge.as_bytes());
+        evs.extend(d.feed(b"{\"ok\":true}\n"));
+        assert_eq!(evs.len(), 2, "{evs:?}");
+        match evs[0] {
+            FrameEvent::Oversized(n) => assert!(n >= 1000, "observed {n}"),
+            ref other => panic!("expected oversized, got {other:?}"),
+        }
+        assert!(matches!(evs[1], FrameEvent::Frame(_)));
+    }
+
+    #[test]
+    fn ndjson_writer_one_flushed_line_per_frame() {
+        let mut buf = Vec::new();
+        let v = obj(vec![("frame", s("token")), ("text", s("a\nb"))]);
+        write_ndjson(&mut buf, &v).unwrap();
+        write_ndjson(&mut buf, &obj(vec![("frame", s("done"))])).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        // the embedded newline was escaped, not emitted raw
+        assert_eq!(
+            Json::parse(lines[0]).unwrap().get("text").unwrap().as_str().unwrap(),
+            "a\nb"
+        );
     }
 }

@@ -12,7 +12,7 @@
 
 use std::path::Path;
 
-use dualsparse::engine::batcher::{serve_with, ArrivalMode, Request};
+use dualsparse::engine::scheduler::{serve_with, ArrivalMode, Request};
 use dualsparse::engine::{Engine, EngineOptions};
 use dualsparse::model::{ModelConfig, Weights};
 use dualsparse::moe::DropPolicy;

@@ -117,7 +117,9 @@ fn injected_ep_worker_failure_rehosts_experts_and_conserves_requests() {
     // least-loaded survivors (PR-7 replication machinery) and serving
     // carries on — every request still completes, and the failover
     // count surfaces in the serve stats.
-    use dualsparse::engine::batcher::{serve_opts, ArrivalMode, FaultPlan, Fcfs, SchedOptions};
+    use dualsparse::engine::faults::FaultPlan;
+    use dualsparse::engine::policy::Fcfs;
+    use dualsparse::engine::scheduler::{serve_opts, ArrivalMode, SchedOptions};
     use dualsparse::server::workload;
 
     let mut e = engine(DropPolicy::two_t(0.45), Some(EpOptions::new(4, false)));

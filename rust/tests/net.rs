@@ -1,0 +1,304 @@
+//! Network front-end integration tests, loopback-only: a real
+//! `NetServer` on an ephemeral 127.0.0.1 port, driven by real TCP
+//! clients. Pins the ISSUE-9 contract: token streaming is incremental
+//! and byte-identical to the in-process scheduler, a mid-decode client
+//! disconnect resolves as `Cancelled` with zero leaked pages, malformed
+//! and oversized frames are refused without poisoning the connection,
+//! and the per-connection queue bound backpressures as an `error`
+//! frame.
+//!
+//! Hermetic: CpuRef backend + synthetic SplitMix64 weights.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::mpsc;
+use std::thread;
+use std::time::Duration;
+
+use dualsparse::engine::policy::Fcfs;
+use dualsparse::engine::scheduler::{serve, Completion, SchedOptions, ServeOutcome};
+use dualsparse::server::net::{
+    run_client, send_shutdown, ClientRequest, NetOptions, NetServer, NetStats,
+};
+use dualsparse::server::workload;
+use dualsparse::util::json::{num, obj, s, write_ndjson, FrameDecoder, FrameEvent};
+use dualsparse::{DropPolicy, Engine, EngineOptions};
+
+fn artifacts() -> PathBuf {
+    std::env::var("DUALSPARSE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+fn engine() -> Engine {
+    Engine::new(&artifacts(), "mixtral_ish", DropPolicy::NoDrop, EngineOptions::default())
+        .expect("hermetic engine (CpuRef + synthetic weights)")
+}
+
+/// The closed-loop in-process run the wire texts must reproduce
+/// byte-for-byte (per-row attention makes texts independent of batch
+/// composition, so arrival interleaving cannot perturb them).
+fn reference_completions(reqs: &[dualsparse::engine::scheduler::Request]) -> Vec<Completion> {
+    let mut e = engine();
+    let (done, _) = serve(&mut e, reqs).expect("in-process reference run");
+    done
+}
+
+struct ServerRun {
+    outcome: ServeOutcome,
+    net: NetStats,
+    leaked: usize,
+}
+
+/// Bind an ephemeral loopback port and run the scheduler on a
+/// background thread until a `shutdown` frame drains it. The engine
+/// lives (and dies) on that thread; the run's outcome, wire counters
+/// and page-pool deficit come back through the join handle.
+fn spawn_server(
+    opts: NetOptions,
+    sched: SchedOptions,
+) -> (SocketAddr, thread::JoinHandle<ServerRun>) {
+    let (tx, rx) = mpsc::channel();
+    let handle = thread::spawn(move || {
+        let mut e = engine();
+        let srv = NetServer::bind("127.0.0.1:0", opts).expect("bind ephemeral loopback port");
+        tx.send(srv.local_addr()).expect("report bound address");
+        let (outcome, net) = srv.serve(&mut e, &Fcfs, sched).expect("network serve run");
+        let leaked = e.kv.n_pages - e.kv.free_page_count();
+        ServerRun { outcome, net, leaked }
+    });
+    (rx.recv().expect("server thread bound"), handle)
+}
+
+fn assert_exactly_once(run: &ServerRun) {
+    let st = &run.outcome.stats;
+    assert_eq!(
+        st.requests + st.rejected + st.failed + st.timed_out + st.cancelled,
+        run.net.accepted_requests,
+        "five-way terminal partition must cover every request accepted off the wire"
+    );
+    assert_eq!(run.leaked, 0, "page pool must drain back to full after the run");
+}
+
+#[test]
+fn streamed_tokens_are_byte_identical_to_in_process_serve() {
+    let reqs = workload(10, 5, 7);
+    let reference = reference_completions(&reqs);
+    assert_eq!(reference.len(), reqs.len(), "reference run must complete everything");
+
+    let (addr, server) = spawn_server(NetOptions::default(), SchedOptions::default());
+    // Two concurrent client connections, half the workload each — the
+    // wire tag carries the original request id for correlation.
+    let halves: Vec<Vec<ClientRequest>> = reqs
+        .chunks(reqs.len() / 2)
+        .map(|chunk| {
+            chunk
+                .iter()
+                .map(|r| ClientRequest {
+                    tag: r.id.to_string(),
+                    prompt: r.prompt.clone(),
+                    max_new: r.max_new,
+                })
+                .collect()
+        })
+        .collect();
+    let clients: Vec<_> = halves
+        .into_iter()
+        .map(|half| thread::spawn(move || run_client(&addr, &half, false).expect("client run")))
+        .collect();
+    let reports: Vec<_> = clients.into_iter().map(|c| c.join().expect("client thread")).collect();
+    send_shutdown(&addr).expect("graceful shutdown");
+    let run = server.join().expect("server thread");
+
+    for c in &reference {
+        let tag = c.id.to_string();
+        let out = reports
+            .iter()
+            .find_map(|r| r.outcome(&tag))
+            .unwrap_or_else(|| panic!("no client outcome for request {tag}"));
+        assert_eq!(out.terminal, "done", "request {tag} must complete");
+        assert_eq!(
+            out.done_text.as_deref(),
+            Some(c.text.as_str()),
+            "request {tag}: done text must match the in-process run byte-for-byte"
+        );
+        assert_eq!(
+            out.streamed, c.text,
+            "request {tag}: token frames must concatenate to the done text"
+        );
+        assert_eq!(
+            out.token_frames,
+            c.text.len(),
+            "request {tag}: one token frame per generated byte"
+        );
+        if !c.text.is_empty() {
+            assert!(
+                out.token_before_done,
+                "request {tag}: the first token frame must strictly precede the done frame"
+            );
+        }
+    }
+    assert_eq!(run.net.accepted_requests, reqs.len());
+    assert_eq!(run.outcome.stats.requests, reqs.len(), "every wire request completes");
+    assert_eq!(run.net.connections, 3, "two clients + the shutdown connection");
+    assert_eq!(run.net.disconnects, 0, "clean closes are not disconnects");
+    let streamed_total: usize = reference.iter().map(|c| c.text.len()).sum();
+    assert_eq!(run.net.token_frames as usize, streamed_total);
+    assert_exactly_once(&run);
+}
+
+/// Read frames off a raw victim socket until the first `token` frame —
+/// proof the request is past prefill and generating.
+fn read_until_token(stream: &mut TcpStream) {
+    let mut dec = FrameDecoder::new(1 << 20);
+    let mut buf = [0u8; 4096];
+    loop {
+        let n = stream.read(&mut buf).expect("victim read");
+        assert!(n > 0, "server closed the victim connection before its first token");
+        for ev in dec.feed(&buf[..n]) {
+            if let FrameEvent::Frame(v) = ev {
+                let kind = v.get("frame").expect("frame key").as_str().expect("frame kind");
+                assert!(kind == "token", "expected a token frame first, got {kind:?}");
+                return;
+            }
+        }
+    }
+}
+
+#[test]
+fn mid_decode_disconnect_cancels_and_frees_pages() {
+    let reqs = workload(8, 6, 7);
+    let reference = reference_completions(&reqs);
+    // The victim replays the longest-output request with a raised cap,
+    // so after its first token there are guaranteed further decode
+    // iterations (each a full model forward) in which the EOF-driven
+    // hangup → CancelSet → sweep path can land.
+    let longest = reference.iter().max_by_key(|c| c.new_tokens).expect("non-empty reference");
+    assert!(
+        longest.new_tokens >= 2,
+        "workload must contain a multi-token output for a mid-decode disconnect"
+    );
+    let victim_prompt =
+        &reqs.iter().find(|r| r.id == longest.id).expect("reference id in workload").prompt;
+
+    let (addr, server) = spawn_server(NetOptions::default(), SchedOptions::default());
+    let mut victim = TcpStream::connect(addr).expect("victim connect");
+    victim
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .expect("victim read timeout");
+    let frame = obj(vec![
+        ("op", s("generate")),
+        ("prompt", s(victim_prompt)),
+        ("max_new", num(64.0)),
+        ("tag", s("victim")),
+    ]);
+    write_ndjson(&mut victim, &frame).expect("send victim request");
+    read_until_token(&mut victim);
+    drop(victim); // mid-decode hangup
+
+    // A healthy client on another connection is unaffected.
+    let healthy: Vec<ClientRequest> = reqs
+        .iter()
+        .take(2)
+        .map(|r| ClientRequest {
+            tag: r.id.to_string(),
+            prompt: r.prompt.clone(),
+            max_new: r.max_new,
+        })
+        .collect();
+    let healthy_report = run_client(&addr, &healthy, false).expect("healthy client");
+    send_shutdown(&addr).expect("graceful shutdown");
+    let run = server.join().expect("server thread");
+
+    assert_eq!(healthy_report.completions(), 2, "the disconnect must not poison other clients");
+    assert!(
+        run.outcome.stats.cancelled >= 1,
+        "the victim's request must resolve Cancelled (stats: {:?})",
+        run.outcome.stats.cancelled
+    );
+    assert!(run.net.disconnects >= 1, "the dropped connection must be counted");
+    assert_exactly_once(&run);
+}
+
+#[test]
+fn malformed_and_oversized_frames_are_refused_without_poisoning() {
+    let opts = NetOptions { max_frame_bytes: 256, ..NetOptions::default() };
+    let (addr, server) = spawn_server(opts, SchedOptions::default());
+    let mut c = TcpStream::connect(addr).expect("connect");
+    c.set_read_timeout(Some(Duration::from_secs(60))).expect("read timeout");
+    // One garbage line, one frame past the 256-byte bound, then a valid
+    // request — the connection must survive all three.
+    c.write_all(b"this is not a frame\n").expect("garbage line");
+    let oversized = obj(vec![("op", s("generate")), ("prompt", s(&"x".repeat(1000)))]);
+    write_ndjson(&mut c, &oversized).expect("oversized frame");
+    let valid = obj(vec![
+        ("op", s("generate")),
+        ("prompt", s("hi there")),
+        ("max_new", num(4.0)),
+        ("tag", s("ok")),
+    ]);
+    write_ndjson(&mut c, &valid).expect("valid frame");
+
+    let mut dec = FrameDecoder::new(1 << 20);
+    let mut buf = [0u8; 4096];
+    let mut errors = 0usize;
+    let mut done = false;
+    while !(done && errors == 2) {
+        let n = c.read(&mut buf).expect("read response frames");
+        assert!(n > 0, "server closed before answering the valid request");
+        for ev in dec.feed(&buf[..n]) {
+            let v = match ev {
+                FrameEvent::Frame(v) => v,
+                other => panic!("undecodable server frame: {other:?}"),
+            };
+            match v.get("frame").expect("frame key").as_str().expect("frame kind") {
+                "error" => errors += 1,
+                "done" => {
+                    assert_eq!(v.get("tag").expect("tag").as_str().expect("tag str"), "ok");
+                    done = true;
+                }
+                "token" => {}
+                other => panic!("unexpected frame kind {other:?}"),
+            }
+        }
+    }
+    drop(c);
+    send_shutdown(&addr).expect("graceful shutdown");
+    let run = server.join().expect("server thread");
+
+    assert_eq!(run.net.inbound_rejections, 2, "exactly the two bad frames are refused");
+    assert_eq!(run.net.accepted_requests, 1, "only the valid request reaches the scheduler");
+    assert_eq!(run.outcome.stats.requests, 1);
+    assert_exactly_once(&run);
+}
+
+#[test]
+fn connection_queue_bound_backpressures_as_error_frame() {
+    let opts = NetOptions { conn_queue: 1, ..NetOptions::default() };
+    let (addr, server) = spawn_server(opts, SchedOptions::default());
+    // Both frames land back-to-back in one connection's reader: the
+    // first is admitted (pending = 1), the second trips the bound long
+    // before the first can turn terminal.
+    let reqs: Vec<ClientRequest> = workload(2, 4, 7)
+        .into_iter()
+        .map(|r| ClientRequest { tag: r.id.to_string(), prompt: r.prompt, max_new: r.max_new })
+        .collect();
+    let first_tag = reqs[0].tag.clone();
+    let second_tag = reqs[1].tag.clone();
+    let rep = run_client(&addr, &reqs, true).expect("client run");
+    let run = server.join().expect("server thread");
+
+    assert_eq!(rep.completions(), 1, "the admitted request completes");
+    assert_eq!(rep.errors, 1, "the overflow request is answered with an error frame");
+    assert_eq!(rep.outcome(&first_tag).expect("first outcome").terminal, "done");
+    assert_eq!(
+        rep.outcome(&second_tag).expect("second outcome").terminal,
+        "",
+        "the refused request never gets a lifecycle frame, only the error"
+    );
+    assert!(rep.shutdown_acked, "shutdown frame must be acked");
+    assert_eq!(run.net.inbound_rejections, 1);
+    assert_eq!(run.net.accepted_requests, 1);
+    assert_exactly_once(&run);
+}

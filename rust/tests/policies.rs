@@ -7,11 +7,11 @@
 
 use std::path::PathBuf;
 
-use dualsparse::engine::batcher::{
-    serve_opts, serve_policy, serve_with, ArrivalMode, Request, SchedOptions,
-};
 use dualsparse::engine::policy::{
     AdmissionControl, AgingConfig, Fcfs, PolicyKind, PriorityLanes, ShortestPromptFirst,
+};
+use dualsparse::engine::scheduler::{
+    serve_opts, serve_policy, serve_with, ArrivalMode, Request, SchedOptions,
 };
 use dualsparse::engine::{Engine, EngineOptions, MAX_SLOTS};
 use dualsparse::moe::DropPolicy;
@@ -75,7 +75,7 @@ fn fcfs_policy_is_byte_identical_to_default_serve() {
 /// arrival is t = 0, so queue wait == admission time, which is strictly
 /// monotone in admission order): everything admitted in the first wave
 /// waited less than everything admitted after the first retirement.
-fn first_wave_ids(completions: &[dualsparse::engine::batcher::Completion]) -> Vec<usize> {
+fn first_wave_ids(completions: &[dualsparse::engine::scheduler::Completion]) -> Vec<usize> {
     let mut by_wait: Vec<(f64, usize)> =
         completions.iter().map(|c| (c.queue_secs, c.id)).collect();
     by_wait.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());

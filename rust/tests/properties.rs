@@ -382,9 +382,9 @@ fn fault_plan_is_deterministic_and_conserves_requests() {
     // terminal partition (Done ∪ Rejected ∪ Failed ∪ TimedOut ∪
     // Cancelled) covers every request exactly once, and the KV page
     // pool drains back to its full size after every chaos run.
-    use dualsparse::engine::batcher::{
-        serve_opts, ArrivalMode, FaultPlan, FaultSpec, Fcfs, SchedOptions,
-    };
+    use dualsparse::engine::faults::{FaultPlan, FaultSpec};
+    use dualsparse::engine::policy::Fcfs;
+    use dualsparse::engine::scheduler::{serve_opts, ArrivalMode, SchedOptions};
     use dualsparse::engine::{Engine, EngineOptions};
     use dualsparse::server::workload;
     use std::path::PathBuf;

@@ -9,9 +9,10 @@
 use std::collections::VecDeque;
 use std::path::PathBuf;
 
-use dualsparse::engine::batcher::{
-    serve, serve_opts, serve_with, ArrivalMode, CancelSet, FaultPlan, Fcfs, Phase, Request,
-    SchedOptions,
+use dualsparse::engine::faults::{CancelSet, FaultPlan};
+use dualsparse::engine::policy::Fcfs;
+use dualsparse::engine::scheduler::{
+    serve, serve_opts, serve_with, ArrivalMode, Phase, Request, SchedOptions,
 };
 use dualsparse::engine::{Engine, EngineOptions, EOS, MAX_SLOTS};
 use dualsparse::moe::DropPolicy;
@@ -238,7 +239,7 @@ fn open_loop_arrivals_are_deterministic_and_respected() {
     let mode = ArrivalMode::Open { rate: 150.0, seed: 5 };
     let a = serve_with(&mut e, &reqs, mode).unwrap();
     let b = serve_with(&mut e, &reqs, mode).unwrap();
-    let arrivals = |o: &dualsparse::engine::batcher::ServeOutcome| -> Vec<f64> {
+    let arrivals = |o: &dualsparse::engine::scheduler::ServeOutcome| -> Vec<f64> {
         o.completions.iter().map(|c| c.arrival).collect()
     };
     assert_eq!(arrivals(&a), arrivals(&b), "same seed ⇒ same arrival process");
@@ -337,7 +338,7 @@ fn preemption_conserves_requests_and_reports_recompute() {
 
 /// Five-way exactly-once: Done ∪ Rejected ∪ Failed ∪ TimedOut ∪
 /// Cancelled covers every submitted request exactly once.
-fn assert_exactly_once(out: &dualsparse::engine::batcher::ServeOutcome, n: usize) {
+fn assert_exactly_once(out: &dualsparse::engine::scheduler::ServeOutcome, n: usize) {
     let mut seen = vec![0usize; n];
     for c in &out.completions {
         seen[c.id] += 1;
