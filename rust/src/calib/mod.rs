@@ -5,7 +5,9 @@
 //! every MoE layer the tokens routed to each expert are packed through
 //! `probe_h{width}` which returns the four accumulated importance rows
 //! per neuron. Tables are saved to `artifacts/results/` and consumed by
-//! expert *reconstruction* at engine load.
+//! expert *reconstruction* at engine load — and, since ISSUE-10, by the
+//! neuron-level keep masks (`moe::partition::keep_mask`) that the
+//! masked FFN kernels run under `--neuron-keep`.
 
 use std::path::Path;
 
@@ -130,6 +132,15 @@ pub fn run_calibration(engine: &mut Engine, n_tokens: usize) -> Result<ProbeTabl
     Ok(engine.probe.take().expect("probe tables"))
 }
 
+/// Number of probe-ranked neurons a width-`width` sub-expert keeps
+/// under `--neuron-keep keep`: `⌈keep·width⌉`, with `keep` clamped to
+/// `0.0..=1.0`. Ceiling (not round) so any keep > 0 keeps at least one
+/// neuron of a non-empty sub-expert, and keep = 1.0 keeps all of them.
+/// Pure integer/IEEE arithmetic — identical on every platform.
+pub fn keep_count(width: usize, keep: f32) -> usize {
+    ((keep.clamp(0.0, 1.0) as f64 * width as f64).ceil() as usize).min(width)
+}
+
 /// Default path for a model's calibration tables.
 pub fn tables_path(artifacts_dir: &Path, model: &str) -> std::path::PathBuf {
     artifacts_dir
@@ -166,5 +177,25 @@ mod tests {
         let mut t = ProbeTables::new(1, 1, 2);
         t.t[0][0][2] = vec![7.0, 8.0];
         assert_eq!(t.importance("gate_up")[0][0], vec![7.0, 8.0]);
+    }
+
+    #[test]
+    fn keep_count_boundaries() {
+        assert_eq!(keep_count(128, 1.0), 128);
+        assert_eq!(keep_count(128, 0.75), 96);
+        assert_eq!(keep_count(128, 0.5), 64);
+        assert_eq!(keep_count(128, 0.0), 0);
+        assert_eq!(keep_count(3, 0.01), 1, "any keep > 0 keeps a neuron");
+        assert_eq!(keep_count(0, 0.5), 0);
+        // out-of-range inputs clamp instead of exploding
+        assert_eq!(keep_count(8, 2.0), 8);
+        assert_eq!(keep_count(8, -1.0), 0);
+        // monotone in keep
+        let mut last = usize::MAX;
+        for p in [1.0f32, 0.9, 0.75, 0.5, 0.25, 0.1, 0.0] {
+            let k = keep_count(100, p);
+            assert!(k <= last);
+            last = k;
+        }
     }
 }

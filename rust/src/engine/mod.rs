@@ -84,6 +84,19 @@ pub struct EngineOptions {
     /// slot-world capacity. Smaller budgets make admission
     /// page-bound (and preemption reachable) before it is slot-bound.
     pub kv_pages: Option<usize>,
+    /// Neuron-level sparsity: kept fraction of probe-ranked neurons per
+    /// routed sub-expert (paper §4.2b). `None` (or `Some(1.0)`) runs
+    /// the dense kernels byte-identically to an engine built without
+    /// this option. Any value `< 1.0` requires importance tables and
+    /// the `CpuRef` backend (the masked FFN artifacts are
+    /// CpuRef-only). The shared expert is never masked — there is no
+    /// probe table for it.
+    pub neuron_keep: Option<f32>,
+    /// Run expert FFNs through the int8 quantized-weight kernels
+    /// (symmetric per-tensor scales, dequantize-in-register). CpuRef
+    /// only. The `DUALSPARSE_QUANT` env var (1/0, true/false, on/off,
+    /// yes/no) overrides this at engine construction.
+    pub quant: bool,
 }
 
 /// Aggregated engine metrics (fig6/fig10/fig11/fig12 inputs).
@@ -138,11 +151,22 @@ impl EngineMetrics {
 
 /// Backend-resident buffers for one weight-bearing executable argument
 /// set (uploaded once at load; the hot path never re-copies weights).
+/// With quantization on, `w1/w3/w2` hold the int8 codes (as
+/// integer-valued f32 through the unchanged upload ABI) and `scales`
+/// carries the `[s_w1, s_w3, s_w2]` dequantization scales.
 struct VariantBufs {
     w1: BufId,
     w3: BufId,
     w2: BufId,
     width: usize,
+    /// Probe-ranked kept-neuron mask (variant-local indices) when
+    /// neuron-level sparsity is on; `None` ⇒ dense. A full mask
+    /// normalizes to `None` so keep = 1.0 is *structurally* identical
+    /// to dense (same artifact names, same args — byte-identity for
+    /// free).
+    kept: Option<Vec<i32>>,
+    /// `[3]` host tensor of per-matrix int8 scales when quantized.
+    scales: Option<Tensor>,
 }
 
 struct LayerBufs {
@@ -219,11 +243,37 @@ impl Engine {
         artifacts_dir: &Path,
         weights: Weights,
         policy: DropPolicy,
-        opts: EngineOptions,
+        mut opts: EngineOptions,
     ) -> Result<Self> {
         let rt = make_backend(opts.backend, artifacts_dir)?;
         let cfg = weights.config.clone();
         rt.set_model(&cfg);
+        // Resolve neuron-level sparsity + quantization up front: both
+        // change which FFN artifacts the hot path names, and only the
+        // CpuRef backend synthesizes those artifacts.
+        opts.quant = match std::env::var("DUALSPARSE_QUANT") {
+            Ok(v) if !v.is_empty() => parse_bool_env("DUALSPARSE_QUANT", &v)?,
+            _ => opts.quant,
+        };
+        let keep = opts.neuron_keep.unwrap_or(1.0);
+        if !(0.0..=1.0).contains(&keep) {
+            bail!("neuron_keep must be in 0.0..=1.0, got {keep}");
+        }
+        let neuron_on = keep < 1.0;
+        if neuron_on && opts.importance.is_none() {
+            bail!(
+                "neuron_keep < 1.0 requires importance tables — run \
+                 `dualsparse calibrate {}` first",
+                cfg.name
+            );
+        }
+        if (neuron_on || opts.quant) && rt.platform() != "cpu-ref" {
+            bail!(
+                "neuron-level sparsity / quantized kernels are CpuRef-only \
+                 (backend platform is {})",
+                rt.platform()
+            );
+        }
         let mut experts = Vec::with_capacity(cfg.n_layers);
         for li in 0..cfg.n_layers {
             let imp = match (&opts.importance, opts.reconstructed) {
@@ -247,18 +297,36 @@ impl Engine {
                     w3: weights.layer(li, "sw3")?.clone(),
                     w2: weights.layer(li, "sw2")?.clone(),
                     width: cfg.d_ffn_shared,
+                    cols: (0..cfg.d_ffn_shared).collect(),
                 }))
             })
             .collect::<Result<Vec<_>>>()?;
         // Upload every weight tensor to a persistent device buffer.
+        // `imp` is the owning expert's full-width importance row (None
+        // for the shared expert and whenever neuron sparsity is off);
+        // keep masks rank it through the variant's `cols` mapping.
         let up = |t: &Tensor| rt.upload(t);
-        let up3 = |se: &SubExpert| -> Result<VariantBufs> {
-            Ok(VariantBufs {
-                w1: rt.upload(&se.w1)?,
-                w3: rt.upload(&se.w3)?,
-                w2: rt.upload(&se.w2)?,
-                width: se.width,
-            })
+        let up3 = |se: &SubExpert, imp: Option<&[f32]>| -> Result<VariantBufs> {
+            let kept = match imp {
+                Some(imp) if neuron_on => {
+                    let m = crate::moe::partition::keep_mask(&se.cols, imp, keep);
+                    // Full mask ⇒ dense: same artifact, same args.
+                    if m.len() == se.width { None } else { Some(m) }
+                }
+                _ => None,
+            };
+            let (w1, w3, w2, scales) = if opts.quant {
+                let q = crate::moe::partition::QuantizedWeights::from_sub_expert(se);
+                (
+                    rt.upload(&q.w1)?,
+                    rt.upload(&q.w3)?,
+                    rt.upload(&q.w2)?,
+                    Some(Tensor::new(vec![3], q.scales.to_vec())),
+                )
+            } else {
+                (rt.upload(&se.w1)?, rt.upload(&se.w3)?, rt.upload(&se.w2)?, None)
+            };
+            Ok(VariantBufs { w1, w3, w2, width: se.width, kept, scales })
         };
         let mut lbufs = Vec::with_capacity(cfg.n_layers);
         let mut ebufs = Vec::with_capacity(cfg.n_layers);
@@ -276,17 +344,23 @@ impl Engine {
             ebufs.push(
                 experts[li]
                     .iter()
-                    .map(|pe| -> Result<ExpertBufs> {
+                    .enumerate()
+                    .map(|(ei, pe)| -> Result<ExpertBufs> {
+                        let imp_e = if neuron_on {
+                            opts.importance.as_ref().map(|t| t[li][ei].as_slice())
+                        } else {
+                            None
+                        };
                         Ok(ExpertBufs {
-                            full: up3(&pe.full)?,
-                            major: up3(&pe.major)?,
-                            minor: up3(&pe.minor)?,
+                            full: up3(&pe.full, imp_e)?,
+                            major: up3(&pe.major, imp_e)?,
+                            minor: up3(&pe.minor, imp_e)?,
                         })
                     })
                     .collect::<Result<Vec<_>>>()?,
             );
             sbufs.push(match &shared[li] {
-                Some(se) => Some(up3(se)?),
+                Some(se) => Some(up3(se, None)?),
                 None => None,
             });
         }
@@ -1160,12 +1234,30 @@ fn run_sub_expert(
             scratch[i * d..(i + 1) * d].copy_from_slice(&ln2x.data[r * d..(r + 1) * d]);
         }
         let xt = Tensor::new(vec![c, d], std::mem::take(scratch));
-        let name = format!("ffn_h{}_c{}", se.width, c);
+        // Dense / masked / quantized variants share one dispatch: the
+        // artifact name encodes the kernel family and the optional
+        // scales (arg 4) and kept-mask (last arg) ride behind the
+        // always-present x/w1/w3/w2 quartet. With `kept == None` and
+        // `scales == None` this is byte-for-byte the historical dense
+        // call — names, args and timing identical.
+        let name = match (&se.kept, &se.scales) {
+            (None, None) => format!("ffn_h{}_c{}", se.width, c),
+            (Some(k), None) => format!("ffn_mask_h{}k{}_c{}", se.width, k.len(), c),
+            (None, Some(_)) => format!("ffn_q8_h{}_c{}", se.width, c),
+            (Some(k), Some(_)) => {
+                format!("ffn_q8_mask_h{}k{}_c{}", se.width, k.len(), c)
+            }
+        };
+        let mut args =
+            vec![Arg::F32(&xt), Arg::Buf(se.w1), Arg::Buf(se.w3), Arg::Buf(se.w2)];
+        if let Some(s) = &se.scales {
+            args.push(Arg::F32(s));
+        }
+        if let Some(k) = &se.kept {
+            args.push(Arg::I32(k));
+        }
         let t0 = std::time::Instant::now();
-        let y = rt.exec(
-            &name,
-            &[Arg::F32(&xt), Arg::Buf(se.w1), Arg::Buf(se.w3), Arg::Buf(se.w2)],
-        )?;
+        let y = rt.exec(&name, &args)?;
         secs += t0.elapsed().as_secs_f64();
         // hand the packing buffer back for the next call
         *scratch = xt.data;
@@ -1191,6 +1283,17 @@ fn argmax_u8(row: &[f32]) -> u8 {
         }
     }
     best as u8
+}
+
+/// Parse a boolean env-var value (`DUALSPARSE_QUANT` et al.): accepts
+/// 1/0, true/false, on/off, yes/no (case-insensitive); anything else
+/// is an error naming the variable.
+fn parse_bool_env(var: &str, v: &str) -> Result<bool> {
+    match v.to_ascii_lowercase().as_str() {
+        "1" | "true" | "on" | "yes" => Ok(true),
+        "0" | "false" | "off" | "no" => Ok(false),
+        _ => bail!("unrecognized {var} value {v:?}; use 1/0, true/false, on/off, yes/no"),
+    }
 }
 
 /// Standard artifact base dir resolution (env override for tests).
@@ -1272,6 +1375,43 @@ mod tests {
         scores[0] = f32::NAN;
         let r2 = e.route(&scores, 0);
         assert_eq!(r2.experts.len(), e.cfg.top_k.min(3));
+    }
+
+    #[test]
+    fn parse_bool_env_accepts_common_spellings() {
+        for v in ["1", "true", "ON", "Yes"] {
+            assert!(parse_bool_env("X", v).unwrap());
+        }
+        for v in ["0", "false", "OFF", "no"] {
+            assert!(!parse_bool_env("X", v).unwrap());
+        }
+        let err = parse_bool_env("DUALSPARSE_QUANT", "maybe").unwrap_err();
+        assert!(err.to_string().contains("DUALSPARSE_QUANT"));
+    }
+
+    /// neuron_keep < 1.0 without importance tables must fail at build
+    /// time (not mid-serve), and out-of-range fractions are rejected.
+    #[test]
+    fn neuron_keep_validation_fails_fast() {
+        let opts = EngineOptions { neuron_keep: Some(0.5), ..Default::default() };
+        let err = Engine::new(
+            Path::new("/nonexistent-artifacts"),
+            "mixtral_ish",
+            DropPolicy::NoDrop,
+            opts,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("importance"), "{err}");
+
+        let opts = EngineOptions { neuron_keep: Some(1.5), ..Default::default() };
+        let err = Engine::new(
+            Path::new("/nonexistent-artifacts"),
+            "mixtral_ish",
+            DropPolicy::NoDrop,
+            opts,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("0.0..=1.0"), "{err}");
     }
 
     /// An empty routing flows through the full MoE layer: the token

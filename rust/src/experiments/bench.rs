@@ -8,6 +8,13 @@
 //! (threads, batch) group. This seeds the repo's perf trajectory:
 //! every future PR can diff its `BENCH_cpu.json` against the last one.
 //!
+//! A second phase (`sweep == "neuron"`, ISSUE-10) ladders the
+//! neuron-level dimension: kept fraction of probe-ranked FFN neurons ×
+//! int8 quantization, each row carrying a measured accuracy proxy
+//! (max|Δlogit| vs the dense-f32 engine over fixed prompts). The
+//! keep = 1.0 / quant-off row runs byte-identical kernels to the dense
+//! engine, so its max_abs_dlogit is exactly 0.0 — CI pins that.
+//!
 //! Unlike the EP *simulation* (fig10/fig11), nothing here is modeled —
 //! drop rate shrinks capacity buckets, which shrinks real GEMMs, which
 //! moves real wall-clock time.
@@ -39,16 +46,30 @@ pub struct BenchConfig {
 
 /// One measured configuration.
 pub struct BenchRow {
+    /// Which sweep phase produced the row: `"policy"` (drop policies ×
+    /// batches × threads) or `"neuron"` (neuron-keep × quant ladder).
+    pub sweep: String,
     pub threads: usize,
     pub batch: usize,
     pub policy: String,
+    /// Kept fraction of probe-ranked FFN neurons (1.0 on policy rows).
+    pub neuron_keep: f64,
+    /// Int8 quantized-weight kernels on (false on policy rows).
+    pub quant: bool,
     pub drop_rate: f64,
     pub tokens_per_sec: f64,
     pub wall_secs: f64,
     /// Cumulative MoE (gate + FFN) busy seconds across workers.
     pub moe_secs: f64,
-    /// tokens/sec vs the no-drop row of the same (threads, batch).
+    /// tokens/sec vs the baseline row of the same group (the no-drop
+    /// row of the same (threads, batch) on policy rows; the
+    /// keep = 1.0 / quant-off row on neuron rows).
     pub speedup_vs_no_drop: f64,
+    /// Accuracy proxy: max |Δlogit| vs the dense-f32 engine over a
+    /// fixed drop-free prompt set. Exactly 0.0 on policy rows and on
+    /// the neuron ladder's keep = 1.0 / quant-off baseline (those run
+    /// byte-identical kernels).
+    pub max_abs_dlogit: f64,
 }
 
 /// Run the sweep; rows are ordered (threads, batch, policy) with the
@@ -104,19 +125,129 @@ pub fn sweep(artifacts: &Path, model: &str, quick: bool) -> Result<Vec<BenchRow>
                     base_tps = Some(stats.tokens_per_sec);
                 }
                 rows.push(BenchRow {
+                    sweep: "policy".to_string(),
                     threads: t,
                     batch,
                     policy: label.to_string(),
+                    neuron_keep: 1.0,
+                    quant: false,
                     drop_rate: stats.drop_rate,
                     tokens_per_sec: stats.tokens_per_sec,
                     wall_secs: stats.wall_secs,
                     moe_secs: stats.moe_secs,
                     speedup_vs_no_drop: speedup,
+                    max_abs_dlogit: 0.0,
                 });
             }
         }
     }
+    // --------------------------------------------------------------
+    // Neuron-level ladder (ISSUE-10): neuron_keep × quant at the
+    // heaviest thread count of the sweep, plus one combined row
+    // stacking tensor-level dropping on a masked run. Importance comes
+    // from an in-process calibration pass (hermetic — no prior
+    // `dualsparse calibrate` needed); accuracy is measured drop-free
+    // per row so max|Δlogit| isolates the neuron/quant error.
+    // --------------------------------------------------------------
+    let combined: (&str, DropPolicy) = if quick {
+        ("2t:0.45", DropPolicy::two_t(0.45))
+    } else {
+        ("2t:0.44", DropPolicy::two_t(0.44))
+    };
+    let nodrop: (&str, DropPolicy) = ("none", DropPolicy::NoDrop);
+    let ladder: Vec<(f32, bool, (&str, DropPolicy))> = if quick {
+        vec![
+            (1.0, false, nodrop),
+            (0.75, false, nodrop),
+            (0.5, false, nodrop),
+            (1.0, true, nodrop),
+            (0.75, true, nodrop),
+            (0.75, false, combined),
+        ]
+    } else {
+        let mut v: Vec<(f32, bool, (&str, DropPolicy))> = Vec::new();
+        for &q in &[false, true] {
+            for &k in &[1.0f32, 0.75, 0.5, 0.25] {
+                v.push((k, q, nodrop));
+            }
+        }
+        v.push((0.75, false, combined));
+        v
+    };
+    engine.policy = DropPolicy::NoDrop;
+    let n_tok = if quick { 256 } else { super::n_calib() };
+    let tables = crate::calib::run_calibration(&mut engine, n_tok)?;
+    let imp = tables.importance("abs_gate");
+    let prompts: [&str; 4] = ["cpy:abcd|", "add:3+4|", "srt:dcba|", "maj:aabab|"];
+    let ref_logits = prompt_logits(&mut engine, &prompts)?;
+    let lt = *threads_sweep.last().unwrap();
+    let lbatch = *batches.last().unwrap();
+    let lreqs = server::workload(lbatch * req_mult, max_new, 7);
+    let lwarm = server::workload(lbatch.min(4), 3, 13);
+    let mut ladder_base: Option<f64> = None;
+    for (keep, quant, (plabel, pol)) in ladder {
+        let mut le = Engine::new(
+            artifacts,
+            model,
+            DropPolicy::NoDrop,
+            EngineOptions {
+                neuron_keep: Some(keep),
+                quant,
+                importance: Some(imp.clone()),
+                ..Default::default()
+            },
+        )?;
+        let got = prompt_logits(&mut le, &prompts)?;
+        let mut dmax = 0.0f64;
+        for (a, b) in got.iter().zip(&ref_logits) {
+            for (&x, &y) in a.iter().zip(b) {
+                dmax = dmax.max((x as f64 - y as f64).abs());
+            }
+        }
+        le.policy = pol;
+        threads::set_thread_override(Some(lt));
+        let measured = (|| {
+            serve(&mut le, &lwarm)?; // touch every artifact bucket
+            serve(&mut le, &lreqs)
+        })();
+        threads::set_thread_override(None);
+        let (_, stats) = measured?;
+        let speedup = match ladder_base {
+            Some(b) if b > 0.0 && stats.tokens_per_sec > 0.0 => stats.tokens_per_sec / b,
+            _ => 1.0,
+        };
+        if ladder_base.is_none() {
+            ladder_base = Some(stats.tokens_per_sec);
+        }
+        rows.push(BenchRow {
+            sweep: "neuron".to_string(),
+            threads: lt,
+            batch: lbatch,
+            policy: plabel.to_string(),
+            neuron_keep: keep as f64,
+            quant,
+            drop_rate: stats.drop_rate,
+            tokens_per_sec: stats.tokens_per_sec,
+            wall_secs: stats.wall_secs,
+            moe_secs: stats.moe_secs,
+            speedup_vs_no_drop: speedup,
+            max_abs_dlogit: dmax,
+        });
+    }
     Ok(rows)
+}
+
+/// Last-position prefill logits for each prompt (KV reset between
+/// prompts — deterministic, order-independent). The neuron ladder's
+/// accuracy proxy compares these rows against the dense engine's.
+fn prompt_logits(engine: &mut Engine, prompts: &[&str]) -> Result<Vec<Vec<f32>>> {
+    let mut out = Vec::new();
+    for p in prompts {
+        engine.kv.reset();
+        let slot = engine.kv.alloc();
+        out.push(engine.prefill_logits(slot, p.as_bytes())?.1);
+    }
+    Ok(out)
 }
 
 /// Serialize sweep rows to the `BENCH_cpu.json` schema.
@@ -125,14 +256,18 @@ pub fn write_json(model: &str, quick: bool, rows: &[BenchRow], out: &Path) -> Re
         rows.iter()
             .map(|r| {
                 obj(vec![
+                    ("sweep", s(&r.sweep)),
                     ("threads", num(r.threads as f64)),
                     ("batch", num(r.batch as f64)),
                     ("policy", s(&r.policy)),
+                    ("neuron_keep", num(r.neuron_keep)),
+                    ("quant", Json::Bool(r.quant)),
                     ("drop_rate", num(r.drop_rate)),
                     ("tokens_per_sec", num(r.tokens_per_sec)),
                     ("wall_secs", num(r.wall_secs)),
                     ("moe_secs", num(r.moe_secs)),
                     ("speedup_vs_no_drop", num(r.speedup_vs_no_drop)),
+                    ("max_abs_dlogit", num(r.max_abs_dlogit)),
                 ])
             })
             .collect(),
@@ -160,19 +295,24 @@ pub fn run(artifacts: &Path, cfg: &BenchConfig) -> Result<()> {
     );
     let rows = sweep(artifacts, &cfg.model, cfg.quick)?;
     println!(
-        "{:>7} {:>6} {:>8} {:>7} {:>11} {:>9} {:>9}",
-        "threads", "batch", "policy", "drop%", "tok/s", "moe_s", "vs-nodrop"
+        "{:>7} {:>7} {:>6} {:>8} {:>5} {:>5} {:>7} {:>11} {:>9} {:>9} {:>10}",
+        "sweep", "threads", "batch", "policy", "keep", "quant", "drop%", "tok/s", "moe_s",
+        "vs-base", "max|dlog|"
     );
     for r in &rows {
         println!(
-            "{:>7} {:>6} {:>8} {:>6.1}% {:>11.1} {:>9.3} {:>8.2}x",
+            "{:>7} {:>7} {:>6} {:>8} {:>5.2} {:>5} {:>6.1}% {:>11.1} {:>9.3} {:>8.2}x {:>10.2e}",
+            r.sweep,
             r.threads,
             r.batch,
             r.policy,
+            r.neuron_keep,
+            if r.quant { "on" } else { "off" },
             100.0 * r.drop_rate,
             r.tokens_per_sec,
             r.moe_secs,
             r.speedup_vs_no_drop,
+            r.max_abs_dlogit,
         );
     }
     write_json(&cfg.model, cfg.quick, &rows, &cfg.out)?;
@@ -677,20 +817,55 @@ mod tests {
     fn quick_sweep_writes_valid_json() {
         let rows = sweep(Path::new("/nonexistent-artifacts"), "mixtral_ish", true)
             .expect("hermetic sweep on synthetic weights");
-        assert_eq!(rows.len(), 2 * 1 * 2, "threads × batches × policies");
-        for r in &rows {
+        let policy_rows: Vec<&BenchRow> =
+            rows.iter().filter(|r| r.sweep == "policy").collect();
+        let neuron_rows: Vec<&BenchRow> =
+            rows.iter().filter(|r| r.sweep == "neuron").collect();
+        assert_eq!(policy_rows.len(), 2 * 1 * 2, "threads × batches × policies");
+        assert_eq!(neuron_rows.len(), 6, "quick neuron_keep × quant ladder");
+        assert_eq!(rows.len(), policy_rows.len() + neuron_rows.len());
+        for r in &policy_rows {
             assert!(r.tokens_per_sec > 0.0, "measured, not simulated");
+            assert_eq!(r.neuron_keep, 1.0);
+            assert!(!r.quant);
+            assert_eq!(r.max_abs_dlogit, 0.0);
             if r.policy == "none" {
                 assert!((r.speedup_vs_no_drop - 1.0).abs() < 1e-9);
             } else {
                 assert!(r.drop_rate > 0.0, "drop ladder must actually drop");
             }
         }
+        // The ladder baseline runs byte-identical kernels to the dense
+        // engine: its accuracy proxy must be *exactly* zero, not small.
+        let base = &neuron_rows[0];
+        assert_eq!(base.neuron_keep, 1.0);
+        assert!(!base.quant);
+        assert_eq!(base.policy, "none");
+        assert_eq!(base.max_abs_dlogit, 0.0, "keep=1.0/quant-off is byte-identical");
+        assert!((base.speedup_vs_no_drop - 1.0).abs() < 1e-9);
+        for r in &neuron_rows {
+            assert!(r.tokens_per_sec > 0.0, "measured, not simulated");
+            assert!(r.max_abs_dlogit.is_finite());
+            if r.policy != "none" {
+                assert!(r.drop_rate > 0.0, "combined row stacks tensor dropping");
+            }
+        }
+        // Quantization is a real approximation on this model: the int8
+        // rows must move the logits (a 0.0 here would mean the quant
+        // kernels silently ran dense weights).
+        assert!(
+            neuron_rows.iter().filter(|r| r.quant).all(|r| r.max_abs_dlogit > 0.0),
+            "quant rows must show nonzero logit error"
+        );
         let out = std::env::temp_dir().join("dualsparse_bench_selftest.json");
         write_json("mixtral_ish", true, &rows, &out).unwrap();
         let j = Json::parse(&std::fs::read_to_string(&out).unwrap()).unwrap();
         assert_eq!(j.get("model").unwrap().as_str().unwrap(), "mixtral_ish");
         assert_eq!(j.get("runs").unwrap().as_arr().unwrap().len(), rows.len());
+        let run0 = &j.get("runs").unwrap().as_arr().unwrap()[0];
+        for field in ["sweep", "neuron_keep", "quant", "max_abs_dlogit"] {
+            assert!(run0.get(field).is_ok(), "BENCH_cpu.json runs must carry {field}");
+        }
         let _ = std::fs::remove_file(&out);
     }
 

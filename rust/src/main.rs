@@ -2,6 +2,11 @@
 //!
 //! Subcommands:
 //!   serve [model] [--policy fcfs|spf|priority] [--drop none|1t:<T>|2t:<T>]
+//!         [--neuron-keep F] [--quant]          neuron-level sparsity: keep
+//!                                            the top-F probe-ranked FFN
+//!                                            neurons (needs `calibrate`
+//!                                            tables when F < 1.0) / int8
+//!                                            quantized kernels (CpuRef)
 //!         [--max-queue N] [--reqs N] [--max-new N]
 //!         [--mode closed|open] [--rate R] [--seed S]
 //!         [--page-size P] [--kv-pages N] [--preempt]
@@ -29,8 +34,11 @@
 //!                                            driver (the net-smoke CI
 //!                                            counterpart of --listen)
 //!   eval <model> [--policy …] [--reconstruct] [--n N]
+//!        [--neuron-keep F] [--quant]
 //!   calibrate <model> [--tokens N]
-//!   bench [--quick] [--model M] [--out PATH]   (writes BENCH_cpu.json)
+//!   bench [--quick] [--model M] [--out PATH]   (writes BENCH_cpu.json:
+//!                                            policy sweep + neuron-keep ×
+//!                                            quant ladder)
 //!   exp <fig1|fig4|fig6|fig7|fig9|fig10|fig11|fig12|fig13|table1|table2|table3|all>
 //!   info
 //!
@@ -40,7 +48,7 @@
 //! Serving architecture and report schemas: docs/ARCHITECTURE.md and
 //! docs/REPORTS.md.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
@@ -98,6 +106,47 @@ fn parse_serve_policies(
         }
     }
     Ok((sched, drop.unwrap_or(DropPolicy::NoDrop)))
+}
+
+/// Parse the neuron-level sparsity flags shared by `serve` and `eval`:
+/// `--neuron-keep F` (kept fraction of probe-ranked FFN neurons,
+/// strictly validated to `0.0..=1.0` — a typo'd fraction must not
+/// silently serve dense) and the bare `--quant` switch.
+fn parse_neuron_flags(args: &Args) -> Result<(Option<f32>, bool)> {
+    let keep = match args.flag("neuron-keep") {
+        Some(v) => {
+            let f: f32 = v.parse().with_context(|| {
+                format!("--neuron-keep must be a fraction in 0.0..=1.0, got {v:?}")
+            })?;
+            if !(0.0..=1.0).contains(&f) {
+                bail!("--neuron-keep must be in 0.0..=1.0 (got {f})");
+            }
+            Some(f)
+        }
+        None => None,
+    };
+    Ok((keep, args.flag("quant").is_some()))
+}
+
+/// Fold the neuron-level flags into `base` engine options, loading the
+/// model's calibration tables when a keep < 1.0 actually needs them
+/// (and the caller didn't already supply importance, as `eval
+/// --reconstruct` does).
+fn neuron_engine_opts(
+    artifacts: &Path,
+    model: &str,
+    keep: Option<f32>,
+    quant: bool,
+    base: EngineOptions,
+) -> Result<EngineOptions> {
+    let mut opts = base;
+    opts.neuron_keep = keep;
+    opts.quant = quant;
+    if keep.is_some_and(|k| k < 1.0) && opts.importance.is_none() {
+        let tables = calib::ProbeTables::load(&calib::tables_path(artifacts, model))?;
+        opts.importance = Some(tables.importance("abs_gate"));
+    }
+    Ok(opts)
 }
 
 /// Tiny flag parser: positional args + --key value pairs.
@@ -256,6 +305,7 @@ fn main() -> Result<()> {
                 .to_string();
             let (sched_kind, policy) =
                 parse_serve_policies(args.flag("policy"), args.flag("drop"))?;
+            let (neuron_keep, quant) = parse_neuron_flags(&args)?;
             let max_queue = match args.flag("max-queue") {
                 Some(v) => Some(v.parse::<usize>().with_context(|| {
                     format!("--max-queue must be a request count, got {v:?}")
@@ -372,14 +422,18 @@ fn main() -> Result<()> {
                     || paging_flags
                     || ep_workers.is_some()
                     || chaos_flags
+                    || neuron_keep.is_some()
+                    || quant
                 {
                     bail!(
-                        "--max-queue, drop-policy, paging/preemption, EP and \
-                         chaos flags have no effect with --sweep/--quick (the \
-                         sweep uses max queue {}, its own drop ladder, default \
-                         paging, its own interleave-off baselines and its own \
-                         EP + chaos dimensions); use --policy fcfs|spf|priority \
-                         to restrict the sweep",
+                        "--max-queue, drop-policy, paging/preemption, EP, chaos \
+                         and neuron-level flags have no effect with \
+                         --sweep/--quick (the sweep uses max queue {}, its own \
+                         drop ladder, default paging, its own interleave-off \
+                         baselines and its own EP + chaos dimensions; the \
+                         neuron-keep × quant ladder lives in `dualsparse \
+                         bench`); use --policy fcfs|spf|priority to restrict \
+                         the sweep",
                         experiments::bench::SWEEP_MAX_QUEUE
                     );
                 }
@@ -416,7 +470,13 @@ fn main() -> Result<()> {
                     o.replicate_after = ep_replicate_after;
                     o
                 });
-                let opts = EngineOptions { page_size, kv_pages, ep, ..Default::default() };
+                let opts = neuron_engine_opts(
+                    &artifacts,
+                    &model,
+                    neuron_keep,
+                    quant,
+                    EngineOptions { page_size, kv_pages, ep, ..Default::default() },
+                )?;
                 let mut engine = Engine::new(&artifacts, &model, policy, opts)?;
                 server::warmup(&mut engine)?;
                 let srv = server::net::NetServer::bind(&addr, net_opts)?;
@@ -514,7 +574,13 @@ fn main() -> Result<()> {
                 o.replicate_after = ep_replicate_after;
                 o
             });
-            let opts = EngineOptions { page_size, kv_pages, ep, ..Default::default() };
+            let opts = neuron_engine_opts(
+                &artifacts,
+                &model,
+                neuron_keep,
+                quant,
+                EngineOptions { page_size, kv_pages, ep, ..Default::default() },
+            )?;
             let mut engine = Engine::new(&artifacts, &model, policy, opts)?;
             println!(
                 "serving {model} on {} ({} requests, sched {} max-queue {:?}, \
@@ -626,23 +692,21 @@ fn main() -> Result<()> {
             let model = args.pos.get(1).context("eval <model>")?;
             let policy = parse_policy(args.flag("policy").unwrap_or("none"))?;
             let n = args.flag_usize("n", 24);
-            let mut engine = if args.flag("reconstruct").is_some() {
+            let (neuron_keep, quant) = parse_neuron_flags(&args)?;
+            let base = if args.flag("reconstruct").is_some() {
                 let tables = calib::ProbeTables::load(&calib::tables_path(&artifacts, model))?;
-                Engine::new(
-                    &artifacts,
-                    model,
-                    policy,
-                    EngineOptions {
-                        reconstructed: true,
-                        importance: Some(tables.importance(
-                            args.flag("metric").unwrap_or("abs_gate"),
-                        )),
-                        ..Default::default()
-                    },
-                )?
+                EngineOptions {
+                    reconstructed: true,
+                    importance: Some(tables.importance(
+                        args.flag("metric").unwrap_or("abs_gate"),
+                    )),
+                    ..Default::default()
+                }
             } else {
-                Engine::new(&artifacts, model, policy, EngineOptions::default())?
+                EngineOptions::default()
             };
+            let opts = neuron_engine_opts(&artifacts, model, neuron_keep, quant, base)?;
+            let mut engine = Engine::new(&artifacts, model, policy, opts)?;
             let res = evaluate(&mut engine, n, false)?;
             println!("{}", format_row(model, &res));
             println!("drop rate: {:.1}%", 100.0 * engine.metrics.drop_rate());
@@ -856,6 +920,26 @@ mod tests {
         assert!(
             parse_net_options(&argv("serve --listen 127.0.0.1:0 --max-frame-bytes 8")).is_err(),
             "a frame cap below any valid generate frame refuses everything"
+        );
+    }
+
+    #[test]
+    fn neuron_flags_parse_and_validate() {
+        assert_eq!(parse_neuron_flags(&argv("serve")).unwrap(), (None, false));
+        assert_eq!(
+            parse_neuron_flags(&argv("serve --neuron-keep 0.75 --quant")).unwrap(),
+            (Some(0.75), true)
+        );
+        assert_eq!(parse_neuron_flags(&argv("eval m --quant")).unwrap(), (None, true));
+        assert!(
+            parse_neuron_flags(&argv("serve --neuron-keep 1.5")).is_err(),
+            "out-of-range keep must not silently serve dense"
+        );
+        assert!(parse_neuron_flags(&argv("serve --neuron-keep -0.1")).is_err());
+        assert!(parse_neuron_flags(&argv("serve --neuron-keep most")).is_err());
+        assert!(
+            parse_neuron_flags(&argv("serve --neuron-keep")).is_err(),
+            "bare --neuron-keep parses as the sentinel \"true\" and must be rejected"
         );
     }
 

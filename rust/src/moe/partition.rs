@@ -24,6 +24,11 @@ pub struct SubExpert {
     pub w3: Tensor,
     pub w2: Tensor,
     pub width: usize,
+    /// Original-neuron index of each column: column `t` of this
+    /// sub-expert is neuron `cols[t]` of the unsplit expert. Neuron-
+    /// level keep masks ([`keep_mask`]) slice the full-width importance
+    /// table through this mapping.
+    pub cols: Vec<usize>,
 }
 
 impl SubExpert {
@@ -33,7 +38,31 @@ impl SubExpert {
             w3: w3.gather_cols(cols),
             w2: w2.gather_rows(cols),
             width: cols.len(),
+            cols: cols.to_vec(),
         }
+    }
+}
+
+/// Int8 sidecar of one sub-expert (ISSUE-10 quantized kernels): codes
+/// are integer-valued f32 in [-127, 127] so they flow through the
+/// unchanged `upload`/exec ABI, `scales = [s_w1, s_w3, s_w2]` are the
+/// symmetric per-sub-expert per-matrix scales. Built once at engine
+/// construction; the backend dequantizes in-register
+/// (`util::linalg::swiglu_ffn_q8`).
+#[derive(Debug, Clone)]
+pub struct QuantizedWeights {
+    pub w1: Tensor,
+    pub w3: Tensor,
+    pub w2: Tensor,
+    pub scales: [f32; 3],
+}
+
+impl QuantizedWeights {
+    pub fn from_sub_expert(se: &SubExpert) -> QuantizedWeights {
+        let (w1, s1) = crate::util::linalg::quantize_symmetric(&se.w1);
+        let (w3, s3) = crate::util::linalg::quantize_symmetric(&se.w3);
+        let (w2, s2) = crate::util::linalg::quantize_symmetric(&se.w2);
+        QuantizedWeights { w1, w3, w2, scales: [s1, s3, s2] }
     }
 }
 
@@ -58,15 +87,37 @@ pub fn remap_indices(indices: &[usize], p: usize) -> Vec<usize> {
     out
 }
 
-/// Descending-importance permutation; ties break toward the lower
-/// index, NaN importances order last (same total order as routing —
-/// see [`crate::moe::gating::cmp_desc_nan_last`]).
+/// Descending-importance permutation. **The tiebreak is part of the
+/// contract**: equal-importance neurons order by ascending index, and
+/// NaN importances order last (among themselves, also by ascending
+/// index) — the same total order as routing, via
+/// [`crate::moe::gating::cmp_desc_nan_last`]. Because the comparator
+/// is a total order with no float-equality ambiguity left to the sort,
+/// the permutation — and every keep mask / reconstruction split
+/// prefix derived from it — is reproducible across platforms, runs
+/// and thread counts.
 pub fn importance_order(importance: &[f32]) -> Vec<usize> {
     let mut idx: Vec<usize> = (0..importance.len()).collect();
     idx.sort_by(|&a, &b| {
         crate::moe::gating::cmp_desc_nan_last(a, importance[a], b, importance[b])
     });
     idx
+}
+
+/// Neuron-level keep mask for one sub-expert (ISSUE-10, top-p by
+/// calibrated importance). `cols` maps the variant's columns to
+/// original neurons (see [`SubExpert::cols`]), `importance` is the
+/// expert's full-width table, `keep` the kept fraction. Returns the
+/// positions (into the variant's own column space, i32 for the kernel
+/// ABI) of the top `⌈keep·width⌉` columns under [`importance_order`] —
+/// a *prefix* of one fixed permutation, so for keep fractions
+/// `p1 ≥ p2` the mask at `p2` is always a subset of the mask at `p1`,
+/// and the mask is deterministic (pure function of `cols`,
+/// `importance`, `keep` — no threading, no RNG).
+pub fn keep_mask(cols: &[usize], importance: &[f32], keep: f32) -> Vec<i32> {
+    let imp: Vec<f32> = cols.iter().map(|&c| importance[c]).collect();
+    let k = crate::calib::keep_count(cols.len(), keep);
+    importance_order(&imp)[..k].iter().map(|&t| t as i32).collect()
 }
 
 /// Build the serving-side partitioned experts for one layer.
@@ -155,6 +206,56 @@ mod tests {
     fn importance_order_descending_stable() {
         let imp = [0.1, 0.9, 0.9, 0.2];
         assert_eq!(importance_order(&imp), vec![1, 2, 3, 0]);
+    }
+
+    #[test]
+    fn importance_order_ties_break_by_index_nan_last() {
+        // All-equal importances must come back in index order — the
+        // reproducibility contract keep masks depend on.
+        assert_eq!(importance_order(&[0.5; 5]), vec![0, 1, 2, 3, 4]);
+        // Interleaved ties keep ascending index within each tie class.
+        let imp = [0.2, 0.9, 0.2, 0.9, 0.2];
+        assert_eq!(importance_order(&imp), vec![1, 3, 0, 2, 4]);
+        // NaNs order last, themselves by ascending index; -inf beats NaN.
+        let imp = [f32::NAN, 0.1, f32::NAN, f32::NEG_INFINITY];
+        assert_eq!(importance_order(&imp), vec![1, 3, 0, 2]);
+        // Deterministic: two calls agree exactly.
+        let imp = [0.3, 0.3, f32::NAN, 0.7, 0.3];
+        assert_eq!(importance_order(&imp), importance_order(&imp));
+    }
+
+    #[test]
+    fn keep_mask_is_a_ranked_prefix_in_variant_space() {
+        // Variant columns [4, 1, 6] with full-width importance: column
+        // importances are imp[4]=0.9, imp[1]=0.1, imp[6]=0.5 → ranked
+        // variant positions [0, 2, 1].
+        let imp = [0.0, 0.1, 0.0, 0.0, 0.9, 0.0, 0.5];
+        let cols = [4usize, 1, 6];
+        assert_eq!(keep_mask(&cols, &imp, 1.0), vec![0, 2, 1]);
+        assert_eq!(keep_mask(&cols, &imp, 0.67), vec![0, 2, 1]); // ⌈2.01⌉ = 3
+        assert_eq!(keep_mask(&cols, &imp, 0.5), vec![0, 2]); // ⌈1.5⌉ = 2
+        assert_eq!(keep_mask(&cols, &imp, 0.0), Vec::<i32>::new());
+        // nesting: lower keep is a prefix (hence subset) of higher keep
+        let hi = keep_mask(&cols, &imp, 1.0);
+        let lo = keep_mask(&cols, &imp, 0.5);
+        assert_eq!(&hi[..lo.len()], &lo[..]);
+    }
+
+    #[test]
+    fn quantized_weights_round_trip_within_half_scale() {
+        let w1 = Tensor::new(vec![2, 4], (0..8).map(|v| (v as f32 - 4.0) * 0.13).collect());
+        let w3 = Tensor::new(vec![2, 4], (0..8).map(|v| (v as f32 - 2.0) * 0.07).collect());
+        let w2 = Tensor::new(vec![4, 2], (0..8).map(|v| (v as f32 - 5.0) * 0.11).collect());
+        let se = SubExpert::from_cols(&w1, &w3, &w2, &[0, 1, 2, 3]);
+        let q = QuantizedWeights::from_sub_expert(&se);
+        for (orig, codes, s) in
+            [(&se.w1, &q.w1, q.scales[0]), (&se.w3, &q.w3, q.scales[1]), (&se.w2, &q.w2, q.scales[2])]
+        {
+            for (a, &c) in orig.data.iter().zip(&codes.data) {
+                assert!(c == c.round() && c.abs() <= 127.0);
+                assert!((a - c * s).abs() <= s / 2.0 + 1e-7);
+            }
+        }
     }
 
     #[test]

@@ -25,13 +25,14 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::{Mutex, RwLock};
+use std::sync::{Arc, Mutex, RwLock};
 
 use anyhow::{bail, Context, Result};
 
 use crate::model::{ModelConfig, Tensor};
 use crate::util::linalg::{
-    dot, gemv_acc, matmul, matmul_bt, rmsnorm_rows, softmax_rows, swiglu_ffn, swish,
+    dot, gather_ffn_kept, gemv_acc, matmul, matmul_bt, rmsnorm_rows, softmax_rows,
+    swiglu_ffn, swiglu_ffn_q8, swish,
 };
 
 use super::{Arg, Backend, BufId, ExecCounters};
@@ -54,6 +55,12 @@ pub struct CpuRef {
     /// perf counters so `compiled_count` survives `reset_counters`,
     /// matching the PJRT backend's compiled-executable cache semantics.
     seen: Mutex<std::collections::HashSet<String>>,
+    /// Memoized kept-neuron gathers for the `ffn_mask_*` /
+    /// `ffn_q8_mask_*` artifacts, keyed by the three uploaded weight
+    /// buffer ids + the mask. A serving run pays the O(d·K) gather once
+    /// per (sub-expert, mask) and every later exec runs the dense fused
+    /// kernel on the cached width-K triple at full per-madd efficiency.
+    packs: Mutex<HashMap<(usize, usize, usize, Vec<i32>), Arc<(Tensor, Tensor, Tensor)>>>,
 }
 
 impl CpuRef {
@@ -64,7 +71,38 @@ impl CpuRef {
             d_head: AtomicUsize::new(0),
             counters: ExecCounters::default(),
             seen: Mutex::new(std::collections::HashSet::new()),
+            packs: Mutex::new(HashMap::new()),
         }
+    }
+
+    /// Resolve (and memoize — see the `packs` field) the kept-column /
+    /// kept-row gather of an FFN weight triple. Host-tensor args (as
+    /// tests pass) have no stable identity and skip the cache.
+    fn pack_kept(
+        &self,
+        args: &[Arg],
+        w1: &Tensor,
+        w3: &Tensor,
+        w2: &Tensor,
+        kept_raw: &[i32],
+        kept: &[usize],
+    ) -> Arc<(Tensor, Tensor, Tensor)> {
+        let key = match (args.get(1), args.get(2), args.get(3)) {
+            (Some(Arg::Buf(a)), Some(Arg::Buf(b)), Some(Arg::Buf(c))) => {
+                Some((a.0, b.0, c.0, kept_raw.to_vec()))
+            }
+            _ => None,
+        };
+        if let Some(k) = &key {
+            if let Some(hit) = self.packs.lock().unwrap().get(k) {
+                return Arc::clone(hit);
+            }
+        }
+        let packed = Arc::new(gather_ffn_kept(w1, w3, w2, kept));
+        if let Some(k) = key {
+            self.packs.lock().unwrap().insert(k, Arc::clone(&packed));
+        }
+        packed
     }
 }
 
@@ -131,6 +169,30 @@ impl Backend for CpuRef {
                 targ(name, &rs, 1)?,
                 targ(name, &rs, 2)?,
                 targ(name, &rs, 3)?,
+            )]
+        } else if name.starts_with("ffn_mask_h") {
+            let (w1, w3, w2) =
+                (targ(name, &rs, 1)?, targ(name, &rs, 2)?, targ(name, &rs, 3)?);
+            let kept_raw = iarg(name, &rs, 4)?;
+            let kept = kept_usize(name, kept_raw, w1.shape[1])?;
+            let p = self.pack_kept(args, w1, w3, w2, kept_raw, &kept);
+            vec![swiglu_ffn(targ(name, &rs, 0)?, &p.0, &p.1, &p.2)]
+        } else if name.starts_with("ffn_q8_mask_h") {
+            let (q1, q3, q2) =
+                (targ(name, &rs, 1)?, targ(name, &rs, 2)?, targ(name, &rs, 3)?);
+            let scales = scales_arg(name, &rs, 4)?;
+            let kept_raw = iarg(name, &rs, 5)?;
+            let kept = kept_usize(name, kept_raw, q1.shape[1])?;
+            let p = self.pack_kept(args, q1, q3, q2, kept_raw, &kept);
+            vec![swiglu_ffn_q8(targ(name, &rs, 0)?, &p.0, &p.1, &p.2, &scales)]
+        } else if name.starts_with("ffn_q8_h") {
+            let scales = scales_arg(name, &rs, 4)?;
+            vec![swiglu_ffn_q8(
+                targ(name, &rs, 0)?,
+                targ(name, &rs, 1)?,
+                targ(name, &rs, 2)?,
+                targ(name, &rs, 3)?,
+                &scales,
             )]
         } else if name.starts_with("gate_b") {
             vec![softmax_rows(&matmul(targ(name, &rs, 0)?, targ(name, &rs, 1)?))]
@@ -254,6 +316,27 @@ fn iarg<'a>(name: &str, rs: &[RArg<'a>], i: usize) -> Result<&'a [i32]> {
         Some(RArg::I(v)) => Ok(v),
         _ => bail!("{name}: missing i32 arg {i}"),
     }
+}
+
+/// Validate a kept-neuron index list against the intermediate width.
+fn kept_usize(name: &str, kept: &[i32], h: usize) -> Result<Vec<usize>> {
+    kept.iter()
+        .map(|&j| {
+            if j < 0 || j as usize >= h {
+                bail!("{name}: kept index {j} out of range (width {h})");
+            }
+            Ok(j as usize)
+        })
+        .collect()
+}
+
+/// Resolved `[s1, s3, s2]` quantization scale triple at argument `i`.
+fn scales_arg(name: &str, rs: &[RArg<'_>], i: usize) -> Result<[f32; 3]> {
+    let t = targ(name, rs, i)?;
+    if t.data.len() != 3 {
+        bail!("{name}: scale triple must have 3 elements, got {}", t.data.len());
+    }
+    Ok([t.data[0], t.data[1], t.data[2]])
 }
 
 /// One batch row of a KV-cache view: either a contiguous `H·T·dh`
@@ -730,6 +813,83 @@ mod tests {
             .exec("ffn_h6_c4", &[Arg::F32(&x), Arg::F32(&w1), Arg::F32(&w3), Arg::F32(&w2)])
             .unwrap();
         let want = swiglu_ffn(&x, &w1, &w3, &w2);
+        assert_eq!(got[0].data, want.data);
+    }
+
+    #[test]
+    fn masked_ffn_dispatch_matches_kernel_and_memoizes_buf_args() {
+        use crate::util::linalg::swiglu_ffn_masked;
+        let mut rng = SplitMix64::new(7);
+        let x = randn(&mut rng, vec![4, 8], 0.5);
+        let w1 = randn(&mut rng, vec![8, 6], 0.3);
+        let w3 = randn(&mut rng, vec![8, 6], 0.3);
+        let w2 = randn(&mut rng, vec![6, 8], 0.3);
+        let kept = [4i32, 0, 2];
+        let be = CpuRef::new();
+        // host-tensor args (no cache) vs the shared kernel
+        let got = be
+            .exec(
+                "ffn_mask_h6k3_c4",
+                &[Arg::F32(&x), Arg::F32(&w1), Arg::F32(&w3), Arg::F32(&w2), Arg::I32(&kept)],
+            )
+            .unwrap();
+        let want = swiglu_ffn_masked(&x, &w1, &w3, &w2, &[4, 0, 2]);
+        assert_eq!(got[0].data, want.data);
+        assert_eq!(be.packs.lock().unwrap().len(), 0, "host args must not be cached");
+        // uploaded-buffer args memoize the gather and stay byte-identical
+        let (b1, b3, b2) =
+            (be.upload(&w1).unwrap(), be.upload(&w3).unwrap(), be.upload(&w2).unwrap());
+        let args =
+            [Arg::F32(&x), Arg::Buf(b1), Arg::Buf(b3), Arg::Buf(b2), Arg::I32(&kept)];
+        let first = be.exec("ffn_mask_h6k3_c4", &args).unwrap();
+        let second = be.exec("ffn_mask_h6k3_c4", &args).unwrap();
+        assert_eq!(first[0].data, want.data);
+        assert_eq!(second[0].data, want.data);
+        assert_eq!(be.packs.lock().unwrap().len(), 1, "one mask → one cached pack");
+        // out-of-range kept index is a hard error, not a silent skip
+        let bad = [6i32];
+        assert!(be
+            .exec(
+                "ffn_mask_h6k1_c4",
+                &[Arg::F32(&x), Arg::F32(&w1), Arg::F32(&w3), Arg::F32(&w2), Arg::I32(&bad)],
+            )
+            .is_err());
+    }
+
+    #[test]
+    fn q8_ffn_dispatch_matches_kernel() {
+        use crate::util::linalg::{quantize_symmetric, swiglu_ffn_masked_q8};
+        let mut rng = SplitMix64::new(8);
+        let x = randn(&mut rng, vec![3, 8], 0.5);
+        let (q1, s1) = quantize_symmetric(&randn(&mut rng, vec![8, 6], 0.3));
+        let (q3, s3) = quantize_symmetric(&randn(&mut rng, vec![8, 6], 0.3));
+        let (q2, s2) = quantize_symmetric(&randn(&mut rng, vec![6, 8], 0.3));
+        let scales = Tensor::new(vec![3], vec![s1, s3, s2]);
+        let be = CpuRef::new();
+        let got = be
+            .exec(
+                "ffn_q8_h6_c3",
+                &[Arg::F32(&x), Arg::F32(&q1), Arg::F32(&q3), Arg::F32(&q2), Arg::F32(&scales)],
+            )
+            .unwrap();
+        let want = swiglu_ffn_q8(&x, &q1, &q3, &q2, &[s1, s3, s2]);
+        assert_eq!(got[0].data, want.data);
+        // masked + quantized composition
+        let kept = [1i32, 5];
+        let got = be
+            .exec(
+                "ffn_q8_mask_h6k2_c3",
+                &[
+                    Arg::F32(&x),
+                    Arg::F32(&q1),
+                    Arg::F32(&q3),
+                    Arg::F32(&q2),
+                    Arg::F32(&scales),
+                    Arg::I32(&kept),
+                ],
+            )
+            .unwrap();
+        let want = swiglu_ffn_masked_q8(&x, &q1, &q3, &q2, &[s1, s3, s2], &[1, 5]);
         assert_eq!(got[0].data, want.data);
     }
 

@@ -18,6 +18,9 @@
 //! | name                       | args                                         |
 //! |----------------------------|----------------------------------------------|
 //! | `ffn_h{H}_c{C}`            | `x [C,d], w1 [d,H], w3 [d,H], w2 [H,d]`      |
+//! | `ffn_mask_h{H}k{K}_c{C}`   | `… + kept (i32 [K])` — only the K probe-ranked intermediate rows run (CpuRef-only) |
+//! | `ffn_q8_h{H}_c{C}`         | `x, q1, q3, q2 (int8 codes as f32), scales [3]` — dequantize-in-register (CpuRef-only) |
+//! | `ffn_q8_mask_h{H}k{K}_c{C}`| `… q8 args + kept (i32 [K])` — masked + quantized composition (CpuRef-only) |
 //! | `gate_b{B}_e{E}`           | `x [B,d], wg [d,E]`                          |
 //! | `probe_h{H}`               | `x [C,d], w1 [d,H], w3 [d,H]`                |
 //! | `attn_prefill_s{S}`        | `x, ln1, wq, wk, wv, wo, ln2`                |

@@ -180,6 +180,44 @@ pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Tensor {
     Tensor::new(vec![m, n], out)
 }
 
+/// [`gemv_acc`] with in-register dequantization: `b` holds
+/// integer-valued int8 codes (carried as f32) and `scale` is the
+/// symmetric per-tensor scale. `a · (s·q) = (a·s) · q`, so the scale
+/// commutes onto the register-resident A scalars of the 4-way-unrolled
+/// pass — the weight stream is consumed as raw codes, one multiply per
+/// pass dequantizes, and the inner loop stays identical to the f32
+/// kernel.
+#[inline]
+pub fn gemv_acc_scaled(arow: &[f32], b: &[f32], n: usize, scale: f32, orow: &mut [f32]) {
+    debug_assert_eq!(arow.len() * n, b.len());
+    debug_assert_eq!(orow.len(), n);
+    let k = arow.len();
+    let mut p = 0;
+    while p + 4 <= k {
+        let a0 = arow[p] * scale;
+        let a1 = arow[p + 1] * scale;
+        let a2 = arow[p + 2] * scale;
+        let a3 = arow[p + 3] * scale;
+        let b0 = &b[p * n..(p + 1) * n];
+        let b1 = &b[(p + 1) * n..(p + 2) * n];
+        let b2 = &b[(p + 2) * n..(p + 3) * n];
+        let b3 = &b[(p + 3) * n..(p + 4) * n];
+        for ((((o, &v0), &v1), &v2), &v3) in
+            orow.iter_mut().zip(b0).zip(b1).zip(b2).zip(b3)
+        {
+            *o += a0 * v0 + a1 * v1 + a2 * v2 + a3 * v3;
+        }
+        p += 4;
+    }
+    while p < k {
+        let a0 = arow[p] * scale;
+        for (o, &v) in orow.iter_mut().zip(&b[p * n..(p + 1) * n]) {
+            *o += a0 * v;
+        }
+        p += 1;
+    }
+}
+
 pub fn swish(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
@@ -212,6 +250,121 @@ pub fn swiglu_ffn(x: &Tensor, w1: &Tensor, w3: &Tensor, w2: &Tensor) -> Tensor {
         gemv_acc(&g, &w2.data, dout, &mut out[i * dout..(i + 1) * dout]);
     }
     Tensor::new(vec![m, dout], out)
+}
+
+/// Neuron-masked SwiGLU FFN: only the intermediate rows named in
+/// `kept` are computed — their w1/w3 columns and w2 rows are gathered
+/// once per call and the dense fused kernel runs at width
+/// `kept.len()`. Every masked neuron contributes **exactly zero** (it
+/// is absent from the sum, not approximated), so the result equals the
+/// unmasked kernel on weights whose masked columns/rows were zeroed.
+/// `kept` may be in any order, empty (all-zero output) or the full
+/// width (byte-identical to [`swiglu_ffn`] when `kept = 0..h` in
+/// order, since the gather is then an identity copy).
+///
+/// The gather is O(d·K + K·d_out) per call; the serving engine
+/// amortizes it by memoizing the gathered triple per (weights, mask)
+/// in the backend (see `runtime::cpu`).
+pub fn swiglu_ffn_masked(
+    x: &Tensor,
+    w1: &Tensor,
+    w3: &Tensor,
+    w2: &Tensor,
+    kept: &[usize],
+) -> Tensor {
+    let h = w1.shape[1];
+    debug_assert!(kept.iter().all(|&j| j < h), "kept index out of range");
+    let _ = h;
+    let (w1k, w3k, w2k) = gather_ffn_kept(w1, w3, w2, kept);
+    swiglu_ffn(x, &w1k, &w3k, &w2k)
+}
+
+/// Gather the kept intermediate rows of an FFN weight triple:
+/// w1/w3 keep columns `kept`, w2 keeps rows `kept`. The width-K result
+/// feeds the dense fused kernels directly.
+pub fn gather_ffn_kept(
+    w1: &Tensor,
+    w3: &Tensor,
+    w2: &Tensor,
+    kept: &[usize],
+) -> (Tensor, Tensor, Tensor) {
+    (w1.gather_cols(kept), w3.gather_cols(kept), w2.gather_rows(kept))
+}
+
+/// Int8-quantized SwiGLU FFN. `q1`/`q3`/`q2` hold integer codes in
+/// [-127, 127] (f32 carrier — see [`quantize_symmetric`]) and
+/// `scales = [s1, s3, s2]` are the per-tensor symmetric scales.
+/// Dequantization happens in-register via [`gemv_acc_scaled`]; the
+/// `[rows, width]` intermediates are never materialized, exactly like
+/// [`swiglu_ffn`].
+pub fn swiglu_ffn_q8(
+    x: &Tensor,
+    q1: &Tensor,
+    q3: &Tensor,
+    q2: &Tensor,
+    scales: &[f32; 3],
+) -> Tensor {
+    assert_eq!(x.shape.len(), 2);
+    let (m, d) = (x.shape[0], x.shape[1]);
+    let h = q1.shape[1];
+    assert_eq!(q1.shape[0], d, "swiglu_q8 q1 shape mismatch");
+    assert_eq!(q3.shape, q1.shape, "swiglu_q8 q3 shape mismatch");
+    assert_eq!(q2.shape[0], h, "swiglu_q8 q2 shape mismatch");
+    let dout = q2.shape[1];
+    let mut out = vec![0.0f32; m * dout];
+    let mut g = vec![0.0f32; h];
+    let mut u = vec![0.0f32; h];
+    for i in 0..m {
+        let xrow = &x.data[i * d..(i + 1) * d];
+        g.fill(0.0);
+        u.fill(0.0);
+        gemv_acc_scaled(xrow, &q1.data, h, scales[0], &mut g);
+        gemv_acc_scaled(xrow, &q3.data, h, scales[1], &mut u);
+        for (gv, &uv) in g.iter_mut().zip(u.iter()) {
+            *gv = swish(*gv) * uv;
+        }
+        gemv_acc_scaled(&g, &q2.data, dout, scales[2], &mut out[i * dout..(i + 1) * dout]);
+    }
+    Tensor::new(vec![m, dout], out)
+}
+
+/// Masked + quantized SwiGLU FFN: gather the kept codes, then run the
+/// dequantize-in-register kernel at width `kept.len()`. Gathering
+/// codes commutes with dequantization (both are elementwise), so this
+/// equals [`swiglu_ffn_q8`] on weights whose masked rows were zeroed.
+pub fn swiglu_ffn_masked_q8(
+    x: &Tensor,
+    q1: &Tensor,
+    q3: &Tensor,
+    q2: &Tensor,
+    scales: &[f32; 3],
+    kept: &[usize],
+) -> Tensor {
+    let (q1k, q3k, q2k) = gather_ffn_kept(q1, q3, q2, kept);
+    swiglu_ffn_q8(x, &q1k, &q3k, &q2k, scales)
+}
+
+/// Symmetric per-tensor int8 quantization: `scale = max|w| / 127`,
+/// codes are `round(w / scale)` clamped to [-127, 127], carried as
+/// integer-valued f32 so they flow through the existing `upload`/exec
+/// ABI unchanged. Round-trip error is ≤ scale/2 per element (round to
+/// nearest; the clamp never binds because `max|w| = 127·scale`
+/// exactly). An all-zero tensor gets scale 1.0 so dequantization is
+/// exact.
+pub fn quantize_symmetric(w: &Tensor) -> (Tensor, f32) {
+    let maxabs = w.data.iter().fold(0.0f32, |m, &v| m.max(v.abs()));
+    let scale = if maxabs > 0.0 { maxabs / 127.0 } else { 1.0 };
+    let q = w
+        .data
+        .iter()
+        .map(|&v| (v / scale).round().clamp(-127.0, 127.0))
+        .collect();
+    (Tensor::new(w.shape.clone(), q), scale)
+}
+
+/// Inverse of [`quantize_symmetric`]: `q · scale`, elementwise.
+pub fn dequantize(q: &Tensor, scale: f32) -> Tensor {
+    Tensor::new(q.shape.clone(), q.data.iter().map(|&v| v * scale).collect())
 }
 
 /// Row-wise softmax of a 2-D tensor.
@@ -359,6 +512,86 @@ mod tests {
         let got = swiglu_ffn(&a, &w1, &w3, &w2);
         assert_eq!(got.shape, want.shape);
         assert!(max_abs_diff(&got, &want) < 1e-6);
+    }
+
+    #[test]
+    fn masked_swiglu_full_mask_is_byte_identical_to_dense() {
+        let x = Tensor::new(vec![3, 4], (0..12).map(|v| v as f32 * 0.1).collect());
+        let w1 = Tensor::new(vec![4, 6], (0..24).map(|v| (v as f32 - 12.0) * 0.05).collect());
+        let w3 = Tensor::new(vec![4, 6], (0..24).map(|v| (v as f32 - 6.0) * 0.04).collect());
+        let w2 = Tensor::new(vec![6, 4], (0..24).map(|v| (v as f32 - 9.0) * 0.03).collect());
+        let kept: Vec<usize> = (0..6).collect();
+        let got = swiglu_ffn_masked(&x, &w1, &w3, &w2, &kept);
+        let want = swiglu_ffn(&x, &w1, &w3, &w2);
+        // in-order full mask = identity gather = the same op sequence
+        assert_eq!(got.data, want.data);
+    }
+
+    #[test]
+    fn masked_swiglu_empty_mask_is_exactly_zero() {
+        let x = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        let w1 = Tensor::new(vec![3, 4], vec![1.0; 12]);
+        let w3 = w1.clone();
+        let w2 = Tensor::new(vec![4, 3], vec![1.0; 12]);
+        let got = swiglu_ffn_masked(&x, &w1, &w3, &w2, &[]);
+        assert_eq!(got.shape, vec![2, 3]);
+        assert!(got.data.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn quantize_round_trip_error_bounded_by_half_scale() {
+        use crate::util::rng::SplitMix64;
+        let mut rng = SplitMix64::new(0x51AB);
+        for _ in 0..20 {
+            let n = 1 + rng.below(64);
+            let w = Tensor::new(
+                vec![n],
+                (0..n).map(|_| rng.gauss() as f32 * 0.3).collect(),
+            );
+            let (q, s) = quantize_symmetric(&w);
+            assert!(q.data.iter().all(|&v| v == v.round() && v.abs() <= 127.0));
+            let back = dequantize(&q, s);
+            for (a, b) in w.data.iter().zip(&back.data) {
+                assert!((a - b).abs() <= s / 2.0 + 1e-7, "|{a} - {b}| > {s}/2");
+            }
+        }
+        // all-zero tensor round-trips exactly
+        let z = Tensor::new(vec![3], vec![0.0; 3]);
+        let (q, s) = quantize_symmetric(&z);
+        assert_eq!(dequantize(&q, s).data, z.data);
+    }
+
+    #[test]
+    fn q8_swiglu_tracks_dequantized_dense_reference() {
+        use crate::util::rng::SplitMix64;
+        let mut rng = SplitMix64::new(0x0855);
+        for case in 0..20 {
+            let c = 1 + rng.below(5);
+            let d = 2 + rng.below(9);
+            let h = 2 + rng.below(13);
+            let mk = |rng: &mut SplitMix64, shape: Vec<usize>| {
+                let n: usize = shape.iter().product();
+                Tensor::new(shape, (0..n).map(|_| rng.gauss() as f32 * 0.2).collect())
+            };
+            let x = mk(&mut rng, vec![c, d]);
+            let w1 = mk(&mut rng, vec![d, h]);
+            let w3 = mk(&mut rng, vec![d, h]);
+            let w2 = mk(&mut rng, vec![h, d]);
+            let (q1, s1) = quantize_symmetric(&w1);
+            let (q3, s3) = quantize_symmetric(&w3);
+            let (q2, s2) = quantize_symmetric(&w2);
+            let got = swiglu_ffn_q8(&x, &q1, &q3, &q2, &[s1, s3, s2]);
+            // reference: dense f32 kernel on the dequantized weights —
+            // only the rounding order of the scale multiply differs
+            let want = swiglu_ffn(
+                &x,
+                &dequantize(&q1, s1),
+                &dequantize(&q3, s3),
+                &dequantize(&q2, s2),
+            );
+            let err = max_abs_diff(&got, &want);
+            assert!(err <= 2e-3, "case {case}: q8 |Δ|={err} (c={c} d={d} h={h})");
+        }
     }
 
     #[test]

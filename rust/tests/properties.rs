@@ -484,3 +484,123 @@ fn fault_plan_is_deterministic_and_conserves_requests() {
         assert_eq!(e.kv.free_page_count(), e.kv.n_pages, "round {round}: leaked pages");
     }
 }
+
+#[test]
+fn neuron_keep_mask_is_monotone_nested_and_deterministic_fuzz() {
+    // ISSUE-10 satellite: for any variant and importance profile,
+    // keep masks are *prefixes of one fixed permutation* — so for
+    // 1.0 ≥ p1 > p2, kept(p2) is literally a prefix of kept(p1)
+    // (nesting is structural, not statistical), the mask size is
+    // exactly `keep_count`, and repeated evaluation is bit-identical
+    // (keep_mask is a pure function of (cols, importance, keep); no
+    // thread count, hash order or clock can reach it).
+    use dualsparse::calib::keep_count;
+    use dualsparse::moe::partition::keep_mask;
+
+    let mut rng = SplitMix64::new(0x2ee9);
+    for case in 0..300 {
+        let full_width = 4 + rng.below(60);
+        let width = 1 + rng.below(full_width);
+        // variant cols: a random distinct subset of the full width,
+        // in random order (sub-experts after partition are gathers).
+        let mut pool: Vec<usize> = (0..full_width).collect();
+        for i in (1..pool.len()).rev() {
+            pool.swap(i, rng.below(i + 1));
+        }
+        let cols = pool[..width].to_vec();
+        // importance with deliberate collisions (quantized to few
+        // levels) and an occasional NaN — ties and NaN must order
+        // deterministically, not panic.
+        let mut importance: Vec<f32> =
+            (0..full_width).map(|_| (rng.below(5) as f32) * 0.25).collect();
+        if case % 7 == 0 {
+            importance[rng.below(full_width)] = f32::NAN;
+        }
+        let ladder = [1.0f32, 0.9, 0.75, 0.5, 0.25, 0.1, 0.0];
+        let mut prev: Option<Vec<i32>> = None;
+        for &keep in &ladder {
+            let m = keep_mask(&cols, &importance, keep);
+            assert_eq!(m.len(), keep_count(width, keep), "case {case}: mask size");
+            for &j in &m {
+                assert!((j as usize) < width, "case {case}: variant-local index");
+            }
+            let again = keep_mask(&cols, &importance, keep);
+            assert_eq!(m, again, "case {case}: keep_mask must be deterministic");
+            if let Some(p) = &prev {
+                assert_eq!(
+                    &p[..m.len()],
+                    &m[..],
+                    "case {case}: kept({keep}) must be a prefix of the larger mask"
+                );
+            }
+            prev = Some(m);
+        }
+    }
+}
+
+#[test]
+fn neuron_keep_strictly_reduces_measured_ffn_madds() {
+    // ISSUE-10 satellite, engine level: walking keep down the ladder
+    // must strictly shrink the *measured* FFN multiply-add count,
+    // derived from the executed artifact names (`ffn_h{H}_c{C}` ⇒
+    // 3·d·H·C per exec, `ffn_mask_h{H}k{K}_c{C}` ⇒ 3·d·K·C — the
+    // masked kernel gathers K columns and runs dense at width K).
+    // Bucket slack can shift C a little when masking perturbs later
+    // layers' routing, but the K reduction dominates by construction.
+    use dualsparse::calib::run_calibration;
+    use dualsparse::engine::{Engine, EngineOptions};
+    use std::collections::HashMap;
+    use std::path::PathBuf;
+
+    fn ffn_madds(stats: &HashMap<String, (u64, f64)>, d: usize) -> u128 {
+        let mut total = 0u128;
+        for (name, &(count, _)) in stats {
+            let Some(rest) = name.strip_prefix("ffn_") else { continue };
+            let rest = rest.strip_prefix("q8_").unwrap_or(rest);
+            let (k, c) = if let Some(r) = rest.strip_prefix("mask_h") {
+                let (hk, c) = r.split_once("_c").expect("mask artifact name");
+                let (_h, k) = hk.split_once('k').expect("mask artifact name");
+                (k.parse::<u128>().unwrap(), c.parse::<u128>().unwrap())
+            } else if let Some(r) = rest.strip_prefix('h') {
+                let (h, c) = r.split_once("_c").expect("ffn artifact name");
+                (h.parse::<u128>().unwrap(), c.parse::<u128>().unwrap())
+            } else {
+                panic!("unrecognized ffn artifact {name:?}");
+            };
+            total += 3 * d as u128 * k * c * count as u128;
+        }
+        total
+    }
+
+    let artifacts = std::env::var("DUALSPARSE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"));
+    let mut cal =
+        Engine::new(&artifacts, "mixtral_ish", DropPolicy::NoDrop, EngineOptions::default())
+            .expect("hermetic engine");
+    let imp = run_calibration(&mut cal, 256).expect("calibration").importance("abs_gate");
+
+    let mut last = u128::MAX;
+    for keep in [1.0f32, 0.5, 0.25] {
+        let mut e = Engine::new(
+            &artifacts,
+            "mixtral_ish",
+            DropPolicy::NoDrop,
+            EngineOptions {
+                neuron_keep: Some(keep),
+                importance: Some(imp.clone()),
+                ..Default::default()
+            },
+        )
+        .expect("hermetic engine");
+        let slot = e.kv.alloc();
+        e.prefill_logits(slot, b"cpy:abcdefgh|").expect("prefill");
+        let madds = ffn_madds(&e.exec_stats(), e.cfg.d_model);
+        assert!(madds > 0, "keep {keep}: prefill must execute FFN artifacts");
+        assert!(
+            madds < last,
+            "keep {keep}: measured madds must strictly decrease ({madds} vs {last})"
+        );
+        last = madds;
+    }
+}
